@@ -1,0 +1,36 @@
+//! The Table 1 DSP suite: run all five paper kernels on a chosen cluster
+//! size, verify each against its host reference, and print the paper's
+//! metrics (IPC, OP/cycle, GOPS, W, GOPS/W).
+//!
+//! ```sh
+//! cargo run --release --example dsp_suite -- --cores 64
+//! ```
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::kernels::{run_and_verify, table1_kernels};
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cores: usize = args.parse_or("cores", 64);
+    let cfg = ClusterConfig::with_cores(cores);
+    section(&format!("Table 1 — DSP suite on {cores} cores @600 MHz"));
+    brow!("kernel", "cycles", "IPC", "OP/cycle", "GOPS", "W", "GOPS/W");
+    for k in table1_kernels(&cfg) {
+        let mut r = run_and_verify(k.as_ref(), &cfg);
+        k.verify(&mut r.cluster).expect("kernel result mismatch");
+        let s = &r.stats;
+        brow!(
+            k.name(),
+            r.cycles,
+            format!("{:.2}", s.ipc()),
+            format!("{:.1}", s.ops_per_cycle()),
+            format!("{:.1}", s.gops(cfg.clock_hz)),
+            format!("{:.2}", s.power_w(cfg.clock_hz)),
+            format!("{:.0}", s.gops_per_w(cfg.clock_hz))
+        );
+    }
+    println!("\nall kernels verified against their host references");
+}

@@ -1,0 +1,58 @@
+//! End-to-end three-layer check: run the matmul kernel on the
+//! cycle-accurate 16-core cluster AND through the AOT-compiled golden
+//! model (Pallas -> JAX -> HLO text -> PJRT), then compare bit-for-bit.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example golden_check
+//! ```
+
+use mempool::config::ClusterConfig;
+use mempool::kernels::{run_and_verify, Kernel, Matmul};
+use mempool::runtime::{artifacts_available, Runtime};
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let kernel = Matmul::weak_scaled(16);
+    let cfg = ClusterConfig::minpool();
+    println!(
+        "simulating {}x{}x{} matmul on {} cores...",
+        kernel.m, kernel.n, kernel.k, cfg.num_cores()
+    );
+    let mut result = run_and_verify(&kernel, &cfg);
+    println!("simulation: {} cycles, IPC {:.2}", result.cycles, result.stats.ipc());
+
+    let mut rt = Runtime::new().expect("PJRT CPU client");
+    println!("PJRT platform: {}", rt.platform());
+    let (a, b) = {
+        let mut rng = mempool::util::Rng::seeded(kernel.seed);
+        let a: Vec<i32> = (0..kernel.m * kernel.k).map(|_| rng.below(256) as i32).collect();
+        let b: Vec<i32> = (0..kernel.k * kernel.n).map(|_| rng.below(256) as i32).collect();
+        (a, b)
+    };
+    let golden = rt
+        .run_i32("matmul", &[(&a, &[kernel.m, kernel.k]), (&b, &[kernel.k, kernel.n])])
+        .expect("golden model");
+
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let c_addr = rt_layout.data_base
+        + (kernel.m * kernel.k * 4) as u32
+        + (kernel.k * kernel.n * 4) as u32;
+    let simulated = result.cluster.spm().read_words(c_addr, kernel.m * kernel.n);
+    let mismatches = simulated
+        .iter()
+        .zip(&golden)
+        .filter(|(s, g)| **s as i32 != **g)
+        .count();
+    println!(
+        "compared {} elements: {} mismatches — {}",
+        golden.len(),
+        mismatches,
+        if mismatches == 0 { "BIT-EXACT" } else { "FAILED" }
+    );
+    assert_eq!(mismatches, 0);
+    let _ = kernel.name();
+    println!("golden_check OK: simulator == Pallas/JAX/PJRT golden model");
+}

@@ -1,0 +1,43 @@
+//! Fig 4 + Fig 5: the L1-interconnect network study with Poisson traffic
+//! generators replacing the cores.
+//!
+//! ```sh
+//! cargo run --release --example netsim
+//! cargo run --release --example netsim -- --hybrid
+//! ```
+
+use mempool::brow;
+use mempool::studies::{fig4, fig5};
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cycles: u64 = args.parse_or("cycles", 4000);
+    if args.has("hybrid") {
+        section("Fig 5 — hybrid addressing (TopH)");
+        brow!("p_local", "load", "throughput", "latency");
+        for (p, pts) in fig5(cycles) {
+            for pt in pts {
+                brow!(
+                    format!("{p:.2}"),
+                    format!("{:.2}", pt.lambda),
+                    format!("{:.3}", pt.throughput),
+                    format!("{:.1}", pt.avg_latency)
+                );
+            }
+        }
+    } else {
+        section("Fig 4 — Top1 / Top4 / TopH");
+        brow!("topology", "load", "throughput", "latency", "saturated");
+        for pt in fig4(cycles) {
+            brow!(
+                pt.topology.name(),
+                format!("{:.2}", pt.lambda),
+                format!("{:.3}", pt.throughput),
+                format!("{:.1}", pt.avg_latency),
+                pt.saturated
+            );
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Quickstart: build a 16-core MemPool cluster, run a hand-written
+//! assembly program on every core, and read the results back from the
+//! shared L1 SPM.
+//!
+//! ```sh
+//! cargo run --example quickstart
+//! ```
+
+use mempool::config::ClusterConfig;
+use mempool::sim::{base_symbols, run_kernel, RunConfig};
+
+fn main() {
+    // A small cluster: 1 group x 4 tiles x 4 cores, 64 KiB of shared L1.
+    let cfg = ClusterConfig::minpool();
+    let mut symbols = base_symbols(&cfg);
+
+    // Every core multiplies its hart ID by 3 with the Xpulpimg MAC and
+    // stores it into a shared result buffer (interleaved region).
+    let map = mempool::mem::AddressMap::from_config(&cfg);
+    let results = map.seq_total_bytes() + 256;
+    symbols.insert("results".into(), results);
+    let program = "\
+        csrr a0, mhartid\n\
+        li a1, 3\n\
+        li a2, 0\n\
+        p.mac a2, a0, a1\n\
+        la a3, results\n\
+        slli a4, a0, 2\n\
+        add a3, a3, a4\n\
+        sw a2, 0(a3)\n\
+        halt";
+
+    let run = RunConfig::new(cfg.clone());
+    let result = run_kernel(&run, program, &symbols, |_| {});
+    assert!(result.completed);
+
+    let mut cluster = result.cluster;
+    let values = cluster.spm().read_words(results, cfg.num_cores());
+    println!("cycles: {}", result.cycles);
+    println!("per-core results (hart*3): {values:?}");
+    println!(
+        "cluster: {} cores, {} tiles, {} KiB L1 SPM, IPC {:.2}",
+        cfg.num_cores(),
+        cfg.num_tiles(),
+        cfg.spm_bytes() / 1024,
+        result.stats.ipc()
+    );
+    assert_eq!(values[5], 15);
+    println!("quickstart OK");
+}

@@ -1,0 +1,30 @@
+//! Fig 13: weak-scaling study — speedup over an idealized (IPC = 1,
+//! conflict-free) single core, with and without the final barrier.
+//!
+//! ```sh
+//! cargo run --release --example weak_scaling -- --cores 4,16,64
+//! ```
+
+use mempool::brow;
+use mempool::studies::fig13_scaling;
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cores: Vec<usize> = args
+        .list("cores")
+        .map(|v| v.iter().map(|s| s.parse().expect("core count")).collect())
+        .unwrap_or_else(|| vec![4, 16, 64]);
+    section("Fig 13 — weak scaling (speedup vs ideal single core)");
+    brow!("kernel", "cores", "speedup", "w/o barrier", "% of ideal");
+    for r in fig13_scaling(&cores) {
+        brow!(
+            r.kernel,
+            r.cores,
+            format!("{:.1}", r.speedup),
+            format!("{:.1}", r.speedup_no_barrier),
+            format!("{:.0}%", 100.0 * r.speedup / r.ideal)
+        );
+    }
+}

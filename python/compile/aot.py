@@ -1,0 +1,52 @@
+"""AOT lowering: jax (Layer 2, calling the Layer-1 Pallas kernels) to HLO
+*text* artifacts the rust runtime loads via the `xla` crate.
+
+HLO text, NOT `lowered.compile()`/serialized protos: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+published `xla` 0.1.6 crate's backend) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The golden-model shapes default to the shapes the rust examples/tests
+exercise (Matmul::weak_scaled(16) on the 16-core minpool, etc.). Run
+`make artifacts` to (re)build; it is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import registry
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="also write the matmul HLO here (Makefile stamp)")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, (fn, shapes) in registry().items():
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    if args.out:
+        stamp = pathlib.Path(args.out)
+        stamp.parent.mkdir(parents=True, exist_ok=True)
+        stamp.write_text((out_dir / "matmul.hlo.txt").read_text())
+        print(f"stamp {stamp}")
+
+
+if __name__ == "__main__":
+    main()

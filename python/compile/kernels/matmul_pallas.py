@@ -1,0 +1,59 @@
+"""Layer-1 Pallas kernel: the tiled int32 matmul.
+
+This is MemPool's compute hot-spot (Table 1's matmul) re-thought for a
+TPU-shaped memory hierarchy, per the hardware-adaptation rule: MemPool
+keeps each core's 4x4 output tile in the register file and streams A/B
+operands through the tile-local SPM banks; the Pallas kernel keeps a
+(bm, bn) output tile resident in VMEM and streams (bm, bk)/(bk, bn)
+operand tiles HBM->VMEM through its BlockSpec grid - the same blocking
+idea one level up the hierarchy (see DESIGN.md section Hardware-
+Adaptation for the VMEM/MXU utilization estimate).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which both jax and the
+rust `xla`-crate runtime execute bit-identically (int32 is exact).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps):
+    """One (i, j, k) grid step: o[i,j] += A[i,k] @ B[k,j].
+
+    The output block is revisited across the k axis (standard Pallas
+    accumulate-into-output pattern), playing the role of MemPool's
+    16-register accumulator tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.int32)
+
+
+def matmul(a, b, *, bm=32, bn=32, bk=32):
+    """C[M,N] = A[M,K] @ B[K,N] over wrapping int32 (MemPool semantics)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels and the Layer-2 golden models.
+
+Every function mirrors the MemPool assembly kernels' integer semantics
+exactly (wrapping int32, arithmetic right shifts), so a value computed by
+the rust simulator, by the Pallas kernel, and by these references must be
+bit-identical.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a, b):
+    return jnp.matmul(
+        a.astype(jnp.int32), b.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def axpy(alpha, x, y):
+    return (jnp.int32(alpha) * x + y).astype(jnp.int32)
+
+
+def dotp(x, y):
+    return jnp.sum(x * y).astype(jnp.int32)
+
+
+def conv2d_3x3(img, coeff):
+    """'Same'-size 3x3 convolution over int32; borders left zero
+    (MemPool's kernel computes interior pixels only)."""
+    h, w = img.shape
+    out = jnp.zeros((h, w), jnp.int32)
+    acc = jnp.zeros((h - 2, w - 2), jnp.int32)
+    for dr in range(3):
+        for dc in range(3):
+            acc = acc + coeff[dr][dc] * img[dr : h - 2 + dr, dc : w - 2 + dc]
+    return out.at[1 : h - 1, 1 : w - 1].set(acc)
+
+
+def dct_coeff_table(shift=7):
+    """The integer DCT-II matrix used by the rust kernel (see
+    rust/src/kernels/dct.rs::coeff_table)."""
+    c = np.zeros((8, 8), np.int32)
+    for u in range(8):
+        s = np.sqrt(0.5) if u == 0 else 1.0
+        for x in range(8):
+            val = s * np.cos((2 * x + 1) * u * np.pi / 16.0) * (1 << shift) * 0.5
+            c[u, x] = int(np.round(val))
+    return jnp.asarray(c)
+
+
+def dct8x8(block, shift=7):
+    """2D integer DCT of one 8x8 block with per-pass arithmetic shifts,
+    mirroring the simulator kernel exactly."""
+    c = dct_coeff_table(shift)
+    # Row pass: mid[r, u] = (sum_i x[r, i] * C[u, i]) >> shift.
+    mid = jnp.right_shift(jnp.matmul(block, c.T, preferred_element_type=jnp.int32), shift)
+    # Column pass: out[v, u] = (sum_r mid[r, u] * C[v, r]) >> shift.
+    out = jnp.right_shift(jnp.matmul(c, mid, preferred_element_type=jnp.int32), shift)
+    return out

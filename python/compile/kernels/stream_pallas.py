@@ -1,0 +1,69 @@
+"""Layer-1 Pallas kernels for the streaming workloads (axpy / dotp).
+
+MemPool stripes axpy's vectors so every core streams from its own tile's
+banks; on the TPU-shaped hierarchy the analogue is a 1D BlockSpec grid
+streaming vector tiles HBM->VMEM with element-wise VPU work per tile.
+dotp adds the reduction: per-tile partial dot products accumulated into
+a single scalar output block (revisited across the grid, like MemPool's
+amoadd reduction tree collapsing into one bank).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+def axpy(alpha, x, y, *, block=1024):
+    """y + alpha * x over wrapping int32, tiled in `block`-element chunks."""
+    (n,) = x.shape
+    block = min(block, n)
+    assert n % block == 0
+    alpha = jnp.asarray(alpha, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(alpha, x, y)
+
+
+def _dotp_kernel(x_ref, y_ref, o_ref, *, steps):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...]).reshape((1,))
+
+
+def dotp(x, y, *, block=1024):
+    """sum(x * y) over wrapping int32."""
+    (n,) = x.shape
+    block = min(block, n)
+    assert n % block == 0
+    steps = n // block
+    out = pl.pallas_call(
+        functools.partial(_dotp_kernel, steps=steps),
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        interpret=True,
+    )(x, y)
+    return out[0]

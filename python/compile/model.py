@@ -1,0 +1,81 @@
+"""Layer-2 JAX compute graphs: the golden models of MemPool's evaluation
+kernels, composed from the Layer-1 Pallas kernels where one exists and
+from the pure-jnp references elsewhere.
+
+These are what `aot.py` lowers to `artifacts/*.hlo.txt`; the rust
+coordinator loads the artifacts through PJRT and uses them to verify the
+cycle-accurate simulator's SPM contents bit-for-bit (int32 => exact).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.matmul_pallas import matmul as pallas_matmul
+from .kernels.stream_pallas import axpy as pallas_axpy
+from .kernels.stream_pallas import dotp as pallas_dotp
+
+
+def matmul_model(a, b):
+    """Golden matmul: the Pallas kernel inside a jitted graph."""
+    return (pallas_matmul(a, b),)
+
+
+def axpy_model(alpha, x, y):
+    return (pallas_axpy(alpha, x, y),)
+
+
+def dotp_model(x, y):
+    return (pallas_dotp(x, y).reshape((1,)),)
+
+
+def conv2d_model(img, coeff_flat):
+    """3x3 convolution; `coeff_flat` is the 9-element stencil."""
+    c = [[coeff_flat[3 * r + q] for q in range(3)] for r in range(3)]
+    return (ref.conv2d_3x3(img, c),)
+
+
+def dct_model(blocks):
+    """Batched 8x8 integer DCT: blocks has shape (n, 8, 8)."""
+    return (jax.vmap(ref.dct8x8)(blocks),)
+
+
+# Registry used by aot.py: name -> (function, example argument shapes).
+def registry(matmul_shape=(64, 32, 32), vec_len=4096, conv_rows=256, dct_blocks=64):
+    m, n, k = matmul_shape
+    i32 = jnp.int32
+    return {
+        "matmul": (
+            matmul_model,
+            [
+                jax.ShapeDtypeStruct((m, k), i32),
+                jax.ShapeDtypeStruct((k, n), i32),
+            ],
+        ),
+        "axpy": (
+            axpy_model,
+            [
+                jax.ShapeDtypeStruct((), i32),
+                jax.ShapeDtypeStruct((vec_len,), i32),
+                jax.ShapeDtypeStruct((vec_len,), i32),
+            ],
+        ),
+        "dotp": (
+            dotp_model,
+            [
+                jax.ShapeDtypeStruct((vec_len,), i32),
+                jax.ShapeDtypeStruct((vec_len,), i32),
+            ],
+        ),
+        "conv2d": (
+            conv2d_model,
+            [
+                jax.ShapeDtypeStruct((conv_rows, 16), i32),
+                jax.ShapeDtypeStruct((9,), i32),
+            ],
+        ),
+        "dct": (
+            dct_model,
+            [jax.ShapeDtypeStruct((dct_blocks, 8, 8), i32)],
+        ),
+    }

@@ -1,0 +1,24 @@
+//! Bench E12 — regenerate §8.2.2: application speedups as a fraction of
+//! the ideal (histeq / raytrace / BFS).
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::studies::apps_study;
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn main() {
+    let cores: usize = Args::from_env().parse_or("cores", 64);
+    let cfg = ClusterConfig::with_cores(cores);
+    section(&format!("§8.2.2 — applications on {cores} cores"));
+    brow!("app", "cycles", "% of ideal", "sync share");
+    for r in apps_study(&cfg) {
+        brow!(
+            r.app,
+            r.cycles,
+            format!("{:.0}%", 100.0 * r.fraction_of_ideal),
+            format!("{:.0}%", 100.0 * r.sync_share)
+        );
+    }
+    println!("\npaper: histeq ≈40% (Amdahl), raytrace ≈91%, BFS ≈51% of ideal");
+}

@@ -1,0 +1,27 @@
+//! Bench E10 — regenerate Fig 14: the per-kernel cycle breakdown
+//! (compute / control / synchronization / I$ / LSU / RAW).
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::studies::fig14_breakdown;
+use mempool::util::bench::section;
+
+fn main() {
+    let cfg = ClusterConfig::mempool();
+    section("Fig 14 — cycle breakdown on 256 cores (%)");
+    brow!("kernel", "compute", "control", "sync", "I$", "LSU", "RAW");
+    for (name, s) in fig14_breakdown(&cfg) {
+        let b = s.breakdown();
+        brow!(
+            name,
+            format!("{:.0}", 100.0 * b.compute),
+            format!("{:.0}", 100.0 * b.control),
+            format!("{:.0}", 100.0 * b.synchronization),
+            format!("{:.1}", 100.0 * b.ifetch),
+            format!("{:.1}", 100.0 * b.lsu),
+            format!("{:.1}", 100.0 * b.raw)
+        );
+    }
+    println!("\npaper: compute kernels ≤66% compute; only matmul shows LSU stalls;");
+    println!("RAW/I$ stalls negligible; memory system stalls ≈4% on average");
+}

@@ -1,0 +1,28 @@
+//! Bench E11 — regenerate Fig 15: double-buffered kernels with DMA
+//! streaming overlapped with compute.
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::studies::fig15_doublebuf;
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn main() {
+    let cores: usize = Args::from_env().parse_or("cores", 64);
+    let cfg = ClusterConfig::with_cores(cores);
+    section(&format!("Fig 15 — double-buffered execution ({cores} cores)"));
+    brow!("kernel", "cycles", "IPC", "OP/cyc", "compute frac", "DMA txns", "DMA KiB");
+    for r in fig15_doublebuf(&cfg) {
+        brow!(
+            r.kernel,
+            r.cycles,
+            format!("{:.2}", r.ipc),
+            format!("{:.1}", r.ops_per_cycle),
+            format!("{:.2}", r.compute_fraction),
+            r.dma_transfers,
+            r.dma_bytes / 1024
+        );
+    }
+    println!("\npaper: compute-bound kernels reach IPC ≈0.94–0.99 in steady rounds;");
+    println!("axpy/dotp compute phases only fill 35%/51% of a round (L2-bandwidth bound)");
+}

@@ -1,0 +1,23 @@
+//! Bench E13 — regenerate Fig 16: energy per instruction, including the
+//! local-vs-remote load ratio and the MAC-fusion saving.
+
+use mempool::brow;
+use mempool::studies::fig16_instr_energy;
+use mempool::util::bench::section;
+
+fn main() {
+    section("Fig 16 — energy per instruction (pJ/core/cycle)");
+    brow!("instruction", "pJ");
+    let rows = fig16_instr_energy();
+    for r in &rows {
+        brow!(r.instr, format!("{:.2}", r.model_pj));
+    }
+    let f = |n: &str| rows.iter().find(|r| r.instr == n).unwrap().model_pj;
+    println!("\nmac − mul = {:.2} pJ (paper: +0.2 pJ)", f("mac") - f("mul"));
+    println!(
+        "fusing saves {:.0}% vs mul+add (paper: 36%)",
+        100.0 * (1.0 - f("mac") / (f("mul") + f("add")))
+    );
+    println!("remote/local load = {:.2}x (paper: 1.8x)", f("lw (remote)") / f("lw (local)"));
+    println!("remote load / mac = {:.2}x (paper: 1.29x)", f("lw (remote)") / f("mac"));
+}

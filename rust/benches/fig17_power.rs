@@ -1,0 +1,21 @@
+//! Bench E14 — regenerate Fig 17: the hierarchical power breakdown of a
+//! matmul run (cores vs SPM interconnect vs banks).
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::studies::fig17_power;
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn main() {
+    let cores: usize = Args::from_env().parse_or("cores", 256);
+    let cfg = ClusterConfig::with_cores(cores);
+    let (r, c, n, b) = fig17_power(&cfg);
+    section(&format!("Fig 17 — power breakdown, matmul on {cores} cores"));
+    brow!("total power", format!("{:.2} W", r.stats.power_w(cfg.clock_hz)));
+    brow!("cores + icache", format!("{:.0}%", 100.0 * c));
+    brow!("SPM interconnect", format!("{:.0}%", 100.0 * n));
+    brow!("SPM banks", format!("{:.0}%", 100.0 * b));
+    brow!("other", format!("{:.0}%", 100.0 * (1.0 - c - n - b)));
+    println!("\npaper: cores 56%, interconnect 30%, banks 7% of ≈1.67 W");
+}

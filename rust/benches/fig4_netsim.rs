@@ -1,0 +1,26 @@
+//! Bench E1 — regenerate Fig 4: throughput + average latency vs injected
+//! load for Top1 / Top4 / TopH (Poisson traffic, uniform banks).
+
+use mempool::brow;
+use mempool::studies::fig4;
+use mempool::util::bench::{bench_config, section};
+
+fn main() {
+    section("Fig 4 — L1 interconnect topologies under Poisson traffic");
+    brow!("topology", "load", "throughput", "avg latency", "saturated");
+    for pt in fig4(4000) {
+        brow!(
+            pt.topology.name(),
+            format!("{:.2}", pt.lambda),
+            format!("{:.3}", pt.throughput),
+            format!("{:.1}", pt.avg_latency),
+            pt.saturated
+        );
+    }
+    println!("\npaper: Top1 congests ≈0.10 req/core/cycle; Top4 ≈0.37; TopH ≈0.40;");
+    println!("TopH average latency < 6 cycles at 0.35 req/core/cycle");
+    bench_config("fig4: one TopH point (λ=0.2, 4k cycles)", 1, 3, &mut || {
+        let cfg = mempool::trafficgen::NetSimConfig::fig4(mempool::config::Topology::TopH, 0.2);
+        std::hint::black_box(mempool::trafficgen::run_netsim(&cfg));
+    });
+}

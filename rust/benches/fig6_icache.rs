@@ -1,0 +1,31 @@
+//! Bench E3/E4 — regenerate Fig 6 (icache power) and Fig 7 (tile energy)
+//! across the six cache architectures of §4.1.
+
+use mempool::brow;
+use mempool::studies::fig6_icache;
+use mempool::util::bench::section;
+
+fn main() {
+    section("Fig 6/7 — instruction cache optimization steps");
+    brow!("config", "kGE", "small $ mW", "big $ mW", "small cyc", "big cyc", "tile mW");
+    let rows = fig6_icache();
+    for r in &rows {
+        brow!(
+            r.config,
+            r.area_kge,
+            format!("{:.2}", r.small_icache_mw),
+            format!("{:.2}", r.big_icache_mw),
+            r.small_cycles,
+            r.big_cycles,
+            format!("{:.2}", r.big_tile_mw)
+        );
+    }
+    let base = &rows[0];
+    let last = rows.last().unwrap();
+    println!(
+        "\nicache power saving: small {:.0}% (paper −75%), big {:.0}% (paper −48%); area −{:.0}% (paper −17%)",
+        100.0 * (1.0 - last.small_icache_mw / base.small_icache_mw),
+        100.0 * (1.0 - last.big_icache_mw / base.big_icache_mw),
+        100.0 * (1.0 - last.area_kge / base.area_kge)
+    );
+}

@@ -1,0 +1,15 @@
+//! Bench E5 — regenerate the §5.5 study: RO cache and AXI radix on a
+//! cold-start kernel's instruction path.
+
+use mempool::brow;
+use mempool::studies::rocache_study;
+use mempool::util::bench::section;
+
+fn main() {
+    section("§5.5 — RO cache + AXI radix, cold-start matmul");
+    brow!("configuration", "cycles", "speedup");
+    for r in rocache_study() {
+        brow!(r.label, r.cycles, format!("{:.2}x", r.speedup_vs_cacheless));
+    }
+    println!("\npaper: radix-8 1.59x, radix-16 1.54x over cacheless; radix-16 chosen");
+}

@@ -1,0 +1,30 @@
+//! Perf bench — host-side simulator throughput (core-cycles simulated per
+//! wall-clock second), the §Perf headline metric for the simulator.
+
+use mempool::config::ClusterConfig;
+use mempool::kernels::{run_and_verify, Matmul};
+use mempool::util::bench::{bench_config, section};
+use std::time::Instant;
+
+fn main() {
+    section("Simulator throughput");
+    for cores in [16usize, 64, 256] {
+        let cfg = ClusterConfig::with_cores(cores);
+        let k = Matmul::weak_scaled(cores);
+        let t0 = Instant::now();
+        let r = run_and_verify(&k, &cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        let core_cycles = r.cycles * cores as u64;
+        println!(
+            "{cores:>4} cores: {} cycles in {:.3}s = {:.1} M core-cycles/s",
+            r.cycles,
+            dt,
+            core_cycles as f64 / dt / 1e6
+        );
+    }
+    bench_config("minpool matmul end-to-end", 1, 5, &mut || {
+        let cfg = ClusterConfig::minpool();
+        let k = Matmul::weak_scaled(16);
+        std::hint::black_box(run_and_verify(&k, &cfg));
+    });
+}

@@ -1,0 +1,31 @@
+//! Bench E8 — regenerate Table 1: the five DSP kernels on the full
+//! 256-core cluster with IPC, power, OP/cycle, and GOPS/W.
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::studies::table1;
+use mempool::util::bench::{bench_config, section};
+
+fn main() {
+    let cfg = ClusterConfig::mempool();
+    section("Table 1 — kernel metrics on 256 cores @600 MHz");
+    brow!("kernel", "cycles", "IPC", "OP/cycle", "GOPS", "W", "GOPS/W");
+    for r in table1(&cfg) {
+        brow!(
+            r.kernel,
+            r.cycles,
+            format!("{:.2}", r.ipc),
+            format!("{:.0}", r.ops_per_cycle),
+            format!("{:.0}", r.gops),
+            format!("{:.2}", r.power_w),
+            format!("{:.0}", r.gops_per_w)
+        );
+    }
+    println!("\npaper: matmul 285 OP/cycle @0.88 IPC; 2dconv 336 @0.87; dct 168 @0.93;");
+    println!("axpy 90 @0.76; dotp 92 @0.74; cluster ≈1.5 W");
+    bench_config("table1: 16-core matmul end-to-end", 1, 3, &mut || {
+        let cfg = ClusterConfig::minpool();
+        let k = mempool::kernels::Matmul::weak_scaled(16);
+        std::hint::black_box(mempool::kernels::run_and_verify(&k, &cfg));
+    });
+}

@@ -1,0 +1,255 @@
+//! The software-managed read-only cache instantiated at AXI tree nodes
+//! (paper §5.2). Four pipeline stages (AXI-to-cache, lookup, handler,
+//! response), multiple outstanding refills with coalescing, and the AXI
+//! same-ID ordering rule: a hit must not overtake an earlier pending miss
+//! from the same master.
+//!
+//! This model is timing + presence only — instruction/data bits come from
+//! the functional `L2Memory`; the cache decides *when* they arrive.
+
+/// Hit latency through the four-stage pipeline.
+pub const RO_HIT_LATENCY: u64 = 2;
+
+/// Counters for reports and the energy model.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+    pub flushes: u64,
+}
+
+/// One pending refill.
+#[derive(Debug, Clone, Copy)]
+struct Refill {
+    line: u32,
+    ready_at: u64,
+}
+
+/// Set-associative, read-only, software-flushed cache.
+#[derive(Debug)]
+pub struct RoCache {
+    /// `tags[set * ways + way]` — line address or `u32::MAX`.
+    tags: Vec<u32>,
+    sets: usize,
+    ways: usize,
+    line_bytes: u32,
+    victim: Vec<u8>,
+    refills: Vec<Refill>,
+    /// Per-master completion horizon for the same-ID ordering rule.
+    last_pending: Vec<u64>,
+    pub counters: RoCounters,
+    /// Enabled flag (software controlled; disabled = pass-through).
+    pub enabled: bool,
+}
+
+impl RoCache {
+    pub fn new(capacity_bytes: usize, line_bytes: usize, ways: usize, masters: usize) -> Self {
+        let sets = capacity_bytes / (line_bytes * ways);
+        assert!(sets.is_power_of_two(), "RO cache sets must be a power of two");
+        RoCache {
+            tags: vec![u32::MAX; sets * ways],
+            sets,
+            ways,
+            line_bytes: line_bytes as u32,
+            victim: vec![0; sets],
+            refills: Vec::new(),
+            last_pending: vec![0; masters],
+            counters: RoCounters::default(),
+            enabled: true,
+        }
+    }
+
+    fn set_of(&self, line: u32) -> usize {
+        ((line / self.line_bytes) as usize) % self.sets
+    }
+
+    fn contains(&self, line: u32) -> bool {
+        let s = self.set_of(line);
+        self.tags[s * self.ways..(s + 1) * self.ways].contains(&line)
+    }
+
+    fn install(&mut self, line: u32) {
+        if self.contains(line) {
+            return;
+        }
+        let s = self.set_of(line);
+        let w = self.victim[s] as usize % self.ways;
+        self.victim[s] = self.victim[s].wrapping_add(1);
+        self.tags[s * self.ways + w] = line;
+    }
+
+    /// Retire refills that have landed by `now`.
+    fn settle(&mut self, now: u64) {
+        let mut i = 0;
+        while i < self.refills.len() {
+            if self.refills[i].ready_at <= now {
+                let r = self.refills.swap_remove(i);
+                self.install(r.line);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// A read of `bytes` at `addr` from `master` arrives at the cache at
+    /// cycle `now`; `backing` supplies the completion time of an L2 read
+    /// for the missing line(s). Returns when the data is available at this
+    /// node.
+    pub fn read(
+        &mut self,
+        master: usize,
+        addr: u32,
+        bytes: usize,
+        now: u64,
+        backing: &mut dyn FnMut(u32, usize, u64) -> u64,
+    ) -> u64 {
+        if !self.enabled {
+            return backing(addr, bytes, now);
+        }
+        self.settle(now);
+        let first = addr & !(self.line_bytes - 1);
+        let last = (addr + bytes as u32 - 1) & !(self.line_bytes - 1);
+        let mut ready = now + RO_HIT_LATENCY;
+        let mut line = first;
+        loop {
+            if self.contains(line) {
+                self.counters.hits += 1;
+            } else if let Some(r) = self.refills.iter().find(|r| r.line == line) {
+                // Merge with the in-flight refill.
+                self.counters.coalesced += 1;
+                ready = ready.max(r.ready_at);
+            } else {
+                self.counters.misses += 1;
+                let done = backing(line, self.line_bytes as usize, now);
+                self.refills.push(Refill { line, ready_at: done });
+                ready = ready.max(done);
+            }
+            if line == last {
+                break;
+            }
+            line += self.line_bytes;
+        }
+        // AXI same-ID ordering: responses to one master return in order,
+        // so a fast hit stalls behind this master's slowest pending miss.
+        ready = ready.max(self.last_pending[master]);
+        self.last_pending[master] = ready;
+        ready
+    }
+
+    /// Software flush (e.g., after the DMA rewrites a cached region).
+    pub fn flush(&mut self) {
+        self.tags.fill(u32::MAX);
+        self.victim.fill(0);
+        self.refills.clear();
+        self.counters.flushes += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Backing store with fixed latency, counting reads.
+    struct Backing {
+        latency: u64,
+        reads: u64,
+    }
+
+    impl Backing {
+        fn f(&mut self) -> impl FnMut(u32, usize, u64) -> u64 + '_ {
+            move |_addr, _bytes, now| {
+                self.reads += 1;
+                now + self.latency
+            }
+        }
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = RoCache::new(8192, 64, 2, 16);
+        let mut b = Backing { latency: 12, reads: 0 };
+        let t0 = c.read(0, 0x100, 32, 0, &mut b.f());
+        assert_eq!(t0, 12);
+        assert_eq!(b.reads, 1);
+        // Same line later: a hit at pipeline latency.
+        let t1 = c.read(0, 0x120, 32, 20, &mut b.f());
+        assert_eq!(t1, 20 + RO_HIT_LATENCY);
+        assert_eq!(b.reads, 1, "no second backing read");
+    }
+
+    #[test]
+    fn coalesces_inflight_refills() {
+        let mut c = RoCache::new(8192, 64, 2, 16);
+        let mut b = Backing { latency: 12, reads: 0 };
+        let t0 = c.read(0, 0x100, 32, 0, &mut b.f());
+        // A second master wants the same line while the refill flies.
+        let t1 = c.read(1, 0x100, 32, 3, &mut b.f());
+        assert_eq!(b.reads, 1, "refill must be coalesced");
+        assert_eq!(t0, 12);
+        assert_eq!(t1, 12, "merged request completes with the refill");
+        assert_eq!(c.counters.coalesced, 1);
+    }
+
+    #[test]
+    fn same_id_ordering_hits_wait_for_misses() {
+        let mut c = RoCache::new(8192, 64, 2, 16);
+        let mut b = Backing { latency: 50, reads: 0 };
+        // Warm line A.
+        c.read(0, 0x0, 4, 0, &mut b.f());
+        // Master 0 misses on line B at t=100 (completes at 150), then
+        // immediately hits on line A: the hit must not overtake.
+        let miss = c.read(0, 0x1000, 4, 100, &mut b.f());
+        assert_eq!(miss, 150);
+        let hit = c.read(0, 0x0, 4, 101, &mut b.f());
+        assert!(hit >= 150, "hit ({hit}) overtook same-ID miss ({miss})");
+        // A different master's hit may proceed at once.
+        let other = c.read(1, 0x0, 4, 101, &mut b.f());
+        assert!(other < 150, "independent master stalled ({other})");
+    }
+
+    #[test]
+    fn multi_line_requests_fetch_all_lines() {
+        let mut c = RoCache::new(8192, 64, 2, 16);
+        let mut b = Backing { latency: 10, reads: 0 };
+        // 256-byte read spans 4 lines.
+        c.read(0, 0x0, 256, 0, &mut b.f());
+        assert_eq!(b.reads, 4);
+    }
+
+    #[test]
+    fn flush_empties_cache() {
+        let mut c = RoCache::new(8192, 64, 2, 16);
+        let mut b = Backing { latency: 12, reads: 0 };
+        c.read(0, 0x40, 4, 0, &mut b.f());
+        c.settle(100);
+        c.flush();
+        c.read(0, 0x40, 4, 200, &mut b.f());
+        assert_eq!(b.reads, 2, "flush must force a refetch");
+    }
+
+    #[test]
+    fn disabled_cache_passes_through() {
+        let mut c = RoCache::new(8192, 64, 2, 16);
+        c.enabled = false;
+        let mut b = Backing { latency: 12, reads: 0 };
+        assert_eq!(c.read(0, 0x40, 4, 0, &mut b.f()), 12);
+        assert_eq!(c.read(0, 0x40, 4, 20, &mut b.f()), 32);
+        assert_eq!(b.reads, 2);
+    }
+
+    #[test]
+    fn capacity_evicts_round_robin() {
+        // Tiny cache: 2 sets × 2 ways × 64 B = 256 B.
+        let mut c = RoCache::new(256, 64, 2, 4);
+        let mut b = Backing { latency: 5, reads: 0 };
+        // Three lines mapping to set 0: 0x000, 0x080, 0x100.
+        for (i, a) in [0x000u32, 0x080, 0x100].iter().enumerate() {
+            c.read(0, *a, 4, 10 * i as u64, &mut b.f());
+        }
+        c.settle(100);
+        // 0x000 was evicted by 0x100.
+        c.read(0, 0x000, 4, 200, &mut b.f());
+        assert_eq!(b.reads, 4);
+    }
+}

@@ -1,0 +1,277 @@
+//! Parametric cluster configuration, mirroring the RTL generics of the
+//! paper's design (§2.2). The "large MemPool configuration" the paper
+//! evaluates — 256 cores, 4 groups × 16 tiles × 4 cores, 1024 × 1 KiB SPM
+//! banks, TopH interconnect — is `ClusterConfig::mempool()`.
+
+use crate::icache::ICacheConfig;
+
+/// L1 data interconnect topology (paper §3.1, Fig 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// One remote port per tile; 64×64 radix-4 butterfly; 5-cycle remote
+    /// latency. Congests around 0.10 req/core/cycle.
+    Top1,
+    /// Four remote ports per tile; four independent 64×64 radix-4
+    /// butterflies. Physically infeasible (kept for the Fig 4 study).
+    Top4,
+    /// The implemented topology: groups of 16 tiles; 16×16 fully connected
+    /// crossbars local (3-cycle) and between group pairs (5-cycle).
+    TopH,
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Top1 => "Top1",
+            Topology::Top4 => "Top4",
+            Topology::TopH => "TopH",
+        }
+    }
+}
+
+/// DMA engine configuration (paper §5.3).
+#[derive(Debug, Clone, Copy)]
+pub struct DmaConfig {
+    /// Data movers per group (paper settles on 4, i.e. one per 4 tiles).
+    pub backends_per_group: usize,
+    /// Bus width of a backend in bytes (matches the AXI data width).
+    pub bus_bytes: usize,
+    /// Maximum AXI burst length in beats.
+    pub max_burst: usize,
+    /// Cycles to program a new transfer through the frontend (paper §8.2.1:
+    /// "roughly 30 cycles to set up a new DMA transfer").
+    pub setup_cycles: u64,
+}
+
+impl Default for DmaConfig {
+    fn default() -> Self {
+        DmaConfig { backends_per_group: 4, bus_bytes: 64, max_burst: 16, setup_cycles: 30 }
+    }
+}
+
+/// Hierarchical AXI interconnect + RO cache configuration (paper §5.1–5.2).
+#[derive(Debug, Clone, Copy)]
+pub struct AxiConfig {
+    /// AXI data width in bytes (512 bit = 64 B).
+    pub bus_bytes: usize,
+    /// Tree radix: how many leaf ports merge into one group master port.
+    /// The paper compares radix 4/8/16 and settles on 16 (one level).
+    pub radix: usize,
+    /// Instantiate the read-only cache at the group master port.
+    pub ro_cache: bool,
+    /// RO cache capacity in bytes (8 KiB per group in the paper).
+    pub ro_cache_bytes: usize,
+    /// RO cache line width in bytes (≥ tile icache line).
+    pub ro_line_bytes: usize,
+    /// Access latency of the L2/SoC port in cycles (paper §5.4: 12).
+    pub l2_latency: u64,
+    /// L2 bandwidth for the whole system in bytes/cycle (paper: 256 B/cycle,
+    /// i.e. one 512-bit port per group).
+    pub l2_bytes_per_cycle: usize,
+}
+
+impl Default for AxiConfig {
+    fn default() -> Self {
+        AxiConfig {
+            bus_bytes: 64,
+            radix: 16,
+            ro_cache: true,
+            ro_cache_bytes: 8 * 1024,
+            ro_line_bytes: 32,
+            l2_latency: 12,
+            l2_bytes_per_cycle: 256,
+        }
+    }
+}
+
+/// Full cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub num_groups: usize,
+    pub tiles_per_group: usize,
+    pub cores_per_tile: usize,
+    pub banks_per_tile: usize,
+    /// Words (32-bit) per SPM bank; 256 words = 1 KiB.
+    pub bank_words: usize,
+    /// log2 of rows per bank dedicated to the sequential region (`s` in
+    /// paper §3.2). 0 disables the hybrid addressing scheme.
+    pub seq_rows_log2: u32,
+    pub topology: Topology,
+    pub icache: ICacheConfig,
+    pub axi: AxiConfig,
+    pub dma: DmaConfig,
+    /// Scoreboard depth: maximum outstanding instructions per core
+    /// (paper §2.1: 8).
+    pub scoreboard_depth: usize,
+    /// Remote ports per tile (1 for Top1; 4 for Top4/TopH).
+    pub remote_ports: usize,
+    /// Extra pipeline registers on the local (same-group) path, yielding
+    /// the paper's 3-cycle same-group latency.
+    pub local_group_latency: u64,
+    /// Latency of the inter-group path (paper: 5 cycles).
+    pub remote_group_latency: u64,
+    /// Clock frequency in Hz for W↔J conversions (600 MHz typical).
+    pub clock_hz: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's large configuration: 256 cores, 1 MiB SPM, TopH.
+    pub fn mempool() -> Self {
+        ClusterConfig {
+            num_groups: 4,
+            tiles_per_group: 16,
+            cores_per_tile: 4,
+            banks_per_tile: 16,
+            bank_words: 256,
+            seq_rows_log2: 6,
+            topology: Topology::TopH,
+            icache: ICacheConfig::final_optimized(),
+            axi: AxiConfig::default(),
+            dma: DmaConfig::default(),
+            scoreboard_depth: 8,
+            remote_ports: 4,
+            local_group_latency: 3,
+            remote_group_latency: 5,
+            clock_hz: 600e6,
+        }
+    }
+
+    /// A small configuration for fast tests: 16 cores, 4 tiles, 1 group.
+    pub fn minpool() -> Self {
+        ClusterConfig {
+            num_groups: 1,
+            tiles_per_group: 4,
+            cores_per_tile: 4,
+            banks_per_tile: 16,
+            bank_words: 256,
+            seq_rows_log2: 6,
+            topology: Topology::TopH,
+            icache: ICacheConfig::final_optimized(),
+            axi: AxiConfig::default(),
+            dma: DmaConfig { backends_per_group: 2, ..DmaConfig::default() },
+            scoreboard_depth: 8,
+            remote_ports: 4,
+            local_group_latency: 3,
+            remote_group_latency: 5,
+            clock_hz: 600e6,
+        }
+    }
+
+    /// Scaled configuration with `n` cores for the weak-scaling study
+    /// (Fig 13). Keeps 4 cores/tile and the banking factor of 4; grows
+    /// tiles, then groups.
+    pub fn with_cores(n: usize) -> Self {
+        assert!(n.is_power_of_two() && n >= 1, "core count must be a power of two");
+        let mut cfg = ClusterConfig::mempool();
+        if n <= 4 {
+            cfg.num_groups = 1;
+            cfg.tiles_per_group = 1;
+            cfg.cores_per_tile = n;
+            cfg.banks_per_tile = 4 * n;
+        } else if n <= 64 {
+            cfg.num_groups = 1;
+            cfg.tiles_per_group = n / 4;
+        } else {
+            cfg.num_groups = 4;
+            cfg.tiles_per_group = n / 16;
+        }
+        cfg
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.num_groups * self.tiles_per_group
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.num_tiles() * self.cores_per_tile
+    }
+
+    pub fn num_banks(&self) -> usize {
+        self.num_tiles() * self.banks_per_tile
+    }
+
+    /// Total L1 SPM size in bytes.
+    pub fn spm_bytes(&self) -> usize {
+        self.num_banks() * self.bank_words * 4
+    }
+
+    /// Banking factor (banks per core; the paper uses 4).
+    pub fn banking_factor(&self) -> usize {
+        self.num_banks() / self.num_cores()
+    }
+
+    /// Bytes of sequential region per tile (`2^(s+b+2)`).
+    pub fn seq_bytes_per_tile(&self) -> usize {
+        if self.seq_rows_log2 == 0 {
+            0
+        } else {
+            (1usize << self.seq_rows_log2) * self.banks_per_tile * 4
+        }
+    }
+
+    /// Stack bytes available per core inside its tile's sequential region.
+    pub fn stack_bytes_per_core(&self) -> usize {
+        self.seq_bytes_per_tile() / self.cores_per_tile
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.num_tiles().is_power_of_two() {
+            return Err(format!("tile count {} must be a power of two", self.num_tiles()));
+        }
+        if !self.banks_per_tile.is_power_of_two() {
+            return Err("banks per tile must be a power of two".into());
+        }
+        if !self.bank_words.is_power_of_two() {
+            return Err("bank words must be a power of two".into());
+        }
+        if (1u64 << self.seq_rows_log2) > self.bank_words as u64 {
+            return Err("sequential region larger than the bank".into());
+        }
+        if self.scoreboard_depth == 0 {
+            return Err("scoreboard depth must be at least 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mempool_matches_paper_numbers() {
+        let c = ClusterConfig::mempool();
+        c.validate().unwrap();
+        assert_eq!(c.num_cores(), 256);
+        assert_eq!(c.num_tiles(), 64);
+        assert_eq!(c.num_banks(), 1024);
+        assert_eq!(c.spm_bytes(), 1 << 20); // 1 MiB
+        assert_eq!(c.banking_factor(), 4);
+    }
+
+    #[test]
+    fn minpool_valid() {
+        let c = ClusterConfig::minpool();
+        c.validate().unwrap();
+        assert_eq!(c.num_cores(), 16);
+        assert_eq!(c.banking_factor(), 4);
+    }
+
+    #[test]
+    fn with_cores_spans_range() {
+        for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let c = ClusterConfig::with_cores(n);
+            c.validate().unwrap();
+            assert_eq!(c.num_cores(), n, "n={n}");
+            assert_eq!(c.banking_factor(), 4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn seq_region_sizes() {
+        let c = ClusterConfig::mempool();
+        // s=6: 64 rows × 16 banks × 4 B = 4 KiB per tile, 1 KiB stack/core.
+        assert_eq!(c.seq_bytes_per_tile(), 4096);
+        assert_eq!(c.stack_bytes_per_core(), 1024);
+    }
+}

@@ -1,0 +1,226 @@
+//! The Xpulpimg integer processing unit hanging off Snitch's accelerator
+//! port (paper §2.1): a pipelined MAC/multiply datapath plus an iterative
+//! divider. Snitch offloads suitable instructions and keeps issuing;
+//! results come back through one of the register file's two write ports.
+
+use crate::isa::{OpKind, Reg};
+
+/// Operation executed by the IPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IpuOp {
+    /// `rd = rs1 * rs2` (low 32 bits) and the high-half variants.
+    Mul(OpKind),
+    /// `rd += rs1 * rs2` / `rd -= rs1 * rs2` — the accumulator value rides
+    /// along as `acc`.
+    Mac { sub: bool },
+    /// Division / remainder (iterative, blocking the IPU pipeline).
+    Div(OpKind),
+}
+
+/// Pipeline latencies (issue-to-writeback, cycles). The MAC is fully
+/// pipelined with initiation interval 1 — the paper reports one MAC per
+/// cycle per core in the matmul inner loop.
+pub const MUL_LATENCY: u64 = 2;
+pub const MAC_LATENCY: u64 = 2;
+pub const DIV_LATENCY: u64 = 12;
+
+/// An in-flight IPU instruction.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    rd: Reg,
+    value: u32,
+    ready_at: u64,
+}
+
+/// The pipelined IPU. Values are computed at issue (operands are read from
+/// the register file then), and written back `latency` cycles later.
+#[derive(Debug, Default)]
+pub struct Ipu {
+    inflight: Vec<InFlight>,
+    /// The divider is iterative and not pipelined: it blocks new divides
+    /// (but not MACs/MULs) until this cycle.
+    div_busy_until: u64,
+    /// Counters for the energy model.
+    pub mul_count: u64,
+    pub mac_count: u64,
+    pub div_count: u64,
+}
+
+impl Ipu {
+    pub fn new() -> Self {
+        Ipu::default()
+    }
+
+    /// Whether a new op of this kind can be accepted this cycle.
+    pub fn can_accept(&self, op: IpuOp, now: u64) -> bool {
+        match op {
+            IpuOp::Div(_) => now >= self.div_busy_until,
+            // MUL/MAC pipeline is fully pipelined (II = 1).
+            _ => true,
+        }
+    }
+
+    /// Issue an operation; `acc` is the accumulator (MAC) read at issue.
+    /// Returns the writeback cycle.
+    pub fn issue(&mut self, op: IpuOp, rd: Reg, rs1: u32, rs2: u32, acc: u32, now: u64) -> u64 {
+        let (value, latency) = match op {
+            IpuOp::Mul(kind) => {
+                self.mul_count += 1;
+                let v = match kind {
+                    OpKind::Mul => rs1.wrapping_mul(rs2),
+                    OpKind::Mulh => ((rs1 as i32 as i64 * rs2 as i32 as i64) >> 32) as u32,
+                    OpKind::Mulhu => ((rs1 as u64 * rs2 as u64) >> 32) as u32,
+                    OpKind::Mulhsu => ((rs1 as i32 as i64 * rs2 as u64 as i64) >> 32) as u32,
+                    other => unreachable!("not a multiply: {other:?}"),
+                };
+                (v, MUL_LATENCY)
+            }
+            IpuOp::Mac { sub } => {
+                self.mac_count += 1;
+                let prod = rs1.wrapping_mul(rs2);
+                let v = if sub { acc.wrapping_sub(prod) } else { acc.wrapping_add(prod) };
+                (v, MAC_LATENCY)
+            }
+            IpuOp::Div(kind) => {
+                self.div_count += 1;
+                self.div_busy_until = now + DIV_LATENCY;
+                let v = div_semantics(kind, rs1, rs2);
+                (v, DIV_LATENCY)
+            }
+        };
+        let ready_at = now + latency;
+        self.inflight.push(InFlight { rd, value, ready_at });
+        ready_at
+    }
+
+    /// Pop at most one result that is due (the IPU owns one RF write port).
+    pub fn take_writeback(&mut self, now: u64) -> Option<(Reg, u32)> {
+        // Oldest-first among due results.
+        let mut best: Option<usize> = None;
+        for (i, f) in self.inflight.iter().enumerate() {
+            if f.ready_at <= now && best.is_none_or(|b| f.ready_at < self.inflight[b].ready_at) {
+                best = Some(i);
+            }
+        }
+        best.map(|i| {
+            let f = self.inflight.swap_remove(i);
+            (f.rd, f.value)
+        })
+    }
+
+    pub fn busy(&self) -> bool {
+        !self.inflight.is_empty()
+    }
+
+    /// Newest in-flight value destined for `rd`, if any — the accumulator
+    /// forwarding path that lets back-to-back MACs to the same register
+    /// issue every cycle.
+    pub fn forward(&self, rd: Reg) -> Option<u32> {
+        self.inflight
+            .iter()
+            .filter(|f| f.rd == rd)
+            .max_by_key(|f| f.ready_at)
+            .map(|f| f.value)
+    }
+
+    /// Whether any in-flight op still writes `rd`.
+    pub fn writes_reg(&self, rd: Reg) -> bool {
+        self.inflight.iter().any(|f| f.rd == rd)
+    }
+}
+
+/// RISC-V M-extension division semantics (div-by-zero and overflow rules).
+fn div_semantics(kind: OpKind, a: u32, b: u32) -> u32 {
+    match kind {
+        OpKind::Div => {
+            let (a, b) = (a as i32, b as i32);
+            if b == 0 {
+                u32::MAX
+            } else if a == i32::MIN && b == -1 {
+                a as u32
+            } else {
+                (a / b) as u32
+            }
+        }
+        OpKind::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        OpKind::Rem => {
+            let (a, b) = (a as i32, b as i32);
+            if b == 0 {
+                a as u32
+            } else if a == i32::MIN && b == -1 {
+                0
+            } else {
+                (a % b) as u32
+            }
+        }
+        OpKind::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+        other => unreachable!("not a divide: {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_pipelined_one_per_cycle() {
+        let mut ipu = Ipu::new();
+        // Issue three MACs back-to-back; each writes back MAC_LATENCY later.
+        for t in 0..3u64 {
+            assert!(ipu.can_accept(IpuOp::Mac { sub: false }, t));
+            ipu.issue(IpuOp::Mac { sub: false }, Reg(10 + t as u8), 2, 3, 10, t);
+        }
+        assert!(ipu.take_writeback(1).is_none());
+        let (rd, v) = ipu.take_writeback(MAC_LATENCY).unwrap();
+        assert_eq!((rd, v), (Reg(10), 16));
+        // One writeback per cycle.
+        assert_eq!(ipu.take_writeback(MAC_LATENCY).map(|x| x.0), None);
+        assert_eq!(ipu.take_writeback(MAC_LATENCY + 1).unwrap().0, Reg(11));
+        assert_eq!(ipu.take_writeback(MAC_LATENCY + 2).unwrap().0, Reg(12));
+        assert!(!ipu.busy());
+    }
+
+    #[test]
+    fn divider_blocks_new_divides() {
+        let mut ipu = Ipu::new();
+        ipu.issue(IpuOp::Div(OpKind::Div), Reg(5), 100, 7, 0, 0);
+        assert!(!ipu.can_accept(IpuOp::Div(OpKind::Div), 1));
+        assert!(ipu.can_accept(IpuOp::Mac { sub: false }, 1), "MACs still flow");
+        assert!(ipu.can_accept(IpuOp::Div(OpKind::Div), DIV_LATENCY));
+        let (rd, v) = ipu.take_writeback(DIV_LATENCY).unwrap();
+        assert_eq!((rd, v), (Reg(5), 14));
+    }
+
+    #[test]
+    fn riscv_div_specials() {
+        assert_eq!(div_semantics(OpKind::Div, 7, 0), u32::MAX);
+        assert_eq!(div_semantics(OpKind::Divu, 7, 0), u32::MAX);
+        assert_eq!(div_semantics(OpKind::Rem, 7, 0), 7);
+        assert_eq!(div_semantics(OpKind::Div, i32::MIN as u32, -1i32 as u32), i32::MIN as u32);
+        assert_eq!(div_semantics(OpKind::Rem, i32::MIN as u32, -1i32 as u32), 0);
+        assert_eq!(div_semantics(OpKind::Div, (-7i32) as u32, 2), (-3i32) as u32);
+    }
+
+    #[test]
+    fn mulh_variants() {
+        let mut ipu = Ipu::new();
+        ipu.issue(IpuOp::Mul(OpKind::Mulh), Reg(1), (-1i32) as u32, (-1i32) as u32, 0, 0);
+        let (_, v) = ipu.take_writeback(MUL_LATENCY).unwrap();
+        assert_eq!(v, 0); // (-1 * -1) >> 32 == 0
+        ipu.issue(IpuOp::Mul(OpKind::Mulhu), Reg(1), u32::MAX, u32::MAX, 0, 10);
+        let (_, v) = ipu.take_writeback(10 + MUL_LATENCY).unwrap();
+        assert_eq!(v, 0xFFFF_FFFE);
+    }
+}

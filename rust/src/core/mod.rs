@@ -1,0 +1,17 @@
+//! The Snitch processing element (paper §2.1): a single-stage, single-issue
+//! 32-bit RISC-V core with a scoreboard supporting multiple outstanding
+//! instructions, an accelerator port feeding a pipelined integer processing
+//! unit (IPU) for the Xpulpimg MAC/multiply/divide instructions, and
+//! out-of-order load retirement (MemPool's NUMA interconnect does not order
+//! responses).
+
+mod ipu;
+mod snitch;
+
+pub use ipu::{Ipu, IpuOp};
+pub use snitch::{
+    CoreCtx, CoreStats, MemCompletion, MemRequestOut, Snitch, StallReason, StepOutcome,
+};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,651 @@
+//! The Snitch core model (paper §2.1).
+//!
+//! Single-stage and single-issue: in the absence of stalls the core issues
+//! one instruction per cycle (IPC ≤ 1). A scoreboard with
+//! `scoreboard_depth` entries lets loads, stores, and IPU instructions
+//! retire out of order while the core keeps issuing independent
+//! instructions — this is what hides MemPool's 1/3/5-cycle L1 latencies.
+//!
+//! Stall taxonomy (paper Fig 14):
+//! - **I$**: the L0 instruction cache missed and the line is in flight.
+//! - **RAW**: a source (or destination, WAW) register is pending.
+//! - **LSU**: the scoreboard is full or the interconnect applied
+//!   backpressure; also `fence` draining.
+//! - **Synchronization**: sleeping at `wfi` waiting for a wake-up pulse.
+
+use std::collections::VecDeque;
+
+use super::ipu::{Ipu, IpuOp};
+use crate::icache::FetchResult;
+use crate::isa::{Csr, Instr, OpKind, Program, Reg};
+use crate::mem::MemOp;
+
+/// Memory access width (re-exported shape of `isa::instr::Width` kept
+/// private there; the LSU needs it for lane handling).
+pub(crate) use crate::isa::Width;
+
+/// A memory request leaving the core for the L1 interconnect (or control
+/// registers / L2). `wdata` is already lane-aligned; `tag` identifies the
+/// scoreboard entry and is echoed back in the completion.
+#[derive(Debug, Clone, Copy)]
+pub struct MemRequestOut {
+    pub tag: u8,
+    pub addr: u32,
+    pub op: MemOp,
+    pub wdata: u32,
+}
+
+/// A completed memory transaction returning to the core.
+#[derive(Debug, Clone, Copy)]
+pub struct MemCompletion {
+    pub tag: u8,
+    pub rdata: u32,
+}
+
+/// Why the core did not issue this cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallReason {
+    IFetch,
+    Raw,
+    Lsu,
+}
+
+/// Result of one core cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// An instruction was issued (compute or control).
+    Issued,
+    Stall(StallReason),
+    /// Asleep at `wfi` (synchronization in the Fig 14 breakdown).
+    Sleeping,
+    Halted,
+}
+
+/// Services the core needs from its tile each cycle.
+pub trait CoreCtx {
+    /// Attempt an instruction fetch (drives the icache model).
+    fn fetch(&mut self, core_in_tile: usize, addr: u32, program: &Program) -> FetchResult;
+    /// Try to hand a memory request to the interconnect; `false` means
+    /// backpressure (the request must be retried — LSU stall).
+    fn try_send(&mut self, core_in_tile: usize, req: MemRequestOut) -> bool;
+    /// CSR read (hart id, cycle, cluster parameters).
+    fn read_csr(&mut self, csr: Csr) -> u32;
+}
+
+/// Per-core cycle/issue statistics (the Fig 14 breakdown).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoreStats {
+    pub cycles: u64,
+    /// Issued instructions counted as compute (arithmetic, MAC).
+    pub issued_compute: u64,
+    /// Issued instructions counted as control (loads, stores, branches,
+    /// address setup...).
+    pub issued_control: u64,
+    /// 32-bit operations for the paper's OP metric (MAC = 2).
+    pub ops: u64,
+    pub stall_ifetch: u64,
+    pub stall_raw: u64,
+    pub stall_lsu: u64,
+    pub sleep_cycles: u64,
+    /// Cycles after `halt`.
+    pub halted_cycles: u64,
+    /// Issued loads/stores (for the energy model).
+    pub loads: u64,
+    pub stores: u64,
+    pub amos: u64,
+    /// Instruction-class counters feeding the Fig 16 energy composition.
+    pub alu_instrs: u64,
+    pub mul_instrs: u64,
+    pub mac_instrs: u64,
+}
+
+impl CoreStats {
+    pub fn issued(&self) -> u64 {
+        self.issued_compute + self.issued_control
+    }
+
+    /// IPC over non-halted cycles.
+    pub fn ipc(&self) -> f64 {
+        let active = self.cycles - self.halted_cycles;
+        if active == 0 {
+            0.0
+        } else {
+            self.issued() as f64 / active as f64
+        }
+    }
+}
+
+/// A pending scoreboard entry for an outstanding memory transaction.
+#[derive(Debug, Clone, Copy)]
+struct PendingMem {
+    rd: Option<Reg>,
+    /// Low two address bits, for sub-word lane extraction.
+    addr_lo: u32,
+    width: Width,
+    signed: bool,
+    /// SC/AMO/LR return values verbatim (no lane games).
+    raw_result: bool,
+}
+
+/// Core execution status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Running,
+    /// At a `wfi`, waiting for a wake-up pulse.
+    Sleeping,
+    Halted,
+}
+
+/// The Snitch core.
+pub struct Snitch {
+    /// Global core ID (hart id).
+    pub id: u32,
+    /// Index of this core within its tile (fetch/request port index).
+    pub lane: usize,
+    regs: [u32; 32],
+    /// Program counter as an instruction index.
+    pc: u32,
+    status: Status,
+    /// Sticky wake pulse (a wake arriving before the `wfi` must not be
+    /// lost).
+    wake_pending: bool,
+    /// Scoreboard: registers with an outstanding writer.
+    pending_mem_regs: u32,
+    pending_ipu_regs: u32,
+    /// Outstanding memory transactions, indexed by tag.
+    mem_slots: Vec<Option<PendingMem>>,
+    outstanding_mem: usize,
+    /// Completions delivered by the cluster, drained one per cycle (the
+    /// LSU owns one register file write port).
+    inbox: VecDeque<MemCompletion>,
+    pub ipu: Ipu,
+    pub stats: CoreStats,
+}
+
+impl Snitch {
+    pub fn new(id: u32, lane: usize, scoreboard_depth: usize) -> Self {
+        Snitch {
+            id,
+            lane,
+            regs: [0; 32],
+            pc: 0,
+            status: Status::Running,
+            wake_pending: false,
+            pending_mem_regs: 0,
+            pending_ipu_regs: 0,
+            mem_slots: vec![None; scoreboard_depth],
+            outstanding_mem: 0,
+            inbox: VecDeque::new(),
+            ipu: Ipu::new(),
+            stats: CoreStats::default(),
+        }
+    }
+
+    /// Reset to instruction index `entry` with a given stack pointer.
+    pub fn reset(&mut self, entry: u32, sp: u32) {
+        self.regs = [0; 32];
+        self.regs[Reg::SP.index()] = sp;
+        self.pc = entry;
+        self.status = Status::Running;
+        self.wake_pending = false;
+        self.pending_mem_regs = 0;
+        self.pending_ipu_regs = 0;
+        self.mem_slots.iter_mut().for_each(|s| *s = None);
+        self.outstanding_mem = 0;
+        self.inbox.clear();
+    }
+
+    pub fn halted(&self) -> bool {
+        self.status == Status::Halted
+    }
+
+    pub fn sleeping(&self) -> bool {
+        self.status == Status::Sleeping
+    }
+
+    pub fn pc(&self) -> u32 {
+        self.pc
+    }
+
+    /// Architectural register read (x0 reads as 0).
+    pub fn reg(&self, r: Reg) -> u32 {
+        self.regs[r.index()]
+    }
+
+    pub fn set_reg(&mut self, r: Reg, v: u32) {
+        if r != Reg::ZERO {
+            self.regs[r.index()] = v;
+        }
+    }
+
+    /// Deliver a wake-up pulse (from a control-register store).
+    pub fn wake(&mut self) {
+        if self.status == Status::Sleeping {
+            self.status = Status::Running;
+        } else {
+            self.wake_pending = true;
+        }
+    }
+
+    /// Push a completed memory transaction (cluster side).
+    pub fn push_completion(&mut self, c: MemCompletion) {
+        self.inbox.push_back(c);
+    }
+
+    /// True if no instruction and no memory transaction is in flight.
+    pub fn drained(&self) -> bool {
+        self.outstanding_mem == 0 && !self.ipu.busy() && self.inbox.is_empty()
+    }
+
+    fn pending_mask(&self) -> u32 {
+        self.pending_mem_regs | self.pending_ipu_regs
+    }
+
+    fn reg_pending(&self, r: Reg) -> bool {
+        self.pending_mask() & (1 << r.index()) != 0
+    }
+
+    fn free_tag(&self) -> Option<u8> {
+        self.mem_slots.iter().position(|s| s.is_none()).map(|i| i as u8)
+    }
+
+    /// Retire at most one memory completion (LSU write port) and at most
+    /// one IPU result (second write port).
+    fn writeback(&mut self, now: u64) {
+        if let Some(c) = self.inbox.pop_front() {
+            let slot = self.mem_slots[c.tag as usize]
+                .take()
+                .expect("completion for an empty scoreboard slot");
+            self.outstanding_mem -= 1;
+            if let Some(rd) = slot.rd {
+                let value = if slot.raw_result {
+                    c.rdata
+                } else {
+                    extract_lanes(c.rdata, slot.addr_lo, slot.width, slot.signed)
+                };
+                self.set_reg(rd, value);
+                self.pending_mem_regs &= !(1 << rd.index());
+                // If another outstanding op also writes rd (WAW is blocked
+                // at issue, so this cannot happen) — invariant kept by
+                // the issue logic.
+            }
+        }
+        if let Some((rd, v)) = self.ipu.take_writeback(now) {
+            self.set_reg(rd, v);
+            // Only clear the pending bit if no *newer* IPU op writes rd
+            // (chained MACs keep the bit set until the youngest retires).
+            if !self.ipu.writes_reg(rd) {
+                self.pending_ipu_regs &= !(1 << rd.index());
+            }
+        }
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self, now: u64, program: &Program, ctx: &mut dyn CoreCtx) -> StepOutcome {
+        self.stats.cycles += 1;
+        self.writeback(now);
+
+        match self.status {
+            Status::Halted => {
+                self.stats.halted_cycles += 1;
+                return StepOutcome::Halted;
+            }
+            Status::Sleeping => {
+                self.stats.sleep_cycles += 1;
+                return StepOutcome::Sleeping;
+            }
+            Status::Running => {}
+        }
+
+        // Instruction fetch through the L0/L1 instruction cache.
+        let fetch_addr = program.addr_of(self.pc);
+        if ctx.fetch(self.lane, fetch_addr, program) == FetchResult::Stall {
+            // (fetch drives the L0/L1 icache model, including prefetch)
+            self.stats.stall_ifetch += 1;
+            return StepOutcome::Stall(StallReason::IFetch);
+        }
+        let instr = *program
+            .get(self.pc)
+            .unwrap_or_else(|| panic!("core {}: pc {} out of program", self.id, self.pc));
+
+        // Scoreboard hazard checks.
+        if let Some(reason) = self.hazard(&instr) {
+            match reason {
+                StallReason::Raw => self.stats.stall_raw += 1,
+                StallReason::Lsu => self.stats.stall_lsu += 1,
+                StallReason::IFetch => unreachable!(),
+            }
+            return StepOutcome::Stall(reason);
+        }
+
+        // Issue.
+        match self.execute(instr, now, ctx) {
+            Ok(()) => {
+                if instr.is_compute() {
+                    self.stats.issued_compute += 1;
+                } else {
+                    self.stats.issued_control += 1;
+                }
+                self.stats.ops += instr.op_count() as u64;
+                match instr {
+                    Instr::Mac { .. } | Instr::Msu { .. } => self.stats.mac_instrs += 1,
+                    Instr::Op { op, .. } if op.is_ipu() => self.stats.mul_instrs += 1,
+                    Instr::Op { .. } | Instr::OpImm { .. } => self.stats.alu_instrs += 1,
+                    _ => {}
+                }
+                StepOutcome::Issued
+            }
+            Err(reason) => {
+                match reason {
+                    StallReason::Raw => self.stats.stall_raw += 1,
+                    StallReason::Lsu => self.stats.stall_lsu += 1,
+                    StallReason::IFetch => unreachable!(),
+                }
+                StepOutcome::Stall(reason)
+            }
+        }
+    }
+
+    /// Pre-issue hazard detection: RAW/WAW on the scoreboard.
+    fn hazard(&self, instr: &Instr) -> Option<StallReason> {
+        // MAC/MSU chains: the accumulator (3rd source = rd) may be pending
+        // on the IPU — the IPU forwards it internally (matmul's inner loop
+        // issues one MAC per cycle to the same accumulator register).
+        let is_acc_chain = matches!(instr, Instr::Mac { .. } | Instr::Msu { .. });
+        for (i, src) in instr.sources().iter().enumerate() {
+            let Some(r) = *src else { continue };
+            if r == Reg::ZERO {
+                continue;
+            }
+            let ipu_pending = self.pending_ipu_regs & (1 << r.index()) != 0;
+            let mem_pending = self.pending_mem_regs & (1 << r.index()) != 0;
+            if is_acc_chain && i == 2 && ipu_pending && !mem_pending {
+                continue; // forwarded accumulator
+            }
+            if ipu_pending || mem_pending {
+                return Some(StallReason::Raw);
+            }
+        }
+        // WAW: destination still has an outstanding writer.
+        if let Some(rd) = instr.rd() {
+            let ipu_pending = self.pending_ipu_regs & (1 << rd.index()) != 0;
+            let mem_pending = self.pending_mem_regs & (1 << rd.index()) != 0;
+            if is_acc_chain && ipu_pending && !mem_pending {
+                // Chained MAC: allowed, stays pending.
+            } else if ipu_pending || mem_pending {
+                return Some(StallReason::Raw);
+            }
+        }
+        // Fence: drain the LSU before proceeding.
+        if matches!(instr, Instr::Fence) && self.outstanding_mem > 0 {
+            return Some(StallReason::Lsu);
+        }
+        None
+    }
+
+    /// Execute one instruction. Returns Err(stall) if a structural hazard
+    /// (scoreboard full, interconnect backpressure, IPU divider busy)
+    /// prevents issue.
+    fn execute(&mut self, instr: Instr, now: u64, ctx: &mut dyn CoreCtx) -> Result<(), StallReason> {
+        use Instr::*;
+        let next_pc = self.pc + 1;
+        match instr {
+            Op { op, rd, rs1, rs2 } => {
+                let a = self.reg(rs1);
+                let b = self.reg(rs2);
+                if op.is_ipu() {
+                    self.issue_ipu(op_to_ipu(op), rd, a, b, 0, now)?;
+                } else {
+                    self.set_reg(rd, alu(op, a, b));
+                }
+                self.pc = next_pc;
+            }
+            OpImm { op, rd, rs1, imm } => {
+                let v = alu(op, self.reg(rs1), imm as u32);
+                self.set_reg(rd, v);
+                self.pc = next_pc;
+            }
+            Lui { rd, imm } => {
+                self.set_reg(rd, (imm as u32) << 12);
+                self.pc = next_pc;
+            }
+            Auipc { rd, imm } => {
+                // PC-relative forms use the byte address.
+                let pc_bytes = 4 * self.pc;
+                self.set_reg(rd, pc_bytes.wrapping_add((imm as u32) << 12));
+                self.pc = next_pc;
+            }
+            Mac { rd, rs1, rs2 } | Msu { rd, rs1, rs2 } => {
+                let sub = matches!(instr, Msu { .. });
+                let acc = self
+                    .ipu
+                    .forward(rd)
+                    .unwrap_or_else(|| self.reg(rd));
+                let a = self.reg(rs1);
+                let b = self.reg(rs2);
+                self.issue_ipu(IpuOp::Mac { sub }, rd, a, b, acc, now)?;
+                self.pc = next_pc;
+            }
+            Load { rd, rs1, imm, width, signed } => {
+                let addr = self.reg(rs1).wrapping_add(imm as u32);
+                self.issue_mem(ctx, addr, MemOp::Read, 0, Some(rd), width, signed, false)?;
+                self.stats.loads += 1;
+                self.pc = next_pc;
+            }
+            LoadPost { rd, rs1, imm, width, signed } => {
+                let addr = self.reg(rs1);
+                self.issue_mem(ctx, addr, MemOp::Read, 0, Some(rd), width, signed, false)?;
+                self.set_reg(rs1, addr.wrapping_add(imm as u32));
+                self.stats.loads += 1;
+                self.pc = next_pc;
+            }
+            LoadReg { rd, rs1, rs2, width, signed } => {
+                let addr = self.reg(rs1).wrapping_add(self.reg(rs2));
+                self.issue_mem(ctx, addr, MemOp::Read, 0, Some(rd), width, signed, false)?;
+                self.stats.loads += 1;
+                self.pc = next_pc;
+            }
+            Store { rs2, rs1, imm, width } => {
+                let addr = self.reg(rs1).wrapping_add(imm as u32);
+                let (wdata, strb) = lane_data(self.reg(rs2), addr, width);
+                self.issue_mem(ctx, addr, MemOp::Write { strb }, wdata, None, width, false, false)?;
+                self.stats.stores += 1;
+                self.pc = next_pc;
+            }
+            StorePost { rs2, rs1, imm, width } => {
+                let addr = self.reg(rs1);
+                let (wdata, strb) = lane_data(self.reg(rs2), addr, width);
+                self.issue_mem(ctx, addr, MemOp::Write { strb }, wdata, None, width, false, false)?;
+                self.set_reg(rs1, addr.wrapping_add(imm as u32));
+                self.stats.stores += 1;
+                self.pc = next_pc;
+            }
+            Amo { op, rd, rs1, rs2 } => {
+                let addr = self.reg(rs1);
+                let operand = self.reg(rs2);
+                self.issue_mem(ctx, addr, MemOp::Amo(op), operand, Some(rd), Width::Word, false, true)?;
+                self.stats.amos += 1;
+                self.pc = next_pc;
+            }
+            Lr { rd, rs1 } => {
+                let addr = self.reg(rs1);
+                self.issue_mem(ctx, addr, MemOp::LoadReserved, 0, Some(rd), Width::Word, false, true)?;
+                self.stats.amos += 1;
+                self.pc = next_pc;
+            }
+            Sc { rd, rs1, rs2 } => {
+                let addr = self.reg(rs1);
+                let wdata = self.reg(rs2);
+                self.issue_mem(ctx, addr, MemOp::StoreConditional, wdata, Some(rd), Width::Word, false, true)?;
+                self.stats.amos += 1;
+                self.pc = next_pc;
+            }
+            Branch { cond, rs1, rs2, target } => {
+                self.pc = if cond.eval(self.reg(rs1), self.reg(rs2)) {
+                    target
+                } else {
+                    next_pc
+                };
+            }
+            Jal { rd, target } => {
+                self.set_reg(rd, 4 * next_pc);
+                self.pc = target;
+            }
+            Jalr { rd, rs1, imm } => {
+                let target_bytes = self.reg(rs1).wrapping_add(imm as u32) & !1;
+                self.set_reg(rd, 4 * next_pc);
+                self.pc = target_bytes / 4;
+            }
+            Csrr { rd, csr } => {
+                // The hart ID is the core's own identity; everything else
+                // (cycle counter, cluster parameters) comes from the tile.
+                let v = if csr == Csr::Mhartid {
+                    self.id
+                } else {
+                    ctx.read_csr(csr)
+                };
+                self.set_reg(rd, v);
+                self.pc = next_pc;
+            }
+            Wfi => {
+                if self.wake_pending {
+                    self.wake_pending = false;
+                } else {
+                    self.status = Status::Sleeping;
+                }
+                self.pc = next_pc;
+            }
+            Fence => {
+                // Hazard check guaranteed outstanding_mem == 0.
+                self.pc = next_pc;
+            }
+            Halt => {
+                self.status = Status::Halted;
+            }
+            Nop => {
+                self.pc = next_pc;
+            }
+        }
+        Ok(())
+    }
+
+    fn issue_ipu(
+        &mut self,
+        op: IpuOp,
+        rd: Reg,
+        a: u32,
+        b: u32,
+        acc: u32,
+        now: u64,
+    ) -> Result<(), StallReason> {
+        if !self.ipu.can_accept(op, now) {
+            return Err(StallReason::Lsu);
+        }
+        self.ipu.issue(op, rd, a, b, acc, now);
+        if rd != Reg::ZERO {
+            self.pending_ipu_regs |= 1 << rd.index();
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn issue_mem(
+        &mut self,
+        ctx: &mut dyn CoreCtx,
+        addr: u32,
+        op: MemOp,
+        wdata: u32,
+        rd: Option<Reg>,
+        width: Width,
+        signed: bool,
+        raw_result: bool,
+    ) -> Result<(), StallReason> {
+        let Some(tag) = self.free_tag() else {
+            return Err(StallReason::Lsu); // scoreboard full
+        };
+        let req = MemRequestOut { tag, addr, op, wdata };
+        if !ctx.try_send(self.lane, req) {
+            return Err(StallReason::Lsu); // interconnect backpressure
+        }
+        let rd = rd.filter(|r| *r != Reg::ZERO);
+        self.mem_slots[tag as usize] = Some(PendingMem {
+            rd,
+            addr_lo: addr & 3,
+            width,
+            signed,
+            raw_result,
+        });
+        self.outstanding_mem += 1;
+        if let Some(rd) = rd {
+            self.pending_mem_regs |= 1 << rd.index();
+        }
+        Ok(())
+    }
+}
+
+/// ALU semantics for the non-IPU two-source operations.
+fn alu(op: OpKind, a: u32, b: u32) -> u32 {
+    match op {
+        OpKind::Add => a.wrapping_add(b),
+        OpKind::Sub => a.wrapping_sub(b),
+        OpKind::Sll => a.wrapping_shl(b & 31),
+        OpKind::Slt => (((a as i32) < (b as i32)) as u32),
+        OpKind::Sltu => ((a < b) as u32),
+        OpKind::Xor => a ^ b,
+        OpKind::Srl => a.wrapping_shr(b & 31),
+        OpKind::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        OpKind::Or => a | b,
+        OpKind::And => a & b,
+        OpKind::PMin => (a as i32).min(b as i32) as u32,
+        OpKind::PMax => (a as i32).max(b as i32) as u32,
+        OpKind::PMinu => a.min(b),
+        OpKind::PMaxu => a.max(b),
+        ipu => unreachable!("IPU op {ipu:?} in ALU path"),
+    }
+}
+
+fn op_to_ipu(op: OpKind) -> IpuOp {
+    match op {
+        OpKind::Mul | OpKind::Mulh | OpKind::Mulhu | OpKind::Mulhsu => IpuOp::Mul(op),
+        OpKind::Div | OpKind::Divu | OpKind::Rem | OpKind::Remu => IpuOp::Div(op),
+        other => unreachable!("not an IPU op: {other:?}"),
+    }
+}
+
+/// Shift store data into its byte lanes and compute the strobe mask.
+fn lane_data(value: u32, addr: u32, width: Width) -> (u32, u8) {
+    match width {
+        Width::Word => (value, 0xF),
+        Width::Half => {
+            let sh = (addr & 2) * 8;
+            ((value & 0xFFFF) << sh, 0x3 << ((addr & 2) as u8))
+        }
+        Width::Byte => {
+            let sh = (addr & 3) * 8;
+            ((value & 0xFF) << sh, 1 << ((addr & 3) as u8))
+        }
+    }
+}
+
+/// Extract a loaded value from its byte lanes with sign/zero extension.
+fn extract_lanes(word: u32, addr_lo: u32, width: Width, signed: bool) -> u32 {
+    match width {
+        Width::Word => word,
+        Width::Half => {
+            let v = (word >> ((addr_lo & 2) * 8)) & 0xFFFF;
+            if signed {
+                (((v as i32) << 16) >> 16) as u32
+            } else {
+                v
+            }
+        }
+        Width::Byte => {
+            let v = (word >> ((addr_lo & 3) * 8)) & 0xFF;
+            if signed {
+                (((v as i32) << 24) >> 24) as u32
+            } else {
+                v
+            }
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! Unit tests for the Snitch core: issue/stall behaviour, scoreboard
+//! latency hiding, MAC chaining, wfi/wake, fences, and functional
+//! execution against a flat mock memory.
+
+use std::collections::HashMap;
+
+use super::*;
+use crate::icache::FetchResult;
+use crate::isa::{Csr, Program, Reg};
+use crate::mem::MemOp;
+
+/// A mock tile: perfect icache, flat word memory with configurable load
+/// latency and optional backpressure.
+struct MockCtx {
+    mem: Vec<u32>,
+    latency: u64,
+    /// Completions scheduled as (ready_cycle, completion).
+    inflight: Vec<(u64, MemCompletion)>,
+    now: u64,
+    /// If set, reject sends (backpressure).
+    blocked: bool,
+    hartid: u32,
+}
+
+impl MockCtx {
+    fn new(words: usize, latency: u64) -> Self {
+        MockCtx {
+            mem: vec![0; words],
+            latency,
+            inflight: Vec::new(),
+            now: 0,
+            blocked: false,
+            hartid: 0,
+        }
+    }
+
+    /// Deliver due completions to the core; call once per cycle.
+    fn deliver(&mut self, core: &mut Snitch) {
+        let now = self.now;
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].0 <= now {
+                let (_, c) = self.inflight.swap_remove(i);
+                core.push_completion(c);
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+impl CoreCtx for MockCtx {
+    fn fetch(&mut self, _lane: usize, _addr: u32, _program: &Program) -> FetchResult {
+        FetchResult::Ready
+    }
+
+    fn try_send(&mut self, _lane: usize, req: MemRequestOut) -> bool {
+        if self.blocked {
+            return false;
+        }
+        let word = (req.addr / 4) as usize;
+        let rdata = match req.op {
+            MemOp::Read | MemOp::LoadReserved => self.mem[word],
+            MemOp::Write { strb } => {
+                let mut v = self.mem[word];
+                for lane in 0..4 {
+                    if strb & (1 << lane) != 0 {
+                        let mask = 0xFFu32 << (8 * lane);
+                        v = (v & !mask) | (req.wdata & mask);
+                    }
+                }
+                self.mem[word] = v;
+                0
+            }
+            MemOp::Amo(op) => {
+                let old = self.mem[word];
+                self.mem[word] = op.apply(old, req.wdata);
+                old
+            }
+            MemOp::StoreConditional => {
+                self.mem[word] = req.wdata;
+                0
+            }
+        };
+        self.inflight
+            .push((self.now + self.latency, MemCompletion { tag: req.tag, rdata }));
+        true
+    }
+
+    fn read_csr(&mut self, csr: Csr) -> u32 {
+        match csr {
+            Csr::Mhartid => self.hartid,
+            Csr::Mcycle => self.now as u32,
+            Csr::NumCores => 256,
+            Csr::CoresPerTile => 4,
+            Csr::CoresPerGroup => 64,
+        }
+    }
+}
+
+fn run(src: &str, max_cycles: u64) -> (Snitch, MockCtx) {
+    run_with(src, max_cycles, 1, &HashMap::new())
+}
+
+fn run_with(
+    src: &str,
+    max_cycles: u64,
+    latency: u64,
+    symbols: &HashMap<String, u32>,
+) -> (Snitch, MockCtx) {
+    let program = Program::assemble(src, symbols).expect("asm");
+    let mut core = Snitch::new(0, 0, 8);
+    core.reset(0, 0x400);
+    let mut ctx = MockCtx::new(1024, latency);
+    for now in 0..max_cycles {
+        ctx.now = now;
+        ctx.deliver(&mut core);
+        core.step(now, &program, &mut ctx);
+        if core.halted() && core.drained() {
+            break;
+        }
+    }
+    assert!(core.halted(), "program did not halt in {max_cycles} cycles");
+    (core, ctx)
+}
+
+#[test]
+fn basic_arithmetic_and_halt() {
+    let (core, _) = run("li a0, 6\nli a1, 7\nmul a2, a0, a1\nadd a3, a0, a1\nhalt", 50);
+    assert_eq!(core.reg(Reg::from_name("a2").unwrap()), 42);
+    assert_eq!(core.reg(Reg::from_name("a3").unwrap()), 13);
+}
+
+#[test]
+fn loads_and_stores_roundtrip() {
+    let (core, ctx) = run(
+        "li a0, 0x100\nli a1, 0xBEEF\nsw a1, 0(a0)\nlw a2, 0(a0)\nsh a1, 4(a0)\nlhu a3, 4(a0)\nsb a1, 9(a0)\nlbu a4, 9(a0)\nhalt",
+        200,
+    );
+    assert_eq!(ctx.mem[0x40], 0xBEEF);
+    assert_eq!(core.reg(Reg::from_name("a2").unwrap()), 0xBEEF);
+    assert_eq!(core.reg(Reg::from_name("a3").unwrap()), 0xBEEF);
+    assert_eq!(core.reg(Reg::from_name("a4").unwrap()), 0xEF);
+}
+
+#[test]
+fn signed_subword_loads() {
+    let (core, _) = run(
+        "li a0, 0x100\nli a1, -1\nsw a1, 0(a0)\nlb a2, 3(a0)\nlh a3, 2(a0)\nlbu a4, 3(a0)\nhalt",
+        200,
+    );
+    assert_eq!(core.reg(Reg::from_name("a2").unwrap()), u32::MAX);
+    assert_eq!(core.reg(Reg::from_name("a3").unwrap()), u32::MAX);
+    assert_eq!(core.reg(Reg::from_name("a4").unwrap()), 0xFF);
+}
+
+#[test]
+fn post_increment_load_store() {
+    let (core, ctx) = run(
+        "li a0, 0x100\nli a1, 11\nli a2, 22\np.sw a1, 4(a0!)\np.sw a2, 4(a0!)\nli a0, 0x100\np.lw a3, 4(a0!)\np.lw a4, 4(a0!)\nhalt",
+        200,
+    );
+    assert_eq!(ctx.mem[0x40], 11);
+    assert_eq!(ctx.mem[0x41], 22);
+    assert_eq!(core.reg(Reg::from_name("a3").unwrap()), 11);
+    assert_eq!(core.reg(Reg::from_name("a4").unwrap()), 22);
+    assert_eq!(core.reg(Reg::from_name("a0").unwrap()), 0x108);
+}
+
+#[test]
+fn mac_chain_issues_every_cycle() {
+    // 8 chained MACs to the same accumulator: the forwarding path must let
+    // them issue back-to-back (no RAW stalls).
+    let mut src = String::from("li a0, 3\nli a1, 5\nli a2, 0\n");
+    for _ in 0..8 {
+        src.push_str("p.mac a2, a0, a1\n");
+    }
+    src.push_str("halt");
+    let (core, _) = run(&src, 100);
+    assert_eq!(core.reg(Reg::from_name("a2").unwrap()), 8 * 15);
+    assert_eq!(core.stats.stall_raw, 0, "MAC chain must not RAW-stall");
+    assert_eq!(core.stats.ops, 16, "8 MACs = 16 OPs");
+}
+
+#[test]
+fn raw_stall_on_load_use() {
+    // Immediate use of a loaded value with 5-cycle latency → RAW stalls.
+    let (core, _) = run_with(
+        "li a0, 0x100\nlw a1, 0(a0)\naddi a2, a1, 1\nhalt",
+        100,
+        5,
+        &HashMap::new(),
+    );
+    assert!(core.stats.stall_raw >= 4, "expected RAW stalls, got {}", core.stats.stall_raw);
+}
+
+#[test]
+fn scoreboard_hides_latency_of_independent_loads() {
+    // 8 independent loads at 5-cycle latency issue in 8 consecutive cycles.
+    let mut src = String::from("li a0, 0x100\n");
+    for i in 0..8 {
+        src.push_str(&format!("lw a{}, {}(a0)\n", 1 + i % 7, 4 * i));
+    }
+    src.push_str("halt");
+    let (core, _) = run_with(&src, 100, 5, &HashMap::new());
+    // li(1 or 2) + 8 loads + halt; no RAW stalls on the loads themselves.
+    assert_eq!(core.stats.stall_raw, 0);
+    assert!(
+        core.stats.stall_lsu <= 1,
+        "8 outstanding slots should absorb 8 loads (lsu stalls: {})",
+        core.stats.stall_lsu
+    );
+}
+
+#[test]
+fn scoreboard_full_causes_lsu_stall() {
+    // More loads in flight than scoreboard entries (depth 8, latency 40),
+    // all to distinct destination registers so no WAW hazard interferes.
+    let regs = ["a1", "a2", "a3", "a4", "a5", "a6", "a7", "t0", "t1", "t2", "t3", "t4"];
+    let mut src = String::from("li a0, 0x100\n");
+    for (i, r) in regs.iter().enumerate() {
+        src.push_str(&format!("lw {}, {}(a0)\n", r, 4 * i));
+    }
+    src.push_str("halt");
+    let (core, _) = run_with(&src, 400, 40, &HashMap::new());
+    assert!(core.stats.stall_lsu > 0, "expected scoreboard-full stalls");
+}
+
+#[test]
+fn backpressure_counts_as_lsu_stall() {
+    let program = Program::assemble_simple("li a0, 0x100\nlw a1, 0(a0)\nhalt").unwrap();
+    let mut core = Snitch::new(0, 0, 8);
+    core.reset(0, 0x400);
+    let mut ctx = MockCtx::new(256, 1);
+    ctx.blocked = true;
+    for now in 0..10 {
+        ctx.now = now;
+        ctx.deliver(&mut core);
+        core.step(now, &program, &mut ctx);
+    }
+    assert!(!core.halted());
+    assert!(core.stats.stall_lsu >= 5);
+    // Release the backpressure; the program completes.
+    ctx.blocked = false;
+    for now in 10..50 {
+        ctx.now = now;
+        ctx.deliver(&mut core);
+        core.step(now, &program, &mut ctx);
+    }
+    assert!(core.halted());
+}
+
+#[test]
+fn branches_and_loops() {
+    // Sum 1..=10 with a loop.
+    let (core, _) = run(
+        "li a0, 10\nli a1, 0\nloop: add a1, a1, a0\naddi a0, a0, -1\nbnez a0, loop\nhalt",
+        200,
+    );
+    assert_eq!(core.reg(Reg::from_name("a1").unwrap()), 55);
+}
+
+#[test]
+fn jal_and_jalr_function_call() {
+    let (core, _) = run(
+        "li a0, 5\ncall double\nadd a2, a1, zero\nhalt\ndouble: add a1, a0, a0\nret",
+        100,
+    );
+    assert_eq!(core.reg(Reg::from_name("a2").unwrap()), 10);
+}
+
+#[test]
+fn wfi_sleeps_until_wake() {
+    let program = Program::assemble_simple("wfi\nli a0, 1\nhalt").unwrap();
+    let mut core = Snitch::new(0, 0, 8);
+    core.reset(0, 0x400);
+    let mut ctx = MockCtx::new(256, 1);
+    for now in 0..5 {
+        ctx.now = now;
+        core.step(now, &program, &mut ctx);
+    }
+    assert!(core.sleeping());
+    assert!(core.stats.sleep_cycles >= 3);
+    core.wake();
+    for now in 5..10 {
+        ctx.now = now;
+        core.step(now, &program, &mut ctx);
+    }
+    assert!(core.halted());
+    assert_eq!(core.reg(Reg::from_name("a0").unwrap()), 1);
+}
+
+#[test]
+fn early_wake_is_not_lost() {
+    let program = Program::assemble_simple("li a0, 7\nwfi\nhalt").unwrap();
+    let mut core = Snitch::new(0, 0, 8);
+    core.reset(0, 0x400);
+    core.wake(); // pulse arrives before the wfi
+    let mut ctx = MockCtx::new(256, 1);
+    for now in 0..10 {
+        ctx.now = now;
+        core.step(now, &program, &mut ctx);
+    }
+    assert!(core.halted(), "pending wake must cancel the wfi");
+}
+
+#[test]
+fn fence_drains_outstanding_stores() {
+    let (core, _) = run_with(
+        "li a0, 0x100\nsw a0, 0(a0)\nfence\nli a1, 1\nhalt",
+        100,
+        20,
+        &HashMap::new(),
+    );
+    assert!(core.stats.stall_lsu >= 19, "fence must wait for the store (got {})", core.stats.stall_lsu);
+}
+
+#[test]
+fn amo_returns_old_value() {
+    let (core, ctx) = run(
+        "li a0, 0x100\nli a1, 5\nsw a1, 0(a0)\nfence\nli a2, 3\namoadd.w a3, a2, (a0)\nfence\nlw a4, 0(a0)\nhalt",
+        200,
+    );
+    assert_eq!(core.reg(Reg::from_name("a3").unwrap()), 5);
+    assert_eq!(core.reg(Reg::from_name("a4").unwrap()), 8);
+    assert_eq!(ctx.mem[0x40], 8);
+}
+
+#[test]
+fn csr_reads() {
+    let (core, _) = run("csrr a0, mhartid\ncsrr a1, numcores\nhalt", 50);
+    assert_eq!(core.reg(Reg::from_name("a0").unwrap()), 0);
+    assert_eq!(core.reg(Reg::from_name("a1").unwrap()), 256);
+}
+
+#[test]
+fn ipc_accounting() {
+    let (core, _) = run("li a0, 1\nli a1, 2\nadd a2, a0, a1\nadd a3, a2, a1\nhalt", 50);
+    // 5 instructions, no stalls: IPC over non-halted cycles ≈ 1.
+    assert_eq!(core.stats.issued(), 5);
+    assert_eq!(core.stats.stall_raw + core.stats.stall_lsu + core.stats.stall_ifetch, 0);
+    assert_eq!(core.stats.issued_compute, 2, "two register-register adds");
+}
+
+#[test]
+fn op_counts_match_fig14_categories() {
+    let (core, _) = run(
+        "li a0, 2\nli a1, 3\np.mac a2, a0, a1\nmul a3, a0, a1\nadd a4, a0, a1\nlw a5, 0(zero)\nhalt",
+        100,
+    );
+    // MAC=2 ops, MUL=1, ADD=1; loads/li/halt contribute none.
+    assert_eq!(core.stats.ops, 4);
+    assert_eq!(core.stats.loads, 1);
+}
+
+#[test]
+fn x0_writes_discarded() {
+    let (core, _) = run("li a0, 5\nadd zero, a0, a0\nlw zero, 0(zero)\nhalt", 100);
+    assert_eq!(core.reg(Reg::ZERO), 0);
+}
+
+#[test]
+fn div_by_zero_riscv_semantics() {
+    let (core, _) = run("li a0, 7\nli a1, 0\ndiv a2, a0, a1\nrem a3, a0, a1\nhalt", 100);
+    assert_eq!(core.reg(Reg::from_name("a2").unwrap()), u32::MAX);
+    assert_eq!(core.reg(Reg::from_name("a3").unwrap()), 7);
+}

@@ -1,0 +1,215 @@
+//! The distributed DMA engine (paper §5.3, Fig 9).
+//!
+//! A single *frontend* accepts cluster-wide transfer requests. The
+//! *splitter* cuts each request into serial chunks at the boundaries where
+//! the (interleaved) L1 address space changes backend ownership; the
+//! *distributor* tree hands the chunks to the *backends* — one data mover
+//! per `tiles_per_backend` tiles, attached to those tiles' local crossbars
+//! on one side and an AXI leaf port on the other. Backends issue AXI
+//! bursts; with one backend per tile each owns only 64 contiguous bytes of
+//! the interleaved map, killing burst length — the effect behind Fig 10's
+//! collapse at 16 backends/group.
+//!
+//! Data moves functionally at submit time; the returned completion cycle
+//! is when the transfer is architecturally done (what the cores' polling
+//! loop observes). Software must not touch the region before completion,
+//! which the runtimes guarantee with their DMA-wait barriers.
+
+use crate::axi::AxiSystem;
+use crate::config::ClusterConfig;
+use crate::mem::{AddressMap, L2Memory, Region, SramBank};
+
+/// Flat, tile-major view over the cluster's SPM banks — implemented both
+/// for an owned bank slice (tests, network study) and for a slice of
+/// mutable references (the cluster, whose banks live inside the tiles).
+pub trait BankArray {
+    fn bank_mut(&mut self, idx: usize) -> &mut SramBank;
+}
+
+impl BankArray for Vec<SramBank> {
+    fn bank_mut(&mut self, idx: usize) -> &mut SramBank {
+        &mut self[idx]
+    }
+}
+
+impl BankArray for Vec<&mut SramBank> {
+    fn bank_mut(&mut self, idx: usize) -> &mut SramBank {
+        self[idx]
+    }
+}
+
+/// One cluster-wide DMA request.
+#[derive(Debug, Clone, Copy)]
+pub struct DmaTransfer {
+    /// Byte offset in L2 (relative to `L2_BASE`).
+    pub l2_offset: u32,
+    /// Logical L1 SPM byte address.
+    pub spm_addr: u32,
+    pub bytes: u32,
+    /// Direction: true = L2 → SPM (read), false = SPM → L2 (write-back).
+    pub to_spm: bool,
+}
+
+/// Per-backend occupancy and statistics.
+#[derive(Debug, Clone, Copy, Default)]
+struct Backend {
+    /// Completion times of the last bursts, bounding outstanding txns.
+    inflight: [u64; MAX_OUTSTANDING],
+}
+
+/// Outstanding AXI bursts per backend (read latency hiding).
+const MAX_OUTSTANDING: usize = 4;
+
+/// DMA engine statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DmaStats {
+    pub transfers: u64,
+    pub bursts: u64,
+    pub bytes: u64,
+    /// Cycles any backend was busy (utilization reporting).
+    pub busy_cycles: u64,
+}
+
+/// The distributed DMA: frontend + splitter + distributor + backends.
+pub struct DmaEngine {
+    backends_per_group: usize,
+    tiles_per_group: usize,
+    groups: usize,
+    /// Bytes of contiguous (interleaved) L1 address space per tile row:
+    /// banks_per_tile × 4.
+    tile_line_bytes: u32,
+    setup_cycles: u64,
+    max_burst_bytes: usize,
+    backends: Vec<Backend>,
+    /// Completion time of the frontend's last programming action.
+    frontend_free: u64,
+    pub stats: DmaStats,
+}
+
+impl DmaEngine {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        DmaEngine {
+            backends_per_group: cfg.dma.backends_per_group,
+            tiles_per_group: cfg.tiles_per_group,
+            groups: cfg.num_groups,
+            tile_line_bytes: (cfg.banks_per_tile * 4) as u32,
+            setup_cycles: cfg.dma.setup_cycles,
+            max_burst_bytes: cfg.dma.max_burst * cfg.dma.bus_bytes,
+            backends: vec![Backend::default(); cfg.num_groups * cfg.dma.backends_per_group],
+            frontend_free: 0,
+            stats: DmaStats::default(),
+        }
+    }
+
+    fn tiles_per_backend(&self) -> usize {
+        self.tiles_per_group.div_ceil(self.backends_per_group)
+    }
+
+    /// Which backend owns physical tile `tile`.
+    fn backend_of_tile(&self, tile: u32) -> usize {
+        let group = tile as usize / self.tiles_per_group;
+        let within = tile as usize % self.tiles_per_group;
+        group * self.backends_per_group + within / self.tiles_per_backend()
+    }
+
+    /// Submit a transfer. Returns the completion cycle and performs the
+    /// data movement. `banks` is the flat bank array (tile-major).
+    pub fn submit(
+        &mut self,
+        t: &DmaTransfer,
+        now: u64,
+        map: &AddressMap,
+        l2: &mut L2Memory,
+        banks: &mut dyn BankArray,
+        banks_per_tile: usize,
+        axi: &mut AxiSystem,
+    ) -> u64 {
+        assert_eq!(t.spm_addr % 4, 0, "DMA requires word alignment");
+        assert_eq!(t.l2_offset % 4, 0);
+        assert_eq!(t.bytes % 4, 0);
+
+        // Frontend: programming takes setup_cycles and is serialized.
+        let start = now.max(self.frontend_free) + self.setup_cycles;
+        self.frontend_free = start;
+        self.stats.transfers += 1;
+        self.stats.bytes += t.bytes as u64;
+
+        // Functional copy, word by word through the scrambler.
+        for off in (0..t.bytes).step_by(4) {
+            let spm = t.spm_addr + off;
+            let loc = match map.decode(spm) {
+                Region::Spm(loc) => loc,
+                other => panic!("DMA outside SPM: {spm:#x} → {other:?}"),
+            };
+            let bank = banks.bank_mut(loc.tile as usize * banks_per_tile + loc.bank as usize);
+            let l2_off = t.l2_offset + off;
+            if t.to_spm {
+                bank.poke(loc.row, l2.read_word(l2_off));
+            } else {
+                l2.write_word(l2_off, bank.peek(loc.row));
+            }
+        }
+
+        // Timing: split into per-backend serial chunks at ownership
+        // boundaries, then issue AXI bursts per chunk.
+        let mut done = start;
+        let mut addr = t.spm_addr;
+        let end = t.spm_addr + t.bytes;
+        while addr < end {
+            // The splitter walks tile-line-sized pieces; consecutive
+            // pieces owned by the same backend merge into one burst,
+            // capped at the AXI max burst length.
+            let loc = match map.decode(addr) {
+                Region::Spm(loc) => loc,
+                _ => unreachable!(),
+            };
+            let backend = self.backend_of_tile(loc.tile);
+            let mut chunk = 0u32;
+            let mut a = addr;
+            while a < end && chunk < self.max_burst_bytes as u32 {
+                let l = match map.decode(a) {
+                    Region::Spm(l) => l,
+                    _ => unreachable!(),
+                };
+                if self.backend_of_tile(l.tile) != backend {
+                    break;
+                }
+                let line_step = self.tile_line_bytes - (a % self.tile_line_bytes);
+                let step = line_step.min(end - a).min(self.max_burst_bytes as u32 - chunk);
+                chunk += step;
+                a += step;
+            }
+            let group = backend / self.backends_per_group;
+            // Backend flow control: at most MAX_OUTSTANDING bursts open.
+            let be = &mut self.backends[backend];
+            let slot = (0..MAX_OUTSTANDING)
+                .min_by_key(|&i| be.inflight[i])
+                .unwrap();
+            let issue = start.max(be.inflight[slot]);
+            let finish = if t.to_spm {
+                axi.read_uncached(group, chunk as usize, issue)
+            } else {
+                axi.write(group, chunk as usize, issue)
+            };
+            self.backends[backend].inflight[slot] = finish;
+            self.stats.bursts += 1;
+            done = done.max(finish);
+            addr = a;
+        }
+        self.stats.busy_cycles += done - start;
+        done
+    }
+
+    /// Largest burst (bytes) a backend can issue given its ownership span
+    /// in the interleaved map — the quantity behind Fig 10.
+    pub fn contiguous_span_bytes(&self) -> u32 {
+        self.tiles_per_backend() as u32 * self.tile_line_bytes
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,308 @@
+//! Event-based energy, power, and area model.
+//!
+//! The paper's power numbers come from PrimeTime on post-layout netlists —
+//! unavailable here, so per the DESIGN.md substitution rule we compose
+//! power linearly from *event counts* (which the simulator tracks exactly)
+//! times per-event energies *calibrated from the paper's own measurements*:
+//!
+//! - Fig 16 (energy per instruction): `mac = mul + 0.2 pJ`; fusing saves
+//!   36% vs `mul`+`add`; a remote load costs 1.8× a local load and ≈1.29×
+//!   a MAC.
+//! - Fig 6/7 (icache optimization): SRAM reads dominate; moving tags/L0 to
+//!   latches and serializing the lookup saves 48–75% of cache power.
+//! - Fig 17 (hierarchical breakdown, matmul): cores 56%, SPM interconnect
+//!   30%, banks 7% of a ≈1.5–1.67 W cluster at 600 MHz.
+//! - Fig 12 (area): a group ≈ 12 MGE, tile icache areas per §4.1.
+
+use crate::config::ClusterConfig;
+use crate::icache::MemKind;
+
+/// Per-event energies in pJ. Defaults reproduce the paper's ratios (see
+/// module docs); all knobs are public for ablation studies.
+#[derive(Debug, Clone)]
+pub struct EnergyParams {
+    // --- Core (Snitch + IPU) per issued instruction ---
+    /// Base pipeline energy of any issued instruction (fetch/decode/RF).
+    pub core_issue: f64,
+    /// ALU arithmetic on top of the base.
+    pub alu: f64,
+    /// IPU multiply on top of the base.
+    pub mul: f64,
+    /// IPU MAC on top of the base (mul + 0.2 pJ — Fig 16).
+    pub mac: f64,
+    /// LSU issue overhead of a load/store.
+    pub lsu: f64,
+    /// Idle/sleeping core per cycle (clock gating leaves leakage).
+    pub core_idle: f64,
+
+    // --- L1 SPM ---
+    /// One SRAM bank read/write.
+    pub bank_access: f64,
+    /// Bank AMO (read-modify-write + ALU).
+    pub bank_amo: f64,
+
+    // --- Interconnect, per traversal ---
+    /// Tile-local crossbar (5×16).
+    pub tile_xbar: f64,
+    /// Same-group 16×16 crossbar traversal (one way).
+    pub group_xbar: f64,
+    /// Inter-group crossbar traversal (one way; longer wires).
+    pub global_xbar: f64,
+
+    // --- Instruction cache, per event ---
+    /// L0 access by storage kind.
+    pub l0_register: f64,
+    pub l0_latch: f64,
+    /// L1 tag read per way by kind.
+    pub l1_tag_sram: f64,
+    pub l1_tag_latch: f64,
+    /// L1 data read per way by kind.
+    pub l1_data_sram: f64,
+    pub l1_data_latch: f64,
+    /// Refill from AXI (per line).
+    pub icache_refill: f64,
+
+    // --- AXI / DMA / L2 ---
+    /// Per 64-byte beat on the AXI bus.
+    pub axi_beat: f64,
+    /// DMA backend energy per 64-byte beat moved.
+    pub dma_beat: f64,
+
+    // --- Static ---
+    /// Leakage per core-equivalent per cycle (the Fig 16 "remainder").
+    pub leakage_per_core_cycle: f64,
+    /// Interconnect fabric static + clock power per tile per cycle: the
+    /// group/global crossbars are routing-dominated (the paper's critical
+    /// path is 40% wire delay), so their power is mostly independent of
+    /// traffic. Calibrated so matmul's Fig 17 split lands near the
+    /// paper's cores 56% / interconnect 30% / banks 7%.
+    pub net_static_per_tile_cycle: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            core_issue: 1.9,
+            alu: 1.96,
+            mul: 4.4,
+            mac: 4.6, // mul + 0.2 (Fig 16)
+            lsu: 0.7,
+            core_idle: 0.35,
+            bank_access: 1.27,
+            bank_amo: 1.7,
+            tile_xbar: 0.8,
+            group_xbar: 0.75,
+            global_xbar: 1.12,
+            l0_register: 0.30,
+            l0_latch: 0.15,
+            l1_tag_sram: 0.50,
+            l1_tag_latch: 0.18,
+            l1_data_sram: 1.40,
+            l1_data_latch: 1.00,
+            icache_refill: 2.5,
+            axi_beat: 6.0,
+            dma_beat: 2.0,
+            leakage_per_core_cycle: 1.0,
+            net_static_per_tile_cycle: 6.0,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Energy of one issued instruction of each Fig 16 class (pJ),
+    /// excluding leakage.
+    pub fn instr_add(&self) -> f64 {
+        self.core_issue + self.alu
+    }
+
+    pub fn instr_mul(&self) -> f64 {
+        self.core_issue + self.mul
+    }
+
+    pub fn instr_mac(&self) -> f64 {
+        self.core_issue + self.mac
+    }
+
+    /// A local (same-tile) load: issue + LSU + tile crossbar + bank.
+    pub fn instr_lw_local(&self) -> f64 {
+        self.core_issue + self.lsu + self.tile_xbar + self.bank_access
+    }
+
+    /// A remote (inter-group) load: adds two global and two group
+    /// traversals (request + response through the hierarchy).
+    pub fn instr_lw_remote(&self) -> f64 {
+        self.instr_lw_local() + 2.0 * self.global_xbar + 2.0 * self.group_xbar
+    }
+
+    /// L0 access energy for the configured kind.
+    pub fn l0_access(&self, kind: MemKind) -> f64 {
+        match kind {
+            MemKind::Register => self.l0_register,
+            MemKind::Latch => self.l0_latch,
+            MemKind::Sram => self.l1_data_sram, // not used by the paper
+        }
+    }
+
+    pub fn l1_tag(&self, kind: MemKind) -> f64 {
+        match kind {
+            MemKind::Sram => self.l1_tag_sram,
+            MemKind::Latch => self.l1_tag_latch,
+            MemKind::Register => self.l1_tag_latch,
+        }
+    }
+
+    pub fn l1_data(&self, kind: MemKind) -> f64 {
+        match kind {
+            MemKind::Sram => self.l1_data_sram,
+            MemKind::Latch => self.l1_data_latch,
+            MemKind::Register => self.l1_data_latch,
+        }
+    }
+}
+
+/// Aggregated energy per component in pJ (the Fig 17 hierarchy).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBook {
+    pub cores: f64,
+    pub ipu: f64,
+    pub icache: f64,
+    pub tile_xbar: f64,
+    pub group_net: f64,
+    pub global_net: f64,
+    pub banks: f64,
+    pub axi_dma: f64,
+    pub leakage: f64,
+}
+
+impl EnergyBook {
+    pub fn total_pj(&self) -> f64 {
+        self.cores
+            + self.ipu
+            + self.icache
+            + self.tile_xbar
+            + self.group_net
+            + self.global_net
+            + self.banks
+            + self.axi_dma
+            + self.leakage
+    }
+
+    /// Average power in watts over `cycles` at `clock_hz`.
+    pub fn power_w(&self, cycles: u64, clock_hz: f64) -> f64 {
+        if cycles == 0 {
+            return 0.0;
+        }
+        self.total_pj() * 1e-12 / (cycles as f64 / clock_hz)
+    }
+
+    /// Component shares (cores, interconnect = tile+group+global, banks),
+    /// as fractions — the Fig 17 headline split.
+    pub fn shares(&self) -> (f64, f64, f64) {
+        let t = self.total_pj();
+        if t == 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (
+            (self.cores + self.ipu + self.icache) / t,
+            (self.tile_xbar + self.group_net + self.global_net) / t,
+            self.banks / t,
+        )
+    }
+}
+
+/// Area model (kGE) reconstructed from Fig 12's annotations and §4.1's
+/// icache areas. GE = gate equivalents; the paper's group totals ≈12 MGE.
+#[derive(Debug, Clone, Copy)]
+pub struct AreaBreakdown {
+    pub snitch_core: f64,
+    pub ipu: f64,
+    pub icache: f64,
+    pub spm_banks: f64,
+    pub tile_xbar: f64,
+    pub tile_other: f64,
+    pub group_interconnect: f64,
+    pub dma: f64,
+    pub axi_ro: f64,
+}
+
+impl AreaBreakdown {
+    /// Per-tile / per-group areas for a configuration.
+    pub fn for_config(cfg: &ClusterConfig) -> Self {
+        AreaBreakdown {
+            snitch_core: 22.0 * cfg.cores_per_tile as f64,
+            ipu: 18.0 * cfg.cores_per_tile as f64,
+            icache: cfg.icache.area_kge,
+            spm_banks: 14.5 * cfg.banks_per_tile as f64 * (cfg.bank_words as f64 / 256.0),
+            tile_xbar: 38.0,
+            tile_other: 25.0,
+            group_interconnect: 640.0,
+            dma: 55.0 * cfg.dma.backends_per_group as f64,
+            axi_ro: 230.0,
+        }
+    }
+
+    pub fn tile_total(&self) -> f64 {
+        self.snitch_core + self.ipu + self.icache + self.spm_banks + self.tile_xbar + self.tile_other
+    }
+
+    /// Group total in kGE.
+    pub fn group_total(&self, tiles_per_group: usize) -> f64 {
+        self.tile_total() * tiles_per_group as f64
+            + self.group_interconnect
+            + self.dma
+            + self.axi_ro
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig16_instruction_ratios() {
+        let p = EnergyParams::default();
+        // MAC = MUL + 0.2 pJ.
+        assert!((p.instr_mac() - p.instr_mul() - 0.2).abs() < 1e-9);
+        // Fusing mul+add into mac saves ≈36%.
+        let fused = p.instr_mac();
+        let separate = p.instr_mul() + p.instr_add();
+        let saving = (separate - fused) / separate;
+        assert!((saving - 0.36).abs() < 0.03, "saving {saving}");
+        // Remote load ≈ 1.8× local.
+        let ratio = p.instr_lw_remote() / p.instr_lw_local();
+        assert!((ratio - 1.8).abs() < 0.05, "remote/local {ratio}");
+        // Remote load ≈ 1.29× a MAC ("29% more energy than a MAC").
+        let vs_mac = p.instr_lw_remote() / p.instr_mac();
+        assert!((vs_mac - 1.29).abs() < 0.08, "remote/mac {vs_mac}");
+    }
+
+    #[test]
+    fn power_conversion() {
+        let book = EnergyBook { cores: 1e6, ..Default::default() };
+        // 1 µJ over 1000 cycles at 600 MHz = 0.6 W.
+        let w = book.power_w(1000, 600e6);
+        assert!((w - 0.6).abs() < 1e-9, "{w}");
+    }
+
+    #[test]
+    fn area_magnitudes_match_fig12() {
+        let cfg = ClusterConfig::mempool();
+        let a = AreaBreakdown::for_config(&cfg);
+        // SPM banks are the largest tile component (Fig 12).
+        assert!(a.spm_banks > a.snitch_core + a.ipu);
+        assert!(a.spm_banks > a.icache);
+        // The group lands near the paper's ≈12 MGE.
+        let group = a.group_total(cfg.tiles_per_group);
+        assert!((9_000.0..15_000.0).contains(&group), "group {group} kGE");
+        // Interconnect + DMA + AXI are a small share of the group.
+        let overhead = (a.group_interconnect + a.dma + a.axi_ro) / group;
+        assert!(overhead < 0.15, "overhead share {overhead}");
+    }
+
+    #[test]
+    fn latch_migration_cuts_icache_energy() {
+        let p = EnergyParams::default();
+        assert!(p.l1_tag(MemKind::Latch) < p.l1_tag(MemKind::Sram));
+        assert!(p.l0_access(MemKind::Latch) < p.l0_access(MemKind::Register));
+    }
+}

@@ -1,0 +1,187 @@
+//! Instruction cache configuration: the six architectures of paper §4.1.
+
+/// Physical implementation of a tag/data bank — drives the energy model
+/// (SRAM macros vs latch-based standard-cell memories vs registers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemKind {
+    Sram,
+    Latch,
+    Register,
+}
+
+/// Instruction cache configuration for one tile.
+#[derive(Debug, Clone, Copy)]
+pub struct ICacheConfig {
+    /// L0 lines per core (fully associative).
+    pub l0_lines: usize,
+    /// Words (instructions) per cache line, shared by L0 and L1.
+    /// Baseline: 4 (128-bit); 2-Way onwards: 8 (256-bit).
+    pub line_words: usize,
+    /// Shared L1 capacity in bytes (2 KiB in all configs).
+    pub l1_bytes: usize,
+    /// L1 associativity (Baseline: 4; 2-Way onwards: 2).
+    pub l1_ways: usize,
+    /// Serial tag-then-data lookup (final config): +1 cycle L1 hit
+    /// latency, but only one data way read per hit.
+    pub serial_lookup: bool,
+    /// Enable the L0 next-line / backward-branch prefetcher.
+    pub prefetch: bool,
+    /// Implementation of the L0 storage (registers in the baseline,
+    /// latches in the final config).
+    pub l0_kind: MemKind,
+    /// Implementation of the L1 tag banks.
+    pub l1_tag_kind: MemKind,
+    /// Implementation of the L1 data banks.
+    pub l1_data_kind: MemKind,
+    /// Area of the tile's cache in kGE, from paper §4.1, for reports.
+    pub area_kge: f64,
+    /// Human-readable name of the configuration.
+    pub name: &'static str,
+}
+
+impl ICacheConfig {
+    /// Paper "Baseline" (149 kGE): 4×128-bit register L0, 2 KiB 4-way L1,
+    /// parallel lookup, SRAM tags and data.
+    pub fn baseline() -> Self {
+        ICacheConfig {
+            l0_lines: 4,
+            line_words: 4,
+            l1_bytes: 2048,
+            l1_ways: 4,
+            serial_lookup: false,
+            prefetch: true,
+            l0_kind: MemKind::Register,
+            l1_tag_kind: MemKind::Sram,
+            l1_data_kind: MemKind::Sram,
+            area_kge: 149.0,
+            name: "Baseline",
+        }
+    }
+
+    /// Paper "2-Way" (163 kGE): 256-bit lines (doubled L0 capacity),
+    /// 2-way L1.
+    pub fn two_way() -> Self {
+        ICacheConfig {
+            line_words: 8,
+            l1_ways: 2,
+            area_kge: 163.0,
+            name: "2-Way",
+            ..ICacheConfig::baseline()
+        }
+    }
+
+    /// Paper "L1-Tag Latch" (161 kGE): latch-based L1 tags.
+    pub fn l1_tag_latch() -> Self {
+        ICacheConfig {
+            l1_tag_kind: MemKind::Latch,
+            area_kge: 161.0,
+            name: "L1-Tag Latch",
+            ..ICacheConfig::two_way()
+        }
+    }
+
+    /// Paper "L1-All Latch" (217 kGE): latch-based L1 tags *and* data
+    /// (discarded for area).
+    pub fn l1_all_latch() -> Self {
+        ICacheConfig {
+            l1_data_kind: MemKind::Latch,
+            area_kge: 217.0,
+            name: "L1-All Latch",
+            ..ICacheConfig::l1_tag_latch()
+        }
+    }
+
+    /// Paper "L1-Tag+L0 Latch" (153 kGE): latch L0 instead of latch L1 data.
+    pub fn l1_tag_l0_latch() -> Self {
+        ICacheConfig {
+            l0_kind: MemKind::Latch,
+            area_kge: 153.0,
+            name: "L1-Tag+L0 Latch",
+            ..ICacheConfig::l1_tag_latch()
+        }
+    }
+
+    /// Paper "Serial L1" (123 kGE): serial tag-then-data lookup, merged
+    /// data ways. This is the final, shipped configuration.
+    pub fn serial_l1() -> Self {
+        ICacheConfig {
+            serial_lookup: true,
+            area_kge: 123.0,
+            name: "Serial L1",
+            ..ICacheConfig::l1_tag_l0_latch()
+        }
+    }
+
+    /// Alias for the final optimized configuration (used by default).
+    pub fn final_optimized() -> Self {
+        ICacheConfig::serial_l1()
+    }
+
+    /// All six configurations in the paper's optimization order.
+    pub fn all_paper_configs() -> Vec<ICacheConfig> {
+        vec![
+            ICacheConfig::baseline(),
+            ICacheConfig::two_way(),
+            ICacheConfig::l1_tag_latch(),
+            ICacheConfig::l1_all_latch(),
+            ICacheConfig::l1_tag_l0_latch(),
+            ICacheConfig::serial_l1(),
+        ]
+    }
+
+    /// L0 capacity in instructions.
+    pub fn l0_instrs(&self) -> usize {
+        self.l0_lines * self.line_words
+    }
+
+    /// L1 sets.
+    pub fn l1_sets(&self) -> usize {
+        self.l1_bytes / (self.line_words * 4 * self.l1_ways)
+    }
+
+    /// Line size in bytes.
+    pub fn line_bytes(&self) -> usize {
+        self.line_words * 4
+    }
+
+    /// L1 hit latency in cycles (parallel: 1, serial: 2; the prefetcher
+    /// hides this during straight-line execution).
+    pub fn l1_hit_latency(&self) -> u64 {
+        if self.serial_lookup {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometries() {
+        let b = ICacheConfig::baseline();
+        assert_eq!(b.l0_instrs(), 16);
+        assert_eq!(b.l1_sets(), 2048 / (16 * 4)); // 32 sets
+        let t = ICacheConfig::two_way();
+        assert_eq!(t.l0_instrs(), 32);
+        assert_eq!(t.l1_sets(), 2048 / (32 * 2)); // 32 sets
+        assert_eq!(t.l1_bytes, b.l1_bytes, "L1 capacity stays constant");
+        let s = ICacheConfig::serial_l1();
+        assert!(s.serial_lookup);
+        assert_eq!(s.l1_hit_latency(), 2);
+        assert_eq!(s.l0_kind, MemKind::Latch);
+        assert_eq!(s.l1_tag_kind, MemKind::Latch);
+        assert_eq!(s.l1_data_kind, MemKind::Sram);
+    }
+
+    #[test]
+    fn six_configs() {
+        let all = ICacheConfig::all_paper_configs();
+        assert_eq!(all.len(), 6);
+        // Areas match §4.1.
+        let areas: Vec<f64> = all.iter().map(|c| c.area_kge).collect();
+        assert_eq!(areas, vec![149.0, 163.0, 161.0, 217.0, 153.0, 123.0]);
+    }
+}

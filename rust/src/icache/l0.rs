@@ -1,0 +1,99 @@
+//! Private per-core L0 instruction cache (paper §4.1): minimal, fully
+//! associative, standard-cell based, with a prefetcher that scans the
+//! current line for backward branches (loops) to fetch the predicted next
+//! line before the core needs it.
+
+use crate::isa::{Instr, Program};
+
+/// Fully associative L0 cache holding `lines` cache-line tags.
+/// Replacement is FIFO (a shift register in hardware).
+#[derive(Debug, Clone)]
+pub struct L0Cache {
+    lines: Vec<u32>,
+    capacity: usize,
+    next_victim: usize,
+    /// Line address of the last fetch, to detect line transitions for the
+    /// prefetcher.
+    last_line: u32,
+    pub hits: u64,
+    pub misses: u64,
+    pub prefetches: u64,
+}
+
+impl L0Cache {
+    pub fn new(lines: usize) -> Self {
+        L0Cache {
+            lines: Vec::with_capacity(lines),
+            capacity: lines,
+            next_victim: 0,
+            last_line: u32::MAX,
+            hits: 0,
+            misses: 0,
+            prefetches: 0,
+        }
+    }
+
+    pub fn contains(&self, line_addr: u32) -> bool {
+        self.lines.contains(&line_addr)
+    }
+
+    /// Install a line, evicting FIFO if full. Idempotent.
+    pub fn fill(&mut self, line_addr: u32) {
+        if self.contains(line_addr) {
+            return;
+        }
+        if self.lines.len() < self.capacity {
+            self.lines.push(line_addr);
+        } else {
+            self.lines[self.next_victim] = line_addr;
+            self.next_victim = (self.next_victim + 1) % self.capacity;
+        }
+    }
+
+    pub fn invalidate_all(&mut self) {
+        self.lines.clear();
+        self.next_victim = 0;
+        self.last_line = u32::MAX;
+    }
+
+    /// Record a fetch; returns `(hit, entered_new_line)`.
+    pub fn access(&mut self, line_addr: u32) -> (bool, bool) {
+        let new_line = line_addr != self.last_line;
+        self.last_line = line_addr;
+        if self.contains(line_addr) {
+            self.hits += 1;
+            (true, new_line)
+        } else {
+            self.misses += 1;
+            (false, new_line)
+        }
+    }
+}
+
+/// Prefetch prediction: scan the line for a backward branch or a
+/// predictable jump (`jal`); if found, predict its target's line,
+/// otherwise predict the next sequential line (paper §4.1).
+pub fn predicted_next_line(program: &Program, line_addr: u32, line_bytes: u32) -> Option<u32> {
+    let first_idx = match program.index_of(line_addr.max(program.base)) {
+        Some(i) => i,
+        None => return None,
+    };
+    let line_mask = !(line_bytes - 1);
+    let per_line = line_bytes / 4;
+    for idx in first_idx..(first_idx + per_line).min(program.len() as u32) {
+        match program.get(idx) {
+            Some(Instr::Branch { target, .. }) if *target <= idx => {
+                // Backward branch: a loop — predict the target line.
+                return Some(program.addr_of(*target) & line_mask);
+            }
+            Some(Instr::Jal { target, .. }) => {
+                // Predictable jump.
+                return Some(program.addr_of(*target) & line_mask);
+            }
+            _ => {}
+        }
+    }
+    // Sequential next line, if it still holds program text.
+    let next = (line_addr & line_mask) + line_bytes;
+    program.index_of(next).map(|_| next)
+}

@@ -1,0 +1,97 @@
+//! Shared per-tile L1 instruction cache (paper §4.1): configurable
+//! set-associative lookup (parallel or serial tag-then-data), refill
+//! coalescing, round-robin replacement.
+
+use super::config::ICacheConfig;
+
+/// Event counters feeding the energy model (paper Fig 6). "Reads" are
+/// per-bank accesses: a parallel lookup reads every tag and data way;
+/// a serial lookup reads every tag way but only the hitting data way.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct L1Counters {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub tag_reads: u64,
+    pub data_reads: u64,
+    pub refills: u64,
+}
+
+/// Tag-only model of the shared L1 instruction cache (instruction bits
+/// always come from the immutable `Program`, so only presence is tracked).
+#[derive(Debug, Clone)]
+pub struct L1ICache {
+    /// `tags[set * ways + way]` = line address or `u32::MAX`.
+    tags: Vec<u32>,
+    sets: usize,
+    ways: usize,
+    line_bytes: u32,
+    serial: bool,
+    /// Round-robin victim pointer per set.
+    victim: Vec<u8>,
+    pub counters: L1Counters,
+}
+
+impl L1ICache {
+    pub fn new(cfg: &ICacheConfig) -> Self {
+        let sets = cfg.l1_sets();
+        L1ICache {
+            tags: vec![u32::MAX; sets * cfg.l1_ways],
+            sets,
+            ways: cfg.l1_ways,
+            line_bytes: cfg.line_bytes() as u32,
+            serial: cfg.serial_lookup,
+            victim: vec![0; sets],
+            counters: L1Counters::default(),
+        }
+    }
+
+    fn set_of(&self, line_addr: u32) -> usize {
+        ((line_addr / self.line_bytes) as usize) % self.sets
+    }
+
+    /// Probe without counting (used by refill coalescing).
+    pub fn contains(&self, line_addr: u32) -> bool {
+        let set = self.set_of(line_addr);
+        self.tags[set * self.ways..(set + 1) * self.ways].contains(&line_addr)
+    }
+
+    /// Perform a lookup, updating the event counters. Returns hit/miss.
+    pub fn lookup(&mut self, line_addr: u32) -> bool {
+        self.counters.lookups += 1;
+        // Both organizations read all tag ways in parallel.
+        self.counters.tag_reads += self.ways as u64;
+        let hit = self.contains(line_addr);
+        if hit {
+            self.counters.hits += 1;
+            // Parallel: all data ways are read speculatively.
+            // Serial: only the hitting way's (merged) data bank is read.
+            self.counters.data_reads += if self.serial { 1 } else { self.ways as u64 };
+        } else {
+            self.counters.misses += 1;
+            if !self.serial {
+                // The parallel organization has already burned the data
+                // reads by the time the hit calculation resolves.
+                self.counters.data_reads += self.ways as u64;
+            }
+        }
+        hit
+    }
+
+    /// Install a refilled line (round-robin within the set). Idempotent.
+    pub fn fill(&mut self, line_addr: u32) {
+        if self.contains(line_addr) {
+            return;
+        }
+        self.counters.refills += 1;
+        let set = self.set_of(line_addr);
+        let way = self.victim[set] as usize % self.ways;
+        self.victim[set] = self.victim[set].wrapping_add(1);
+        self.tags[set * self.ways + way] = line_addr;
+    }
+
+    pub fn invalidate_all(&mut self) {
+        self.tags.fill(u32::MAX);
+        self.victim.fill(0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Instruction cache hierarchy (paper §4).
+//!
+//! Each core owns a tiny private L0 cache (fully associative, with a
+//! next-line/backward-branch prefetcher); each tile shares a set-associative
+//! L1 instruction cache whose refill logic coalesces requests and responds
+//! to all L0s in parallel. The six configurations the paper evaluates
+//! (Baseline, 2-Way, L1-Tag Latch, L1-All Latch, L1-Tag+L0 Latch, Serial L1)
+//! are expressible via `ICacheConfig` and differ in timing (serial lookup
+//! adds a pipeline stage) and in the event counters that feed the energy
+//! model (SRAM vs latch tag/data banks, ways read per lookup).
+
+mod config;
+mod l0;
+mod l1;
+mod tile;
+
+pub use config::{ICacheConfig, MemKind};
+pub use l0::L0Cache;
+pub use l1::L1ICache;
+pub use tile::{FetchResult, FixedLatencyPort, RefillPort, TileICache};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,229 @@
+//! Tests for the instruction cache hierarchy.
+
+use super::tile::{FixedLatencyPort, RefillPort};
+use super::*;
+use crate::isa::Program;
+
+fn straightline_program(n: usize) -> Program {
+    let src = vec!["nop"; n].join("\n");
+    Program::assemble_simple(&src).unwrap()
+}
+
+fn loop_program() -> Program {
+    // 12-instruction loop body plus header — fits in a 32-instr L0.
+    Program::assemble_simple(
+        "li a0, 100\n\
+         loop: addi a0, a0, -1\n\
+         nop\nnop\nnop\nnop\nnop\nnop\nnop\nnop\nnop\nnop\n\
+         bnez a0, loop\n\
+         halt",
+    )
+    .unwrap()
+}
+
+#[test]
+fn l0_fifo_replacement() {
+    let mut l0 = L0Cache::new(2);
+    l0.fill(0x100);
+    l0.fill(0x200);
+    assert!(l0.contains(0x100) && l0.contains(0x200));
+    l0.fill(0x300); // evicts 0x100 (FIFO)
+    assert!(!l0.contains(0x100));
+    assert!(l0.contains(0x200) && l0.contains(0x300));
+    l0.fill(0x300); // idempotent
+    assert!(l0.contains(0x200));
+}
+
+#[test]
+fn l1_set_associative_behaviour() {
+    let cfg = ICacheConfig::two_way();
+    let mut l1 = L1ICache::new(&cfg);
+    let sets = cfg.l1_sets() as u32;
+    let line = cfg.line_bytes() as u32;
+    let a = 0x8000_0000u32;
+    let b = a + sets * line; // same set, different tag
+    let c = b + sets * line;
+    l1.fill(a);
+    l1.fill(b);
+    assert!(l1.lookup(a) && l1.lookup(b));
+    l1.fill(c); // evicts round-robin (a)
+    assert!(!l1.lookup(a));
+    assert!(l1.lookup(b) && l1.lookup(c));
+}
+
+#[test]
+fn serial_lookup_reads_one_data_way() {
+    let mut par = L1ICache::new(&ICacheConfig::two_way());
+    let mut ser = L1ICache::new(&ICacheConfig::serial_l1());
+    par.fill(0x8000_0000);
+    ser.fill(0x8000_0000);
+    par.lookup(0x8000_0000);
+    ser.lookup(0x8000_0000);
+    assert_eq!(par.counters.data_reads, 2, "parallel reads all ways");
+    assert_eq!(ser.counters.data_reads, 1, "serial reads only the hit way");
+    assert_eq!(par.counters.tag_reads, 2);
+    assert_eq!(ser.counters.tag_reads, 2);
+    // On a miss, serial saves the data reads entirely.
+    par.lookup(0x9000_0000);
+    ser.lookup(0x9000_0000);
+    assert_eq!(par.counters.data_reads, 4);
+    assert_eq!(ser.counters.data_reads, 1);
+}
+
+#[test]
+fn cold_fetch_misses_then_hits() {
+    let prog = straightline_program(16);
+    let cfg = ICacheConfig::final_optimized();
+    let mut ic = TileICache::new(cfg, 4);
+    let mut port = FixedLatencyPort(20);
+    let addr = prog.addr_of(0);
+
+    assert_eq!(ic.fetch(0, addr, &prog), FetchResult::Stall);
+    // Stall persists until the refill lands (1 queue cycle + 20).
+    let mut cycle = 0u64;
+    let mut stalled = 0u64;
+    loop {
+        ic.step(cycle, &mut port);
+        match ic.fetch(0, addr, &prog) {
+            FetchResult::Ready => break,
+            FetchResult::Stall => stalled += 1,
+        }
+        cycle += 1;
+        assert!(cycle < 100, "refill never completed");
+    }
+    assert!(stalled >= 20, "expected ≥20 stall cycles, got {stalled}");
+    // Subsequent instructions in the same line hit immediately.
+    assert_eq!(ic.fetch(0, addr + 4, &prog), FetchResult::Ready);
+}
+
+#[test]
+fn refill_coalescing_serves_all_cores() {
+    let prog = straightline_program(16);
+    let mut ic = TileICache::new(ICacheConfig::final_optimized(), 4);
+    let mut port = CountingPort { latency: 15, reads: 0 };
+    let addr = prog.addr_of(0);
+    for core in 0..4 {
+        assert_eq!(ic.fetch(core, addr, &prog), FetchResult::Stall);
+    }
+    for cycle in 0..40 {
+        ic.step(cycle, &mut port);
+    }
+    for core in 0..4 {
+        assert_eq!(ic.fetch(core, addr, &prog), FetchResult::Ready, "core {core}");
+    }
+    assert_eq!(port.reads, 1, "four demand misses must coalesce into one refill");
+}
+
+struct CountingPort {
+    latency: u64,
+    reads: u64,
+}
+
+impl RefillPort for CountingPort {
+    fn read(&mut self, _addr: u32, _bytes: usize, now: u64) -> u64 {
+        self.reads += 1;
+        now + self.latency
+    }
+}
+
+/// Walk a core through the program, stepping the cache each cycle; returns
+/// (cycles, stalls).
+fn run_sequence(ic: &mut TileICache, prog: &Program, port: &mut dyn RefillPort) -> (u64, u64) {
+    let mut cycle = 0u64;
+    let mut stalls = 0u64;
+    let mut pc = 0u32;
+    // Interpret just enough to follow branches: we only run nop/addi/bnez/li.
+    let mut a0: i64 = 0;
+    while (pc as usize) < prog.len() {
+        ic.step(cycle, port);
+        match ic.fetch(0, prog.addr_of(pc), prog) {
+            FetchResult::Ready => {
+                use crate::isa::{CondOp, Instr};
+                match prog.get(pc).unwrap() {
+                    Instr::Halt => break,
+                    Instr::OpImm { imm, rd, .. } if rd.index() == 10 => {
+                        // li a0 / addi a0
+                        if *imm == -1 {
+                            a0 -= 1;
+                        } else {
+                            a0 = *imm as i64;
+                        }
+                        pc += 1;
+                    }
+                    Instr::Branch { cond: CondOp::Ne, target, .. } => {
+                        if a0 != 0 {
+                            pc = *target;
+                        } else {
+                            pc += 1;
+                        }
+                    }
+                    _ => pc += 1,
+                }
+            }
+            FetchResult::Stall => stalls += 1,
+        }
+        cycle += 1;
+        assert!(cycle < 1_000_000);
+    }
+    (cycle, stalls)
+}
+
+#[test]
+fn prefetch_hides_loop_misses() {
+    let prog = loop_program();
+    let mut port = FixedLatencyPort(20);
+    let mut with_pf = TileICache::new(ICacheConfig::final_optimized(), 1);
+    let (_, stalls_pf) = run_sequence(&mut with_pf, &prog, &mut port);
+
+    let mut cfg_no = ICacheConfig::final_optimized();
+    cfg_no.prefetch = false;
+    let mut without = TileICache::new(cfg_no, 1);
+    let mut port2 = FixedLatencyPort(20);
+    let (_, stalls_no) = run_sequence(&mut without, &prog, &mut port2);
+
+    assert!(
+        stalls_pf <= stalls_no,
+        "prefetch must not increase stalls: {stalls_pf} vs {stalls_no}"
+    );
+    // After warm-up, the loop fits in L0: steady state has zero stalls.
+    assert!(stalls_pf < 60, "loop execution should be nearly stall-free, got {stalls_pf}");
+}
+
+#[test]
+fn big_kernel_thrashes_l0_but_hits_l1() {
+    // 64 instructions > 32-instr L0, but < 512-instr L1.
+    let prog = straightline_program(64);
+    let mut ic = TileICache::new(ICacheConfig::final_optimized(), 1);
+    let mut port = FixedLatencyPort(20);
+    let (_, first_pass_stalls) = run_sequence(&mut ic, &prog, &mut port);
+    assert!(first_pass_stalls > 0);
+    let l1_misses_after_first = ic.l1.counters.misses;
+    // Second pass: L1 holds everything; only L0 misses remain.
+    let (_, _) = run_sequence(&mut ic, &prog, &mut port);
+    assert_eq!(
+        ic.l1.counters.misses, l1_misses_after_first,
+        "second pass must not miss in L1"
+    );
+}
+
+#[test]
+fn invalidate_clears_everything() {
+    let prog = straightline_program(8);
+    let mut ic = TileICache::new(ICacheConfig::final_optimized(), 2);
+    let mut port = FixedLatencyPort(5);
+    let _ = run_sequence(&mut ic, &prog, &mut port);
+    ic.invalidate_all();
+    assert_eq!(ic.fetch(0, prog.addr_of(0), &prog), FetchResult::Stall);
+}
+
+#[test]
+fn predicted_next_line_backward_branch() {
+    use super::l0::predicted_next_line;
+    let prog = loop_program();
+    // Find the line containing the bnez (instruction index 12).
+    let line_bytes = 32u32;
+    let bnez_line = prog.addr_of(12) & !(line_bytes - 1);
+    let predicted = predicted_next_line(&prog, bnez_line, line_bytes).unwrap();
+    // The backward branch targets instruction 1 (loop:) whose line is line 0.
+    assert_eq!(predicted, prog.addr_of(1) & !(line_bytes - 1));
+}

@@ -1,0 +1,198 @@
+//! Per-tile instruction cache orchestration: N private L0 caches sharing
+//! one L1 with a single lookup port (1 request/cycle — the paper notes four
+//! L0s refilling every four instructions fully utilize the L1 interface),
+//! refill coalescing, and prefetch.
+
+use std::collections::VecDeque;
+
+use super::config::ICacheConfig;
+use super::l0::{predicted_next_line, L0Cache};
+use super::l1::L1ICache;
+use crate::isa::Program;
+
+/// Anything that can serve L1 refills (the hierarchical AXI interconnect
+/// with its RO cache in the full cluster; a fixed-latency mock in tests).
+/// Returns the cycle at which the read data arrives at the tile.
+pub trait RefillPort {
+    fn read(&mut self, addr: u32, bytes: usize, now: u64) -> u64;
+}
+
+/// Fixed-latency refill port for unit tests.
+pub struct FixedLatencyPort(pub u64);
+
+impl RefillPort for FixedLatencyPort {
+    fn read(&mut self, _addr: u32, _bytes: usize, now: u64) -> u64 {
+        now + self.0
+    }
+}
+
+/// Result of a fetch attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FetchResult {
+    /// Instruction available this cycle.
+    Ready,
+    /// L0 miss in flight — the core stalls (counted as an I$ stall).
+    Stall,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqKind {
+    Demand { core: u8 },
+    Prefetch { core: u8 },
+}
+
+/// A pending delivery to L0(s): either an L1 hit in its lookup pipeline or
+/// an AXI refill in flight.
+#[derive(Debug, Clone)]
+struct PendingFill {
+    line_addr: u32,
+    ready_at: u64,
+    /// Cores whose L0 receives the line (bitmask).
+    waiters: u32,
+    /// Fill the L1 on completion (true for AXI refills).
+    fill_l1: bool,
+}
+
+/// The tile's full instruction cache: per-core L0s + shared L1 + refill
+/// machinery.
+pub struct TileICache {
+    pub cfg: ICacheConfig,
+    pub l0: Vec<L0Cache>,
+    pub l1: L1ICache,
+    line_bytes: u32,
+    /// Demand line each stalled core is waiting for.
+    pending_demand: Vec<Option<u32>>,
+    /// Requests waiting for the single L1 lookup port.
+    queue: VecDeque<(u32, ReqKind)>,
+    fills: Vec<PendingFill>,
+    /// Stat: cycles the L1 lookup port was busy (utilization).
+    pub l1_port_busy: u64,
+}
+
+impl TileICache {
+    pub fn new(cfg: ICacheConfig, cores: usize) -> Self {
+        TileICache {
+            cfg,
+            l0: (0..cores).map(|_| L0Cache::new(cfg.l0_lines)).collect(),
+            l1: L1ICache::new(&cfg),
+            line_bytes: cfg.line_bytes() as u32,
+            pending_demand: vec![None; cores],
+            queue: VecDeque::new(),
+            fills: Vec::new(),
+            l1_port_busy: 0,
+        }
+    }
+
+    fn line_of(&self, addr: u32) -> u32 {
+        addr & !(self.line_bytes - 1)
+    }
+
+    fn is_requested(&self, line: u32) -> bool {
+        self.queue.iter().any(|(l, _)| *l == line)
+            || self.fills.iter().any(|f| f.line_addr == line)
+    }
+
+    /// Attempt to fetch the instruction at byte address `addr` for `core`.
+    pub fn fetch(&mut self, core: usize, addr: u32, program: &Program) -> FetchResult {
+        let line = self.line_of(addr);
+        if let Some(pending) = self.pending_demand[core] {
+            if pending == line {
+                return FetchResult::Stall; // already waiting on it
+            }
+            // The wait was for a different line (cannot normally happen —
+            // a stalled core does not move its PC), clear it.
+            self.pending_demand[core] = None;
+        }
+        let (hit, new_line) = self.l0[core].access(line);
+        if hit {
+            if new_line && self.cfg.prefetch {
+                self.issue_prefetch(core, line, program);
+            }
+            FetchResult::Ready
+        } else {
+            self.pending_demand[core] = Some(line);
+            // Coalesce with an in-flight fill if one exists.
+            if let Some(f) = self.fills.iter_mut().find(|f| f.line_addr == line) {
+                f.waiters |= 1 << core;
+            } else if let Some(pos) = self.queue.iter().position(|(l, _)| *l == line) {
+                // Upgrade a queued prefetch to demand priority by leaving it
+                // queued; the waiter resolution happens via pending_demand.
+                let _ = pos;
+            } else {
+                self.queue.push_back((line, ReqKind::Demand { core: core as u8 }));
+            }
+            FetchResult::Stall
+        }
+    }
+
+    fn issue_prefetch(&mut self, core: usize, line: u32, program: &Program) {
+        if let Some(next) = predicted_next_line(program, line, self.line_bytes) {
+            if !self.l0[core].contains(next) && !self.is_requested(next) {
+                self.l0[core].prefetches += 1;
+                self.queue.push_back((next, ReqKind::Prefetch { core: core as u8 }));
+            }
+        }
+    }
+
+    /// Advance one cycle: complete fills, then serve one L1 lookup.
+    pub fn step(&mut self, now: u64, port: &mut dyn RefillPort) {
+        // 1. Complete due fills: install into L1 (refills) and waiter L0s.
+        let mut i = 0;
+        while i < self.fills.len() {
+            if self.fills[i].ready_at <= now {
+                let f = self.fills.swap_remove(i);
+                if f.fill_l1 {
+                    self.l1.fill(f.line_addr);
+                }
+                for core in 0..self.l0.len() {
+                    if f.waiters & (1 << core) != 0 {
+                        self.l0[core].fill(f.line_addr);
+                        if self.pending_demand[core] == Some(f.line_addr) {
+                            self.pending_demand[core] = None;
+                        }
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        // 2. One L1 lookup per cycle.
+        if let Some((line, kind)) = self.queue.pop_front() {
+            self.l1_port_busy += 1;
+            let requester = match kind {
+                ReqKind::Demand { core } | ReqKind::Prefetch { core } => core as usize,
+            };
+            // All cores currently demanding this line become waiters
+            // (refill logic "responds to all L0 caches in parallel").
+            let mut waiters: u32 = 1 << requester;
+            for (c, pd) in self.pending_demand.iter().enumerate() {
+                if *pd == Some(line) {
+                    waiters |= 1 << c;
+                }
+            }
+            if self.l1.lookup(line) {
+                self.fills.push(PendingFill {
+                    line_addr: line,
+                    ready_at: now + self.cfg.l1_hit_latency(),
+                    waiters,
+                    fill_l1: false,
+                });
+            } else {
+                let done = port.read(line, self.line_bytes as usize, now);
+                self.fills.push(PendingFill { line_addr: line, ready_at: done, waiters, fill_l1: true });
+            }
+        }
+    }
+
+    /// Flush everything (used between benchmark phases for cold-start runs).
+    pub fn invalidate_all(&mut self) {
+        for l0 in &mut self.l0 {
+            l0.invalidate_all();
+        }
+        self.l1.invalidate_all();
+        self.queue.clear();
+        self.fills.clear();
+        self.pending_demand.iter_mut().for_each(|p| *p = None);
+    }
+}

@@ -1,0 +1,251 @@
+//! Top1 / Top4 — radix-4 butterfly networks between 64 tiles (paper §3.1).
+//!
+//! A 64×64 radix-4 butterfly has log4(64) = 3 switch layers with a single
+//! pipeline register midway, so the conflict-free request path takes two
+//! cycles (→ 5-cycle round trip with the bank access). The model is
+//! link-accurate: a packet from source `s = (s2 s1 s0)` to destination
+//! `d = (d2 d1 d0)` (base-4 digits) traverses
+//!
+//! - layer-0 output link `(d2 s1 s0)` and layer-1 output link `(d2 d1 s0)`
+//!   in the first cycle (both claimed together — they sit before the
+//!   pipeline register), then
+//! - layer-2 output link `(d2 d1 d0)` = the destination port in the
+//!   second cycle.
+//!
+//! Every link carries one flit per cycle; round-robin arbitration and
+//! head-of-line blocking at each stage produce the congestion collapse of
+//! Fig 4 — `Top1` saturates near 0.10 req/core/cycle because its four
+//! cores share one port, `Top4` near 0.4 with a port per core.
+
+use std::collections::VecDeque;
+
+use super::flit::Flit;
+use super::L1Network;
+
+const QUEUE_DEPTH: usize = 4;
+
+/// One direction (request or response) of one butterfly instance.
+#[derive(Debug)]
+struct Net {
+    tiles: usize,
+    digits: u32,
+    /// Per-source-tile port queue.
+    src_q: Vec<VecDeque<Flit>>,
+    /// Mid-pipeline queues, indexed by the layer-1 output link.
+    mid_q: Vec<VecDeque<(u64, Flit)>>,
+    /// Arrived flits per destination tile.
+    arr_q: Vec<VecDeque<(u64, Flit)>>,
+    /// Per-cycle claim markers for the link resources.
+    l0_claim: Vec<u64>,
+    l1_claim: Vec<u64>,
+    dst_claim: Vec<u64>,
+    /// Rotating arbitration offsets.
+    rr_src: usize,
+    rr_dst: Vec<usize>,
+    /// Per-destination pop credit.
+    popped_at: Vec<u64>,
+    conflicts: u64,
+}
+
+/// Split a node index into base-4 digits (LSB first).
+#[inline]
+fn digit(x: usize, i: u32) -> usize {
+    (x >> (2 * i)) & 3
+}
+
+impl Net {
+    fn new(tiles: usize) -> Self {
+        assert!(tiles.is_power_of_two());
+        let digits = tiles.trailing_zeros().div_ceil(2);
+        Net {
+            tiles,
+            digits,
+            src_q: (0..tiles).map(|_| VecDeque::new()).collect(),
+            mid_q: (0..tiles).map(|_| VecDeque::new()).collect(),
+            arr_q: (0..tiles).map(|_| VecDeque::new()).collect(),
+            l0_claim: vec![u64::MAX; tiles],
+            l1_claim: vec![u64::MAX; tiles],
+            dst_claim: vec![u64::MAX; tiles],
+            rr_src: 0,
+            rr_dst: vec![0; tiles],
+            popped_at: vec![u64::MAX; tiles],
+            conflicts: 0,
+        }
+    }
+
+    /// Layer-0 output link for src `s` heading to dst `d`: replace the top
+    /// digit of `s` with the top digit of `d`.
+    fn l0_link(&self, s: usize, d: usize) -> usize {
+        let top = self.digits - 1;
+        let mask = !(3 << (2 * top));
+        (s & mask) | (digit(d, top) << (2 * top))
+    }
+
+    /// Layer-1 output link: top two digits from `d`, rest from `s`.
+    fn l1_link(&self, s: usize, d: usize) -> usize {
+        if self.digits < 2 {
+            return d;
+        }
+        let mut node = s;
+        for i in (self.digits - 2)..self.digits {
+            let mask = !(3 << (2 * i));
+            node = (node & mask) | (digit(d, i) << (2 * i));
+        }
+        node
+    }
+
+    fn try_send(&mut self, flit: Flit) -> bool {
+        let q = &mut self.src_q[flit.src_tile as usize];
+        if q.len() >= QUEUE_DEPTH {
+            return false;
+        }
+        q.push_back(flit);
+        true
+    }
+
+    fn step(&mut self, now: u64) {
+        // Stage B first (mid → destination), so a flit never crosses both
+        // pipeline stages in one cycle.
+        for off in 0..self.tiles {
+            let dst = off; // dst ports scanned in order; fairness via rr_dst
+            let start = self.rr_dst[dst];
+            // Candidate mid queues: those whose layer-1 link shares the top
+            // two digits with dst (i.e. differ only in the bottom digit).
+            let base = if self.digits >= 2 {
+                dst & !3
+            } else {
+                0
+            };
+            let mut winner = None;
+            for i in 0..4.min(self.tiles) {
+                let node = base + (start + i) % 4.min(self.tiles);
+                let Some((ready, f)) = self.mid_q[node].front() else { continue };
+                if *ready > now || f.dst_tile as usize != dst {
+                    continue;
+                }
+                if winner.is_none() {
+                    winner = Some(node);
+                } else {
+                    self.conflicts += 1;
+                }
+            }
+            if let Some(node) = winner {
+                if self.dst_claim[dst] != now && self.arr_q[dst].len() < QUEUE_DEPTH {
+                    self.dst_claim[dst] = now;
+                    let (_, f) = self.mid_q[node].pop_front().unwrap();
+                    self.arr_q[dst].push_back((now + 1, f));
+                    self.rr_dst[dst] = (node % 4) + 1;
+                }
+            }
+        }
+
+        // Stage A: source queues claim their layer-0 and layer-1 links.
+        let start = self.rr_src;
+        for i in 0..self.tiles {
+            let s = (start + i) % self.tiles;
+            let Some(head) = self.src_q[s].front() else { continue };
+            let d = head.dst_tile as usize;
+            let a = self.l0_link(s, d);
+            let b = self.l1_link(s, d);
+            if self.l0_claim[a] == now || self.l1_claim[b] == now {
+                self.conflicts += 1;
+                continue; // link busy this cycle — wait (HOL blocking)
+            }
+            if self.mid_q[b].len() >= QUEUE_DEPTH {
+                continue; // backpressure from the pipeline register
+            }
+            self.l0_claim[a] = now;
+            self.l1_claim[b] = now;
+            let f = self.src_q[s].pop_front().unwrap();
+            self.mid_q[b].push_back((now + 1, f));
+        }
+        self.rr_src = (self.rr_src + 1) % self.tiles;
+    }
+
+    fn pop_arrival(&mut self, tile: usize, now: u64) -> Option<Flit> {
+        if self.popped_at[tile] == now {
+            return None;
+        }
+        match self.arr_q[tile].front() {
+            Some((ready, _)) if *ready <= now => {
+                self.popped_at[tile] = now;
+                Some(self.arr_q[tile].pop_front().unwrap().1)
+            }
+            _ => None,
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        self.src_q.iter().map(|q| q.len()).sum::<usize>()
+            + self.mid_q.iter().map(|q| q.len()).sum::<usize>()
+            + self.arr_q.iter().map(|q| q.len()).sum::<usize>()
+    }
+}
+
+/// `instances` independent butterflies: 1 for Top1 (all four cores share
+/// the tile port), one per core lane for Top4.
+pub struct Butterfly {
+    req: Vec<Net>,
+    resp: Vec<Net>,
+}
+
+impl Butterfly {
+    pub fn new(tiles: usize, instances: usize) -> Self {
+        Butterfly {
+            req: (0..instances).map(|_| Net::new(tiles)).collect(),
+            resp: (0..instances).map(|_| Net::new(tiles)).collect(),
+        }
+    }
+
+    fn net_of(&self, lane: u8) -> usize {
+        lane as usize % self.req.len()
+    }
+
+    pub fn conflicts(&self) -> u64 {
+        self.req.iter().map(|n| n.conflicts).sum()
+    }
+}
+
+impl L1Network for Butterfly {
+    fn try_send_req(&mut self, flit: Flit, _now: u64) -> bool {
+        let n = self.net_of(flit.lane);
+        self.req[n].try_send(flit)
+    }
+
+    fn try_send_resp(&mut self, flit: Flit, _now: u64) -> bool {
+        let n = self.net_of(flit.lane);
+        self.resp[n].try_send(flit)
+    }
+
+    fn step(&mut self, now: u64) {
+        for n in &mut self.req {
+            n.step(now);
+        }
+        for n in &mut self.resp {
+            n.step(now);
+        }
+    }
+
+    fn pop_req_arrival(&mut self, tile: usize, now: u64) -> Option<Flit> {
+        for n in &mut self.req {
+            if let Some(f) = n.pop_arrival(tile, now) {
+                return Some(f);
+            }
+        }
+        None
+    }
+
+    fn pop_resp_arrival(&mut self, tile: usize, now: u64) -> Option<Flit> {
+        for n in &mut self.resp {
+            if let Some(f) = n.pop_arrival(tile, now) {
+                return Some(f);
+            }
+        }
+        None
+    }
+
+    fn in_flight(&self) -> usize {
+        self.req.iter().map(|n| n.in_flight()).sum::<usize>()
+            + self.resp.iter().map(|n| n.in_flight()).sum::<usize>()
+    }
+}

@@ -1,0 +1,46 @@
+//! The unit of transport on the L1 interconnect.
+
+use crate::mem::MemOp;
+
+/// One request or response flit. A request travels `src_tile → dst_tile`,
+/// is served by bank `(bank, row)` at the destination, and its response
+/// travels back with `rdata` filled in.
+#[derive(Debug, Clone, Copy)]
+pub struct Flit {
+    /// Tile the flit departs from this trip (for responses this is the
+    /// bank's tile).
+    pub src_tile: u16,
+    /// Tile the flit is heading to this trip.
+    pub dst_tile: u16,
+    /// Issuing core's lane within its tile (response routing + stats).
+    pub lane: u8,
+    /// Core's scoreboard tag, echoed back in the completion.
+    pub tag: u8,
+    /// Issuing core's global ID (LR/SC reservations).
+    pub core: u32,
+    pub op: MemOp,
+    pub wdata: u32,
+    /// Destination bank within `dst_tile` and row within the bank.
+    pub bank: u16,
+    pub row: u32,
+    /// Cycle the original request was issued (round-trip latency stats).
+    pub issued_at: u64,
+    /// Read data (responses only).
+    pub rdata: u32,
+}
+
+impl Flit {
+    /// Build the response flit for a served request.
+    pub fn into_response(mut self, rdata: u32) -> Flit {
+        std::mem::swap(&mut self.src_tile, &mut self.dst_tile);
+        self.rdata = rdata;
+        self
+    }
+
+    /// The tile the response must return to (the issuing core's tile).
+    pub fn home_tile(&self) -> u16 {
+        // For a request in flight, that is src_tile; callers use this
+        // before converting to a response.
+        self.src_tile
+    }
+}

@@ -1,0 +1,76 @@
+//! The PE ↔ L1-SPM interconnect (paper §3).
+//!
+//! Three topologies connect 64 tiles (256 cores) to 1024 banks:
+//!
+//! - [`Top1`]: one remote port per tile into a single 64×64 radix-4
+//!   butterfly (5-cycle remote latency). The shared port is the bottleneck
+//!   (the paper measures congestion from ≈0.10 req/core/cycle).
+//! - [`Top4`]: four remote ports per tile into four independent butterflies
+//!   (physically infeasible to route; kept for the Fig 4 study).
+//! - [`TopH`]: the implemented hierarchical topology — tiles grouped by 16;
+//!   a fully connected 16×16 crossbar inside each group (3-cycle latency)
+//!   and one 16×16 crossbar per group *pair* (5-cycle latency).
+//!
+//! All topologies are modelled flit-accurately: per-port FIFO queues,
+//! round-robin arbitration at every contention point, fixed pipeline
+//! latencies on the conflict-free path, and head-of-line blocking — the
+//! effects that shape the paper's Fig 4/5 throughput/latency curves.
+
+mod butterfly;
+mod flit;
+mod toph;
+mod xbar;
+
+pub use butterfly::Butterfly;
+pub use flit::Flit;
+pub use toph::TopHNet;
+pub use xbar::Xbar16;
+
+use crate::config::{ClusterConfig, Topology};
+
+/// A topology-agnostic view of the remote L1 interconnect. Local (same
+/// tile) accesses never enter the network; the tile crossbar handles them.
+///
+/// Requests and responses ride separate, mirrored networks (the paper's
+/// interconnects have independent request/response channels).
+pub trait L1Network {
+    /// Try to accept a request flit departing `flit.src_tile`; `false`
+    /// means the tile's outgoing port queue is full (backpressure to the
+    /// core's LSU).
+    fn try_send_req(&mut self, flit: Flit, now: u64) -> bool;
+
+    /// Try to accept a response flit departing `flit.src_tile` (the tile
+    /// that served the bank access) back to `flit.dst_tile`.
+    fn try_send_resp(&mut self, flit: Flit, now: u64) -> bool;
+
+    /// Advance arbitration and pipeline stages by one cycle.
+    fn step(&mut self, now: u64);
+
+    /// Pop one request arriving at `tile` this cycle, respecting the
+    /// per-cycle incoming port limits (call until `None`).
+    fn pop_req_arrival(&mut self, tile: usize, now: u64) -> Option<Flit>;
+
+    /// Pop one response arriving at `tile` (for delivery to its cores).
+    fn pop_resp_arrival(&mut self, tile: usize, now: u64) -> Option<Flit>;
+
+    /// Number of flits currently inside the network (debug/invariants).
+    fn in_flight(&self) -> usize;
+}
+
+/// Instantiate the configured topology.
+pub fn build_network(cfg: &ClusterConfig) -> Box<dyn L1Network> {
+    let tiles = cfg.num_tiles();
+    match cfg.topology {
+        Topology::Top1 => Box::new(Butterfly::new(tiles, 1)),
+        Topology::Top4 => Box::new(Butterfly::new(tiles, cfg.cores_per_tile)),
+        Topology::TopH => Box::new(TopHNet::new(
+            cfg.num_groups,
+            cfg.tiles_per_group,
+            cfg.local_group_latency,
+            cfg.remote_group_latency,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests;

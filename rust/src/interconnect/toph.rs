@@ -1,0 +1,166 @@
+//! TopH — the hierarchical topology MemPool implements (paper §3.1).
+//!
+//! Tiles are grouped by 16. Requests to a tile in the same group traverse
+//! the group's *local* 16×16 fully connected crossbar (1-cycle request
+//! path → 3-cycle round trip with the bank access). Requests to another
+//! group traverse the dedicated crossbar of that group *pair* (2-cycle
+//! request path → 5-cycle round trip). Every tile therefore has four
+//! outgoing and four incoming remote ports: local, north (g+1),
+//! northeast (g+2), and east (g+3).
+
+use super::flit::Flit;
+use super::xbar::Xbar16;
+use super::L1Network;
+
+/// Request + response crossbars for TopH.
+pub struct TopHNet {
+    groups: usize,
+    tiles_per_group: usize,
+    /// `local[g]`: intra-group crossbar of group `g`.
+    local_req: Vec<Xbar16>,
+    local_resp: Vec<Xbar16>,
+    /// `pair[g * groups + h]`: directed crossbar for requests g → h
+    /// (one direction of the pair's crossbar). Unused for g == h.
+    pair_req: Vec<Option<Xbar16>>,
+    pair_resp: Vec<Option<Xbar16>>,
+}
+
+impl TopHNet {
+    pub fn new(groups: usize, tiles_per_group: usize, local_latency: u64, remote_latency: u64) -> Self {
+        // Round trip = request path + bank cycle + response path; the
+        // crossbar traversal is half of (latency - 1).
+        let l_lat = (local_latency - 1) / 2; // 3 → 1
+        let r_lat = (remote_latency - 1) / 2; // 5 → 2
+        assert!(l_lat >= 1 && r_lat >= 1, "latencies too small for TopH");
+        let mk = |lat: u64| Xbar16::new(tiles_per_group, lat);
+        let mut pair_req = Vec::new();
+        let mut pair_resp = Vec::new();
+        for g in 0..groups {
+            for h in 0..groups {
+                if g == h {
+                    pair_req.push(None);
+                    pair_resp.push(None);
+                } else {
+                    pair_req.push(Some(mk(r_lat)));
+                    pair_resp.push(Some(mk(r_lat)));
+                }
+            }
+        }
+        TopHNet {
+            groups,
+            tiles_per_group,
+            local_req: (0..groups).map(|_| mk(l_lat)).collect(),
+            local_resp: (0..groups).map(|_| mk(l_lat)).collect(),
+            pair_req,
+            pair_resp,
+        }
+    }
+
+    fn group_of(&self, tile: u16) -> usize {
+        tile as usize / self.tiles_per_group
+    }
+
+    fn index_in_group(&self, tile: u16) -> usize {
+        tile as usize % self.tiles_per_group
+    }
+
+    fn send(&mut self, flit: Flit, resp: bool) -> bool {
+        let (sg, dg) = (self.group_of(flit.src_tile), self.group_of(flit.dst_tile));
+        let src_idx = self.index_in_group(flit.src_tile);
+        let xbar = if sg == dg {
+            if resp {
+                &mut self.local_resp[sg]
+            } else {
+                &mut self.local_req[sg]
+            }
+        } else {
+            let slot = sg * self.groups + dg;
+            let v = if resp { &mut self.pair_resp } else { &mut self.pair_req };
+            v[slot].as_mut().expect("pair crossbar")
+        };
+        xbar.try_send(src_idx, flit)
+    }
+
+    /// Total request-path conflicts observed (Fig 4 diagnostics).
+    pub fn req_conflicts(&self) -> u64 {
+        self.local_req.iter().map(|x| x.conflicts).sum::<u64>()
+            + self
+                .pair_req
+                .iter()
+                .flatten()
+                .map(|x| x.conflicts)
+                .sum::<u64>()
+    }
+}
+
+impl L1Network for TopHNet {
+    fn try_send_req(&mut self, flit: Flit, _now: u64) -> bool {
+        self.send(flit, false)
+    }
+
+    fn try_send_resp(&mut self, flit: Flit, _now: u64) -> bool {
+        self.send(flit, true)
+    }
+
+    fn step(&mut self, now: u64) {
+        let tpg = self.tiles_per_group;
+        let route = move |f: &Flit| f.dst_tile as usize % tpg;
+        for x in &mut self.local_req {
+            x.step(now, route);
+        }
+        for x in &mut self.local_resp {
+            x.step(now, route);
+        }
+        for x in self.pair_req.iter_mut().flatten() {
+            x.step(now, route);
+        }
+        for x in self.pair_resp.iter_mut().flatten() {
+            x.step(now, route);
+        }
+    }
+
+    fn pop_req_arrival(&mut self, tile: usize, now: u64) -> Option<Flit> {
+        let g = tile / self.tiles_per_group;
+        let idx = tile % self.tiles_per_group;
+        if let Some(f) = self.local_req[g].pop_arrival(idx, now) {
+            return Some(f);
+        }
+        for h in 0..self.groups {
+            if h == g {
+                continue;
+            }
+            if let Some(x) = self.pair_req[h * self.groups + g].as_mut() {
+                if let Some(f) = x.pop_arrival(idx, now) {
+                    return Some(f);
+                }
+            }
+        }
+        None
+    }
+
+    fn pop_resp_arrival(&mut self, tile: usize, now: u64) -> Option<Flit> {
+        let g = tile / self.tiles_per_group;
+        let idx = tile % self.tiles_per_group;
+        if let Some(f) = self.local_resp[g].pop_arrival(idx, now) {
+            return Some(f);
+        }
+        for h in 0..self.groups {
+            if h == g {
+                continue;
+            }
+            if let Some(x) = self.pair_resp[h * self.groups + g].as_mut() {
+                if let Some(f) = x.pop_arrival(idx, now) {
+                    return Some(f);
+                }
+            }
+        }
+        None
+    }
+
+    fn in_flight(&self) -> usize {
+        self.local_req.iter().map(|x| x.in_flight()).sum::<usize>()
+            + self.local_resp.iter().map(|x| x.in_flight()).sum::<usize>()
+            + self.pair_req.iter().flatten().map(|x| x.in_flight()).sum::<usize>()
+            + self.pair_resp.iter().flatten().map(|x| x.in_flight()).sum::<usize>()
+    }
+}

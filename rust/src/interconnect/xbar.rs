@@ -1,0 +1,216 @@
+//! A fully connected N×N crossbar between tiles with per-port FIFO queues,
+//! round-robin destination arbitration, and a fixed pipeline latency.
+//!
+//! This is the building block of TopH (paper §3.1): each group has one
+//! such crossbar between its own 16 tiles (*local*, 1-cycle request path)
+//! and one per remote group pair (*north/northeast/east*, 2-cycle request
+//! path). Being fully connected, the only contention points are the
+//! per-tile source ports (1 flit/cycle out) and destination ports
+//! (1 flit/cycle in).
+
+use std::collections::VecDeque;
+
+use super::flit::Flit;
+
+/// Depth of each source-port queue. Small, like the hardware's port
+/// registers: congestion must propagate back to the cores quickly.
+const PORT_QUEUE_DEPTH: usize = 4;
+
+/// One direction (request or response) of a fully connected crossbar.
+#[derive(Debug)]
+pub struct Xbar16 {
+    ports: usize,
+    /// Pipeline latency of the crossbar traversal in cycles (1 local,
+    /// 2 across group pairs — making 3/5-cycle round trips with the bank
+    /// access in the middle).
+    latency: u64,
+    /// Per-source-port outgoing queues.
+    src_queues: Vec<VecDeque<Flit>>,
+    /// In-flight flits: (arrival_cycle, flit), kept sorted by insertion
+    /// (arrival times are monotone per destination).
+    in_flight: Vec<VecDeque<(u64, Flit)>>,
+    /// Round-robin pointer per destination port.
+    rr: Vec<usize>,
+    /// Cycle of the last arbitration pass (one pass per cycle).
+    last_arb: u64,
+    /// Per-destination arrival credit: 1 pop per cycle per port.
+    popped_at: Vec<u64>,
+    /// Stats.
+    pub sent: u64,
+    pub conflicts: u64,
+}
+
+impl Xbar16 {
+    pub fn new(ports: usize, latency: u64) -> Self {
+        assert!(latency >= 1);
+        Xbar16 {
+            ports,
+            latency,
+            src_queues: (0..ports).map(|_| VecDeque::new()).collect(),
+            in_flight: (0..ports).map(|_| VecDeque::new()).collect(),
+            rr: vec![0; ports],
+            last_arb: u64::MAX,
+            popped_at: vec![u64::MAX; ports],
+            sent: 0,
+            conflicts: 0,
+        }
+    }
+
+    /// Enqueue at source port `src` (index within this crossbar).
+    pub fn try_send(&mut self, src: usize, flit: Flit) -> bool {
+        let q = &mut self.src_queues[src];
+        if q.len() >= PORT_QUEUE_DEPTH {
+            return false;
+        }
+        q.push_back(flit);
+        true
+    }
+
+    /// One arbitration pass: every destination port accepts at most one
+    /// flit per cycle, chosen round-robin among source ports whose head
+    /// flit routes to it (head-of-line blocking included).
+    pub fn step(&mut self, now: u64, route: impl Fn(&Flit) -> usize) {
+        debug_assert_ne!(self.last_arb, now, "double arbitration in one cycle");
+        self.last_arb = now;
+        // Gather head routing.
+        for dst in 0..self.ports {
+            let start = self.rr[dst];
+            let mut winner = None;
+            for i in 0..self.ports {
+                let src = (start + i) % self.ports;
+                if let Some(head) = self.src_queues[src].front() {
+                    if route(head) == dst {
+                        if winner.is_none() {
+                            winner = Some(src);
+                        } else {
+                            self.conflicts += 1;
+                        }
+                    }
+                }
+            }
+            if let Some(src) = winner {
+                let flit = self.src_queues[src].pop_front().unwrap();
+                self.in_flight[dst].push_back((now + self.latency, flit));
+                self.rr[dst] = (src + 1) % self.ports;
+                self.sent += 1;
+            }
+        }
+    }
+
+    /// Pop the flit arriving at destination port `dst` this cycle, if any
+    /// (at most one per cycle — the incoming port width).
+    pub fn pop_arrival(&mut self, dst: usize, now: u64) -> Option<Flit> {
+        if self.popped_at[dst] == now {
+            return None;
+        }
+        match self.in_flight[dst].front() {
+            Some((ready, _)) if *ready <= now => {
+                self.popped_at[dst] = now;
+                Some(self.in_flight[dst].pop_front().unwrap().1)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.src_queues.iter().map(|q| q.len()).sum::<usize>()
+            + self.in_flight.iter().map(|q| q.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemOp;
+
+    fn flit(src: u16, dst: u16) -> Flit {
+        Flit {
+            src_tile: src,
+            dst_tile: dst,
+            lane: 0,
+            tag: 0,
+            core: 0,
+            op: MemOp::Read,
+            wdata: 0,
+            bank: 0,
+            row: 0,
+            issued_at: 0,
+            rdata: 0,
+        }
+    }
+
+    #[test]
+    fn conflict_free_latency() {
+        let mut x = Xbar16::new(16, 2);
+        assert!(x.try_send(3, flit(3, 7)));
+        x.step(0, |f| f.dst_tile as usize);
+        assert!(x.pop_arrival(7, 0).is_none());
+        x.step(1, |f| f.dst_tile as usize);
+        assert!(x.pop_arrival(7, 1).is_none());
+        x.step(2, |f| f.dst_tile as usize);
+        let f = x.pop_arrival(7, 2).expect("arrives after latency");
+        assert_eq!(f.src_tile, 3);
+        assert_eq!(x.in_flight(), 0);
+    }
+
+    #[test]
+    fn destination_conflict_serializes() {
+        let mut x = Xbar16::new(16, 1);
+        for src in 0..4 {
+            assert!(x.try_send(src, flit(src as u16, 9)));
+        }
+        let mut arrivals = Vec::new();
+        for now in 0..8 {
+            x.step(now, |f| f.dst_tile as usize);
+            if let Some(f) = x.pop_arrival(9, now) {
+                arrivals.push((now, f.src_tile));
+            }
+        }
+        // One per cycle starting at cycle 1.
+        assert_eq!(arrivals.len(), 4);
+        let cycles: Vec<u64> = arrivals.iter().map(|(c, _)| *c).collect();
+        assert_eq!(cycles, vec![1, 2, 3, 4]);
+        assert!(x.conflicts > 0);
+    }
+
+    #[test]
+    fn rr_arbitration_is_fair() {
+        let mut x = Xbar16::new(4, 1);
+        // Keep ports 0 and 1 full of flits to destination 2.
+        let mut served = [0u64; 2];
+        for now in 0..40 {
+            for src in 0..2 {
+                let _ = x.try_send(src, flit(src as u16, 2));
+            }
+            x.step(now, |f| f.dst_tile as usize);
+            if let Some(f) = x.pop_arrival(2, now) {
+                served[f.src_tile as usize] += 1;
+            }
+        }
+        let diff = served[0].abs_diff(served[1]);
+        assert!(diff <= 1, "unfair: {served:?}");
+    }
+
+    #[test]
+    fn backpressure_when_queue_full() {
+        let mut x = Xbar16::new(4, 1);
+        for i in 0..PORT_QUEUE_DEPTH {
+            assert!(x.try_send(0, flit(0, 1)), "enqueue {i}");
+        }
+        assert!(!x.try_send(0, flit(0, 1)), "queue must be full");
+    }
+
+    #[test]
+    fn one_arrival_per_port_per_cycle() {
+        let mut x = Xbar16::new(4, 1);
+        assert!(x.try_send(0, flit(0, 2)));
+        assert!(x.try_send(1, flit(1, 2)));
+        x.step(0, |f| f.dst_tile as usize);
+        x.step(1, |f| f.dst_tile as usize);
+        x.step(2, |f| f.dst_tile as usize);
+        // Both are in flight; only one pops per cycle.
+        assert!(x.pop_arrival(2, 2).is_some());
+        assert!(x.pop_arrival(2, 2).is_none());
+        assert!(x.pop_arrival(2, 3).is_some());
+    }
+}

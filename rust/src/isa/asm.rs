@@ -1,0 +1,612 @@
+//! A small two-pass assembler for the MemPool kernel sources.
+//!
+//! Supports the RV32IM + Xpulpimg subset of `Instr`, labels, the usual
+//! pseudo-instructions (`li`, `la`, `mv`, `j`, `call`, `ret`, `beqz`, ...),
+//! comments (`#`, `//`, `;`), and a host-provided symbol table so kernels
+//! can reference data buffers placed by the harness (`la a0, matrix_a`).
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::instr::{AmoOp, CondOp, Csr, Instr, OpKind, Reg, Width};
+
+/// Assembly error with line information.
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for AsmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "asm error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+/// Instruction with possibly-unresolved branch target.
+enum Pre {
+    Ready(Instr),
+    Branch { cond: CondOp, rs1: Reg, rs2: Reg, label: String },
+    Jal { rd: Reg, label: String },
+}
+
+struct Ctx<'a> {
+    symbols: &'a HashMap<String, u32>,
+    line: usize,
+}
+
+impl<'a> Ctx<'a> {
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, AsmError> {
+        Err(AsmError { line: self.line, msg: msg.into() })
+    }
+
+    fn reg(&self, tok: &str) -> Result<Reg, AsmError> {
+        Reg::from_name(tok.trim()).ok_or(AsmError {
+            line: self.line,
+            msg: format!("unknown register `{tok}`"),
+        })
+    }
+
+    /// Parse an immediate: decimal, hex, or a symbol-table entry.
+    fn imm(&self, tok: &str) -> Result<i64, AsmError> {
+        let t = tok.trim();
+        if let Some(v) = self.symbols.get(t) {
+            return Ok(*v as i64);
+        }
+        let (neg, t) = match t.strip_prefix('-') {
+            Some(rest) => (true, rest),
+            None => (false, t),
+        };
+        let val = if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+            u64::from_str_radix(hex, 16).map_err(|e| AsmError {
+                line: self.line,
+                msg: format!("bad hex immediate `{tok}`: {e}"),
+            })?
+        } else {
+            t.parse::<u64>().map_err(|e| AsmError {
+                line: self.line,
+                msg: format!("bad immediate `{tok}`: {e}"),
+            })?
+        };
+        Ok(if neg { -(val as i64) } else { val as i64 })
+    }
+
+    fn imm12(&self, tok: &str) -> Result<i32, AsmError> {
+        let v = self.imm(tok)?;
+        if !(-2048..=2047).contains(&v) {
+            return self.err(format!("immediate `{tok}` out of 12-bit range"));
+        }
+        Ok(v as i32)
+    }
+
+    /// Parse `imm(reg)` or `imm(reg!)`; returns (imm, reg, post_increment).
+    fn mem_operand(&self, tok: &str) -> Result<(i32, Reg, bool), AsmError> {
+        let t = tok.trim();
+        let open = t.find('(').ok_or(AsmError {
+            line: self.line,
+            msg: format!("expected `imm(reg)` operand, got `{t}`"),
+        })?;
+        if !t.ends_with(')') {
+            return self.err(format!("unbalanced memory operand `{t}`"));
+        }
+        let imm_part = &t[..open];
+        let mut reg_part = &t[open + 1..t.len() - 1];
+        let post = reg_part.ends_with('!');
+        if post {
+            reg_part = &reg_part[..reg_part.len() - 1];
+        }
+        let imm = if imm_part.trim().is_empty() {
+            0
+        } else {
+            self.imm12(imm_part)?
+        };
+        Ok((imm, self.reg(reg_part)?, post))
+    }
+}
+
+/// Expand `li rd, imm` into one or two instructions.
+fn expand_li(rd: Reg, value: i64, out: &mut Vec<Pre>) {
+    let v = value as i32;
+    if (-2048..=2047).contains(&v) {
+        out.push(Pre::Ready(Instr::OpImm { op: OpKind::Add, rd, rs1: Reg::ZERO, imm: v }));
+    } else {
+        // lui + addi with sign correction for the low 12 bits.
+        let lo = (v << 20) >> 20;
+        let hi = v.wrapping_sub(lo) >> 12;
+        out.push(Pre::Ready(Instr::Lui { rd, imm: hi }));
+        if lo != 0 {
+            out.push(Pre::Ready(Instr::OpImm { op: OpKind::Add, rd, rs1: rd, imm: lo }));
+        }
+    }
+}
+
+fn width_of(suffix: &str) -> Option<(Width, bool)> {
+    match suffix {
+        "w" => Some((Width::Word, true)),
+        "h" => Some((Width::Half, true)),
+        "hu" => Some((Width::Half, false)),
+        "b" => Some((Width::Byte, true)),
+        "bu" => Some((Width::Byte, false)),
+        _ => None,
+    }
+}
+
+/// Split an operand list on top-level commas.
+fn operands(rest: &str) -> Vec<&str> {
+    rest.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect()
+}
+
+/// Assemble `src` into a flat instruction vector.
+///
+/// `symbols` maps names to 32-bit values (typically data buffer addresses
+/// chosen by the harness); they can be used wherever an immediate is valid
+/// and with `la`/`li`.
+pub fn assemble(src: &str, symbols: &HashMap<String, u32>) -> Result<Vec<Instr>, AsmError> {
+    let mut pre: Vec<Pre> = Vec::new();
+    let mut labels: HashMap<String, u32> = HashMap::new();
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let mut ctx = Ctx { symbols, line: lineno + 1 };
+        // Strip comments.
+        let mut line = raw;
+        for marker in ["#", "//", ";"] {
+            if let Some(pos) = line.find(marker) {
+                line = &line[..pos];
+            }
+        }
+        let mut line = line.trim();
+        // Labels (possibly several on one line).
+        while let Some(colon) = line.find(':') {
+            let (label, rest) = line.split_at(colon);
+            let label = label.trim();
+            if label.is_empty() || label.contains(char::is_whitespace) {
+                break;
+            }
+            if labels.insert(label.to_string(), pre.len() as u32).is_some() {
+                return ctx.err(format!("duplicate label `{label}`"));
+            }
+            line = rest[1..].trim();
+        }
+        if line.is_empty() {
+            continue;
+        }
+        let (mnemonic, rest) = match line.find(char::is_whitespace) {
+            Some(pos) => (&line[..pos], line[pos..].trim()),
+            None => (line, ""),
+        };
+        // `.align N` directive: pad with nops to an N-instruction
+        // boundary, aligning hot loop heads to icache lines so small
+        // loop bodies fit the 4-line L0 regardless of prologue length.
+        if mnemonic == ".align" {
+            let n = ctx.imm(rest)? as usize;
+            if n == 0 || !n.is_power_of_two() {
+                return ctx.err(format!(".align needs a power of two, got {rest}"));
+            }
+            while pre.len() % n != 0 {
+                pre.push(Pre::Ready(Instr::Nop));
+            }
+            continue;
+        }
+        let ops = operands(rest);
+        ctx.line = lineno + 1;
+        parse_instr(&mut ctx, mnemonic, &ops, &mut pre)?;
+    }
+
+    // Second pass: resolve labels.
+    let mut out = Vec::with_capacity(pre.len());
+    for (idx, p) in pre.into_iter().enumerate() {
+        let resolve = |label: &str| -> Result<u32, AsmError> {
+            labels.get(label).copied().ok_or(AsmError {
+                line: 0,
+                msg: format!("undefined label `{label}` (at instruction {idx})"),
+            })
+        };
+        out.push(match p {
+            Pre::Ready(i) => i,
+            Pre::Branch { cond, rs1, rs2, label } => {
+                Instr::Branch { cond, rs1, rs2, target: resolve(&label)? }
+            }
+            Pre::Jal { rd, label } => Instr::Jal { rd, target: resolve(&label)? },
+        });
+    }
+    Ok(out)
+}
+
+fn parse_instr(
+    ctx: &mut Ctx,
+    mnemonic: &str,
+    ops: &[&str],
+    out: &mut Vec<Pre>,
+) -> Result<(), AsmError> {
+    let need = |n: usize| -> Result<(), AsmError> {
+        if ops.len() != n {
+            Err(AsmError {
+                line: ctx.line,
+                msg: format!("`{mnemonic}` expects {n} operands, got {}", ops.len()),
+            })
+        } else {
+            Ok(())
+        }
+    };
+
+    // Register-register ALU ops.
+    let rr = |op: OpKind| -> Option<OpKind> { Some(op) };
+    let alu = match mnemonic {
+        "add" => rr(OpKind::Add),
+        "sub" => rr(OpKind::Sub),
+        "sll" => rr(OpKind::Sll),
+        "slt" => rr(OpKind::Slt),
+        "sltu" => rr(OpKind::Sltu),
+        "xor" => rr(OpKind::Xor),
+        "srl" => rr(OpKind::Srl),
+        "sra" => rr(OpKind::Sra),
+        "or" => rr(OpKind::Or),
+        "and" => rr(OpKind::And),
+        "mul" => rr(OpKind::Mul),
+        "mulh" => rr(OpKind::Mulh),
+        "mulhu" => rr(OpKind::Mulhu),
+        "mulhsu" => rr(OpKind::Mulhsu),
+        "div" => rr(OpKind::Div),
+        "divu" => rr(OpKind::Divu),
+        "rem" => rr(OpKind::Rem),
+        "remu" => rr(OpKind::Remu),
+        "p.min" => rr(OpKind::PMin),
+        "p.max" => rr(OpKind::PMax),
+        "p.minu" => rr(OpKind::PMinu),
+        "p.maxu" => rr(OpKind::PMaxu),
+        _ => None,
+    };
+    if let Some(op) = alu {
+        need(3)?;
+        out.push(Pre::Ready(Instr::Op {
+            op,
+            rd: ctx.reg(ops[0])?,
+            rs1: ctx.reg(ops[1])?,
+            rs2: ctx.reg(ops[2])?,
+        }));
+        return Ok(());
+    }
+
+    // Immediate ALU ops.
+    let alui = match mnemonic {
+        "addi" => Some(OpKind::Add),
+        "slti" => Some(OpKind::Slt),
+        "sltiu" => Some(OpKind::Sltu),
+        "xori" => Some(OpKind::Xor),
+        "ori" => Some(OpKind::Or),
+        "andi" => Some(OpKind::And),
+        "slli" => Some(OpKind::Sll),
+        "srli" => Some(OpKind::Srl),
+        "srai" => Some(OpKind::Sra),
+        _ => None,
+    };
+    if let Some(op) = alui {
+        need(3)?;
+        let imm = if matches!(op, OpKind::Sll | OpKind::Srl | OpKind::Sra) {
+            let v = ctx.imm(ops[2])?;
+            if !(0..32).contains(&v) {
+                return ctx.err("shift amount out of range");
+            }
+            v as i32
+        } else {
+            ctx.imm12(ops[2])?
+        };
+        out.push(Pre::Ready(Instr::OpImm {
+            op,
+            rd: ctx.reg(ops[0])?,
+            rs1: ctx.reg(ops[1])?,
+            imm,
+        }));
+        return Ok(());
+    }
+
+    // Loads/stores (optionally Xpulpimg post-increment / reg-offset).
+    if let Some(suffix) = mnemonic.strip_prefix('l').filter(|_| !mnemonic.starts_with("lui")) {
+        if let Some((width, signed)) = width_of(suffix) {
+            need(2)?;
+            let rd = ctx.reg(ops[0])?;
+            let (imm, rs1, post) = ctx.mem_operand(ops[1])?;
+            if post {
+                return ctx.err("post-increment requires the `p.` prefix");
+            }
+            out.push(Pre::Ready(Instr::Load { rd, rs1, imm, width, signed }));
+            return Ok(());
+        }
+        if suffix == "r.w" {
+            need(2)?;
+            let rd = ctx.reg(ops[0])?;
+            let (imm, rs1, _) = ctx.mem_operand(ops[1])?;
+            if imm != 0 {
+                return ctx.err("lr.w takes no offset");
+            }
+            out.push(Pre::Ready(Instr::Lr { rd, rs1 }));
+            return Ok(());
+        }
+    }
+    if let Some(suffix) = mnemonic.strip_prefix('s') {
+        if let Some((width, _)) = width_of(suffix) {
+            need(2)?;
+            let rs2 = ctx.reg(ops[0])?;
+            let (imm, rs1, post) = ctx.mem_operand(ops[1])?;
+            if post {
+                return ctx.err("post-increment requires the `p.` prefix");
+            }
+            out.push(Pre::Ready(Instr::Store { rs2, rs1, imm, width }));
+            return Ok(());
+        }
+        if suffix == "c.w" {
+            need(3)?;
+            let rd = ctx.reg(ops[0])?;
+            let rs2 = ctx.reg(ops[1])?;
+            let (imm, rs1, _) = ctx.mem_operand(ops[2])?;
+            if imm != 0 {
+                return ctx.err("sc.w takes no offset");
+            }
+            out.push(Pre::Ready(Instr::Sc { rd, rs1, rs2 }));
+            return Ok(());
+        }
+    }
+    if let Some(pl) = mnemonic.strip_prefix("p.l") {
+        // p.lw rd, imm(rs1!)  — post-increment load
+        // p.lwr rd, rs2(rs1)  — register-offset load
+        if let Some(base) = pl.strip_suffix('r') {
+            if let Some((width, signed)) = width_of(base) {
+                need(2)?;
+                let rd = ctx.reg(ops[0])?;
+                let t = ops[1];
+                let open = t.find('(').ok_or(AsmError {
+                    line: ctx.line,
+                    msg: format!("expected `rs2(rs1)`, got `{t}`"),
+                })?;
+                let rs2 = ctx.reg(&t[..open])?;
+                let rs1 = ctx.reg(t[open + 1..].trim_end_matches(')'))?;
+                out.push(Pre::Ready(Instr::LoadReg { rd, rs1, rs2, width, signed }));
+                return Ok(());
+            }
+        }
+        if let Some((width, signed)) = width_of(pl) {
+            need(2)?;
+            let rd = ctx.reg(ops[0])?;
+            let (imm, rs1, post) = ctx.mem_operand(ops[1])?;
+            if !post {
+                return ctx.err("p.lw requires `imm(rs1!)`");
+            }
+            out.push(Pre::Ready(Instr::LoadPost { rd, rs1, imm, width, signed }));
+            return Ok(());
+        }
+    }
+    if let Some(ps) = mnemonic.strip_prefix("p.s") {
+        if let Some((width, _)) = width_of(ps) {
+            need(2)?;
+            let rs2 = ctx.reg(ops[0])?;
+            let (imm, rs1, post) = ctx.mem_operand(ops[1])?;
+            if !post {
+                return ctx.err("p.sw requires `imm(rs1!)`");
+            }
+            out.push(Pre::Ready(Instr::StorePost { rs2, rs1, imm, width }));
+            return Ok(());
+        }
+    }
+
+    // Branches.
+    let branch = match mnemonic {
+        "beq" => Some(CondOp::Eq),
+        "bne" => Some(CondOp::Ne),
+        "blt" => Some(CondOp::Lt),
+        "bge" => Some(CondOp::Ge),
+        "bltu" => Some(CondOp::Ltu),
+        "bgeu" => Some(CondOp::Geu),
+        _ => None,
+    };
+    if let Some(cond) = branch {
+        need(3)?;
+        out.push(Pre::Branch {
+            cond,
+            rs1: ctx.reg(ops[0])?,
+            rs2: ctx.reg(ops[1])?,
+            label: ops[2].to_string(),
+        });
+        return Ok(());
+    }
+    // Swapped-operand branch pseudos.
+    let swapped = match mnemonic {
+        "bgt" => Some(CondOp::Lt),
+        "ble" => Some(CondOp::Ge),
+        "bgtu" => Some(CondOp::Ltu),
+        "bleu" => Some(CondOp::Geu),
+        _ => None,
+    };
+    if let Some(cond) = swapped {
+        need(3)?;
+        out.push(Pre::Branch {
+            cond,
+            rs1: ctx.reg(ops[1])?,
+            rs2: ctx.reg(ops[0])?,
+            label: ops[2].to_string(),
+        });
+        return Ok(());
+    }
+    // Zero-comparison branch pseudos.
+    let zero_branch = match mnemonic {
+        "beqz" => Some((CondOp::Eq, false)),
+        "bnez" => Some((CondOp::Ne, false)),
+        "bltz" => Some((CondOp::Lt, false)),
+        "bgez" => Some((CondOp::Ge, false)),
+        "blez" => Some((CondOp::Ge, true)),
+        "bgtz" => Some((CondOp::Lt, true)),
+        _ => None,
+    };
+    if let Some((cond, swap)) = zero_branch {
+        need(2)?;
+        let r = ctx.reg(ops[0])?;
+        let (rs1, rs2) = if swap { (Reg::ZERO, r) } else { (r, Reg::ZERO) };
+        out.push(Pre::Branch { cond, rs1, rs2, label: ops[1].to_string() });
+        return Ok(());
+    }
+
+    // Atomics.
+    let amo = match mnemonic {
+        "amoswap.w" => Some(AmoOp::Swap),
+        "amoadd.w" => Some(AmoOp::Add),
+        "amoand.w" => Some(AmoOp::And),
+        "amoor.w" => Some(AmoOp::Or),
+        "amoxor.w" => Some(AmoOp::Xor),
+        "amomax.w" => Some(AmoOp::Max),
+        "amomin.w" => Some(AmoOp::Min),
+        "amomaxu.w" => Some(AmoOp::Maxu),
+        "amominu.w" => Some(AmoOp::Minu),
+        _ => None,
+    };
+    if let Some(op) = amo {
+        need(3)?;
+        let rd = ctx.reg(ops[0])?;
+        let rs2 = ctx.reg(ops[1])?;
+        let (imm, rs1, _) = ctx.mem_operand(ops[2])?;
+        if imm != 0 {
+            return ctx.err("AMOs take no offset");
+        }
+        out.push(Pre::Ready(Instr::Amo { op, rd, rs1, rs2 }));
+        return Ok(());
+    }
+
+    match mnemonic {
+        "p.mac" => {
+            need(3)?;
+            out.push(Pre::Ready(Instr::Mac {
+                rd: ctx.reg(ops[0])?,
+                rs1: ctx.reg(ops[1])?,
+                rs2: ctx.reg(ops[2])?,
+            }));
+        }
+        "p.msu" => {
+            need(3)?;
+            out.push(Pre::Ready(Instr::Msu {
+                rd: ctx.reg(ops[0])?,
+                rs1: ctx.reg(ops[1])?,
+                rs2: ctx.reg(ops[2])?,
+            }));
+        }
+        "p.abs" => {
+            // p.abs rd, rs1  ==  expand to sub/max-style two-op sequence is
+            // not needed; model as a single ALU op via max(rs1, -rs1) using
+            // sub into rd then max. Keep it simple: srai/xor/sub idiom.
+            need(2)?;
+            let rd = ctx.reg(ops[0])?;
+            let rs1 = ctx.reg(ops[1])?;
+            out.push(Pre::Ready(Instr::Op { op: OpKind::Sub, rd, rs1: Reg::ZERO, rs2: rs1 }));
+            out.push(Pre::Ready(Instr::Op { op: OpKind::PMax, rd, rs1: rd, rs2: rs1 }));
+        }
+        "lui" => {
+            need(2)?;
+            let v = ctx.imm(ops[1])?;
+            out.push(Pre::Ready(Instr::Lui { rd: ctx.reg(ops[0])?, imm: v as i32 }));
+        }
+        "auipc" => {
+            need(2)?;
+            let v = ctx.imm(ops[1])?;
+            out.push(Pre::Ready(Instr::Auipc { rd: ctx.reg(ops[0])?, imm: v as i32 }));
+        }
+        "jal" => match ops.len() {
+            1 => out.push(Pre::Jal { rd: Reg::RA, label: ops[0].to_string() }),
+            2 => out.push(Pre::Jal { rd: ctx.reg(ops[0])?, label: ops[1].to_string() }),
+            _ => return ctx.err("`jal` expects 1 or 2 operands"),
+        },
+        "jalr" => match ops.len() {
+            1 => {
+                let rs1 = ctx.reg(ops[0])?;
+                out.push(Pre::Ready(Instr::Jalr { rd: Reg::RA, rs1, imm: 0 }));
+            }
+            2 => {
+                let rd = ctx.reg(ops[0])?;
+                let (imm, rs1, _) = ctx.mem_operand(ops[1])?;
+                out.push(Pre::Ready(Instr::Jalr { rd, rs1, imm }));
+            }
+            _ => return ctx.err("`jalr` expects 1 or 2 operands"),
+        },
+        "csrr" => {
+            need(2)?;
+            let rd = ctx.reg(ops[0])?;
+            let csr = Csr::from_name(ops[1]).ok_or(AsmError {
+                line: ctx.line,
+                msg: format!("unknown CSR `{}`", ops[1]),
+            })?;
+            out.push(Pre::Ready(Instr::Csrr { rd, csr }));
+        }
+        "wfi" => out.push(Pre::Ready(Instr::Wfi)),
+        "fence" => out.push(Pre::Ready(Instr::Fence)),
+        "halt" => out.push(Pre::Ready(Instr::Halt)),
+        "nop" => out.push(Pre::Ready(Instr::Nop)),
+        // Pseudo-instructions.
+        "li" | "la" => {
+            need(2)?;
+            let rd = ctx.reg(ops[0])?;
+            let v = ctx.imm(ops[1])?;
+            expand_li(rd, v, out);
+        }
+        "mv" => {
+            need(2)?;
+            out.push(Pre::Ready(Instr::OpImm {
+                op: OpKind::Add,
+                rd: ctx.reg(ops[0])?,
+                rs1: ctx.reg(ops[1])?,
+                imm: 0,
+            }));
+        }
+        "not" => {
+            need(2)?;
+            out.push(Pre::Ready(Instr::OpImm {
+                op: OpKind::Xor,
+                rd: ctx.reg(ops[0])?,
+                rs1: ctx.reg(ops[1])?,
+                imm: -1,
+            }));
+        }
+        "neg" => {
+            need(2)?;
+            out.push(Pre::Ready(Instr::Op {
+                op: OpKind::Sub,
+                rd: ctx.reg(ops[0])?,
+                rs1: Reg::ZERO,
+                rs2: ctx.reg(ops[1])?,
+            }));
+        }
+        "seqz" => {
+            need(2)?;
+            out.push(Pre::Ready(Instr::OpImm {
+                op: OpKind::Sltu,
+                rd: ctx.reg(ops[0])?,
+                rs1: ctx.reg(ops[1])?,
+                imm: 1,
+            }));
+        }
+        "snez" => {
+            need(2)?;
+            out.push(Pre::Ready(Instr::Op {
+                op: OpKind::Sltu,
+                rd: ctx.reg(ops[0])?,
+                rs1: Reg::ZERO,
+                rs2: ctx.reg(ops[1])?,
+            }));
+        }
+        "j" => {
+            need(1)?;
+            out.push(Pre::Jal { rd: Reg::ZERO, label: ops[0].to_string() });
+        }
+        "call" => {
+            need(1)?;
+            out.push(Pre::Jal { rd: Reg::RA, label: ops[0].to_string() });
+        }
+        "jr" => {
+            need(1)?;
+            out.push(Pre::Ready(Instr::Jalr { rd: Reg::ZERO, rs1: ctx.reg(ops[0])?, imm: 0 }));
+        }
+        "ret" => {
+            need(0)?;
+            out.push(Pre::Ready(Instr::Jalr { rd: Reg::ZERO, rs1: Reg::RA, imm: 0 }));
+        }
+        _ => return ctx.err(format!("unknown mnemonic `{mnemonic}`")),
+    }
+    Ok(())
+}

@@ -1,0 +1,480 @@
+//! Instruction definitions, register names, and the disassembler.
+
+use std::fmt;
+
+/// An architectural register `x0..x31`. `x0` is hardwired to zero.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Reg(pub u8);
+
+impl Reg {
+    pub const ZERO: Reg = Reg(0);
+    pub const RA: Reg = Reg(1);
+    pub const SP: Reg = Reg(2);
+
+    /// ABI register name table, indexed by register number.
+    pub const ABI_NAMES: [&'static str; 32] = [
+        "zero", "ra", "sp", "gp", "tp", "t0", "t1", "t2", "s0", "s1", "a0", "a1", "a2", "a3",
+        "a4", "a5", "a6", "a7", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11",
+        "t3", "t4", "t5", "t6",
+    ];
+
+    pub fn from_name(name: &str) -> Option<Reg> {
+        // Numeric form `x7`.
+        if let Some(num) = name.strip_prefix('x') {
+            if let Ok(n) = num.parse::<u8>() {
+                if n < 32 {
+                    return Some(Reg(n));
+                }
+            }
+        }
+        // `fp` is an alias for `s0`.
+        if name == "fp" {
+            return Some(Reg(8));
+        }
+        Reg::ABI_NAMES
+            .iter()
+            .position(|&n| n == name)
+            .map(|i| Reg(i as u8))
+    }
+
+    pub fn name(self) -> &'static str {
+        Reg::ABI_NAMES[self.0 as usize]
+    }
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Two-source register ALU operations (plus multiply/divide from `M`
+/// and the Xpulpimg min/max family).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+    // M extension.
+    Mul,
+    Mulh,
+    Mulhu,
+    Mulhsu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+    // Xpulpimg ALU extensions.
+    PMin,
+    PMax,
+    PMinu,
+    PMaxu,
+}
+
+impl OpKind {
+    /// Mnemonic as accepted/printed by the (dis)assembler.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Sll => "sll",
+            OpKind::Slt => "slt",
+            OpKind::Sltu => "sltu",
+            OpKind::Xor => "xor",
+            OpKind::Srl => "srl",
+            OpKind::Sra => "sra",
+            OpKind::Or => "or",
+            OpKind::And => "and",
+            OpKind::Mul => "mul",
+            OpKind::Mulh => "mulh",
+            OpKind::Mulhu => "mulhu",
+            OpKind::Mulhsu => "mulhsu",
+            OpKind::Div => "div",
+            OpKind::Divu => "divu",
+            OpKind::Rem => "rem",
+            OpKind::Remu => "remu",
+            OpKind::PMin => "p.min",
+            OpKind::PMax => "p.max",
+            OpKind::PMinu => "p.minu",
+            OpKind::PMaxu => "p.maxu",
+        }
+    }
+
+    /// True for operations Snitch offloads to the pipelined IPU through its
+    /// accelerator port (multi-cycle, pipelined; see paper §2.1).
+    pub fn is_ipu(self) -> bool {
+        matches!(
+            self,
+            OpKind::Mul
+                | OpKind::Mulh
+                | OpKind::Mulhu
+                | OpKind::Mulhsu
+                | OpKind::Div
+                | OpKind::Divu
+                | OpKind::Rem
+                | OpKind::Remu
+        )
+    }
+}
+
+/// Branch conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CondOp {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+impl CondOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            CondOp::Eq => "beq",
+            CondOp::Ne => "bne",
+            CondOp::Lt => "blt",
+            CondOp::Ge => "bge",
+            CondOp::Ltu => "bltu",
+            CondOp::Geu => "bgeu",
+        }
+    }
+
+    pub fn eval(self, a: u32, b: u32) -> bool {
+        match self {
+            CondOp::Eq => a == b,
+            CondOp::Ne => a != b,
+            CondOp::Lt => (a as i32) < (b as i32),
+            CondOp::Ge => (a as i32) >= (b as i32),
+            CondOp::Ltu => a < b,
+            CondOp::Geu => a >= b,
+        }
+    }
+}
+
+/// RISC-V `A`-extension atomic memory operations, executed by the ALU in
+/// the SPM bank controller (paper §7.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AmoOp {
+    Swap,
+    Add,
+    And,
+    Or,
+    Xor,
+    Max,
+    Min,
+    Maxu,
+    Minu,
+}
+
+impl AmoOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            AmoOp::Swap => "amoswap.w",
+            AmoOp::Add => "amoadd.w",
+            AmoOp::And => "amoand.w",
+            AmoOp::Or => "amoor.w",
+            AmoOp::Xor => "amoxor.w",
+            AmoOp::Max => "amomax.w",
+            AmoOp::Min => "amomin.w",
+            AmoOp::Maxu => "amomaxu.w",
+            AmoOp::Minu => "amominu.w",
+        }
+    }
+
+    /// Combine the old memory value with the operand; returns the new
+    /// memory value. (The old value is returned to the core separately.)
+    pub fn apply(self, old: u32, operand: u32) -> u32 {
+        match self {
+            AmoOp::Swap => operand,
+            AmoOp::Add => old.wrapping_add(operand),
+            AmoOp::And => old & operand,
+            AmoOp::Or => old | operand,
+            AmoOp::Xor => old ^ operand,
+            AmoOp::Max => (old as i32).max(operand as i32) as u32,
+            AmoOp::Min => (old as i32).min(operand as i32) as u32,
+            AmoOp::Maxu => old.max(operand),
+            AmoOp::Minu => old.min(operand),
+        }
+    }
+}
+
+/// Control and status registers visible to MemPool programs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Csr {
+    /// `mhartid` — the core's unique ID (0..num_cores).
+    Mhartid,
+    /// `mcycle` — current cycle count.
+    Mcycle,
+    /// MemPool control register: total number of cores in the cluster.
+    NumCores,
+    /// MemPool control register: cores per tile.
+    CoresPerTile,
+    /// MemPool control register: cores per group.
+    CoresPerGroup,
+}
+
+impl Csr {
+    pub fn name(self) -> &'static str {
+        match self {
+            Csr::Mhartid => "mhartid",
+            Csr::Mcycle => "mcycle",
+            Csr::NumCores => "numcores",
+            Csr::CoresPerTile => "corespertile",
+            Csr::CoresPerGroup => "corespergroup",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Csr> {
+        match s {
+            "mhartid" => Some(Csr::Mhartid),
+            "mcycle" => Some(Csr::Mcycle),
+            "numcores" => Some(Csr::NumCores),
+            "corespertile" => Some(Csr::CoresPerTile),
+            "corespergroup" => Some(Csr::CoresPerGroup),
+            _ => None,
+        }
+    }
+}
+
+/// Memory access width for loads/stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Width {
+    Byte,
+    Half,
+    Word,
+}
+
+/// One decoded instruction.
+///
+/// Branch/jump targets are *instruction indexes* into the program (resolved
+/// by the assembler from labels); the program base address maps indexes to
+/// fetch addresses for the instruction cache model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Instr {
+    /// Register-register ALU / IPU op: `rd = op(rs1, rs2)`.
+    Op { op: OpKind, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Register-immediate ALU op (subset of `OpKind` is valid).
+    OpImm { op: OpKind, rd: Reg, rs1: Reg, imm: i32 },
+    /// `lui rd, imm` — `rd = imm << 12`.
+    Lui { rd: Reg, imm: i32 },
+    /// `auipc rd, imm` — `rd = pc + (imm << 12)`.
+    Auipc { rd: Reg, imm: i32 },
+    /// Load: `rd = mem[rs1 + imm]`, signed where applicable.
+    Load { rd: Reg, rs1: Reg, imm: i32, width: Width, signed: bool },
+    /// Store: `mem[rs1 + imm] = rs2`.
+    Store { rs2: Reg, rs1: Reg, imm: i32, width: Width },
+    /// Xpulpimg post-increment load: `rd = mem[rs1]; rs1 += imm`.
+    LoadPost { rd: Reg, rs1: Reg, imm: i32, width: Width, signed: bool },
+    /// Xpulpimg post-increment store: `mem[rs1] = rs2; rs1 += imm`.
+    StorePost { rs2: Reg, rs1: Reg, imm: i32, width: Width },
+    /// Xpulpimg register-offset load: `rd = mem[rs1 + rs2]`.
+    LoadReg { rd: Reg, rs1: Reg, rs2: Reg, width: Width, signed: bool },
+    /// Xpulpimg MAC: `rd += rs1 * rs2` (IPU, pipelined).
+    Mac { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Xpulpimg MSU: `rd -= rs1 * rs2` (IPU, pipelined).
+    Msu { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Conditional branch to instruction index `target`.
+    Branch { cond: CondOp, rs1: Reg, rs2: Reg, target: u32 },
+    /// `jal rd, target` — `rd = return address`, jump to index `target`.
+    Jal { rd: Reg, target: u32 },
+    /// `jalr rd, rs1, imm` — indirect jump to byte address `rs1 + imm`.
+    Jalr { rd: Reg, rs1: Reg, imm: i32 },
+    /// Atomic memory operation: `rd = mem[rs1]; mem[rs1] = op(mem[rs1], rs2)`.
+    Amo { op: AmoOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// `lr.w rd, (rs1)` — load-reserved.
+    Lr { rd: Reg, rs1: Reg },
+    /// `sc.w rd, rs2, (rs1)` — store-conditional; `rd = 0` on success.
+    Sc { rd: Reg, rs1: Reg, rs2: Reg },
+    /// CSR read.
+    Csrr { rd: Reg, csr: Csr },
+    /// `wfi` — sleep until a wake-up pulse arrives (paper §7.2).
+    Wfi,
+    /// `fence` — order memory operations; stalls until the LSU drains.
+    Fence,
+    /// Terminate this core's execution (`ret` from main, modelled
+    /// explicitly so harnesses know when a core is done).
+    Halt,
+    /// `nop`.
+    Nop,
+}
+
+impl Instr {
+    /// Destination register, if any (used for scoreboard dependency checks).
+    pub fn rd(&self) -> Option<Reg> {
+        let rd = match self {
+            Instr::Op { rd, .. }
+            | Instr::OpImm { rd, .. }
+            | Instr::Lui { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Load { rd, .. }
+            | Instr::LoadReg { rd, .. }
+            | Instr::Mac { rd, .. }
+            | Instr::Msu { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::Amo { rd, .. }
+            | Instr::Lr { rd, .. }
+            | Instr::Sc { rd, .. }
+            | Instr::Csrr { rd, .. } => *rd,
+            Instr::LoadPost { rd, .. } => *rd,
+            _ => return None,
+        };
+        if rd == Reg::ZERO {
+            None
+        } else {
+            Some(rd)
+        }
+    }
+
+    /// Source registers (up to three: MAC reads rd as accumulator).
+    pub fn sources(&self) -> [Option<Reg>; 3] {
+        match self {
+            Instr::Op { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::OpImm { rs1, .. } => [Some(*rs1), None, None],
+            Instr::Lui { .. } | Instr::Auipc { .. } => [None, None, None],
+            Instr::Load { rs1, .. } => [Some(*rs1), None, None],
+            Instr::Store { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::LoadPost { rs1, .. } => [Some(*rs1), None, None],
+            Instr::StorePost { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::LoadReg { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::Mac { rd, rs1, rs2 } | Instr::Msu { rd, rs1, rs2 } => {
+                [Some(*rs1), Some(*rs2), Some(*rd)]
+            }
+            Instr::Branch { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::Jal { .. } => [None, None, None],
+            Instr::Jalr { rs1, .. } => [Some(*rs1), None, None],
+            Instr::Amo { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::Lr { rs1, .. } => [Some(*rs1), None, None],
+            Instr::Sc { rs1, rs2, .. } => [Some(*rs1), Some(*rs2), None],
+            Instr::Csrr { .. } => [None, None, None],
+            Instr::Wfi | Instr::Fence | Instr::Halt | Instr::Nop => [None, None, None],
+        }
+    }
+
+    /// True if this instruction issues a request into the L1 data
+    /// interconnect (load/store/atomic).
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Instr::Load { .. }
+                | Instr::Store { .. }
+                | Instr::LoadPost { .. }
+                | Instr::StorePost { .. }
+                | Instr::LoadReg { .. }
+                | Instr::Amo { .. }
+                | Instr::Lr { .. }
+                | Instr::Sc { .. }
+        )
+    }
+
+    /// True if this instruction is a "compute" operation for the paper's
+    /// Fig 14 breakdown (operations counted in the kernel's arithmetic
+    /// intensity: ALU arithmetic, MUL, MAC). Address increments, loads,
+    /// stores, branches count as "control".
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            Instr::Op { .. } | Instr::Mac { .. } | Instr::Msu { .. }
+        )
+    }
+
+    /// Number of 32-bit "operations" this instruction contributes to the
+    /// paper's OP count (a MAC counts as two: multiply + add).
+    pub fn op_count(&self) -> u32 {
+        match self {
+            Instr::Mac { .. } | Instr::Msu { .. } => 2,
+            Instr::Op { .. } => 1,
+            _ => 0,
+        }
+    }
+
+    /// True if executed on the pipelined IPU through the accelerator port.
+    pub fn is_ipu(&self) -> bool {
+        match self {
+            Instr::Mac { .. } | Instr::Msu { .. } => true,
+            Instr::Op { op, .. } => op.is_ipu(),
+            _ => false,
+        }
+    }
+}
+
+fn width_suffix(w: Width, signed: bool) -> &'static str {
+    match (w, signed) {
+        (Width::Byte, true) => "b",
+        (Width::Byte, false) => "bu",
+        (Width::Half, true) => "h",
+        (Width::Half, false) => "hu",
+        (Width::Word, _) => "w",
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Instr::Op { op, rd, rs1, rs2 } => {
+                write!(f, "{} {}, {}, {}", op.mnemonic(), rd, rs1, rs2)
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let m = match op {
+                    OpKind::Add => "addi",
+                    OpKind::Slt => "slti",
+                    OpKind::Sltu => "sltiu",
+                    OpKind::Xor => "xori",
+                    OpKind::Or => "ori",
+                    OpKind::And => "andi",
+                    OpKind::Sll => "slli",
+                    OpKind::Srl => "srli",
+                    OpKind::Sra => "srai",
+                    _ => "op?i",
+                };
+                write!(f, "{} {}, {}, {}", m, rd, rs1, imm)
+            }
+            Instr::Lui { rd, imm } => write!(f, "lui {}, {}", rd, imm),
+            Instr::Auipc { rd, imm } => write!(f, "auipc {}, {}", rd, imm),
+            Instr::Load { rd, rs1, imm, width, signed } => {
+                write!(f, "l{} {}, {}({})", width_suffix(*width, *signed), rd, imm, rs1)
+            }
+            Instr::Store { rs2, rs1, imm, width } => {
+                write!(f, "s{} {}, {}({})", width_suffix(*width, true), rs2, imm, rs1)
+            }
+            Instr::LoadPost { rd, rs1, imm, width, signed } => {
+                write!(f, "p.l{} {}, {}({}!)", width_suffix(*width, *signed), rd, imm, rs1)
+            }
+            Instr::StorePost { rs2, rs1, imm, width } => {
+                write!(f, "p.s{} {}, {}({}!)", width_suffix(*width, true), rs2, imm, rs1)
+            }
+            Instr::LoadReg { rd, rs1, rs2, width, signed } => {
+                write!(f, "p.l{}r {}, {}({})", width_suffix(*width, *signed), rd, rs2, rs1)
+            }
+            Instr::Mac { rd, rs1, rs2 } => write!(f, "p.mac {}, {}, {}", rd, rs1, rs2),
+            Instr::Msu { rd, rs1, rs2 } => write!(f, "p.msu {}, {}, {}", rd, rs1, rs2),
+            Instr::Branch { cond, rs1, rs2, target } => {
+                write!(f, "{} {}, {}, .I{}", cond.mnemonic(), rs1, rs2, target)
+            }
+            Instr::Jal { rd, target } => write!(f, "jal {}, .I{}", rd, target),
+            Instr::Jalr { rd, rs1, imm } => write!(f, "jalr {}, {}({})", rd, imm, rs1),
+            Instr::Amo { op, rd, rs1, rs2 } => {
+                write!(f, "{} {}, {}, ({})", op.mnemonic(), rd, rs2, rs1)
+            }
+            Instr::Lr { rd, rs1 } => write!(f, "lr.w {}, ({})", rd, rs1),
+            Instr::Sc { rd, rs1, rs2 } => write!(f, "sc.w {}, {}, ({})", rd, rs2, rs1),
+            Instr::Csrr { rd, csr } => write!(f, "csrr {}, {}", rd, csr.name()),
+            Instr::Wfi => f.write_str("wfi"),
+            Instr::Fence => f.write_str("fence"),
+            Instr::Halt => f.write_str("halt"),
+            Instr::Nop => f.write_str("nop"),
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! RV32IM + Xpulpimg-subset instruction set used by the MemPool core model.
+//!
+//! The paper's cores run RV32IMAXpulpimg binaries compiled with the authors'
+//! GCC/LLVM ports. We reproduce the ISA surface the evaluation kernels use
+//! (integer ALU, multiply/divide, loads/stores, branches, the `A` atomic
+//! extension, and the Xpulpimg MAC / post-increment memory instructions) plus
+//! a small assembler so kernels can be written in readable assembly and
+//! scheduled instruction-for-instruction like the paper's.
+
+mod asm;
+mod instr;
+mod program;
+
+pub use asm::{assemble, AsmError};
+pub use instr::{AmoOp, CondOp, Csr, Instr, OpKind, Reg, Width};
+pub use program::Program;
+
+#[cfg(test)]
+mod tests;

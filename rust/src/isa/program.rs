@@ -1,0 +1,63 @@
+//! A fully assembled program placed at a fetch base address.
+
+use std::collections::HashMap;
+
+use super::{assemble, AsmError, Instr};
+
+/// Default fetch base: programs live in the L2 region so the instruction
+/// cache hierarchy (L0 → L1 → RO cache → L2) is exercised realistically.
+pub const DEFAULT_TEXT_BASE: u32 = 0x8000_0000;
+
+/// An assembled program: a flat instruction vector with a base byte
+/// address. PCs are instruction *indexes*; the base maps them to fetch
+/// addresses for the icache model (`addr = base + 4 * index`).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    pub base: u32,
+}
+
+impl Program {
+    pub fn assemble(src: &str, symbols: &HashMap<String, u32>) -> Result<Program, AsmError> {
+        Ok(Program { instrs: assemble(src, symbols)?, base: DEFAULT_TEXT_BASE })
+    }
+
+    pub fn assemble_simple(src: &str) -> Result<Program, AsmError> {
+        Program::assemble(src, &HashMap::new())
+    }
+
+    pub fn from_instrs(instrs: Vec<Instr>) -> Program {
+        Program { instrs, base: DEFAULT_TEXT_BASE }
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Fetch byte address of instruction index `idx`.
+    pub fn addr_of(&self, idx: u32) -> u32 {
+        self.base + 4 * idx
+    }
+
+    /// Instruction index of a byte address (e.g., a `jalr` target).
+    pub fn index_of(&self, addr: u32) -> Option<u32> {
+        if addr < self.base || (addr - self.base) % 4 != 0 {
+            return None;
+        }
+        let idx = (addr - self.base) / 4;
+        ((idx as usize) < self.instrs.len()).then_some(idx)
+    }
+
+    pub fn get(&self, idx: u32) -> Option<&Instr> {
+        self.instrs.get(idx as usize)
+    }
+
+    /// Size of the program text in bytes.
+    pub fn text_bytes(&self) -> u32 {
+        4 * self.instrs.len() as u32
+    }
+}

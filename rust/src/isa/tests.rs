@@ -1,0 +1,264 @@
+//! Unit and property tests for the ISA layer.
+
+use std::collections::HashMap;
+
+use super::*;
+use crate::util::prop::check;
+
+fn asm(src: &str) -> Vec<Instr> {
+    assemble(src, &HashMap::new()).expect("assembly failed")
+}
+
+#[test]
+fn registers_roundtrip_names() {
+    for i in 0..32u8 {
+        let r = Reg(i);
+        assert_eq!(Reg::from_name(r.name()), Some(r));
+        assert_eq!(Reg::from_name(&format!("x{i}")), Some(r));
+    }
+    assert_eq!(Reg::from_name("fp"), Some(Reg(8)));
+    assert_eq!(Reg::from_name("x32"), None);
+    assert_eq!(Reg::from_name("bogus"), None);
+}
+
+#[test]
+fn assembles_basic_alu() {
+    let p = asm("add a0, a1, a2\n  sub t0, t1, t2\nxor s0, s1, s2");
+    assert_eq!(
+        p[0],
+        Instr::Op { op: OpKind::Add, rd: Reg(10), rs1: Reg(11), rs2: Reg(12) }
+    );
+    assert_eq!(p.len(), 3);
+}
+
+#[test]
+fn assembles_imm_ops_and_ranges() {
+    let p = asm("addi a0, a0, -2048\nslli a1, a1, 31");
+    assert_eq!(
+        p[0],
+        Instr::OpImm { op: OpKind::Add, rd: Reg(10), rs1: Reg(10), imm: -2048 }
+    );
+    assert!(assemble("addi a0, a0, 2048", &HashMap::new()).is_err());
+    assert!(assemble("slli a0, a0, 32", &HashMap::new()).is_err());
+}
+
+#[test]
+fn assembles_loads_stores() {
+    let p = asm("lw a0, 8(sp)\nsw a1, -4(s0)\nlbu a2, 0(t0)\nsh a3, 2(t1)");
+    assert_eq!(
+        p[0],
+        Instr::Load { rd: Reg(10), rs1: Reg::SP, imm: 8, width: instr_width_word(), signed: true }
+    );
+    match p[2] {
+        Instr::Load { width, signed, .. } => {
+            assert_eq!(signed, false);
+            assert!(matches!(width, super::instr::Width::Byte));
+        }
+        _ => panic!("expected load"),
+    }
+}
+
+fn instr_width_word() -> super::instr::Width {
+    super::instr::Width::Word
+}
+
+#[test]
+fn assembles_post_increment() {
+    let p = asm("p.lw a0, 4(a1!)\np.sw a2, 8(a3!)");
+    assert_eq!(
+        p[0],
+        Instr::LoadPost {
+            rd: Reg(10),
+            rs1: Reg(11),
+            imm: 4,
+            width: instr_width_word(),
+            signed: true
+        }
+    );
+    assert_eq!(
+        p[1],
+        Instr::StorePost { rs2: Reg(12), rs1: Reg(13), imm: 8, width: instr_width_word() }
+    );
+    // Plain lw must reject post-increment syntax and vice versa.
+    assert!(assemble("lw a0, 4(a1!)", &HashMap::new()).is_err());
+    assert!(assemble("p.lw a0, 4(a1)", &HashMap::new()).is_err());
+}
+
+#[test]
+fn assembles_mac_and_ipu_classification() {
+    let p = asm("p.mac a0, a1, a2\nmul t0, t1, t2\nadd t3, t4, t5");
+    assert!(p[0].is_ipu());
+    assert!(p[1].is_ipu());
+    assert!(!p[2].is_ipu());
+    assert_eq!(p[0].op_count(), 2);
+    assert_eq!(p[2].op_count(), 1);
+    // MAC reads its destination as accumulator.
+    assert_eq!(p[0].sources()[2], Some(Reg(10)));
+}
+
+#[test]
+fn assembles_branches_and_labels() {
+    let p = asm("loop: addi a0, a0, -1\nbnez a0, loop\nj end\nnop\nend: halt");
+    assert_eq!(
+        p[1],
+        Instr::Branch { cond: CondOp::Ne, rs1: Reg(10), rs2: Reg::ZERO, target: 0 }
+    );
+    assert_eq!(p[2], Instr::Jal { rd: Reg::ZERO, target: 4 });
+    assert!(assemble("bnez a0, nowhere", &HashMap::new()).is_err());
+}
+
+#[test]
+fn swapped_branch_pseudos() {
+    let p = asm("x: bgt a0, a1, x\nble a2, a3, x");
+    assert_eq!(
+        p[0],
+        Instr::Branch { cond: CondOp::Lt, rs1: Reg(11), rs2: Reg(10), target: 0 }
+    );
+    assert_eq!(
+        p[1],
+        Instr::Branch { cond: CondOp::Ge, rs1: Reg(13), rs2: Reg(12), target: 0 }
+    );
+}
+
+#[test]
+fn assembles_atomics() {
+    let p = asm("amoadd.w a0, a1, (a2)\nlr.w t0, (t1)\nsc.w t2, t3, (t1)");
+    assert_eq!(p[0], Instr::Amo { op: AmoOp::Add, rd: Reg(10), rs1: Reg(12), rs2: Reg(11) });
+    assert_eq!(p[1], Instr::Lr { rd: Reg(5), rs1: Reg(6) });
+    assert_eq!(p[2], Instr::Sc { rd: Reg(7), rs1: Reg(6), rs2: Reg(28) });
+}
+
+#[test]
+fn li_expansion() {
+    let p = asm("li a0, 42");
+    assert_eq!(p.len(), 1);
+    let p = asm("li a0, 0x100000"); // needs lui only
+    assert_eq!(p.len(), 1);
+    assert_eq!(p[0], Instr::Lui { rd: Reg(10), imm: 0x100 });
+    let p = asm("li a0, 0x12345");
+    assert_eq!(p.len(), 2);
+    // Verify semantics: lui + addi with sign correction reconstructs value.
+    if let (Instr::Lui { imm: hi, .. }, Instr::OpImm { imm: lo, .. }) = (p[0], p[1]) {
+        assert_eq!((hi << 12).wrapping_add(lo), 0x12345);
+    } else {
+        panic!("unexpected li expansion: {p:?}");
+    }
+    // Negative value that needs correction.
+    let p = asm("li a0, -74565"); // -0x12345
+    let mut v = 0i32;
+    for i in &p {
+        match i {
+            Instr::Lui { imm, .. } => v = imm << 12,
+            Instr::OpImm { imm, .. } => v = v.wrapping_add(*imm),
+            _ => panic!(),
+        }
+    }
+    assert_eq!(v, -74565);
+}
+
+#[test]
+fn symbols_resolve() {
+    let mut sym = HashMap::new();
+    sym.insert("buffer".to_string(), 0x0001_2340u32);
+    sym.insert("count".to_string(), 7u32);
+    let p = assemble("la a0, buffer\nli a1, count", &sym).unwrap();
+    // la of a 32-bit address expands to lui(+addi).
+    assert!(matches!(p[0], Instr::Lui { .. }));
+    assert_eq!(*p.last().unwrap(), Instr::OpImm { op: OpKind::Add, rd: Reg(11), rs1: Reg::ZERO, imm: 7 });
+}
+
+#[test]
+fn comments_and_blank_lines() {
+    let p = asm("# full comment\nadd a0, a0, a1 # trailing\n\n// c++ style\n; asm style\nnop");
+    assert_eq!(p.len(), 2);
+}
+
+#[test]
+fn csr_and_system() {
+    let p = asm("csrr a0, mhartid\ncsrr a1, numcores\nwfi\nfence\nhalt");
+    assert_eq!(p[0], Instr::Csrr { rd: Reg(10), csr: Csr::Mhartid });
+    assert_eq!(p[2], Instr::Wfi);
+    assert!(assemble("csrr a0, nonsense", &HashMap::new()).is_err());
+}
+
+#[test]
+fn program_addressing() {
+    let prog = Program::assemble_simple("nop\nnop\nhalt").unwrap();
+    assert_eq!(prog.len(), 3);
+    let a1 = prog.addr_of(1);
+    assert_eq!(prog.index_of(a1), Some(1));
+    assert_eq!(prog.index_of(a1 + 2), None);
+    assert_eq!(prog.index_of(prog.base + 4 * 3), None);
+    assert_eq!(prog.text_bytes(), 12);
+}
+
+#[test]
+fn x0_never_a_destination_dependency() {
+    let p = asm("add zero, a0, a1");
+    assert_eq!(p[0].rd(), None);
+}
+
+#[test]
+fn amo_apply_semantics() {
+    assert_eq!(AmoOp::Add.apply(5, 3), 8);
+    assert_eq!(AmoOp::Swap.apply(5, 3), 3);
+    assert_eq!(AmoOp::Max.apply(u32::MAX, 1), 1); // signed max(-1, 1) = 1
+    assert_eq!(AmoOp::Maxu.apply(u32::MAX, 1), u32::MAX);
+    assert_eq!(AmoOp::Min.apply(u32::MAX, 1), u32::MAX); // signed min
+    assert_eq!(AmoOp::And.apply(0b1100, 0b1010), 0b1000);
+}
+
+#[test]
+fn cond_eval_semantics() {
+    assert!(CondOp::Lt.eval(u32::MAX, 0)); // signed -1 < 0
+    assert!(!CondOp::Ltu.eval(u32::MAX, 0));
+    assert!(CondOp::Geu.eval(u32::MAX, 0));
+    assert!(CondOp::Eq.eval(7, 7));
+}
+
+/// Disassemble → reassemble must be the identity for label-free
+/// instructions (branch/jal print synthetic `.I<n>` labels, so we test
+/// those separately).
+#[test]
+fn disasm_asm_roundtrip() {
+    check("disasm/asm roundtrip", |g| {
+        let op = *g.choose(&[OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::And, OpKind::PMax]);
+        let rd = Reg(g.u32(0..32) as u8);
+        let rs1 = Reg(g.u32(0..32) as u8);
+        let rs2 = Reg(g.u32(0..32) as u8);
+        let imm = g.i32(-2048..2048);
+        let candidates: Vec<Instr> = vec![
+            Instr::Op { op, rd, rs1, rs2 },
+            Instr::OpImm { op: OpKind::Add, rd, rs1, imm },
+            Instr::Load { rd, rs1, imm, width: super::instr::Width::Word, signed: true },
+            Instr::Store { rs2, rs1, imm, width: super::instr::Width::Word },
+            Instr::LoadPost { rd, rs1, imm, width: super::instr::Width::Word, signed: true },
+            Instr::Mac { rd, rs1, rs2 },
+            Instr::Amo { op: AmoOp::Add, rd, rs1, rs2 },
+        ];
+        for instr in candidates {
+            let text = instr.to_string();
+            let back = assemble(&text, &HashMap::new()).unwrap();
+            assert_eq!(back.len(), 1, "text: {text}");
+            assert_eq!(back[0], instr, "text: {text}");
+        }
+    });
+}
+
+/// li of any i32 value must reconstruct that exact value.
+#[test]
+fn li_reconstructs_any_value() {
+    check("li reconstructs any value", |g| {
+        let v = g.any_i32();
+        let p = assemble(&format!("li a0, {v}"), &HashMap::new()).unwrap();
+        let mut acc = 0i32;
+        for i in &p {
+            match i {
+                Instr::Lui { imm, .. } => acc = imm.wrapping_shl(12),
+                Instr::OpImm { op: OpKind::Add, imm, .. } => acc = acc.wrapping_add(*imm),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(acc, v);
+    });
+}

@@ -1,0 +1,259 @@
+//! Breadth-first search (paper §8.2.2): level-synchronous BFS over a CSR
+//! graph with shared, atomically updated data structures — a visited
+//! array claimed with `amoswap` and frontier queues appended with
+//! `amoadd` — plus a barrier per level. Highly irregular access patterns
+//! and per-level load imbalance make this the hardest of the three apps
+//! (the paper reports ≈51% of ideal speedup).
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::config::ClusterConfig;
+use crate::kernels::rt::{barrier_asm, RtLayout};
+use crate::kernels::Kernel;
+use crate::sim::Cluster;
+use crate::util::Rng;
+
+/// Vertices per core.
+pub const VERTS_PER_CORE: usize = 32;
+/// Average out-degree.
+pub const DEGREE: usize = 4;
+
+pub struct Bfs {
+    pub seed: u64,
+}
+
+/// CSR graph.
+pub struct Graph {
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+}
+
+impl Bfs {
+    pub fn new() -> Self {
+        Bfs { seed: 0xBF5 }
+    }
+
+    pub fn verts(&self, cfg: &ClusterConfig) -> usize {
+        VERTS_PER_CORE * cfg.num_cores()
+    }
+
+    pub fn graph(&self, cfg: &ClusterConfig) -> Graph {
+        let n = self.verts(cfg);
+        let mut rng = Rng::seeded(self.seed);
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut col_idx = Vec::new();
+        row_ptr.push(0);
+        for v in 0..n {
+            // A ring edge keeps the graph connected; the rest are random.
+            col_idx.push(((v + 1) % n) as u32);
+            for _ in 0..rng.index(2 * DEGREE - 1) {
+                col_idx.push(rng.index(n) as u32);
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Graph { row_ptr, col_idx }
+    }
+
+    fn layout(&self, cfg: &ClusterConfig) -> Layout {
+        let rt = RtLayout::new(cfg);
+        let n = self.verts(cfg) as u32;
+        let g = self.graph(cfg);
+        let row_ptr = rt.data_base;
+        let col_idx = row_ptr + 4 * (n + 1);
+        let visited = col_idx + 4 * g.col_idx.len() as u32;
+        let level = visited + 4 * n;
+        let qa = level + 4 * n;
+        let qb = qa + 4 * n;
+        let qa_tail = qb + 4 * n;
+        let qb_tail = qa_tail + 4;
+        let head = qb_tail + 4;
+        Layout { row_ptr, col_idx, visited, level, qa, qb, qa_tail, qb_tail, head }
+    }
+
+    fn reference(&self, cfg: &ClusterConfig) -> Vec<u32> {
+        let n = self.verts(cfg);
+        let g = self.graph(cfg);
+        let mut level = vec![u32::MAX; n];
+        let mut q = VecDeque::new();
+        level[0] = 0;
+        q.push_back(0usize);
+        while let Some(v) = q.pop_front() {
+            let l = level[v];
+            for e in g.row_ptr[v] as usize..g.row_ptr[v + 1] as usize {
+                let w = g.col_idx[e] as usize;
+                if level[w] == u32::MAX {
+                    level[w] = l + 1;
+                    q.push_back(w);
+                }
+            }
+        }
+        level
+    }
+}
+
+struct Layout {
+    row_ptr: u32,
+    col_idx: u32,
+    visited: u32,
+    level: u32,
+    qa: u32,
+    qb: u32,
+    qa_tail: u32,
+    qb_tail: u32,
+    head: u32,
+}
+
+impl Default for Bfs {
+    fn default() -> Self {
+        Bfs::new()
+    }
+}
+
+impl Kernel for Bfs {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let l = self.layout(cfg);
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("row_ptr".into(), l.row_ptr);
+        sym.insert("col_idx".into(), l.col_idx);
+        sym.insert("visited".into(), l.visited);
+        sym.insert("levels".into(), l.level);
+        sym.insert("q_a".into(), l.qa);
+        sym.insert("q_b".into(), l.qb);
+        sym.insert("qa_tail".into(), l.qa_tail);
+        sym.insert("qb_tail".into(), l.qb_tail);
+        sym.insert("q_head".into(), l.head);
+
+        // s0 = level, s1 = current queue base, s2 = current tail addr,
+        // s3 = next queue base, s4 = next tail addr, s5 = current
+        // frontier size, s6 = grabbed index, s7 = vertex, s8/s9 = edge
+        // range, s10 = neighbour, s11 = scratch.
+        let src = format!(
+            "\
+            li s0, 0\n\
+            level_loop:\n\
+            # select queues by level parity\n\
+            andi t0, s0, 1\n\
+            bnez t0, odd_level\n\
+            la s1, q_a\n\
+            la s2, qa_tail\n\
+            la s3, q_b\n\
+            la s4, qb_tail\n\
+            j queues_set\n\
+            odd_level:\n\
+            la s1, q_b\n\
+            la s2, qb_tail\n\
+            la s3, q_a\n\
+            la s4, qa_tail\n\
+            queues_set:\n\
+            lw s5, 0(s2)\n\
+            beqz s5, bfs_done\n\
+            # drain the frontier with dynamic grabs\n\
+            grab:\n\
+            la t0, q_head\n\
+            li s6, 1\n\
+            amoadd.w s6, s6, (t0)\n\
+            bge s6, s5, frontier_done\n\
+            # vertex = queue[grabbed]\n\
+            slli t1, s6, 2\n\
+            add t1, t1, s1\n\
+            lw s7, 0(t1)\n\
+            # edge range from CSR\n\
+            la t2, row_ptr\n\
+            slli t3, s7, 2\n\
+            add t2, t2, t3\n\
+            lw s8, 0(t2)\n\
+            lw s9, 4(t2)\n\
+            edge_loop:\n\
+            bge s8, s9, grab\n\
+            la t0, col_idx\n\
+            slli t1, s8, 2\n\
+            add t0, t0, t1\n\
+            lw s10, 0(t0)\n\
+            addi s8, s8, 1\n\
+            # claim the neighbour: visited[w] ← 1 atomically\n\
+            la t2, visited\n\
+            slli t3, s10, 2\n\
+            add t2, t2, t3\n\
+            li t4, 1\n\
+            amoswap.w t5, t4, (t2)\n\
+            bnez t5, edge_loop\n\
+            # newly discovered: level + append to the next queue\n\
+            la t2, levels\n\
+            add t2, t2, t3\n\
+            addi t6, s0, 1\n\
+            sw t6, 0(t2)\n\
+            li t4, 1\n\
+            amoadd.w t5, t4, (s4)\n\
+            slli t5, t5, 2\n\
+            add t5, t5, s3\n\
+            sw s10, 0(t5)\n\
+            j edge_loop\n\
+            frontier_done:\n\
+            {bar0}\
+            # core 0 resets the consumed queue + the grab counter\n\
+            csrr t0, mhartid\n\
+            bnez t0, skip_reset\n\
+            sw zero, 0(s2)\n\
+            la t1, q_head\n\
+            sw zero, 0(t1)\n\
+            skip_reset:\n\
+            {bar1}\
+            addi s0, s0, 1\n\
+            j level_loop\n\
+            bfs_done:\n\
+            {bar2}\
+            halt\n",
+            bar0 = barrier_asm(0),
+            bar1 = barrier_asm(1),
+            bar2 = barrier_asm(2),
+        );
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let l = self.layout(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let g = self.graph(&cluster.cfg);
+        let n = self.verts(&cluster.cfg) as u32;
+        let mut spm = cluster.spm();
+        spm.write_words(l.row_ptr, &g.row_ptr);
+        spm.write_words(l.col_idx, &g.col_idx);
+        for v in 0..n {
+            spm.write_word(l.visited + 4 * v, 0);
+            spm.write_word(l.level + 4 * v, u32::MAX);
+        }
+        // Seed: vertex 0 at level 0, already visited, in queue A.
+        spm.write_word(l.visited, 1);
+        spm.write_word(l.level, 0);
+        spm.write_word(l.qa, 0);
+        spm.write_word(l.qa_tail, 1);
+        spm.write_word(l.qb_tail, 0);
+        spm.write_word(l.head, 0);
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let l = self.layout(&cluster.cfg);
+        let expect = self.reference(&cluster.cfg);
+        let got = cluster.spm().read_words(l.level, expect.len());
+        for (v, (g, e)) in got.iter().zip(&expect).enumerate() {
+            if g != e {
+                return Err(format!("level[{v}] = {g}, expected {e}"));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        let g = self.graph(cfg);
+        // One visited test per edge + queue ops.
+        (2 * g.col_idx.len() + 4 * self.verts(cfg)) as u64
+    }
+}

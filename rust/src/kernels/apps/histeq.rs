@@ -1,0 +1,180 @@
+//! Histogram equalization (paper §8.2.2): contrast enhancement with a
+//! shared histogram built by atomic increments, a *serial* prefix-sum /
+//! LUT phase on core 0 (the Amdahl bottleneck behind the paper's ≈40%
+//! of linear speedup), and a parallel remap phase.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::kernels::rt::{barrier_asm, RtLayout};
+use crate::kernels::Kernel;
+use crate::sim::Cluster;
+
+/// Intensity levels (6-bit image).
+pub const BINS: usize = 64;
+/// Pixels per core.
+pub const PX_PER_CORE: usize = 256;
+
+pub struct HistEq {
+    pub seed: u64,
+}
+
+impl HistEq {
+    pub fn new() -> Self {
+        HistEq { seed: 0x1157 }
+    }
+
+    pub fn pixels(&self, cfg: &ClusterConfig) -> usize {
+        PX_PER_CORE * cfg.num_cores()
+    }
+
+    fn layout(&self, cfg: &ClusterConfig) -> (u32, u32, u32, u32) {
+        let rt = RtLayout::new(cfg);
+        let img = rt.data_base;
+        let out = img + (self.pixels(cfg) * 4) as u32;
+        let hist = out + (self.pixels(cfg) * 4) as u32;
+        let lut = hist + (BINS * 4) as u32;
+        (img, out, hist, lut)
+    }
+
+    fn input(&self, cfg: &ClusterConfig) -> Vec<u32> {
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        // Low-contrast image: intensities clustered in [16, 48).
+        (0..self.pixels(cfg)).map(|_| 16 + rng.below(32) as u32).collect()
+    }
+
+    fn reference(&self, cfg: &ClusterConfig) -> Vec<u32> {
+        let img = self.input(cfg);
+        let total = img.len() as u32;
+        let mut hist = [0u32; BINS];
+        for p in &img {
+            hist[*p as usize] += 1;
+        }
+        let mut cdf = [0u32; BINS];
+        let mut acc = 0;
+        for (i, h) in hist.iter().enumerate() {
+            acc += h;
+            cdf[i] = acc;
+        }
+        let lut: Vec<u32> = cdf.iter().map(|c| c * (BINS as u32 - 1) / total).collect();
+        img.iter().map(|p| lut[*p as usize]).collect()
+    }
+}
+
+impl Default for HistEq {
+    fn default() -> Self {
+        HistEq::new()
+    }
+}
+
+impl Kernel for HistEq {
+    fn name(&self) -> &'static str {
+        "histeq"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let (img, out, hist, lut) = self.layout(cfg);
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("img".into(), img);
+        sym.insert("img_out".into(), out);
+        sym.insert("hist".into(), hist);
+        sym.insert("lut".into(), lut);
+        sym.insert("PX_PER_CORE".into(), PX_PER_CORE as u32);
+        sym.insert("NBINS".into(), BINS as u32);
+        let src = format!(
+            "\
+            csrr s0, mhartid\n\
+            li t0, PX_PER_CORE\n\
+            mul s1, s0, t0\n\
+            slli s1, s1, 2\n\
+            # --- phase 1: histogram (atomic increments) ---\n\
+            la a0, img\n\
+            add a0, a0, s1\n\
+            li a1, PX_PER_CORE\n\
+            li a2, 1\n\
+            h_loop:\n\
+            p.lw t1, 4(a0!)\n\
+            la t2, hist\n\
+            slli t3, t1, 2\n\
+            add t2, t2, t3\n\
+            amoadd.w t4, a2, (t2)\n\
+            addi a1, a1, -1\n\
+            bnez a1, h_loop\n\
+            {bar0}\
+            # --- phase 2 (core 0 only): prefix sum + LUT ---\n\
+            bnez s0, skip_serial\n\
+            la a0, hist\n\
+            la a1, lut\n\
+            li a2, 0\n\
+            li a3, NBINS\n\
+            li a4, NBINS\n\
+            addi a4, a4, -1\n\
+            csrr a5, numcores\n\
+            li t0, PX_PER_CORE\n\
+            mul a5, a5, t0\n\
+            cdf_loop:\n\
+            p.lw t1, 4(a0!)\n\
+            add a2, a2, t1\n\
+            mul t2, a2, a4\n\
+            divu t3, t2, a5\n\
+            p.sw t3, 4(a1!)\n\
+            addi a3, a3, -1\n\
+            bnez a3, cdf_loop\n\
+            skip_serial:\n\
+            {bar1}\
+            # --- phase 3: remap ---\n\
+            la a0, img\n\
+            add a0, a0, s1\n\
+            la a1, img_out\n\
+            add a1, a1, s1\n\
+            li a2, PX_PER_CORE\n\
+            m_loop:\n\
+            p.lw t1, 4(a0!)\n\
+            la t2, lut\n\
+            slli t3, t1, 2\n\
+            add t2, t2, t3\n\
+            lw t4, 0(t2)\n\
+            p.sw t4, 4(a1!)\n\
+            addi a2, a2, -1\n\
+            bnez a2, m_loop\n\
+            {bar2}\
+            halt\n",
+            bar0 = barrier_asm(0),
+            bar1 = barrier_asm(1),
+            bar2 = barrier_asm(2),
+        );
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let (img_addr, _, hist, lut) = self.layout(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let img = self.input(&cluster.cfg);
+        let mut spm = cluster.spm();
+        spm.write_words(img_addr, &img);
+        for i in 0..BINS as u32 {
+            spm.write_word(hist + 4 * i, 0);
+            spm.write_word(lut + 4 * i, 0);
+        }
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let (_, out, _, _) = self.layout(&cluster.cfg);
+        let expect = self.reference(&cluster.cfg);
+        let got = cluster.spm().read_words(out, expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            if g != e {
+                return Err(format!("pixel {i}: {g}, expected {e}"));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        // Histogram increment + remap per pixel, plus the serial LUT.
+        (2 * self.pixels(cfg) + 3 * BINS) as u64
+    }
+}

@@ -1,0 +1,13 @@
+//! Full applications (paper §8.2.2) on top of the fork-join runtime:
+//! histogram equalization (reductions + serial sections → ≈40% of linear
+//! speedup), an integer ray tracer (fully parallel but imbalanced,
+//! dynamic scheduling → ≈91%), and breadth-first search (atomic shared
+//! data structures → ≈51%).
+
+mod bfs;
+mod histeq;
+mod raytrace;
+
+pub use bfs::Bfs;
+pub use histeq::HistEq;
+pub use raytrace::Raytrace;

@@ -1,0 +1,256 @@
+//! Integer ray tracer (paper §8.2.2): per-pixel work is data-dependent —
+//! rays that hit a sphere pay for an iterative integer square root
+//! (shading), misses are cheap — so static partitioning would be
+//! imbalanced. Rows are handed out with the dynamic-scheduling runtime
+//! (OpenMP `schedule(dynamic)`), reproducing the paper's ≈91%-of-ideal
+//! speedup despite the imbalance.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::kernels::rt::{barrier_asm, RtLayout};
+use crate::kernels::Kernel;
+use crate::sim::Cluster;
+
+/// Image width in pixels.
+pub const WIDTH: usize = 64;
+/// Rows per core on average.
+pub const ROWS_PER_CORE: usize = 2;
+/// Newton iterations for the integer square root.
+pub const ISQRT_ITERS: usize = 6;
+
+/// A sphere in screen space: center (x, y), squared radius, brightness.
+#[derive(Debug, Clone, Copy)]
+pub struct Sphere {
+    pub cx: i32,
+    pub cy: i32,
+    pub r2: i32,
+    pub bright: i32,
+}
+
+pub fn scene(rows: usize) -> Vec<Sphere> {
+    let h = rows as i32;
+    vec![
+        Sphere { cx: 16, cy: h / 4, r2: 144, bright: 3 },
+        Sphere { cx: 44, cy: h / 2, r2: 256, bright: 5 },
+        Sphere { cx: 30, cy: 3 * h / 4, r2: 64, bright: 2 },
+        Sphere { cx: 54, cy: h / 8, r2: 36, bright: 7 },
+    ]
+}
+
+/// The shading function both the kernel and the reference use: an
+/// integer Newton square root of (r² − d²), fixed iteration structure
+/// but skipped entirely for misses.
+pub fn shade(r2: i32, d2: i32, bright: i32) -> i32 {
+    let v = r2 - d2;
+    let mut g = if v > 1 { v / 2 } else { 1 };
+    for _ in 0..ISQRT_ITERS {
+        if g == 0 {
+            break;
+        }
+        g = (g + v / g) / 2;
+    }
+    g * bright
+}
+
+/// Background pattern for missed rays.
+pub fn background(x: i32, y: i32) -> i32 {
+    (x ^ y) & 7
+}
+
+pub struct Raytrace {
+    pub seed: u64,
+}
+
+impl Raytrace {
+    pub fn new() -> Self {
+        Raytrace { seed: 0x7274 }
+    }
+
+    pub fn rows(&self, cfg: &ClusterConfig) -> usize {
+        ROWS_PER_CORE * cfg.num_cores()
+    }
+
+    fn layout(&self, cfg: &ClusterConfig) -> (u32, u32) {
+        let rt = RtLayout::new(cfg);
+        // Scene table, then the framebuffer.
+        let scene_addr = rt.data_base;
+        let fb = scene_addr + (4 * scene(self.rows(cfg)).len() * 4) as u32;
+        (scene_addr, fb)
+    }
+
+    fn reference(&self, cfg: &ClusterConfig) -> Vec<i32> {
+        let rows = self.rows(cfg);
+        let sc = scene(rows);
+        let mut fb = vec![0i32; rows * WIDTH];
+        for y in 0..rows as i32 {
+            for x in 0..WIDTH as i32 {
+                let mut v = background(x, y);
+                for s in &sc {
+                    let (dx, dy) = (x - s.cx, y - s.cy);
+                    let d2 = dx * dx + dy * dy;
+                    if d2 < s.r2 {
+                        v = shade(s.r2, d2, s.bright);
+                        break;
+                    }
+                }
+                fb[(y as usize) * WIDTH + x as usize] = v;
+            }
+        }
+        fb
+    }
+}
+
+impl Default for Raytrace {
+    fn default() -> Self {
+        Raytrace::new()
+    }
+}
+
+impl Kernel for Raytrace {
+    fn name(&self) -> &'static str {
+        "raytrace"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let (scene_addr, fb) = self.layout(cfg);
+        let rt = RtLayout::new(cfg);
+        let nsph = scene(self.rows(cfg)).len();
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("scene".into(), scene_addr);
+        sym.insert("fb".into(), fb);
+        sym.insert("NROWS".into(), self.rows(cfg) as u32);
+        sym.insert("NSPH".into(), nsph as u32);
+        sym.insert("RT_WIDTH".into(), WIDTH as u32);
+        sym.insert("ISQRT_ITERS".into(), ISQRT_ITERS as u32);
+
+        // The scene is preloaded into registers once per core (the paper's
+        // ray tracer keeps scene constants register-resident; reloading
+        // them per pixel from 4 shared banks would serialize the whole
+        // cluster on bank conflicts — see EXPERIMENTS.md #Perf).
+        // Register map: s0 row, s1 NROWS, s2 col, s3 fb ptr, s6 value;
+        // spheres (cx, cy, r2, bright): 0 -> s4,s5,s7,s8; 1 -> s9,s10,s11,a2;
+        // 2 -> a3,a4,a5,a6; 3 -> a0,a1,gp,tp. Temps t0-t6.
+        let sph = [
+            ["s4", "s5", "s7", "s8"],
+            ["s9", "s10", "s11", "a2"],
+            ["a3", "a4", "a5", "a6"],
+            ["a0", "a1", "gp", "tp"],
+        ];
+        assert!(nsph <= sph.len());
+        let mut src = String::from("li s1, NROWS\nla t0, scene\n");
+        for s in sph.iter().take(nsph) {
+            for r in s {
+                src.push_str(&format!("p.lw {r}, 4(t0!)\n"));
+            }
+        }
+        src.push_str(
+            "\
+            grab:\n\
+            la t0, rt_work_counter\n\
+            li s0, 1\n\
+            amoadd.w s0, s0, (t0)\n\
+            bge s0, s1, trace_done\n\
+            la s3, fb\n\
+            slli t1, s0, 8\n\
+            add s3, s3, t1\n\
+            li s2, 0\n\
+            pixel:\n\
+            xor s6, s2, s0\n\
+            andi s6, s6, 7\n",
+        );
+        // Unrolled sphere tests, register-resident.
+        for (i, s) in sph.iter().take(nsph).enumerate() {
+            src.push_str(&format!(
+                "\
+                sub t1, s2, {cx}\n\
+                sub t2, s0, {cy}\n\
+                mul t3, t1, t1\n\
+                mul t4, t2, t2\n\
+                add t3, t3, t4\n\
+                blt t3, {r2}, hit_{i}\n",
+                cx = s[0],
+                cy = s[1],
+                r2 = s[2],
+            ));
+        }
+        src.push_str("j store_px\n");
+        for (i, s) in sph.iter().take(nsph).enumerate() {
+            src.push_str(&format!(
+                "hit_{i}:\nsub t5, {r2}, t3\nmv t0, {br}\nj shade\n",
+                r2 = s[2],
+                br = s[3],
+            ));
+        }
+        // Shared shading path: integer Newton sqrt of t5, scaled by t0.
+        src.push_str(
+            "\
+            shade:\n\
+            li t6, 1\n\
+            ble t5, t6, isqrt_done\n\
+            srai t6, t5, 1\n\
+            li t3, ISQRT_ITERS\n\
+            newton:\n\
+            beqz t6, isqrt_done\n\
+            divu t4, t5, t6\n\
+            add t6, t6, t4\n\
+            srai t6, t6, 1\n\
+            addi t3, t3, -1\n\
+            bnez t3, newton\n\
+            isqrt_done:\n\
+            mul s6, t6, t0\n\
+            store_px:\n\
+            p.sw s6, 4(s3!)\n\
+            addi s2, s2, 1\n\
+            li t0, RT_WIDTH\n\
+            blt s2, t0, pixel\n\
+            j grab\n\
+            trace_done:\n",
+        );
+        src.push_str(&barrier_asm(0));
+        src.push_str("halt\n");
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let (scene_addr, fb) = self.layout(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let rows = self.rows(&cluster.cfg);
+        let sc = scene(rows);
+        let mut spm = cluster.spm();
+        for (i, s) in sc.iter().enumerate() {
+            let b = scene_addr + (i * 16) as u32;
+            spm.write_word(b, s.cx as u32);
+            spm.write_word(b + 4, s.cy as u32);
+            spm.write_word(b + 8, s.r2 as u32);
+            spm.write_word(b + 12, s.bright as u32);
+        }
+        for i in 0..(rows * WIDTH) as u32 {
+            spm.write_word(fb + 4 * i, 0);
+        }
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let (_, fb) = self.layout(&cluster.cfg);
+        let expect = self.reference(&cluster.cfg);
+        let got = cluster.spm().read_words(fb, expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            if *g as i32 != *e {
+                return Err(format!(
+                    "pixel ({}, {}): {}, expected {e}",
+                    i / WIDTH,
+                    i % WIDTH,
+                    *g as i32
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        // Rough: ~8 arithmetic ops per sphere test per pixel.
+        (self.rows(cfg) * WIDTH * 8) as u64
+    }
+}

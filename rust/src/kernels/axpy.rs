@@ -1,0 +1,144 @@
+//! axpy (paper §8.1): `y ← α·x + y`, the low-compute-intensity BLAS
+//! routine. Parallelized so every access is tile-local: element blocks
+//! are striped so each core works exclusively on words held by its own
+//! tile's banks (the hybrid layout the paper credits for axpy's lack of
+//! interconnect stalls).
+
+use std::collections::HashMap;
+
+use super::rt::{barrier_asm, RtLayout};
+use super::Kernel;
+use crate::config::ClusterConfig;
+use crate::sim::Cluster;
+
+pub struct Axpy {
+    /// Elements per core (total = per_core × cores).
+    pub per_core: usize,
+    pub alpha: u32,
+    pub seed: u64,
+}
+
+impl Axpy {
+    pub fn new(per_core: usize) -> Self {
+        assert_eq!(per_core % 4, 0, "cores process 4-word islands");
+        Axpy { per_core, alpha: 3, seed: 0xA42 }
+    }
+
+    /// Near the paper shape (98 304 elements on 256 cores): 256 per core
+    /// — 65 536 total — so both vectors fit the SPM alongside the
+    /// sequential regions and the runtime words.
+    pub fn weak_scaled(_cores: usize) -> Self {
+        Axpy::new(256)
+    }
+
+    /// Total vector length for this configuration.
+    pub fn len(&self, cfg: &ClusterConfig) -> usize {
+        self.per_core * cfg.num_cores()
+    }
+
+    fn layout(&self, cfg: &ClusterConfig) -> (u32, u32) {
+        let rt = RtLayout::new(cfg);
+        let x = rt.data_base;
+        let y = x + (self.len(cfg) * 4) as u32;
+        (x, y)
+    }
+
+    fn inputs(&self, cfg: &ClusterConfig) -> (Vec<u32>, Vec<u32>) {
+        let n = self.len(cfg);
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        let x: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+        let y: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+        (x, y)
+    }
+}
+
+impl Kernel for Axpy {
+    fn name(&self) -> &'static str {
+        "axpy"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let (x, y) = self.layout(cfg);
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("vec_x".into(), x);
+        sym.insert("vec_y".into(), y);
+        sym.insert("ALPHA".into(), self.alpha);
+        // Each core owns `per_core/4` islands of 4 words, strided by one
+        // full rotation of tile lines.
+        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
+        sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
+        let src = format!(
+            "\
+            csrr t0, mhartid\n\
+            srli t1, t0, 2\n\
+            andi t2, t0, 3\n\
+            # offset of this core's first island: tile*64 + lane*16\n\
+            slli t3, t1, 6\n\
+            slli t4, t2, 4\n\
+            add t5, t3, t4\n\
+            la a0, vec_x\n\
+            add a0, a0, t5\n\
+            la a1, vec_y\n\
+            add a1, a1, t5\n\
+            li a2, ALPHA\n\
+            li a3, BLOCKS\n\
+            li a4, BLOCK_STRIDE\n\
+            .align 8\n\
+            blk:\n\
+            lw t0, 0(a0)\n\
+            lw t1, 4(a0)\n\
+            lw t2, 8(a0)\n\
+            lw t3, 12(a0)\n\
+            lw t4, 0(a1)\n\
+            lw t5, 4(a1)\n\
+            lw t6, 8(a1)\n\
+            lw a6, 12(a1)\n\
+            p.mac t4, a2, t0\n\
+            p.mac t5, a2, t1\n\
+            p.mac t6, a2, t2\n\
+            p.mac a6, a2, t3\n\
+            sw t4, 0(a1)\n\
+            sw t5, 4(a1)\n\
+            sw t6, 8(a1)\n\
+            sw a6, 12(a1)\n\
+            add a0, a0, a4\n\
+            add a1, a1, a4\n\
+            addi a3, a3, -1\n\
+            bnez a3, blk\n\
+            {barrier}\
+            halt\n",
+            barrier = barrier_asm(0)
+        );
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let (x_addr, y_addr) = self.layout(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let (x, y) = self.inputs(&cluster.cfg);
+        let mut spm = cluster.spm();
+        spm.write_words(x_addr, &x);
+        spm.write_words(y_addr, &y);
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let (_, y_addr) = self.layout(&cluster.cfg);
+        let (x, y) = self.inputs(&cluster.cfg);
+        let n = self.len(&cluster.cfg);
+        let got = cluster.spm().read_words(y_addr, n);
+        for i in 0..x.len() {
+            let e = y[i].wrapping_add(self.alpha.wrapping_mul(x[i]));
+            if got[i] != e {
+                return Err(format!("y[{i}] = {:#x}, expected {e:#x}", got[i]));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        2 * self.len(cfg) as u64
+    }
+}

@@ -1,0 +1,236 @@
+//! 2D convolution with a 3×3 kernel (paper §8.1): pixels are mapped to
+//! the processing core's own tile (enlarged sequential regions hold each
+//! core's row block), so accesses are local except for the halo rows at
+//! the edges of a core's block — exactly the paper's "local accesses
+//! except for pixels at the edges of a tile".
+//!
+//! The inner loop is unrolled ×3 with rotating column registers so each
+//! output pixel costs 3 loads + 9 MACs with full column reuse.
+
+use std::collections::HashMap;
+
+use super::rt::{barrier_asm, RtLayout};
+use super::Kernel;
+use crate::config::ClusterConfig;
+use crate::sim::Cluster;
+
+/// Image width in pixels — one tile line (16 words) per row.
+pub const W: usize = 16;
+/// Rows per core.
+pub const ROWS_PER_CORE: usize = 16;
+/// 3×3 kernel (the classic Gaussian-ish integer stencil).
+pub const COEFF: [[i32; 3]; 3] = [[1, 2, 1], [2, 4, 2], [1, 2, 1]];
+
+pub struct Conv2d {
+    pub seed: u64,
+}
+
+impl Conv2d {
+    pub fn new() -> Self {
+        Conv2d { seed: 0xC0117 }
+    }
+
+    /// Weak scaling is inherent: 16×16 pixels per core.
+    pub fn weak_scaled(_cores: usize) -> Self {
+        Conv2d::new()
+    }
+
+    pub fn rows(&self, cfg: &ClusterConfig) -> usize {
+        ROWS_PER_CORE * cfg.num_cores()
+    }
+
+    fn out_base(&self, cfg: &ClusterConfig) -> u32 {
+        RtLayout::new(cfg).data_base
+    }
+
+    fn input(&self, cfg: &ClusterConfig) -> Vec<u32> {
+        let n = self.rows(cfg) * W;
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        (0..n).map(|_| rng.below(256) as u32).collect()
+    }
+
+    /// Address of input pixel (row, col): row blocks live at the front of
+    /// each core's 2 KiB lane slice of the sequential region.
+    fn px_addr(row: usize, col: usize) -> u32 {
+        let core = row / ROWS_PER_CORE;
+        (core * 2048 + (row % ROWS_PER_CORE) * W * 4 + col * 4) as u32
+    }
+
+    fn reference(&self, cfg: &ClusterConfig) -> Vec<u32> {
+        let rows = self.rows(cfg);
+        let img = self.input(cfg);
+        let mut out = vec![0u32; rows * W];
+        for r in 1..rows - 1 {
+            for c in 1..=W - 4 {
+                let mut acc = 0i64;
+                for (dr, crow) in COEFF.iter().enumerate() {
+                    for (dc, k) in crow.iter().enumerate() {
+                        let p = img[(r + dr - 1) * W + (c + dc - 1)] as i32;
+                        acc += (*k as i64) * p as i64;
+                    }
+                }
+                out[r * W + c] = acc as u32;
+            }
+        }
+        out
+    }
+}
+
+impl Default for Conv2d {
+    fn default() -> Self {
+        Conv2d::new()
+    }
+}
+
+impl Kernel for Conv2d {
+    fn name(&self) -> &'static str {
+        "2dconv"
+    }
+
+    fn prepare_config(&self, cfg: &mut ClusterConfig) {
+        // 2 KiB per lane: 1 KiB row block + spare + stack (the px_addr
+        // arithmetic assumes exactly this slice size).
+        cfg.seq_rows_log2 = 7;
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("conv_out".into(), self.out_base(cfg));
+        sym.insert("LAST_ROW".into(), (self.rows(cfg) - 1) as u32);
+
+        let mut src = String::new();
+        // Coefficients into s0..s8 (row-major).
+        for (i, k) in COEFF.iter().flatten().enumerate() {
+            src.push_str(&format!("li s{i}, {k}\n"));
+        }
+        src.push_str(
+            "\
+            csrr t0, mhartid\n\
+            slli s9, t0, 4\n\
+            addi s10, s9, 16\n\
+            # clamp to the global image interior\n\
+            bnez s9, no_clamp_lo\n\
+            li s9, 1\n\
+            no_clamp_lo:\n\
+            li t1, LAST_ROW\n\
+            ble s10, t1, no_clamp_hi\n\
+            mv s10, t1\n\
+            no_clamp_hi:\n\
+            row_loop:\n\
+            bge s9, s10, rows_done\n\
+            # gp/tp/ra ← addresses of rows g-1 / g / g+1\n\
+            addi t0, s9, -1\n\
+            srli t1, t0, 4\n\
+            slli t1, t1, 11\n\
+            andi t2, t0, 15\n\
+            slli t2, t2, 6\n\
+            add gp, t1, t2\n\
+            srli t1, s9, 4\n\
+            slli t1, t1, 11\n\
+            andi t2, s9, 15\n\
+            slli t2, t2, 6\n\
+            add tp, t1, t2\n\
+            addi t0, s9, 1\n\
+            srli t1, t0, 4\n\
+            slli t1, t1, 11\n\
+            andi t2, t0, 15\n\
+            slli t2, t2, 6\n\
+            add ra, t1, t2\n\
+            # output pointer: conv_out + g*64 (stores start at col 1)\n\
+            la a0, conv_out\n\
+            slli t1, s9, 6\n\
+            add a0, a0, t1\n\
+            addi a0, a0, 4\n\
+            # preload columns 0 (A) and 1 (B)\n\
+            p.lw a2, 4(gp!)\n\
+            p.lw a3, 4(tp!)\n\
+            p.lw t4, 4(ra!)\n\
+            p.lw a5, 4(gp!)\n\
+            p.lw a6, 4(tp!)\n\
+            p.lw t5, 4(ra!)\n\
+            li t3, 12\n\
+            .align 8\n\
+            col_loop:\n",
+        );
+        // Single-phase body with explicit register rotation: the six
+        // `mv`s cost less than thrashing the 32-instruction L0 cache
+        // with a 3x-unrolled 45-instruction body (EXPERIMENTS.md #Perf).
+        // Window: A = (a2, a3, t4), B = (a5, a6, t5), C = (t0, t1, t2).
+        src.push_str(
+            "\
+            p.lw t0, 4(gp!)\n\
+            p.lw t1, 4(tp!)\n\
+            p.lw t2, 4(ra!)\n\
+            li a7, 0\n",
+        );
+        let cols = [["a2", "a3", "t4"], ["a5", "a6", "t5"], ["t0", "t1", "t2"]];
+        for row in 0..3 {
+            for (c, col) in cols.iter().enumerate() {
+                src.push_str(&format!("p.mac a7, s{}, {}\n", 3 * row + c, col[row]));
+            }
+        }
+        src.push_str(
+            "\
+            p.sw a7, 4(a0!)\n\
+            mv a2, a5\n\
+            mv a3, a6\n\
+            mv t4, t5\n\
+            mv a5, t0\n\
+            mv a6, t1\n\
+            mv t5, t2\n\
+            addi t3, t3, -1\n\
+            bnez t3, col_loop\n\
+            addi s9, s9, 1\n\
+            j row_loop\n\
+            rows_done:\n",
+        );
+        src.push_str(&barrier_asm(0));
+        src.push_str("halt\n");
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let img = self.input(&cluster.cfg);
+        let rows = self.rows(&cluster.cfg);
+        let out = self.out_base(&cluster.cfg);
+        let mut spm = cluster.spm();
+        for r in 0..rows {
+            for c in 0..W {
+                spm.write_word(Conv2d::px_addr(r, c), img[r * W + c]);
+            }
+        }
+        // Zero the output region.
+        for i in 0..(rows * W) as u32 {
+            spm.write_word(out + 4 * i, 0);
+        }
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let rows = self.rows(&cluster.cfg);
+        let expect = self.reference(&cluster.cfg);
+        let out = self.out_base(&cluster.cfg);
+        let got = cluster.spm().read_words(out, rows * W);
+        for r in 1..rows - 1 {
+            for c in 1..=W - 4 {
+                let i = r * W + c;
+                if got[i] != expect[i] {
+                    return Err(format!(
+                        "out[{r}][{c}] = {:#x}, expected {:#x}",
+                        got[i], expect[i]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        // 9 MACs per interior output pixel.
+        let rows = self.rows(cfg) as u64;
+        18 * (rows - 2) * (W as u64 - 4)
+    }
+}

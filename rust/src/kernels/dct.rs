@@ -1,0 +1,268 @@
+//! 2D 8×8 discrete cosine transform (paper §8.1, the JPEG building
+//! block): each core transforms its own blocks, held core-locally in the
+//! enlarged sequential region, with the row-pass intermediate spilled to
+//! core-local scratch ("use the stack for intermediate results"). The
+//! transform is an integer DCT-II: `Y = (C·X·Cᵀ) >> 2·SHIFT` with an
+//! 8×8 coefficient matrix scaled by 2^SHIFT.
+
+use std::collections::HashMap;
+
+use super::rt::{barrier_asm, RtLayout};
+use super::Kernel;
+use crate::config::ClusterConfig;
+use crate::sim::Cluster;
+
+/// Coefficient fixed-point scale (bits).
+pub const SHIFT: u32 = 7;
+/// Blocks per core.
+pub const BLOCKS_PER_CORE: usize = 4;
+
+/// Lane-slice layout (2 KiB per core in the sequential region):
+/// bytes 0..1024: four 8×8 input blocks; 1024..1280: coefficient table;
+/// 1280..1536: row-pass scratch; the stack sits on top.
+const BLOCKS_OFF: u32 = 0;
+const COEFF_OFF: u32 = 1024;
+const SCRATCH_OFF: u32 = 1280;
+
+/// The integer DCT-II coefficient matrix `C[u][x] = round(s_u ·
+/// cos((2x+1)uπ/16) · 2^SHIFT)`.
+pub fn coeff_table() -> [[i32; 8]; 8] {
+    let mut c = [[0i32; 8]; 8];
+    for (u, row) in c.iter_mut().enumerate() {
+        for (x, v) in row.iter_mut().enumerate() {
+            let s = if u == 0 { (0.5f64).sqrt() } else { 1.0 };
+            let val = s
+                * ((2.0 * x as f64 + 1.0) * u as f64 * std::f64::consts::PI / 16.0).cos()
+                * (1 << SHIFT) as f64
+                * 0.5;
+            *v = val.round() as i32;
+        }
+    }
+    c
+}
+
+pub struct Dct {
+    pub seed: u64,
+}
+
+impl Dct {
+    pub fn new() -> Self {
+        Dct { seed: 0xDC7 }
+    }
+
+    pub fn weak_scaled(_cores: usize) -> Self {
+        Dct::new()
+    }
+
+    pub fn blocks(&self, cfg: &ClusterConfig) -> usize {
+        BLOCKS_PER_CORE * cfg.num_cores()
+    }
+
+    fn out_base(&self, cfg: &ClusterConfig) -> u32 {
+        RtLayout::new(cfg).data_base
+    }
+
+    fn input(&self, cfg: &ClusterConfig) -> Vec<i32> {
+        let n = self.blocks(cfg) * 64;
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        (0..n).map(|_| rng.range_i64(-128, 128) as i32).collect()
+    }
+
+    /// The reference mirrors the kernel's integer arithmetic exactly.
+    fn reference(&self, cfg: &ClusterConfig) -> Vec<i32> {
+        let c = coeff_table();
+        let input = self.input(cfg);
+        let mut out = vec![0i32; input.len()];
+        for b in 0..self.blocks(cfg) {
+            let x = &input[b * 64..(b + 1) * 64];
+            // Row pass: scratch[r][u] = (Σ_i x[r][i]·C[u][i]) >> SHIFT.
+            let mut mid = [[0i32; 8]; 8];
+            for r in 0..8 {
+                for u in 0..8 {
+                    let mut acc = 0i32;
+                    for i in 0..8 {
+                        acc = acc.wrapping_add(x[r * 8 + i].wrapping_mul(c[u][i]));
+                    }
+                    mid[r][u] = acc >> SHIFT;
+                }
+            }
+            // Column pass: out[v][u] = (Σ_r mid[r][u]·C[v][r]) >> SHIFT.
+            for u in 0..8 {
+                for v in 0..8 {
+                    let mut acc = 0i32;
+                    for r in 0..8 {
+                        acc = acc.wrapping_add(mid[r][u].wrapping_mul(c[v][r]));
+                    }
+                    out[b * 64 + v * 8 + u] = acc >> SHIFT;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Default for Dct {
+    fn default() -> Self {
+        Dct::new()
+    }
+}
+
+impl Kernel for Dct {
+    fn name(&self) -> &'static str {
+        "dct"
+    }
+
+    fn prepare_config(&self, cfg: &mut ClusterConfig) {
+        cfg.seq_rows_log2 = 7; // 2 KiB lane slices
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("dct_out".into(), self.out_base(cfg));
+        sym.insert("DCT_SHIFT".into(), SHIFT);
+
+        // Register plan: a0 = lane base, a1 = block counter, a2 = input
+        // row/col pointer, a3 = coeff pointer, a4 = scratch pointer,
+        // a5 = acc, a7 = output pointer; t0-t6 + a6 hold the 8 inputs of
+        // the current 1D transform; s0/s1 = loop counters.
+        let mut src = String::new();
+        src.push_str(
+            "\
+            csrr t0, mhartid\n\
+            slli a0, t0, 11\n\
+            # output pointer: dct_out + hart*BLOCKS*256\n\
+            la a7, dct_out\n\
+            slli t1, t0, 10\n\
+            add a7, a7, t1\n\
+            li a1, 0\n\
+            block_loop:\n\
+            # ---- row pass: X (input) → scratch ----\n\
+            slli t1, a1, 8\n\
+            add a2, a0, t1\n\
+            addi a4, a0, 1280\n\
+            li s0, 8\n\
+            rowpass:\n\
+            p.lw t0, 4(a2!)\n\
+            p.lw t1, 4(a2!)\n\
+            p.lw t2, 4(a2!)\n\
+            p.lw t3, 4(a2!)\n\
+            p.lw t4, 4(a2!)\n\
+            p.lw t5, 4(a2!)\n\
+            p.lw t6, 4(a2!)\n\
+            p.lw a6, 4(a2!)\n\
+            addi a3, a0, 1024\n\
+            li s1, 8\n\
+            row_u:\n",
+        );
+        // One output coefficient: 8 coeff loads interleaved with 8 MACs.
+        src.push_str("li a5, 0\n");
+        for (i, reg) in ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "a6"].iter().enumerate() {
+            let _ = i;
+            src.push_str(&format!("p.lw s2, 4(a3!)\np.mac a5, s2, {reg}\n"));
+        }
+        src.push_str(
+            "\
+            srai a5, a5, DCT_SHIFT\n\
+            p.sw a5, 4(a4!)\n\
+            addi s1, s1, -1\n\
+            bnez s1, row_u\n\
+            addi s0, s0, -1\n\
+            bnez s0, rowpass\n\
+            # ---- column pass: scratch → output ----\n\
+            li s0, 0\n\
+            colpass:\n\
+            # load column s0 of the scratch (stride 32)\n\
+            addi a2, a0, 1280\n\
+            slli t1, s0, 2\n\
+            add a2, a2, t1\n\
+            p.lw t0, 32(a2!)\n\
+            p.lw t1, 32(a2!)\n\
+            p.lw t2, 32(a2!)\n\
+            p.lw t3, 32(a2!)\n\
+            p.lw t4, 32(a2!)\n\
+            p.lw t5, 32(a2!)\n\
+            p.lw t6, 32(a2!)\n\
+            p.lw a6, 32(a2!)\n\
+            addi a3, a0, 1024\n\
+            # output column pointer: out + s0*4, stride 32 (s11 scratch —\n\
+            # t1 holds mid[1][u] here!)\n\
+            slli s11, s0, 2\n\
+            add s3, a7, s11\n\
+            li s1, 8\n\
+            col_v:\n",
+        );
+        src.push_str("li a5, 0\n");
+        for reg in ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "a6"] {
+            src.push_str(&format!("p.lw s2, 4(a3!)\np.mac a5, s2, {reg}\n"));
+        }
+        src.push_str(
+            "\
+            srai a5, a5, DCT_SHIFT\n\
+            p.sw a5, 32(s3!)\n\
+            addi s1, s1, -1\n\
+            bnez s1, col_v\n\
+            addi s0, s0, 1\n\
+            li t1, 8\n\
+            blt s0, t1, colpass\n\
+            # next block\n\
+            addi a7, a7, 256\n\
+            addi a1, a1, 1\n\
+            li t1, 4\n\
+            blt a1, t1, block_loop\n",
+        );
+        src.push_str(&barrier_asm(0));
+        src.push_str("halt\n");
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let input = self.input(&cluster.cfg);
+        let coeff = coeff_table();
+        let cores = cluster.cfg.num_cores();
+        let mut spm = cluster.spm();
+        for core in 0..cores {
+            let lane_base = (core * 2048) as u32;
+            // Blocks.
+            for b in 0..BLOCKS_PER_CORE {
+                let blk = &input[(core * BLOCKS_PER_CORE + b) * 64..][..64];
+                for (i, v) in blk.iter().enumerate() {
+                    spm.write_word(lane_base + BLOCKS_OFF + (b * 256 + i * 4) as u32, *v as u32);
+                }
+            }
+            // Coefficient table (row-major).
+            for (u, row) in coeff.iter().enumerate() {
+                for (x, v) in row.iter().enumerate() {
+                    spm.write_word(lane_base + COEFF_OFF + (u * 32 + x * 4) as u32, *v as u32);
+                }
+            }
+            let _ = SCRATCH_OFF;
+        }
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let expect = self.reference(&cluster.cfg);
+        let out = self.out_base(&cluster.cfg);
+        let got = cluster.spm().read_words(out, expect.len());
+        for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+            if *g as i32 != *e {
+                return Err(format!(
+                    "dct block {} elem {}: {:#x}, expected {:#x}",
+                    i / 64,
+                    i % 64,
+                    *g as i32,
+                    e
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        // 2 passes × 64 outputs × 8 MACs × 2 OPs per block.
+        (self.blocks(cfg) * 2 * 64 * 8 * 2) as u64
+    }
+}

@@ -1,0 +1,137 @@
+//! dotp (paper §8.1): the dot product — low compute intensity, local
+//! accesses only, plus a final atomic reduction into a single shared
+//! accumulator ("only dotp's reduction step exhibits some conflicts",
+//! Fig 14).
+
+use std::collections::HashMap;
+
+use super::rt::{barrier_asm, RtLayout};
+use super::Kernel;
+use crate::config::ClusterConfig;
+use crate::sim::Cluster;
+
+pub struct Dotp {
+    pub per_core: usize,
+    pub seed: u64,
+}
+
+impl Dotp {
+    pub fn new(per_core: usize) -> Self {
+        assert_eq!(per_core % 4, 0);
+        Dotp { per_core, seed: 0xD07 }
+    }
+
+    /// Near the paper shape (98 304 elements on 256 cores): 256 per core
+    /// so both vectors fit the SPM alongside the sequential regions.
+    pub fn weak_scaled(_cores: usize) -> Self {
+        Dotp::new(256)
+    }
+
+    pub fn len(&self, cfg: &ClusterConfig) -> usize {
+        self.per_core * cfg.num_cores()
+    }
+
+    fn layout(&self, cfg: &ClusterConfig) -> (u32, u32, u32) {
+        let rt = RtLayout::new(cfg);
+        let x = rt.data_base;
+        let y = x + (self.len(cfg) * 4) as u32;
+        // The shared accumulator sits with the runtime words.
+        (x, y, rt.work_counter + 4)
+    }
+
+    fn inputs(&self, cfg: &ClusterConfig) -> (Vec<u32>, Vec<u32>) {
+        let n = self.len(cfg);
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        let x: Vec<u32> = (0..n).map(|_| rng.below(1 << 10) as u32).collect();
+        let y: Vec<u32> = (0..n).map(|_| rng.below(1 << 10) as u32).collect();
+        (x, y)
+    }
+}
+
+impl Kernel for Dotp {
+    fn name(&self) -> &'static str {
+        "dotp"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let (x, y, acc) = self.layout(cfg);
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("vec_x".into(), x);
+        sym.insert("vec_y".into(), y);
+        sym.insert("dot_acc".into(), acc);
+        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
+        sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
+        let src = format!(
+            "\
+            csrr t0, mhartid\n\
+            srli t1, t0, 2\n\
+            andi t2, t0, 3\n\
+            slli t3, t1, 6\n\
+            slli t4, t2, 4\n\
+            add t5, t3, t4\n\
+            la a0, vec_x\n\
+            add a0, a0, t5\n\
+            la a1, vec_y\n\
+            add a1, a1, t5\n\
+            li a2, 0\n\
+            li a3, BLOCKS\n\
+            li a4, BLOCK_STRIDE\n\
+            .align 8\n\
+            blk:\n\
+            lw t0, 0(a0)\n\
+            lw t1, 4(a0)\n\
+            lw t2, 8(a0)\n\
+            lw t3, 12(a0)\n\
+            lw t4, 0(a1)\n\
+            lw t5, 4(a1)\n\
+            lw t6, 8(a1)\n\
+            lw a6, 12(a1)\n\
+            p.mac a2, t0, t4\n\
+            p.mac a2, t1, t5\n\
+            p.mac a2, t2, t6\n\
+            p.mac a2, t3, a6\n\
+            add a0, a0, a4\n\
+            add a1, a1, a4\n\
+            addi a3, a3, -1\n\
+            bnez a3, blk\n\
+            # reduction: one atomic add into the shared accumulator\n\
+            la t0, dot_acc\n\
+            amoadd.w t1, a2, (t0)\n\
+            {barrier}\
+            halt\n",
+            barrier = barrier_asm(0)
+        );
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let (x_addr, y_addr, acc) = self.layout(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let (x, y) = self.inputs(&cluster.cfg);
+        let mut spm = cluster.spm();
+        spm.write_word(acc, 0);
+        spm.write_words(x_addr, &x);
+        spm.write_words(y_addr, &y);
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let (_, _, acc) = self.layout(&cluster.cfg);
+        let (x, y) = self.inputs(&cluster.cfg);
+        let expect = x
+            .iter()
+            .zip(&y)
+            .fold(0u32, |s, (a, b)| s.wrapping_add(a.wrapping_mul(*b)));
+        let got = cluster.spm().read_word(acc);
+        if got != expect {
+            return Err(format!("dotp = {got:#x}, expected {expect:#x}"));
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        2 * self.len(cfg) as u64
+    }
+}

@@ -1,0 +1,542 @@
+//! Double-buffered execution (paper §8.2.1, Fig 15): kernels operate on
+//! data streamed from L2 by the distributed DMA while computing on the
+//! other half of a ping-pong buffer pair. The first PE entering a round
+//! polls the DMA frontend; the transfers for the next round (input load +
+//! previous output write-back) are programmed before compute starts so
+//! they overlap with it.
+//!
+//! `DbAxpy` is the memory-bound representative (the paper's axpy compute
+//! phases fill only ~35% of a steady round — L2-bandwidth limited);
+//! `DbMatmul` is the compute-bound one (IPC ≈0.94 in steady rounds).
+
+use std::collections::HashMap;
+
+use super::rt::{barrier_asm, dma_wait_asm, RtLayout};
+use super::Kernel;
+use crate::config::ClusterConfig;
+use crate::sim::Cluster;
+
+/// Ping-pong buffer plumbing shared by the double-buffered kernels.
+struct DbPlumbing {
+    /// Input chunk size (bytes) per round.
+    chunk_bytes: u32,
+    /// Output chunk size (bytes) per round.
+    out_bytes: u32,
+    in_bufs: [u32; 2],
+    out_bufs: [u32; 2],
+    l2_in: u32,
+    l2_out: u32,
+}
+
+impl DbPlumbing {
+    /// Assembly for hart 0's DMA orchestration at the top of round s10
+    /// (s9 = hartid, s11 = rounds). Clobbers t0/t1, a0/a1.
+    fn round_prologue(&self) -> String {
+        format!(
+            "\
+            bnez s9, db_skip_dma\n\
+            {wait}\
+            # program the next round's input load (if any)\n\
+            addi t0, s10, 1\n\
+            bge t0, s11, db_no_next_in\n\
+            li t1, {chunk}\n\
+            mul t1, t0, t1\n\
+            li a0, {l2_in}\n\
+            add a0, a0, t1\n\
+            la t0, DMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            andi t1, s10, 1\n\
+            bnez t1, db_next_in_even\n\
+            li a1, {in1}\n\
+            j db_next_in_set\n\
+            db_next_in_even:\n\
+            li a1, {in0}\n\
+            db_next_in_set:\n\
+            la t0, DMA_SPM_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, DMA_BYTES_ADDR\n\
+            li t1, {chunk}\n\
+            sw t1, 0(t0)\n\
+            la t0, DMA_TRIGGER_ADDR\n\
+            li t1, 1\n\
+            sw t1, 0(t0)\n\
+            db_no_next_in:\n\
+            # write back the previous round's output (if any)\n\
+            beqz s10, db_no_writeback\n\
+            addi t0, s10, -1\n\
+            li t1, {out_bytes}\n\
+            mul t1, t0, t1\n\
+            li a0, {l2_out}\n\
+            add a0, a0, t1\n\
+            la t0, DMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            andi t1, s10, 1\n\
+            bnez t1, db_wb_odd\n\
+            li a1, {out1}\n\
+            j db_wb_set\n\
+            db_wb_odd:\n\
+            li a1, {out0}\n\
+            db_wb_set:\n\
+            la t0, DMA_SPM_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, DMA_BYTES_ADDR\n\
+            li t1, {out_bytes}\n\
+            sw t1, 0(t0)\n\
+            la t0, DMA_TRIGGER_ADDR\n\
+            sw zero, 0(t0)\n\
+            db_no_writeback:\n\
+            db_skip_dma:\n",
+            wait = dma_wait_asm(90),
+            chunk = self.chunk_bytes,
+            l2_in = self.l2_in,
+            in0 = self.in_bufs[0],
+            in1 = self.in_bufs[1],
+            out_bytes = self.out_bytes,
+            l2_out = self.l2_out,
+            out0 = self.out_bufs[0],
+            out1 = self.out_bufs[1],
+        )
+    }
+
+    /// Final write-back of the last round's output.
+    fn epilogue(&self, rounds: u32) -> String {
+        let last = rounds - 1;
+        format!(
+            "\
+            bnez s9, db_skip_final\n\
+            {wait}\
+            li a0, {l2}\n\
+            la t0, DMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            li a1, {spm}\n\
+            la t0, DMA_SPM_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, DMA_BYTES_ADDR\n\
+            li t1, {chunk}\n\
+            sw t1, 0(t0)\n\
+            la t0, DMA_TRIGGER_ADDR\n\
+            sw zero, 0(t0)\n\
+            {wait2}\
+            db_skip_final:\n",
+            wait = dma_wait_asm(91),
+            wait2 = dma_wait_asm(92),
+            l2 = self.l2_out + (last * self.out_bytes),
+            spm = self.out_bufs[(last & 1) as usize],
+            chunk = self.out_bytes,
+        )
+    }
+}
+
+/// Double-buffered streaming kernel: `out = (alpha + 1) · x`, one input
+/// stream in and one output stream back per round — the Fig 15
+/// memory-bound round structure (axpy-class compute intensity: one MAC
+/// per load+store pair).
+pub struct DbAxpy {
+    pub per_core: usize,
+    pub rounds: usize,
+    pub alpha: u32,
+    pub seed: u64,
+}
+
+impl DbAxpy {
+    pub fn new(per_core: usize, rounds: usize) -> Self {
+        assert_eq!(per_core % 4, 0);
+        assert!(rounds >= 2);
+        DbAxpy { per_core, rounds, alpha: 3, seed: 0xDBA }
+    }
+
+    /// Fig 15 shape: half the single-buffered problem per round.
+    pub fn weak_scaled(_cores: usize) -> Self {
+        DbAxpy::new(128, 4)
+    }
+
+    pub fn chunk_words(&self, cfg: &ClusterConfig) -> usize {
+        self.per_core * cfg.num_cores()
+    }
+
+    fn bufs(&self, cfg: &ClusterConfig) -> DbPlumbing {
+        let rt = RtLayout::new(cfg);
+        let words = self.chunk_words(cfg) as u32;
+        let in0 = rt.data_base;
+        let in1 = in0 + 4 * words;
+        let out0 = in1 + 4 * words;
+        let out1 = out0 + 4 * words;
+        DbPlumbing {
+            chunk_bytes: 4 * words,
+            out_bytes: 4 * words,
+            in_bufs: [in0, in1],
+            out_bufs: [out0, out1],
+            l2_in: 0x10_0000,
+            l2_out: 0x20_0000,
+        }
+    }
+
+    fn input(&self, cfg: &ClusterConfig) -> Vec<u32> {
+        let n = self.chunk_words(cfg) * self.rounds;
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        (0..n).map(|_| rng.below(1 << 20) as u32).collect()
+    }
+}
+
+impl Kernel for DbAxpy {
+    fn name(&self) -> &'static str {
+        "db_axpy"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let p = self.bufs(cfg);
+        let rt = RtLayout::new(cfg);
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
+        sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
+        sym.insert("ALPHA".into(), self.alpha);
+        let mut src = format!(
+            "\
+            csrr s9, mhartid\n\
+            li s10, 0\n\
+            li s11, {rounds}\n\
+            # this core's island offset within a chunk\n\
+            srli t1, s9, 2\n\
+            andi t2, s9, 3\n\
+            slli t3, t1, 6\n\
+            slli t4, t2, 4\n\
+            add s8, t3, t4\n\
+            db_round:\n\
+            bge s10, s11, db_done\n",
+            rounds = self.rounds
+        );
+        src.push_str(&p.round_prologue());
+        src.push_str(&barrier_asm(80));
+        src.push_str(
+            "\
+            andi t0, s10, 1\n\
+            bnez t0, db_odd\n",
+        );
+        let body = |inb: u32, outb: u32, tag: &str| {
+            format!(
+                "\
+                li a0, {inb}\n\
+                li a1, {outb}\n\
+                add a0, a0, s8\n\
+                add a1, a1, s8\n\
+                li a2, ALPHA\n\
+                li a3, BLOCKS\n\
+                li a4, BLOCK_STRIDE\n\
+                .align 8\n\
+                blk_{tag}:\n\
+                lw t4, 0(a0)\n\
+                lw t5, 4(a0)\n\
+                lw t6, 8(a0)\n\
+                lw a6, 12(a0)\n\
+                p.mac t4, a2, t4\n\
+                p.mac t5, a2, t5\n\
+                p.mac t6, a2, t6\n\
+                p.mac a6, a2, a6\n\
+                sw t4, 0(a1)\n\
+                sw t5, 4(a1)\n\
+                sw t6, 8(a1)\n\
+                sw a6, 12(a1)\n\
+                add a0, a0, a4\n\
+                add a1, a1, a4\n\
+                addi a3, a3, -1\n\
+                bnez a3, blk_{tag}\n\
+                j db_compute_done\n"
+            )
+        };
+        src.push_str(&body(p.in_bufs[0], p.out_bufs[0], "even"));
+        src.push_str("db_odd:\n");
+        src.push_str(&body(p.in_bufs[1], p.out_bufs[1], "odd"));
+        src.push_str("db_compute_done:\n");
+        src.push_str(&barrier_asm(81));
+        src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
+        src.push_str(&p.epilogue(self.rounds as u32));
+        src.push_str(&barrier_asm(82));
+        src.push_str("halt\n");
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let p = self.bufs(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let x = self.input(&cluster.cfg);
+        let words = self.chunk_words(&cluster.cfg);
+        for (i, v) in x.iter().enumerate() {
+            cluster.l2.write_word(p.l2_in + 4 * i as u32, *v);
+        }
+        // Pre-stage round 0's input (Fig 15's initial DMA-only phase,
+        // charged to the round-0 status poll).
+        let mut spm = cluster.spm();
+        for i in 0..words {
+            spm.write_word(p.in_bufs[0] + 4 * i as u32, x[i]);
+        }
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let p = self.bufs(&cluster.cfg);
+        let x = self.input(&cluster.cfg);
+        let scale = self.alpha.wrapping_add(1);
+        for (i, xv) in x.iter().enumerate() {
+            let e = xv.wrapping_mul(scale);
+            let got = cluster.l2.read_word(p.l2_out + 4 * i as u32);
+            if got != e {
+                return Err(format!(
+                    "round {} out[{}] = {got:#x}, expected {e:#x}",
+                    i / self.chunk_words(&cluster.cfg),
+                    i % self.chunk_words(&cluster.cfg)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+        2 * (self.chunk_words(cfg) * self.rounds) as u64
+    }
+}
+
+/// Double-buffered matmul: B stays resident; slabs of A rows stream in
+/// and the corresponding C rows stream back — the compute-bound Fig 15
+/// case where fused compute rounds push IPC towards 1.
+pub struct DbMatmul {
+    /// Rows of A (and C) per round; must keep 4×4 tiling.
+    pub slab_rows: usize,
+    pub n: usize,
+    pub k: usize,
+    pub rounds: usize,
+    pub seed: u64,
+}
+
+impl DbMatmul {
+    pub fn new(slab_rows: usize, n: usize, k: usize, rounds: usize) -> Self {
+        assert!(slab_rows % 4 == 0 && n % 4 == 0);
+        assert!((n / 4).is_power_of_two() && (slab_rows / 4).is_power_of_two());
+        assert!(rounds >= 2);
+        DbMatmul { slab_rows, n, k, rounds, seed: 0xDB3 }
+    }
+
+    pub fn weak_scaled(cores: usize) -> Self {
+        // ~4 tiles/core/round.
+        let tiles = 4 * cores;
+        let mut tr = 1usize;
+        while tr * tr < tiles {
+            tr *= 2;
+        }
+        DbMatmul::new(4 * tr, 4 * (tiles / tr), 16, 3)
+    }
+
+    fn bufs(&self, cfg: &ClusterConfig) -> DbPlumbing {
+        let rt = RtLayout::new(cfg);
+        let b_words = (self.k * self.n) as u32;
+        let a_words = (self.slab_rows * self.k) as u32;
+        let c_words = (self.slab_rows * self.n) as u32;
+        // Layout: B resident | A0 | A1 | C0 | C1.
+        let b = rt.data_base;
+        let a0 = b + 4 * b_words;
+        let a1 = a0 + 4 * a_words;
+        let c0 = a1 + 4 * a_words;
+        let c1 = c0 + 4 * c_words;
+        DbPlumbing {
+            chunk_bytes: 4 * a_words,
+            out_bytes: 4 * c_words,
+            in_bufs: [a0, a1],
+            out_bufs: [c0, c1],
+            l2_in: 0x10_0000,
+            l2_out: 0x40_0000,
+        }
+    }
+
+    fn inputs(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        let a: Vec<u32> =
+            (0..self.slab_rows * self.k * self.rounds).map(|_| rng.below(256) as u32).collect();
+        let b: Vec<u32> = (0..self.k * self.n).map(|_| rng.below(256) as u32).collect();
+        (a, b)
+    }
+}
+
+impl Kernel for DbMatmul {
+    fn name(&self) -> &'static str {
+        "db_matmul"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let p = self.bufs(cfg);
+        let rt = RtLayout::new(cfg);
+        let tiles_c = self.n / 4;
+        let total_tiles = (self.slab_rows / 4) * tiles_c;
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("mat_b".into(), p.in_bufs[0] - 4 * (self.k * self.n) as u32);
+        sym.insert("TOTAL_TILES".into(), total_tiles as u32);
+        sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
+        sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
+        sym.insert("KBYTES".into(), (self.k * 4) as u32);
+        sym.insert("NBYTES".into(), (self.n * 4) as u32);
+        sym.insert("KDIM".into(), self.k as u32);
+        sym.insert("LOG_K_B".into(), (self.k * 4).trailing_zeros());
+        sym.insert("LOG_N_B".into(), (self.n * 4).trailing_zeros());
+
+        let acc = [
+            "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "a2", "a3", "a4", "a5", "t4", "t5",
+            "t6", "a6",
+        ];
+        // NOTE: this variant keeps the accumulators in a reduced register
+        // set; it trades two extra spill-free B loads per iteration by
+        // reloading B values each k step like the single-buffered kernel.
+        let mut src = format!(
+            "\
+            addi sp, sp, -16\n\
+            csrr s9, mhartid\n\
+            li s10, 0\n\
+            li s11, {rounds}\n\
+            db_round:\n\
+            bge s10, s11, db_done\n",
+            rounds = self.rounds
+        );
+        src.push_str(&p.round_prologue());
+        src.push_str(&barrier_asm(80));
+        // Select this round's A and C buffers (kept on the stack).
+        src.push_str(&format!(
+            "\
+            andi t0, s10, 1\n\
+            bnez t0, db_buf_odd\n\
+            li t1, {a0}\n\
+            li t2, {c0}\n\
+            j db_buf_set\n\
+            db_buf_odd:\n\
+            li t1, {a1}\n\
+            li t2, {c1}\n\
+            db_buf_set:\n\
+            sw t1, 8(sp)\n\
+            sw t2, 12(sp)\n\
+            sw s9, 0(sp)\n\
+            tile_loop:\n\
+            lw t0, 0(sp)\n\
+            li t1, TOTAL_TILES\n\
+            bge t0, t1, tiles_done\n\
+            addi t1, t0, NUM_CORES\n\
+            sw t1, 0(sp)\n\
+            srli t2, t0, LOG_TILES_C\n\
+            slli t2, t2, 2\n\
+            andi t3, t0, TILES_C_MASK\n\
+            slli t3, t3, 2\n\
+            # A row pointers from this round's slab\n\
+            slli t4, t2, LOG_K_B\n\
+            lw t5, 8(sp)\n\
+            add a0, t5, t4\n\
+            li t6, KBYTES\n\
+            add a1, a0, t6\n\
+            add gp, a1, t6\n\
+            add tp, gp, t6\n\
+            la t5, mat_b\n\
+            slli t4, t3, 2\n\
+            add ra, t5, t4\n\
+            slli t4, t2, LOG_N_B\n\
+            lw t5, 12(sp)\n\
+            add t5, t5, t4\n\
+            slli t4, t3, 2\n\
+            add t5, t5, t4\n\
+            sw t5, 4(sp)\n",
+            a0 = p.in_bufs[0],
+            a1 = p.in_bufs[1],
+            c0 = p.out_bufs[0],
+            c1 = p.out_bufs[1],
+        ));
+        for r in &acc {
+            src.push_str(&format!("li {r}, 0\n"));
+        }
+        src.push_str(
+            "\
+            li a7, KDIM\n\
+            .align 8\n\
+            kloop:\n\
+            p.lw t0, 4(a0!)\n\
+            p.lw t1, 4(a1!)\n\
+            p.lw t2, 4(gp!)\n\
+            p.lw t3, 4(tp!)\n\
+            lw s8, 0(ra)\n",
+        );
+        // 16 MACs: B values loaded one at a time into s8 (register budget
+        // is tighter here because s9–s11 hold the round state).
+        let avals = ["t0", "t1", "t2", "t3"];
+        for q in 0..4 {
+            if q > 0 {
+                src.push_str(&format!("lw s8, {}(ra)\n", 4 * q));
+            }
+            for r in 0..4 {
+                src.push_str(&format!("p.mac {}, {}, s8\n", acc[4 * r + q], avals[r]));
+            }
+        }
+        src.push_str(
+            "\
+            addi ra, ra, NBYTES\n\
+            addi a7, a7, -1\n\
+            bnez a7, kloop\n\
+            lw t0, 4(sp)\n",
+        );
+        for r in 0..4 {
+            for q in 0..4 {
+                src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
+            }
+            if r != 3 {
+                src.push_str("addi t0, t0, NBYTES\n");
+            }
+        }
+        src.push_str("j tile_loop\ntiles_done:\n");
+        src.push_str(&barrier_asm(81));
+        src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
+        src.push_str(&p.epilogue(self.rounds as u32));
+        src.push_str(&barrier_asm(82));
+        src.push_str("halt\n");
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let p = self.bufs(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let (a, b) = self.inputs();
+        for (i, v) in a.iter().enumerate() {
+            cluster.l2.write_word(p.l2_in + 4 * i as u32, *v);
+        }
+        let b_base = p.in_bufs[0] - 4 * (self.k * self.n) as u32;
+        let a_words = self.slab_rows * self.k;
+        let mut spm = cluster.spm();
+        spm.write_words(b_base, &b);
+        // Pre-stage round 0's A slab.
+        for i in 0..a_words {
+            spm.write_word(p.in_bufs[0] + 4 * i as u32, a[i]);
+        }
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let p = self.bufs(&cluster.cfg);
+        let (a, b) = self.inputs();
+        let a_words = self.slab_rows * self.k;
+        let c_words = self.slab_rows * self.n;
+        for round in 0..self.rounds {
+            let a_slab = &a[round * a_words..(round + 1) * a_words];
+            for idx in 0..c_words {
+                let (i, j) = (idx / self.n, idx % self.n);
+                let mut e = 0u32;
+                for kk in 0..self.k {
+                    e = e.wrapping_add(a_slab[i * self.k + kk].wrapping_mul(b[kk * self.n + j]));
+                }
+                let got =
+                    cluster.l2.read_word(p.l2_out + (round * c_words + idx) as u32 * 4);
+                if got != e {
+                    return Err(format!(
+                        "round {round} C[{i}][{j}] = {got:#x}, expected {e:#x}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, _cfg: &ClusterConfig) -> u64 {
+        2 * (self.slab_rows * self.n * self.k * self.rounds) as u64
+    }
+}

@@ -1,0 +1,220 @@
+//! Matrix–matrix multiplication (paper §8.1): each core computes 4×4
+//! output tiles, giving eight loads per sixteen MAC operations in the
+//! inner loop — the compute-intensity sweet spot the paper highlights.
+//! A and B live interleaved across all banks, so operand loads exercise
+//! the full TopH interconnect (matmul is the kernel with LSU stalls in
+//! Fig 14).
+
+use std::collections::HashMap;
+
+use super::rt::{barrier_asm, RtLayout};
+use super::Kernel;
+use crate::config::ClusterConfig;
+use crate::sim::Cluster;
+
+/// C[M×N] = A[M×K] × B[K×N] over wrapping i32.
+pub struct Matmul {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Matmul {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        assert!(m % 4 == 0 && n % 4 == 0, "tiles are 4×4");
+        assert!((n / 4).is_power_of_two() && (m / 4).is_power_of_two());
+        Matmul { m, n, k, seed: 0x11AA }
+    }
+
+    /// Paper-shaped weak scaling: 8 output tiles per core (the paper's
+    /// 256×256 run gives 16 per core; we halve it so the problem also
+    /// fits the small clusters' SPM next to the sequential regions), with
+    /// the inner dimension shrunk on tiny clusters whose SPM is smaller.
+    pub fn weak_scaled(cores: usize) -> Self {
+        let tiles = 8 * cores;
+        let mut tiles_r = 1usize;
+        while tiles_r * tiles_r < tiles {
+            tiles_r *= 2;
+        }
+        let tiles_c = tiles / tiles_r;
+        let k = if cores < 16 { 16 } else { 32 };
+        Matmul::new(4 * tiles_r, 4 * tiles_c, k)
+    }
+
+    fn layout(&self, cfg: &ClusterConfig) -> (u32, u32, u32) {
+        let rt = RtLayout::new(cfg);
+        let a = rt.data_base;
+        let b = a + (self.m * self.k * 4) as u32;
+        let c = b + (self.k * self.n * 4) as u32;
+        (a, b, c)
+    }
+
+    fn inputs(&self) -> (Vec<u32>, Vec<u32>) {
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        let a: Vec<u32> = (0..self.m * self.k).map(|_| rng.below(256) as u32).collect();
+        let b: Vec<u32> = (0..self.k * self.n).map(|_| rng.below(256) as u32).collect();
+        (a, b)
+    }
+
+    /// Host reference.
+    fn reference(&self) -> Vec<u32> {
+        let (a, b) = self.inputs();
+        let mut c = vec![0u32; self.m * self.n];
+        for i in 0..self.m {
+            for j in 0..self.n {
+                let mut acc = 0u32;
+                for kk in 0..self.k {
+                    acc = acc.wrapping_add(a[i * self.k + kk].wrapping_mul(b[kk * self.n + j]));
+                }
+                c[i * self.n + j] = acc;
+            }
+        }
+        c
+    }
+}
+
+impl Kernel for Matmul {
+    fn name(&self) -> &'static str {
+        "matmul"
+    }
+
+    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+        let (a, b, c) = self.layout(cfg);
+        let rt = RtLayout::new(cfg);
+        let tiles_c = self.n / 4;
+        let total_tiles = (self.m / 4) * tiles_c;
+        let mut sym = HashMap::new();
+        rt.add_symbols(&mut sym);
+        sym.insert("mat_a".into(), a);
+        sym.insert("mat_b".into(), b);
+        sym.insert("mat_c".into(), c);
+        sym.insert("TOTAL_TILES".into(), total_tiles as u32);
+        sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
+        sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
+        sym.insert("KBYTES".into(), (self.k * 4) as u32);
+        sym.insert("NBYTES".into(), (self.n * 4) as u32);
+        sym.insert("KDIM".into(), self.k as u32);
+        sym.insert("LOG_K_B".into(), (self.k * 4).trailing_zeros());
+        sym.insert("LOG_N_B".into(), (self.n * 4).trailing_zeros());
+
+        // The sixteen accumulators: c[r][q] = acc[4*r + q].
+        let acc = [
+            "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "a2",
+            "a3", "a4", "a5",
+        ];
+        let mut src = String::new();
+        src.push_str(
+            "\
+            addi sp, sp, -16\n\
+            csrr t0, mhartid\n\
+            sw t0, 0(sp)\n\
+            tile_loop:\n\
+            lw t0, 0(sp)\n\
+            li t1, TOTAL_TILES\n\
+            bge t0, t1, tiles_done\n\
+            # claim the next tile for this core\n\
+            addi t1, t0, NUM_CORES\n\
+            sw t1, 0(sp)\n\
+            # row/col of this 4x4 tile\n\
+            srli t2, t0, LOG_TILES_C\n\
+            slli t2, t2, 2\n\
+            andi t3, t0, TILES_C_MASK\n\
+            slli t3, t3, 2\n\
+            # A row pointers (a0, a1, gp, tp), stride KBYTES\n\
+            slli t4, t2, LOG_K_B\n\
+            la t5, mat_a\n\
+            add a0, t5, t4\n\
+            li t6, KBYTES\n\
+            add a1, a0, t6\n\
+            add gp, a1, t6\n\
+            add tp, gp, t6\n\
+            # B pointer: mat_b + col*4\n\
+            la t5, mat_b\n\
+            slli t4, t3, 2\n\
+            add ra, t5, t4\n\
+            # C tile pointer → 4(sp): mat_c + (row*N + col)*4\n\
+            slli t4, t2, LOG_N_B\n\
+            la t5, mat_c\n\
+            add t5, t5, t4\n\
+            slli t4, t3, 2\n\
+            add t5, t5, t4\n\
+            sw t5, 4(sp)\n",
+        );
+        for r in &acc {
+            src.push_str(&format!("li {r}, 0\n"));
+        }
+        src.push_str(
+            "\
+            li a7, KDIM\n\
+            .align 8\n\
+            kloop:\n\
+            p.lw t0, 4(a0!)\n\
+            p.lw t1, 4(a1!)\n\
+            p.lw t2, 4(gp!)\n\
+            p.lw t3, 4(tp!)\n\
+            lw t4, 0(ra)\n\
+            lw t5, 4(ra)\n\
+            lw t6, 8(ra)\n\
+            lw a6, 12(ra)\n",
+        );
+        let avals = ["t0", "t1", "t2", "t3"];
+        let bvals = ["t4", "t5", "t6", "a6"];
+        for r in 0..4 {
+            for q in 0..4 {
+                src.push_str(&format!("p.mac {}, {}, {}\n", acc[4 * r + q], avals[r], bvals[q]));
+            }
+        }
+        src.push_str(
+            "\
+            addi ra, ra, NBYTES\n\
+            addi a7, a7, -1\n\
+            bnez a7, kloop\n\
+            # store the 4x4 C tile\n\
+            lw t0, 4(sp)\n",
+        );
+        for r in 0..4 {
+            for q in 0..4 {
+                src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
+            }
+            if r != 3 {
+                src.push_str("addi t0, t0, NBYTES\n");
+            }
+        }
+        src.push_str("j tile_loop\ntiles_done:\n");
+        src.push_str(&barrier_asm(0));
+        src.push_str("halt\n");
+        (src, sym)
+    }
+
+    fn setup(&self, cluster: &mut Cluster) {
+        let (a_addr, b_addr, _) = self.layout(&cluster.cfg);
+        let rt = RtLayout::new(&cluster.cfg);
+        rt.init(cluster);
+        let (a, b) = self.inputs();
+        let mut spm = cluster.spm();
+        spm.write_words(a_addr, &a);
+        spm.write_words(b_addr, &b);
+    }
+
+    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+        let (_, _, c_addr) = self.layout(&cluster.cfg);
+        let expect = self.reference();
+        let got = cluster.spm().read_words(c_addr, self.m * self.n);
+        for (i, (g, e)) in got.iter().zip(expect.iter()).enumerate() {
+            if g != e {
+                return Err(format!(
+                    "C[{},{}] = {g:#x}, expected {e:#x}",
+                    i / self.n,
+                    i % self.n
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, _cfg: &ClusterConfig) -> u64 {
+        // One MAC = 2 OPs per (i, j, k).
+        2 * (self.m * self.n * self.k) as u64
+    }
+}

@@ -1,0 +1,137 @@
+//! Bare-metal runtime fragments (paper §7.3.1) emitted as assembly text:
+//! sense-reversal barriers built on RISC-V atomics + MemPool's sleep/wake,
+//! dynamic work-sharing loops (the OpenMP `schedule(dynamic)` primitive),
+//! and DMA programming sequences.
+//!
+//! Every fragment is a plain string the kernel generators splice into
+//! their programs; shared runtime state (barrier counter/epoch, work
+//! counter) lives at harness-placed symbols.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::mem::AddressMap;
+use crate::sim::Cluster;
+
+/// Addresses of the runtime's shared words, placed in the interleaved
+/// region right after the sequential regions (low bank pressure, shared).
+#[derive(Debug, Clone, Copy)]
+pub struct RtLayout {
+    pub barrier_count: u32,
+    pub barrier_epoch: u32,
+    pub work_counter: u32,
+    /// First free interleaved address after the runtime words.
+    pub data_base: u32,
+}
+
+impl RtLayout {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let map = AddressMap::from_config(cfg);
+        let base = map.seq_total_bytes();
+        // Data starts at a full tile-line rotation boundary so that
+        // `data_base + t*64` always falls into tile `t` — the invariant
+        // the local-access kernels (axpy, dotp) compute addresses with.
+        let rotation = (cfg.num_tiles() * 64) as u32;
+        RtLayout {
+            barrier_count: base,
+            barrier_epoch: base + 4,
+            work_counter: base + 8,
+            data_base: (base + 64).next_multiple_of(rotation),
+        }
+    }
+
+    /// Install the runtime symbols into a kernel's symbol table.
+    pub fn add_symbols(&self, sym: &mut HashMap<String, u32>) {
+        sym.insert("rt_barrier_count".into(), self.barrier_count);
+        sym.insert("rt_barrier_epoch".into(), self.barrier_epoch);
+        sym.insert("rt_work_counter".into(), self.work_counter);
+    }
+
+    /// Zero the runtime words (harness setup).
+    pub fn init(&self, cluster: &mut Cluster) {
+        let mut spm = cluster.spm();
+        spm.write_word(self.barrier_count, 0);
+        spm.write_word(self.barrier_epoch, 0);
+        spm.write_word(self.work_counter, 0);
+    }
+}
+
+/// A full-cluster sense-reversal barrier. Clobbers t0–t6. `id` makes the
+/// labels unique when a program contains several barriers.
+///
+/// The last core to arrive resets the counter, bumps the epoch, and sends
+/// a cluster-wide wake-up pulse (paper §7.2: "wake up the complete
+/// cluster in a single store"); everyone else sleeps with `wfi` and
+/// re-checks the epoch on wake (spurious wake-ups re-sleep).
+pub fn barrier_asm(id: usize) -> String {
+    format!(
+        "\
+        # --- barrier {id} --- (fence: RVWMO — drain our stores so peers\n\
+        # observe them once they leave the barrier)\n\
+        fence\n\
+        la t0, rt_barrier_epoch\n\
+        lw t1, 0(t0)\n\
+        la t2, rt_barrier_count\n\
+        li t3, 1\n\
+        amoadd.w t4, t3, (t2)\n\
+        li t5, NUM_CORES\n\
+        addi t5, t5, -1\n\
+        beq t4, t5, bar_last_{id}\n\
+        bar_wait_{id}: wfi\n\
+        lw t6, 0(t0)\n\
+        beq t6, t1, bar_wait_{id}\n\
+        j bar_done_{id}\n\
+        bar_last_{id}: sw zero, 0(t2)\n\
+        addi t6, t1, 1\n\
+        sw t6, 0(t0)\n\
+        fence\n\
+        la t3, CTRL_WAKE_ALL_ADDR\n\
+        sw zero, 0(t3)\n\
+        bar_done_{id}:\n"
+    )
+}
+
+/// Dynamic work sharing: atomically grab the next chunk index from the
+/// shared counter into `dst`. Jump to `done_label` when `dst >= limit`
+/// (limit must already sit in `limit_reg`). Clobbers t0.
+pub fn grab_chunk_asm(dst: &str, limit_reg: &str, done_label: &str) -> String {
+    format!(
+        "\
+        la t0, rt_work_counter\n\
+        li {dst}, 1\n\
+        amoadd.w {dst}, {dst}, (t0)\n\
+        bge {dst}, {limit_reg}, {done_label}\n"
+    )
+}
+
+/// Program the DMA frontend for one transfer and trigger it. All operands
+/// are immediates/symbols; clobbers t0/t1. `to_spm`: 1 = L2→SPM.
+pub fn dma_start_asm(l2_sym: &str, spm_sym: &str, bytes_sym: &str, to_spm: bool) -> String {
+    let dir = if to_spm { 1 } else { 0 };
+    format!(
+        "\
+        la t0, DMA_L2_ADDR\n\
+        li t1, {l2_sym}\n\
+        sw t1, 0(t0)\n\
+        la t0, DMA_SPM_ADDR\n\
+        li t1, {spm_sym}\n\
+        sw t1, 0(t0)\n\
+        la t0, DMA_BYTES_ADDR\n\
+        li t1, {bytes_sym}\n\
+        sw t1, 0(t0)\n\
+        la t0, DMA_TRIGGER_ADDR\n\
+        li t1, {dir}\n\
+        sw t1, 0(t0)\n\
+        fence\n"
+    )
+}
+
+/// Spin until the DMA frontend reports idle. Clobbers t0/t1.
+pub fn dma_wait_asm(id: usize) -> String {
+    format!(
+        "\
+        la t0, DMA_STATUS_ADDR\n\
+        dma_poll_{id}: lw t1, 0(t0)\n\
+        bnez t1, dma_poll_{id}\n"
+    )
+}

@@ -1,0 +1,141 @@
+//! Kernel correctness: every Table 1 kernel and every §8.2.2 application
+//! verified bit-exactly against its host reference on the 16-core
+//! minpool, plus spot checks of the paper-scaled shapes and performance
+//! sanity bounds.
+
+use super::apps::{Bfs, HistEq, Raytrace};
+use super::*;
+use crate::config::ClusterConfig;
+
+fn verify_on_minpool(kernel: &dyn Kernel) -> crate::sim::KernelResult {
+    let cfg = ClusterConfig::minpool();
+    let mut r = run_and_verify(kernel, &cfg);
+    if let Err(e) = kernel.verify(&mut r.cluster) {
+        panic!("{} verification failed: {e}", kernel.name());
+    }
+    r
+}
+
+#[test]
+fn matmul_correct_and_fast() {
+    let k = Matmul::new(16, 16, 16);
+    let r = verify_on_minpool(&k);
+    // Compute-bound: decent IPC even on the small problem.
+    assert!(r.stats.ipc() > 0.5, "matmul IPC {}", r.stats.ipc());
+}
+
+#[test]
+fn matmul_weak_scaled_shape() {
+    let k = Matmul::weak_scaled(256);
+    assert_eq!((k.m / 4) * (k.n / 4), 8 * 256);
+    let k = Matmul::weak_scaled(16);
+    assert_eq!((k.m / 4) * (k.n / 4), 8 * 16);
+    verify_on_minpool(&Matmul::weak_scaled(16));
+}
+
+#[test]
+fn matmul_ops_accounting() {
+    let cfg = ClusterConfig::minpool();
+    let k = Matmul::new(16, 16, 16);
+    let r = verify_on_minpool(&k);
+    // The simulator must have executed at least the mandatory MACs.
+    assert!(r.stats.ops >= k.total_ops(&cfg), "{} < {}", r.stats.ops, k.total_ops(&cfg));
+}
+
+#[test]
+fn axpy_correct_all_local() {
+    let k = Axpy::new(64);
+    let r = verify_on_minpool(&k);
+    // The paper's point: axpy's data accesses are all tile-local; the
+    // only remote traffic is the final barrier (a handful per core).
+    let remote = r.cluster.group_accesses + r.cluster.global_accesses;
+    assert!(
+        remote <= 8 * r.stats.num_cores as u64,
+        "axpy data must stay local (remote = {remote})"
+    );
+    assert!(r.cluster.local_accesses > 16 * 64, "streaming loads must be local");
+}
+
+#[test]
+fn dotp_correct_with_reduction() {
+    let k = Dotp::new(64);
+    let r = verify_on_minpool(&k);
+    // Only the reduction + barrier leave the tiles, not the streaming.
+    assert!(
+        r.cluster.group_accesses + r.cluster.global_accesses <= 10 * r.stats.num_cores as u64,
+        "dotp remote traffic should be the reduction + barrier only"
+    );
+}
+
+#[test]
+fn conv2d_correct() {
+    let r = verify_on_minpool(&Conv2d::new());
+    // Halo rows cross lane/tile boundaries; everything else is local.
+    let total = r.cluster.local_accesses + r.cluster.group_accesses + r.cluster.global_accesses;
+    assert!(
+        r.cluster.local_accesses * 2 > total,
+        "conv2d should be mostly local ({}/{} local)",
+        r.cluster.local_accesses,
+        total
+    );
+}
+
+#[test]
+fn dct_correct() {
+    let r = verify_on_minpool(&Dct::new());
+    assert!(r.stats.ipc() > 0.5, "dct IPC {}", r.stats.ipc());
+}
+
+#[test]
+fn table1_kernels_all_verify() {
+    let cfg = ClusterConfig::minpool();
+    for k in table1_kernels(&cfg) {
+        let mut r = run_and_verify(k.as_ref(), &cfg);
+        if let Err(e) = k.verify(&mut r.cluster) {
+            panic!("{}: {e}", k.name());
+        }
+    }
+}
+
+#[test]
+fn histeq_correct() {
+    verify_on_minpool(&HistEq::new());
+}
+
+#[test]
+fn raytrace_correct() {
+    verify_on_minpool(&Raytrace::new());
+}
+
+#[test]
+fn bfs_correct() {
+    verify_on_minpool(&Bfs::new());
+}
+
+#[test]
+fn compute_kernels_have_high_ipc_on_minpool() {
+    // Fig 14's qualitative claim, scaled down: compute-intensive kernels
+    // keep the cores busy; stalls stay small.
+    let r = verify_on_minpool(&Matmul::weak_scaled(16));
+    let bd = r.stats.breakdown();
+    assert!(bd.ipc() > 0.6, "matmul IPC {}", bd.ipc());
+    assert!(bd.raw < 0.15, "matmul RAW share {}", bd.raw);
+}
+
+#[test]
+fn db_axpy_double_buffered_correct() {
+    let k = super::doublebuf::DbAxpy::new(32, 3);
+    let r = verify_on_minpool(&k);
+    // Several DMA transfers must have flowed (1 prestage skipped, then
+    // per-round loads + write-backs + final).
+    assert!(r.cluster.dma.stats.transfers >= 4, "transfers {}", r.cluster.dma.stats.transfers);
+}
+
+#[test]
+fn db_matmul_double_buffered_correct() {
+    let k = super::doublebuf::DbMatmul::new(16, 16, 16, 3);
+    let r = verify_on_minpool(&k);
+    assert!(r.cluster.dma.stats.transfers >= 4);
+    // Compute-bound: IPC should stay high despite the streaming.
+    assert!(r.stats.ipc() > 0.4, "db matmul IPC {}", r.stats.ipc());
+}

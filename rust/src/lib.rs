@@ -1,0 +1,32 @@
+//! # MemPool — a software reproduction of the MemPool manycore architecture
+//!
+//! This crate reproduces *MemPool: A Scalable Manycore Architecture with a
+//! Low-Latency Shared L1 Memory* (Riedel et al., IEEE TC 2023) as a
+//! cycle-accurate architectural simulator plus the paper's full evaluation
+//! harness. See `DESIGN.md` for the system inventory and the experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! Layer map (three-layer rust+JAX stack):
+//! - **L3** (this crate): the cluster model — Snitch cores, L1 interconnect
+//!   topologies, hybrid addressing, instruction caches, AXI tree + RO cache,
+//!   distributed DMA, synchronization — plus all experiment harnesses.
+//! - **L2/L1** (`python/compile`): the DSP kernels as JAX/Pallas programs,
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **runtime**: loads those artifacts through PJRT (`xla` crate) and runs
+//!   them as golden models for the simulated kernels.
+
+pub mod axi;
+pub mod config;
+pub mod core;
+pub mod dma;
+pub mod energy;
+pub mod icache;
+pub mod interconnect;
+pub mod isa;
+pub mod kernels;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod studies;
+pub mod trafficgen;
+pub mod util;

@@ -1,0 +1,275 @@
+//! The `mempool` CLI — the Layer-3 leader entrypoint: run kernels on the
+//! simulated cluster, drive the paper's experiments, and print reports.
+//!
+//! ```text
+//! mempool run --kernel matmul [--cores 256] [--breakdown]
+//! mempool netsim [--topology Top1|Top4|TopH|all] [--cycles N]
+//! mempool netsim --hybrid
+//! mempool icache-study
+//! mempool rocache-study
+//! mempool dma-study
+//! mempool scaling [--cores 4,16,64,256]
+//! mempool doublebuf [--cores 16]
+//! mempool apps [--cores 16]
+//! mempool report area|instr-energy|power|related-work
+//! mempool golden-check
+//! ```
+
+use mempool::brow;
+use mempool::config::ClusterConfig;
+use mempool::kernels::{run_and_verify, table1_kernels};
+use mempool::studies;
+use mempool::util::bench::section;
+use mempool::util::cli::Args;
+
+fn cfg_for(args: &Args) -> ClusterConfig {
+    let cores: usize = args.parse_or("cores", 256);
+    ClusterConfig::with_cores(cores)
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("run") => cmd_run(&args),
+        Some("netsim") => cmd_netsim(&args),
+        Some("icache-study") => cmd_icache(),
+        Some("rocache-study") => cmd_rocache(),
+        Some("dma-study") => cmd_dma(),
+        Some("scaling") => cmd_scaling(&args),
+        Some("doublebuf") => cmd_doublebuf(&args),
+        Some("apps") => cmd_apps(&args),
+        Some("report") => cmd_report(&args),
+        Some("golden-check") => cmd_golden(),
+        _ => {
+            eprintln!("usage: see `rust/src/main.rs` header or README.md");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_run(args: &Args) {
+    let cfg = cfg_for(args);
+    let which = args.get_or("kernel", "all");
+    section(&format!("Table 1 — kernels on {} cores", cfg.num_cores()));
+    brow!("kernel", "cycles", "IPC", "OP/cycle", "GOPS", "W", "GOPS/W");
+    for k in table1_kernels(&cfg) {
+        if which != "all" && k.name() != which {
+            continue;
+        }
+        let r = run_and_verify(k.as_ref(), &cfg);
+        let s = &r.stats;
+        brow!(
+            k.name(),
+            r.cycles,
+            format!("{:.2}", s.ipc()),
+            format!("{:.0}", s.ops_per_cycle()),
+            format!("{:.0}", s.gops(cfg.clock_hz)),
+            format!("{:.2}", s.power_w(cfg.clock_hz)),
+            format!("{:.0}", s.gops_per_w(cfg.clock_hz))
+        );
+        if args.has("breakdown") {
+            let b = s.breakdown();
+            brow!(
+                "  breakdown",
+                format!("cmp {:.0}%", 100.0 * b.compute),
+                format!("ctl {:.0}%", 100.0 * b.control),
+                format!("syn {:.0}%", 100.0 * b.synchronization),
+                format!("I$ {:.1}%", 100.0 * b.ifetch),
+                format!("lsu {:.1}%", 100.0 * b.lsu),
+                format!("raw {:.1}%", 100.0 * b.raw)
+            );
+        }
+    }
+}
+
+fn cmd_netsim(args: &Args) {
+    let cycles: u64 = args.parse_or("cycles", 4000);
+    if args.has("hybrid") {
+        section("Fig 5 — TopH with hybrid addressing");
+        brow!("p_local", "load", "throughput", "avg latency");
+        for (p, pts) in studies::fig5(cycles) {
+            for pt in pts {
+                brow!(
+                    format!("{p:.2}"),
+                    format!("{:.2}", pt.lambda),
+                    format!("{:.3}", pt.throughput),
+                    format!("{:.1}", pt.avg_latency)
+                );
+            }
+        }
+        return;
+    }
+    section("Fig 4 — topology throughput/latency vs load");
+    brow!("topology", "load", "throughput", "avg latency", "saturated");
+    let only = args.get_or("topology", "all");
+    for pt in studies::fig4(cycles) {
+        if only != "all" && pt.topology.name() != only {
+            continue;
+        }
+        brow!(
+            pt.topology.name(),
+            format!("{:.2}", pt.lambda),
+            format!("{:.3}", pt.throughput),
+            format!("{:.1}", pt.avg_latency),
+            pt.saturated
+        );
+    }
+}
+
+fn cmd_icache() {
+    section("Fig 6/7 — instruction cache optimization steps (per tile)");
+    brow!("config", "kGE", "small mW", "big mW", "small cyc", "big cyc", "tile mW (big)");
+    for r in studies::fig6_icache() {
+        brow!(
+            r.config,
+            r.area_kge,
+            format!("{:.2}", r.small_icache_mw),
+            format!("{:.2}", r.big_icache_mw),
+            r.small_cycles,
+            r.big_cycles,
+            format!("{:.2}", r.big_tile_mw)
+        );
+    }
+}
+
+fn cmd_rocache() {
+    section("§5.5 — RO cache / AXI radix on a cold-start kernel");
+    brow!("config", "cycles", "speedup");
+    for r in studies::rocache_study() {
+        brow!(r.label, r.cycles, format!("{:.2}x", r.speedup_vs_cacheless));
+    }
+}
+
+fn cmd_dma() {
+    section("Fig 10 — AXI utilization vs transfer size per DMA backends/group");
+    brow!("backends", "KiB", "utilization", "cycles");
+    for r in studies::fig10_dma() {
+        brow!(
+            r.backends_per_group,
+            r.bytes / 1024,
+            format!("{:.2}", r.utilization),
+            r.completion_cycles
+        );
+    }
+}
+
+fn cmd_scaling(args: &Args) {
+    let cores: Vec<usize> = args
+        .list("cores")
+        .map(|v| v.iter().map(|s| s.parse().expect("core count")).collect())
+        .unwrap_or_else(|| vec![4, 16, 64]);
+    section("Fig 13 — weak scaling vs ideal single-core");
+    brow!("kernel", "cores", "speedup", "w/o barrier", "ideal");
+    for r in studies::fig13_scaling(&cores) {
+        brow!(
+            r.kernel,
+            r.cores,
+            format!("{:.1}", r.speedup),
+            format!("{:.1}", r.speedup_no_barrier),
+            format!("{:.0}", r.ideal)
+        );
+    }
+}
+
+fn cmd_doublebuf(args: &Args) {
+    let cfg = cfg_for(args);
+    section("Fig 15 — double-buffered kernels");
+    brow!("kernel", "cycles", "IPC", "OP/cycle", "compute frac", "DMA txns", "DMA bytes");
+    for r in studies::fig15_doublebuf(&cfg) {
+        brow!(
+            r.kernel,
+            r.cycles,
+            format!("{:.2}", r.ipc),
+            format!("{:.0}", r.ops_per_cycle),
+            format!("{:.2}", r.compute_fraction),
+            r.dma_transfers,
+            r.dma_bytes
+        );
+    }
+}
+
+fn cmd_apps(args: &Args) {
+    let cfg = cfg_for(args);
+    section("§8.2.2 — applications (fraction of ideal speedup)");
+    brow!("app", "cycles", "of ideal", "sync share");
+    for r in studies::apps_study(&cfg) {
+        brow!(
+            r.app,
+            r.cycles,
+            format!("{:.0}%", 100.0 * r.fraction_of_ideal),
+            format!("{:.0}%", 100.0 * r.sync_share)
+        );
+    }
+}
+
+fn cmd_report(args: &Args) {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("area") => {
+            let cfg = ClusterConfig::mempool();
+            let a = studies::fig12_area(&cfg);
+            section("Fig 12 — area breakdown (kGE)");
+            brow!("component", "kGE");
+            brow!("snitch cores (tile)", a.snitch_core);
+            brow!("IPUs (tile)", a.ipu);
+            brow!("icache (tile)", a.icache);
+            brow!("SPM banks (tile)", a.spm_banks);
+            brow!("tile xbar", a.tile_xbar);
+            brow!("tile other", a.tile_other);
+            brow!("tile total", a.tile_total());
+            brow!("group interconnect", a.group_interconnect);
+            brow!("DMA", a.dma);
+            brow!("AXI + RO cache", a.axi_ro);
+            brow!("group total", format!("{:.0}", a.group_total(cfg.tiles_per_group)));
+        }
+        Some("instr-energy") => {
+            section("Fig 16 — energy per instruction (pJ/core/cycle)");
+            brow!("instruction", "pJ");
+            for r in studies::fig16_instr_energy() {
+                brow!(r.instr, format!("{:.2}", r.model_pj));
+            }
+        }
+        Some("power") => {
+            let cores: usize = args.parse_or("cores", 256);
+            let cfg = ClusterConfig::with_cores(cores);
+            let (r, c, n, b) = studies::fig17_power(&cfg);
+            section("Fig 17 — hierarchical power breakdown (matmul)");
+            brow!("total", format!("{:.2} W", r.stats.power_w(cfg.clock_hz)));
+            brow!("cores+icache", format!("{:.0}%", 100.0 * c));
+            brow!("SPM interconnect", format!("{:.0}%", 100.0 * n));
+            brow!("SPM banks", format!("{:.0}%", 100.0 * b));
+        }
+        Some("related-work") => {
+            section("Table 2 — qualitative comparison (paper data)");
+            brow!("architecture", "ISA", "cluster", "total", "shared-L1", "indep. PEs");
+            for (a, isa, cc, t, l1, ind) in [
+                ("GAP9", "32-bit RISC-V", "9", "9", "yes", "yes"),
+                ("RC64", "32-bit VLIW", "64", "64", "yes", "yes"),
+                ("Manticore", "32-bit RISC-V", "8", "4096", "yes", "yes"),
+                ("MPPA3", "64-bit VLIW", "16", "80", "no", "yes"),
+                ("ET-SoC-1", "64-bit RISC-V", "32", "1088", "no", "yes"),
+                ("H100", "32/64-bit PTX", "128", "18432", "yes", "no (SIMT)"),
+                ("MemPool (this)", "32-bit RISC-V", "256", "256", "yes", "yes"),
+            ] {
+                brow!(a, isa, cc, t, l1, ind);
+            }
+        }
+        _ => eprintln!("report: area | instr-energy | power | related-work"),
+    }
+}
+
+fn cmd_golden() {
+    use mempool::runtime::{artifacts_available, Runtime};
+    if !artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::new().expect("PJRT client");
+    println!("PJRT platform: {}", rt.platform());
+    let a: Vec<i32> = (0..64 * 32).map(|i| (i % 7) as i32).collect();
+    let b: Vec<i32> = (0..32 * 32).map(|i| (i % 5) as i32).collect();
+    let out = rt
+        .run_i32("matmul", &[(&a, &[64, 32]), (&b, &[32, 32])])
+        .expect("golden matmul");
+    println!("golden matmul out[0..4] = {:?}", &out[..4]);
+    println!("golden-check OK");
+}

@@ -1,0 +1,178 @@
+//! The cluster address map and the hybrid addressing scheme (paper §3.2).
+//!
+//! MemPool's L1 SPM is word-interleaved across all banks to spread accesses.
+//! The *hybrid* scheme carves the first `2^(t+s+b+2)` bytes into per-tile
+//! *sequential regions*: within them, contiguous addresses stay inside one
+//! tile (traversing bank rows), while addresses beyond stay fully
+//! interleaved. The scramble is a pure bit-field swap — implementable in
+//! hardware as a wire crossing plus a multiplexer — and therefore a
+//! bijection, which the property tests check.
+
+/// Cluster control registers (wake-up etc.) live here.
+pub const CTRL_BASE: u32 = 0x4000_0000;
+pub const CTRL_SIZE: u32 = 0x1000;
+
+/// L2 / system memory (instructions + DMA-managed data).
+pub const L2_BASE: u32 = 0x8000_0000;
+pub const L2_SIZE: u32 = 32 << 20; // 32 MiB
+
+/// Which top-level region an address falls into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    /// L1 SPM, with the physical bank location after scrambling.
+    Spm(Location),
+    /// Cluster control registers (offset within the region).
+    Ctrl(u32),
+    /// L2 memory (offset within the region).
+    L2(u32),
+    /// Unmapped.
+    Invalid,
+}
+
+/// Physical location of a word in the L1 SPM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Location {
+    /// Global tile index (0..num_tiles).
+    pub tile: u32,
+    /// Bank within the tile (0..banks_per_tile).
+    pub bank: u32,
+    /// Word row within the bank (0..bank_words).
+    pub row: u32,
+}
+
+/// Precomputed address decoding parameters for a cluster configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressMap {
+    /// log2(banks per tile) — `b` in the paper.
+    pub bank_bits: u32,
+    /// log2(number of tiles) — `t` in the paper.
+    pub tile_bits: u32,
+    /// log2(rows per bank dedicated to the sequential region) — `s`.
+    /// 0 disables the hybrid scheme.
+    pub seq_bits: u32,
+    /// log2(words per bank).
+    pub row_bits: u32,
+    /// Total SPM size in bytes.
+    pub spm_bytes: u32,
+    /// Whether scrambling is enabled.
+    pub hybrid: bool,
+}
+
+impl AddressMap {
+    pub fn new(num_tiles: usize, banks_per_tile: usize, bank_words: usize, seq_rows_log2: u32) -> Self {
+        let bank_bits = banks_per_tile.trailing_zeros();
+        let tile_bits = num_tiles.trailing_zeros();
+        let row_bits = bank_words.trailing_zeros();
+        let spm_bytes = (num_tiles * banks_per_tile * bank_words * 4) as u32;
+        AddressMap {
+            bank_bits,
+            tile_bits,
+            seq_bits: seq_rows_log2,
+            row_bits,
+            spm_bytes,
+            hybrid: seq_rows_log2 > 0,
+        }
+    }
+
+    pub fn from_config(cfg: &crate::config::ClusterConfig) -> Self {
+        AddressMap::new(cfg.num_tiles(), cfg.banks_per_tile, cfg.bank_words, cfg.seq_rows_log2)
+    }
+
+    /// Size of all sequential regions together: `2^(t+s+b+2)` bytes.
+    pub fn seq_total_bytes(&self) -> u32 {
+        if !self.hybrid {
+            return 0;
+        }
+        1u32 << (self.tile_bits + self.seq_bits + self.bank_bits + 2)
+    }
+
+    /// Size of one tile's sequential region: `2^(s+b+2)` bytes.
+    pub fn seq_tile_bytes(&self) -> u32 {
+        if !self.hybrid {
+            return 0;
+        }
+        1u32 << (self.seq_bits + self.bank_bits + 2)
+    }
+
+    /// Base address of tile `tile`'s sequential region.
+    pub fn seq_base_of_tile(&self, tile: u32) -> u32 {
+        tile * self.seq_tile_bytes()
+    }
+
+    /// The hardware scramble: map a *logical* SPM byte address to the
+    /// *physical* interleaved address whose standard decode yields the
+    /// hybrid placement. Identity outside the sequential region.
+    ///
+    /// Inside the region, the `s` row bits and `t` tile bits swap places:
+    /// logical `[ row_hi | tile | row_lo(s) | bank | byte ]` becomes
+    /// physical `[ row_hi | row_lo(s) | tile | bank | byte ]` where the
+    /// physical decode is `[ row | tile | bank | byte ]`.
+    pub fn scramble(&self, addr: u32) -> u32 {
+        if !self.hybrid || addr >= self.seq_total_bytes() {
+            return addr;
+        }
+        let low_bits = 2 + self.bank_bits; // byte + bank, untouched
+        let low_mask = (1u32 << low_bits) - 1;
+        let low = addr & low_mask;
+        let s_mask = (1u32 << self.seq_bits) - 1;
+        let t_mask = (1u32 << self.tile_bits) - 1;
+        // Logical layout inside the region: [ tile | row_lo | bank | byte ].
+        let row_lo = (addr >> low_bits) & s_mask;
+        let tile = (addr >> (low_bits + self.seq_bits)) & t_mask;
+        // Physical interleaved layout: [ row | tile | bank | byte ].
+        low | (tile << low_bits) | (row_lo << (low_bits + self.tile_bits))
+    }
+
+    /// Inverse of `scramble` (used by the DMA splitter and debug tooling).
+    pub fn descramble(&self, addr: u32) -> u32 {
+        if !self.hybrid || addr >= self.seq_total_bytes() {
+            return addr;
+        }
+        let low_bits = 2 + self.bank_bits;
+        let low_mask = (1u32 << low_bits) - 1;
+        let low = addr & low_mask;
+        let s_mask = (1u32 << self.seq_bits) - 1;
+        let t_mask = (1u32 << self.tile_bits) - 1;
+        let tile = (addr >> low_bits) & t_mask;
+        let row_lo = (addr >> (low_bits + self.tile_bits)) & s_mask;
+        low | (row_lo << low_bits) | (tile << (low_bits + self.seq_bits))
+    }
+
+    /// Decode a physical (post-scramble) SPM address into its bank location
+    /// using the standard interleaved layout `[ row | tile | bank | byte ]`.
+    fn decode_interleaved(&self, addr: u32) -> Location {
+        let word = addr >> 2;
+        let bank = word & ((1 << self.bank_bits) - 1);
+        let tile = (word >> self.bank_bits) & ((1 << self.tile_bits) - 1);
+        let row = word >> (self.bank_bits + self.tile_bits);
+        Location { tile, bank, row }
+    }
+
+    /// Full decode: region classification + scramble + interleaved decode.
+    pub fn decode(&self, addr: u32) -> Region {
+        if addr < self.spm_bytes {
+            return Region::Spm(self.decode_interleaved(self.scramble(addr)));
+        }
+        if (CTRL_BASE..CTRL_BASE + CTRL_SIZE).contains(&addr) {
+            return Region::Ctrl(addr - CTRL_BASE);
+        }
+        if (L2_BASE..L2_BASE.wrapping_add(L2_SIZE)).contains(&addr) {
+            return Region::L2(addr - L2_BASE);
+        }
+        Region::Invalid
+    }
+
+    /// Logical SPM address of a physical bank location (inverse decode,
+    /// including descrambling). Used to build data layouts from locations.
+    pub fn encode(&self, loc: Location) -> u32 {
+        let word = (loc.row << (self.bank_bits + self.tile_bits))
+            | (loc.tile << self.bank_bits)
+            | loc.bank;
+        self.descramble(word << 2)
+    }
+
+    /// Flat bank index of a location.
+    pub fn flat_bank(&self, loc: Location) -> u32 {
+        (loc.tile << self.bank_bits) | loc.bank
+    }
+}

@@ -1,0 +1,152 @@
+//! A 1 KiB SPM SRAM bank with its controller: one access per cycle, a
+//! small ALU for RISC-V atomic memory operations, and an LR/SC reservation
+//! register (paper §7.2).
+
+use crate::isa::AmoOp;
+
+/// Memory operation carried by an L1 interconnect request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemOp {
+    /// Word/sub-word read (lane handling is done by the core's LSU; banks
+    /// always serve full words).
+    Read,
+    /// Write with a byte strobe mask (bit i set = byte lane i written).
+    Write { strb: u8 },
+    /// Atomic read-modify-write; returns the old value.
+    Amo(AmoOp),
+    /// Load-reserved: read + place a reservation.
+    LoadReserved,
+    /// Store-conditional: returns 0 on success, 1 on failure.
+    StoreConditional,
+}
+
+impl MemOp {
+    /// Does this operation produce a response the core waits for?
+    pub fn has_response(&self) -> bool {
+        !matches!(self, MemOp::Write { .. })
+    }
+
+    pub fn is_write_like(&self) -> bool {
+        matches!(
+            self,
+            MemOp::Write { .. } | MemOp::Amo(_) | MemOp::StoreConditional
+        )
+    }
+}
+
+/// A request presented to a bank in a given cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct BankRequest {
+    /// Word row within the bank.
+    pub row: u32,
+    pub op: MemOp,
+    /// Store data / AMO operand.
+    pub wdata: u32,
+    /// Issuing core's global ID (for the reservation register).
+    pub core: u32,
+}
+
+/// The bank's combinational response.
+#[derive(Debug, Clone, Copy)]
+pub struct BankResponse {
+    /// Read data (old value for AMOs; 0/1 for SC).
+    pub rdata: u32,
+}
+
+/// LR/SC reservation held by the bank controller.
+#[derive(Debug, Clone, Copy)]
+struct Reservation {
+    core: u32,
+    row: u32,
+}
+
+/// A single SRAM bank plus controller state.
+#[derive(Debug, Clone)]
+pub struct SramBank {
+    data: Vec<u32>,
+    reservation: Option<Reservation>,
+    /// Access counters for the energy model.
+    pub reads: u64,
+    pub writes: u64,
+    pub amos: u64,
+}
+
+impl SramBank {
+    pub fn new(words: usize) -> Self {
+        SramBank { data: vec![0; words], reservation: None, reads: 0, writes: 0, amos: 0 }
+    }
+
+    pub fn words(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Direct (zero-time) word access for harnesses and the DMA data path.
+    pub fn peek(&self, row: u32) -> u32 {
+        self.data[row as usize]
+    }
+
+    pub fn poke(&mut self, row: u32, value: u32) {
+        self.data[row as usize] = value;
+    }
+
+    /// Serve one request. The controller is single-ported: the caller
+    /// (tile crossbar) must arbitrate so at most one request arrives per
+    /// cycle.
+    pub fn access(&mut self, req: &BankRequest) -> BankResponse {
+        let row = req.row as usize;
+        debug_assert!(row < self.data.len(), "bank row {row} out of range");
+        let old = self.data[row];
+        match req.op {
+            MemOp::Read => {
+                self.reads += 1;
+                BankResponse { rdata: old }
+            }
+            MemOp::Write { strb } => {
+                self.writes += 1;
+                let mut v = old;
+                for lane in 0..4 {
+                    if strb & (1 << lane) != 0 {
+                        let mask = 0xFFu32 << (8 * lane);
+                        v = (v & !mask) | (req.wdata & mask);
+                    }
+                }
+                self.data[row] = v;
+                self.invalidate_reservation(req.row);
+                BankResponse { rdata: 0 }
+            }
+            MemOp::Amo(op) => {
+                self.amos += 1;
+                self.data[row] = op.apply(old, req.wdata);
+                self.invalidate_reservation(req.row);
+                BankResponse { rdata: old }
+            }
+            MemOp::LoadReserved => {
+                self.reads += 1;
+                self.reservation = Some(Reservation { core: req.core, row: req.row });
+                BankResponse { rdata: old }
+            }
+            MemOp::StoreConditional => {
+                let ok = matches!(
+                    self.reservation,
+                    Some(Reservation { core, row: r }) if core == req.core && r == req.row
+                );
+                if ok {
+                    self.writes += 1;
+                    self.data[row] = req.wdata;
+                    self.reservation = None;
+                    BankResponse { rdata: 0 }
+                } else {
+                    BankResponse { rdata: 1 }
+                }
+            }
+        }
+    }
+
+    /// Any store to a reserved row kills the reservation ("valid until the
+    /// memory location changes").
+    fn invalidate_reservation(&mut self, row: u32) {
+        if matches!(self.reservation, Some(Reservation { row: r, .. }) if r == row) {
+            self.reservation = None;
+        }
+    }
+}

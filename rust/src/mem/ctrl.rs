@@ -1,0 +1,67 @@
+//! Cluster control registers (paper §5.4): wake-up pulses, core count,
+//! and RO-cache control. Mapped at `CTRL_BASE`.
+
+/// Register offsets (byte offsets within the control region).
+pub const CTRL_WAKE_CORE: u32 = 0x00; // write core id → wake that core
+pub const CTRL_WAKE_ALL: u32 = 0x04; // write anything → wake every core
+pub const CTRL_WAKE_TILE: u32 = 0x08; // write tile id → wake its cores
+pub const CTRL_WAKE_GROUP: u32 = 0x0C; // write group id → wake its cores
+pub const CTRL_NUM_CORES: u32 = 0x10; // read-only
+pub const CTRL_RO_FLUSH: u32 = 0x14; // write → flush RO caches
+// DMA frontend registers (paper §5.3: a single configuration frontend).
+pub const CTRL_DMA_L2: u32 = 0x20; // L2 byte offset
+pub const CTRL_DMA_SPM: u32 = 0x24; // logical SPM byte address
+pub const CTRL_DMA_BYTES: u32 = 0x28; // transfer length
+pub const CTRL_DMA_TRIGGER: u32 = 0x2C; // write 1 = L2→SPM, 0 = SPM→L2
+pub const CTRL_DMA_STATUS: u32 = 0x30; // read: 1 while a transfer runs
+
+/// Side effect of a control-register store, interpreted by the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtrlEffect {
+    None,
+    WakeCore(u32),
+    WakeAll,
+    WakeTile(u32),
+    WakeGroup(u32),
+    RoFlush,
+    /// Write to a DMA frontend register (handled by the cluster).
+    DmaReg(u32, u32),
+    /// Trigger a DMA transfer (1 = to SPM).
+    DmaTrigger(bool),
+}
+
+/// Control register file.
+#[derive(Debug, Clone)]
+pub struct CtrlRegs {
+    pub num_cores: u32,
+    pub cores_per_tile: u32,
+    pub cores_per_group: u32,
+}
+
+impl CtrlRegs {
+    pub fn new(num_cores: u32, cores_per_tile: u32, cores_per_group: u32) -> Self {
+        CtrlRegs { num_cores, cores_per_tile, cores_per_group }
+    }
+
+    /// Handle a store; returns the wake-up effect for the cluster to apply.
+    pub fn store(&mut self, offset: u32, value: u32) -> CtrlEffect {
+        match offset {
+            CTRL_WAKE_CORE => CtrlEffect::WakeCore(value),
+            CTRL_WAKE_ALL => CtrlEffect::WakeAll,
+            CTRL_WAKE_TILE => CtrlEffect::WakeTile(value),
+            CTRL_WAKE_GROUP => CtrlEffect::WakeGroup(value),
+            CTRL_RO_FLUSH => CtrlEffect::RoFlush,
+            CTRL_DMA_L2 | CTRL_DMA_SPM | CTRL_DMA_BYTES => CtrlEffect::DmaReg(offset, value),
+            CTRL_DMA_TRIGGER => CtrlEffect::DmaTrigger(value != 0),
+            _ => CtrlEffect::None,
+        }
+    }
+
+    /// Handle a load.
+    pub fn load(&self, offset: u32) -> u32 {
+        match offset {
+            CTRL_NUM_CORES => self.num_cores,
+            _ => 0,
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! L2 / system memory model (paper §5.4): a large, long-latency memory
+//! holding the program binary and DMA-managed data. Timing (12-cycle
+//! latency, 256 B/cycle) is enforced by the AXI model; this module is the
+//! functional backing store, paged so a 32 MiB address space costs only
+//! what is touched.
+
+const PAGE_WORDS: usize = 1 << 14; // 64 KiB pages
+
+/// Functional L2 backing store, word-granular, zero-initialized.
+#[derive(Debug, Default)]
+pub struct L2Memory {
+    pages: Vec<Option<Box<[u32]>>>,
+}
+
+impl L2Memory {
+    pub fn new(size_bytes: u32) -> Self {
+        let words = (size_bytes as usize) / 4;
+        let n_pages = words.div_ceil(PAGE_WORDS);
+        L2Memory { pages: (0..n_pages).map(|_| None).collect() }
+    }
+
+    fn page_mut(&mut self, word: usize) -> &mut [u32] {
+        let idx = word / PAGE_WORDS;
+        self.pages[idx].get_or_insert_with(|| vec![0u32; PAGE_WORDS].into_boxed_slice())
+    }
+
+    /// Read the word at byte offset `offset` (must be word-aligned).
+    pub fn read_word(&self, offset: u32) -> u32 {
+        debug_assert_eq!(offset % 4, 0);
+        let word = (offset / 4) as usize;
+        match &self.pages[word / PAGE_WORDS] {
+            Some(p) => p[word % PAGE_WORDS],
+            None => 0,
+        }
+    }
+
+    /// Write the word at byte offset `offset`.
+    pub fn write_word(&mut self, offset: u32, value: u32) {
+        debug_assert_eq!(offset % 4, 0);
+        let word = (offset / 4) as usize;
+        self.page_mut(word)[word % PAGE_WORDS] = value;
+    }
+
+    /// Bulk-load a word slice at byte offset `offset` (harness setup).
+    pub fn load_words(&mut self, offset: u32, words: &[u32]) {
+        for (i, w) in words.iter().enumerate() {
+            self.write_word(offset + 4 * i as u32, *w);
+        }
+    }
+
+    /// Bulk-read `n` words from byte offset `offset`.
+    pub fn read_words(&self, offset: u32, n: usize) -> Vec<u32> {
+        (0..n).map(|i| self.read_word(offset + 4 * i as u32)).collect()
+    }
+}

@@ -1,0 +1,16 @@
+//! Memory system: the shared L1 SPM banks (with their atomic ALUs and
+//! LR/SC reservation registers), the hybrid address scrambler, the L2/SoC
+//! memory model, and the cluster control registers.
+
+mod address;
+mod bank;
+mod ctrl;
+mod l2;
+
+pub use address::{AddressMap, Location, Region, CTRL_BASE, L2_BASE, L2_SIZE};
+pub use bank::{BankRequest, BankResponse, MemOp, SramBank};
+pub use ctrl::{CtrlEffect, CtrlRegs, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_NUM_CORES, CTRL_RO_FLUSH, CTRL_WAKE_ALL, CTRL_WAKE_CORE, CTRL_WAKE_GROUP, CTRL_WAKE_TILE};
+pub use l2::L2Memory;
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,263 @@
+//! Tests for the memory system: scrambler bijection, bank semantics,
+//! LR/SC, control registers, and L2.
+
+use super::*;
+use crate::config::ClusterConfig;
+use crate::isa::AmoOp;
+use crate::util::prop::check;
+
+fn mempool_map() -> AddressMap {
+    AddressMap::from_config(&ClusterConfig::mempool())
+}
+
+#[test]
+fn map_parameters_match_paper() {
+    let m = mempool_map();
+    assert_eq!(m.bank_bits, 4); // 16 banks/tile
+    assert_eq!(m.tile_bits, 6); // 64 tiles
+    assert_eq!(m.row_bits, 8); // 256 words/bank
+    assert_eq!(m.spm_bytes, 1 << 20);
+    assert_eq!(m.seq_tile_bytes(), 4096);
+    assert_eq!(m.seq_total_bytes(), 4096 * 64);
+}
+
+#[test]
+fn interleaved_outside_seq_region() {
+    let m = mempool_map();
+    let base = m.seq_total_bytes();
+    // Consecutive words beyond the sequential region hit consecutive banks.
+    for i in 0..16u32 {
+        match m.decode(base + 4 * i) {
+            Region::Spm(loc) => {
+                assert_eq!(loc.bank, i % 16);
+            }
+            other => panic!("expected SPM, got {other:?}"),
+        }
+    }
+    // Word 16 wraps to the next tile, bank 0.
+    let l0 = match m.decode(base) {
+        Region::Spm(l) => l,
+        _ => unreachable!(),
+    };
+    let l16 = match m.decode(base + 64) {
+        Region::Spm(l) => l,
+        _ => unreachable!(),
+    };
+    assert_eq!(l16.bank, l0.bank);
+    assert_eq!(l16.tile, l0.tile + 1);
+}
+
+#[test]
+fn sequential_region_stays_in_tile() {
+    let m = mempool_map();
+    for tile in [0u32, 1, 5, 63] {
+        let base = m.seq_base_of_tile(tile);
+        for off in (0..m.seq_tile_bytes()).step_by(4) {
+            match m.decode(base + off) {
+                Region::Spm(loc) => {
+                    assert_eq!(loc.tile, tile, "offset {off:#x} escaped tile {tile}");
+                    assert!(loc.row < 64, "sequential rows must be the first 2^s rows");
+                }
+                other => panic!("expected SPM, got {other:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_region_interleaves_banks_within_tile() {
+    // Within a sequential region, consecutive words still rotate across the
+    // tile's banks (the paper keeps byte+bank offsets untouched).
+    let m = mempool_map();
+    let base = m.seq_base_of_tile(3);
+    let mut banks = Vec::new();
+    for i in 0..16u32 {
+        match m.decode(base + 4 * i) {
+            Region::Spm(loc) => banks.push(loc.bank),
+            _ => panic!(),
+        }
+    }
+    let expected: Vec<u32> = (0..16).collect();
+    assert_eq!(banks, expected);
+}
+
+#[test]
+fn hybrid_disabled_is_pure_interleave() {
+    let mut cfg = ClusterConfig::mempool();
+    cfg.seq_rows_log2 = 0;
+    let m = AddressMap::from_config(&cfg);
+    assert!(!m.hybrid);
+    assert_eq!(m.scramble(0x1234), 0x1234);
+    for i in 0..64u32 {
+        match m.decode(4 * i) {
+            Region::Spm(loc) => {
+                assert_eq!(loc.bank, i % 16);
+                assert_eq!(loc.tile, (i / 16) % 64);
+            }
+            _ => panic!(),
+        }
+    }
+}
+
+#[test]
+fn region_classification() {
+    let m = mempool_map();
+    assert!(matches!(m.decode(0), Region::Spm(_)));
+    assert!(matches!(m.decode(m.spm_bytes - 4), Region::Spm(_)));
+    assert!(matches!(m.decode(m.spm_bytes), Region::Invalid));
+    assert_eq!(m.decode(CTRL_BASE + 4), Region::Ctrl(4));
+    assert_eq!(m.decode(L2_BASE), Region::L2(0));
+    assert_eq!(m.decode(L2_BASE + 0x100), Region::L2(0x100));
+    assert!(matches!(m.decode(0x7000_0000), Region::Invalid));
+}
+
+/// The scramble must be a bijection on the SPM address space:
+/// descramble(scramble(a)) == a.
+#[test]
+fn scramble_bijective() {
+    check("scramble bijective", |g| {
+        let m = mempool_map();
+        let addr = g.u32(0..(1 << 18)) << 2;
+        assert_eq!(m.descramble(m.scramble(addr)), addr);
+        assert_eq!(m.scramble(m.descramble(addr)), addr);
+    });
+}
+
+/// encode(decode(a)) == a for all SPM word addresses.
+#[test]
+fn encode_decode_roundtrip() {
+    check("encode/decode roundtrip", |g| {
+        let m = mempool_map();
+        let addr = g.u32(0..(1 << 18)) << 2;
+        match m.decode(addr) {
+            Region::Spm(loc) => assert_eq!(m.encode(loc), addr),
+            other => panic!("expected SPM, got {other:?}"),
+        }
+    });
+}
+
+/// No two distinct addresses map to the same physical location.
+#[test]
+fn decode_injective() {
+    check("decode injective", |g| {
+        let a = g.u32(0..(1 << 18));
+        let b = g.u32(0..(1 << 18));
+        if a == b {
+            return;
+        }
+        let m = mempool_map();
+        let (la, lb) = match (m.decode(a << 2), m.decode(b << 2)) {
+            (Region::Spm(x), Region::Spm(y)) => (x, y),
+            _ => return,
+        };
+        assert_ne!(la, lb);
+    });
+}
+
+/// Scrambling is identity outside the sequential region.
+#[test]
+fn identity_outside_seq() {
+    check("identity outside seq", |g| {
+        let m = mempool_map();
+        let addr = g.u32(0..(1 << 18)) << 2;
+        if addr < m.seq_total_bytes() {
+            return;
+        }
+        assert_eq!(m.scramble(addr), addr);
+    });
+}
+
+#[test]
+fn bank_read_write_strobes() {
+    let mut bank = SramBank::new(256);
+    bank.access(&BankRequest { row: 3, op: MemOp::Write { strb: 0xF }, wdata: 0xDEAD_BEEF, core: 0 });
+    assert_eq!(bank.peek(3), 0xDEAD_BEEF);
+    // Halfword store into the upper lanes.
+    bank.access(&BankRequest { row: 3, op: MemOp::Write { strb: 0xC }, wdata: 0x1234_0000, core: 0 });
+    assert_eq!(bank.peek(3), 0x1234_BEEF);
+    // Byte store into lane 1.
+    bank.access(&BankRequest { row: 3, op: MemOp::Write { strb: 0x2 }, wdata: 0x0000_5500, core: 0 });
+    assert_eq!(bank.peek(3), 0x1234_55EF);
+    let r = bank.access(&BankRequest { row: 3, op: MemOp::Read, wdata: 0, core: 1 });
+    assert_eq!(r.rdata, 0x1234_55EF);
+}
+
+#[test]
+fn bank_amo_returns_old_value() {
+    let mut bank = SramBank::new(16);
+    bank.poke(0, 10);
+    let r = bank.access(&BankRequest { row: 0, op: MemOp::Amo(AmoOp::Add), wdata: 5, core: 0 });
+    assert_eq!(r.rdata, 10);
+    assert_eq!(bank.peek(0), 15);
+    let r = bank.access(&BankRequest { row: 0, op: MemOp::Amo(AmoOp::Swap), wdata: 99, core: 1 });
+    assert_eq!(r.rdata, 15);
+    assert_eq!(bank.peek(0), 99);
+}
+
+#[test]
+fn lrsc_success_and_failure() {
+    let mut bank = SramBank::new(16);
+    bank.poke(2, 7);
+    // LR by core 0, SC by core 0 → success.
+    let r = bank.access(&BankRequest { row: 2, op: MemOp::LoadReserved, wdata: 0, core: 0 });
+    assert_eq!(r.rdata, 7);
+    let r = bank.access(&BankRequest { row: 2, op: MemOp::StoreConditional, wdata: 8, core: 0 });
+    assert_eq!(r.rdata, 0);
+    assert_eq!(bank.peek(2), 8);
+    // SC without reservation → failure.
+    let r = bank.access(&BankRequest { row: 2, op: MemOp::StoreConditional, wdata: 9, core: 0 });
+    assert_eq!(r.rdata, 1);
+    assert_eq!(bank.peek(2), 8);
+}
+
+#[test]
+fn lrsc_broken_by_other_store() {
+    let mut bank = SramBank::new(16);
+    bank.access(&BankRequest { row: 5, op: MemOp::LoadReserved, wdata: 0, core: 0 });
+    // An intervening write to the same row invalidates the reservation.
+    bank.access(&BankRequest { row: 5, op: MemOp::Write { strb: 0xF }, wdata: 1, core: 1 });
+    let r = bank.access(&BankRequest { row: 5, op: MemOp::StoreConditional, wdata: 2, core: 0 });
+    assert_eq!(r.rdata, 1, "SC must fail after an intervening store");
+    // A write to a *different* row leaves the reservation alone.
+    bank.access(&BankRequest { row: 6, op: MemOp::LoadReserved, wdata: 0, core: 0 });
+    bank.access(&BankRequest { row: 7, op: MemOp::Write { strb: 0xF }, wdata: 1, core: 1 });
+    let r = bank.access(&BankRequest { row: 6, op: MemOp::StoreConditional, wdata: 2, core: 0 });
+    assert_eq!(r.rdata, 0);
+}
+
+#[test]
+fn lrsc_stolen_reservation() {
+    // A later LR by another core replaces the reservation (single
+    // reservation register per bank controller).
+    let mut bank = SramBank::new(16);
+    bank.access(&BankRequest { row: 1, op: MemOp::LoadReserved, wdata: 0, core: 0 });
+    bank.access(&BankRequest { row: 1, op: MemOp::LoadReserved, wdata: 0, core: 1 });
+    let r = bank.access(&BankRequest { row: 1, op: MemOp::StoreConditional, wdata: 5, core: 0 });
+    assert_eq!(r.rdata, 1);
+    let r = bank.access(&BankRequest { row: 1, op: MemOp::StoreConditional, wdata: 6, core: 1 });
+    assert_eq!(r.rdata, 0);
+    assert_eq!(bank.peek(1), 6);
+}
+
+#[test]
+fn ctrl_effects() {
+    let mut c = CtrlRegs::new(256, 4, 64);
+    assert_eq!(c.store(CTRL_WAKE_CORE, 17), CtrlEffect::WakeCore(17));
+    assert_eq!(c.store(CTRL_WAKE_ALL, 0), CtrlEffect::WakeAll);
+    assert_eq!(c.store(CTRL_WAKE_TILE, 3), CtrlEffect::WakeTile(3));
+    assert_eq!(c.store(CTRL_WAKE_GROUP, 1), CtrlEffect::WakeGroup(1));
+    assert_eq!(c.store(0xFF0, 1), CtrlEffect::None);
+    assert_eq!(c.load(super::ctrl::CTRL_NUM_CORES), 256);
+}
+
+#[test]
+fn l2_paged_store() {
+    let mut l2 = L2Memory::new(32 << 20);
+    assert_eq!(l2.read_word(0), 0);
+    l2.write_word(0x10_0000, 42);
+    assert_eq!(l2.read_word(0x10_0000), 42);
+    l2.load_words(0x20_0000, &[1, 2, 3]);
+    assert_eq!(l2.read_words(0x20_0000, 3), vec![1, 2, 3]);
+    // Untouched pages read as zero and cost nothing.
+    assert_eq!(l2.read_word(0x1F0_0000), 0);
+}

@@ -1,0 +1,640 @@
+//! The full MemPool cluster model.
+//!
+//! `Cluster::step()` advances one cycle in a fixed phase order chosen so
+//! the conflict-free latencies match the paper exactly: 1 cycle to a
+//! tile-local bank, 3 cycles within a group, 5 cycles across groups
+//! (TopH), 5 cycles remote for the butterflies:
+//!
+//! 1. deliver due completions to the cores,
+//! 2. cores fetch + issue (may send requests to banks / network / AXI),
+//! 3. pop network request arrivals into the destination banks' queues,
+//! 4. banks serve one request each; responses head home,
+//! 5. instruction caches advance (refills through the AXI tree),
+//! 6. the interconnect arbitrates,
+//! 7. due control-register effects apply (wake pulses, DMA frontend).
+
+use std::collections::VecDeque;
+
+use crate::axi::AxiSystem;
+use crate::config::ClusterConfig;
+use crate::core::{CoreCtx, MemCompletion, MemRequestOut, Snitch};
+use crate::dma::{DmaEngine, DmaTransfer};
+use crate::energy::{EnergyBook, EnergyParams};
+use crate::icache::{FetchResult, TileICache};
+use crate::interconnect::{build_network, Flit, L1Network};
+use crate::isa::{Csr, Program};
+use crate::mem::{
+    AddressMap, BankRequest, CtrlEffect, CtrlRegs, L2Memory, MemOp, Region, SramBank,
+    CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS,
+};
+use crate::sim::stats::ClusterStats;
+
+/// Depth of the per-bank request queue inside the tile crossbar.
+const BANK_QUEUE_DEPTH: usize = 4;
+/// Cycles for a core request to reach the cluster control registers.
+const CTRL_LATENCY: u64 = 3;
+
+/// One tile: cores, icache, SPM banks and their queues.
+pub struct Tile {
+    pub cores: Vec<Snitch>,
+    pub icache: TileICache,
+    pub banks: Vec<SramBank>,
+    /// Per-bank input queues (the 5×16 tile crossbar's bank arbiters).
+    bank_q: Vec<VecDeque<Flit>>,
+    /// Responses awaiting a slot on the response network.
+    resp_out: VecDeque<Flit>,
+    /// Completions scheduled for delivery: (ready, lane, completion).
+    deliveries: Vec<(u64, u8, MemCompletion)>,
+}
+
+/// A pending control-register or L2 access by a core.
+struct PendingSys {
+    ready: u64,
+    tile: usize,
+    lane: u8,
+    tag: u8,
+    kind: SysKind,
+}
+
+enum SysKind {
+    CtrlLoad(u32),
+    CtrlStore(u32, u32),
+    /// L2 word read at byte offset.
+    L2Load(u32),
+    /// Write already performed; just complete.
+    Ack,
+}
+
+/// The cluster.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub map: AddressMap,
+    pub tiles: Vec<Tile>,
+    net: Box<dyn L1Network>,
+    pub l2: L2Memory,
+    pub axi: AxiSystem,
+    pub dma: DmaEngine,
+    ctrl: CtrlRegs,
+    pub program: Program,
+    now: u64,
+    pending_sys: Vec<PendingSys>,
+    /// DMA frontend registers (written through the control region).
+    dma_l2: u32,
+    dma_spm: u32,
+    dma_bytes: u32,
+    /// Completion cycle of the most recent DMA transfer.
+    pub dma_done_at: u64,
+    /// Remote-traffic classification counters.
+    pub local_accesses: u64,
+    pub group_accesses: u64,
+    pub global_accesses: u64,
+    pub energy_params: EnergyParams,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterConfig, program: Program) -> Self {
+        cfg.validate().expect("invalid cluster configuration");
+        let map = AddressMap::from_config(&cfg);
+        let net = build_network(&cfg);
+        let tiles = (0..cfg.num_tiles())
+            .map(|t| Tile {
+                cores: (0..cfg.cores_per_tile)
+                    .map(|l| {
+                        Snitch::new((t * cfg.cores_per_tile + l) as u32, l, cfg.scoreboard_depth)
+                    })
+                    .collect(),
+                icache: TileICache::new(cfg.icache, cfg.cores_per_tile),
+                banks: (0..cfg.banks_per_tile).map(|_| SramBank::new(cfg.bank_words)).collect(),
+                bank_q: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
+                resp_out: VecDeque::new(),
+                deliveries: Vec::new(),
+            })
+            .collect();
+        let axi = AxiSystem::new(
+            cfg.axi,
+            cfg.num_groups,
+            cfg.tiles_per_group + cfg.dma.backends_per_group,
+        );
+        let ctrl = CtrlRegs::new(
+            cfg.num_cores() as u32,
+            cfg.cores_per_tile as u32,
+            (cfg.tiles_per_group * cfg.cores_per_tile) as u32,
+        );
+        let dma = DmaEngine::new(&cfg);
+        Cluster {
+            map,
+            tiles,
+            net,
+            l2: L2Memory::new(crate::mem::L2_SIZE),
+            axi,
+            dma,
+            ctrl,
+            program,
+            now: 0,
+            pending_sys: Vec::new(),
+            dma_l2: 0,
+            dma_spm: 0,
+            dma_bytes: 0,
+            dma_done_at: 0,
+            local_accesses: 0,
+            group_accesses: 0,
+            global_accesses: 0,
+            energy_params: EnergyParams::default(),
+            cfg,
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Reset every core to `entry`, stacks placed in the tiles'
+    /// sequential regions (the bare-metal runtime's job, §7.3.1).
+    pub fn reset_cores(&mut self, entry: u32) {
+        let stack = self.cfg.stack_bytes_per_core() as u32;
+        for (t, tile) in self.tiles.iter_mut().enumerate() {
+            let seq_base = self.map.seq_base_of_tile(t as u32);
+            for (l, core) in tile.cores.iter_mut().enumerate() {
+                // Stack grows down from the top of the core's slice.
+                let sp = if stack > 0 {
+                    seq_base + stack * (l as u32 + 1)
+                } else {
+                    self.map.spm_bytes
+                };
+                core.reset(entry, sp);
+            }
+        }
+    }
+
+    /// Wake cores per a control-register effect.
+    fn apply_wake(&mut self, effect: CtrlEffect) {
+        let cpt = self.cfg.cores_per_tile;
+        match effect {
+            CtrlEffect::WakeCore(c) => {
+                let (t, l) = ((c as usize) / cpt, (c as usize) % cpt);
+                if t < self.tiles.len() {
+                    self.tiles[t].cores[l].wake();
+                }
+            }
+            CtrlEffect::WakeAll => {
+                for tile in &mut self.tiles {
+                    for core in &mut tile.cores {
+                        core.wake();
+                    }
+                }
+            }
+            CtrlEffect::WakeTile(t) => {
+                if let Some(tile) = self.tiles.get_mut(t as usize) {
+                    for core in &mut tile.cores {
+                        core.wake();
+                    }
+                }
+            }
+            CtrlEffect::WakeGroup(g) => {
+                let tpg = self.cfg.tiles_per_group;
+                for t in (g as usize * tpg)..((g as usize + 1) * tpg).min(self.tiles.len()) {
+                    for core in &mut self.tiles[t].cores {
+                        core.wake();
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Submit the DMA transfer currently programmed in the frontend.
+    fn dma_trigger(&mut self, to_spm: bool, now: u64) {
+        let t = DmaTransfer {
+            l2_offset: self.dma_l2,
+            spm_addr: self.dma_spm,
+            bytes: self.dma_bytes,
+            to_spm,
+        };
+        // Flat view over all banks, tile-major.
+        let bpt = self.cfg.banks_per_tile;
+        let mut flat: Vec<&mut SramBank> = Vec::with_capacity(self.tiles.len() * bpt);
+        for tile in &mut self.tiles {
+            for b in &mut tile.banks {
+                flat.push(b);
+            }
+        }
+        let done =
+            self.dma.submit(&t, now, &self.map, &mut self.l2, &mut flat, bpt, &mut self.axi);
+        self.dma_done_at = self.dma_done_at.max(done);
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        let now = self.now;
+
+        // Phase 1: deliver due completions.
+        for tile in &mut self.tiles {
+            let mut i = 0;
+            while i < tile.deliveries.len() {
+                if tile.deliveries[i].0 <= now {
+                    let (_, lane, c) = tile.deliveries.swap_remove(i);
+                    tile.cores[lane as usize].push_completion(c);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Due system (ctrl/L2) accesses complete here too.
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < self.pending_sys.len() {
+            if self.pending_sys[i].ready <= now {
+                due.push(self.pending_sys.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for p in due {
+            let rdata = match p.kind {
+                SysKind::CtrlLoad(off) => match off {
+                    CTRL_DMA_STATUS => (now < self.dma_done_at) as u32,
+                    _ => self.ctrl.load(off),
+                },
+                SysKind::CtrlStore(off, value) => {
+                    match off {
+                        CTRL_DMA_L2 => self.dma_l2 = value,
+                        CTRL_DMA_SPM => self.dma_spm = value,
+                        CTRL_DMA_BYTES => self.dma_bytes = value,
+                        _ => {}
+                    }
+                    let effect = self.ctrl.store(off, value);
+                    match effect {
+                        CtrlEffect::RoFlush => self.axi.flush_ro(),
+                        CtrlEffect::DmaTrigger(to_spm) => self.dma_trigger(to_spm, now),
+                        CtrlEffect::DmaReg(..) | CtrlEffect::None => {}
+                        wake => self.apply_wake(wake),
+                    }
+                    0
+                }
+                SysKind::L2Load(off) => self.l2.read_word(off),
+                SysKind::Ack => 0,
+            };
+            self.tiles[p.tile].cores[p.lane as usize]
+                .push_completion(MemCompletion { tag: p.tag, rdata });
+        }
+
+        // Phase 2: cores issue. Tile fields are split so the context can
+        // borrow the icache/banks while the cores run.
+        let tpg = self.cfg.tiles_per_group;
+        for t in 0..self.tiles.len() {
+            let tile = &mut self.tiles[t];
+            let Tile { cores, icache, bank_q, .. } = tile;
+            let mut new_sys: Vec<(u8, u8, SysKind, u64)> = Vec::new();
+            {
+                let mut ctx = TileCtx {
+                    tile: t,
+                    group: t / tpg,
+                    map: &self.map,
+                    icache,
+                    bank_q,
+                    net: self.net.as_mut(),
+                    axi: &mut self.axi,
+                    l2: &mut self.l2,
+                    ctrl_now: now,
+                    num_cores: self.cfg.num_cores() as u32,
+                    cores_per_tile: self.cfg.cores_per_tile as u32,
+                    cores_per_group: (tpg * self.cfg.cores_per_tile) as u32,
+                    new_sys: &mut new_sys,
+                    local_accesses: 0,
+                    group_accesses: 0,
+                    global_accesses: 0,
+                    tiles_per_group: tpg,
+                };
+                for core in cores.iter_mut() {
+                    core.step(now, &self.program, &mut ctx);
+                }
+                self.local_accesses += ctx.local_accesses;
+                self.group_accesses += ctx.group_accesses;
+                self.global_accesses += ctx.global_accesses;
+            }
+            for (lane, tag, kind, ready) in new_sys {
+                self.pending_sys.push(PendingSys { ready, tile: t, lane, tag, kind });
+            }
+        }
+
+        // Phase 3: network request arrivals into bank queues.
+        for t in 0..self.tiles.len() {
+            while let Some(f) = self.net.pop_req_arrival(t, now) {
+                debug_assert_eq!(f.dst_tile as usize, t);
+                self.tiles[t].bank_q[f.bank as usize].push_back(f);
+            }
+        }
+
+        // Phase 4: banks serve one request each.
+        for tile in &mut self.tiles {
+            for b in 0..tile.banks.len() {
+                if let Some(f) = tile.bank_q[b].pop_front() {
+                    let resp = serve_bank(&mut tile.banks[b], f);
+                    if resp.dst_tile == resp.src_tile {
+                        tile.deliveries.push((
+                            now + 1,
+                            resp.lane,
+                            MemCompletion { tag: resp.tag, rdata: resp.rdata },
+                        ));
+                    } else {
+                        tile.resp_out.push_back(resp);
+                    }
+                }
+            }
+            // Push pending responses into the response network.
+            while let Some(f) = tile.resp_out.front() {
+                if self.net.try_send_resp(*f, now) {
+                    tile.resp_out.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // Phase 5: instruction caches (refills via the AXI tree).
+        for t in 0..self.tiles.len() {
+            let group = t / tpg;
+            let master = t % tpg;
+            let tile = &mut self.tiles[t];
+            let mut port = AxiRefillPort { axi: &mut self.axi, group, master };
+            tile.icache.step(now, &mut port);
+        }
+
+        // Phase 6: the interconnect arbitrates.
+        self.net.step(now);
+
+        // Phase 7: response arrivals → scheduled for delivery next cycle.
+        for t in 0..self.tiles.len() {
+            while let Some(f) = self.net.pop_resp_arrival(t, now) {
+                debug_assert_eq!(f.dst_tile as usize, t);
+                self.tiles[t].deliveries.push((
+                    now + 1,
+                    f.lane,
+                    MemCompletion { tag: f.tag, rdata: f.rdata },
+                ));
+            }
+        }
+
+        self.now += 1;
+    }
+
+    /// Run until every core halts *and* the memory system drains (or
+    /// `max_cycles` elapse). Returns true on clean completion.
+    pub fn run(&mut self, max_cycles: u64) -> bool {
+        let deadline = self.now + max_cycles;
+        while self.now < deadline {
+            self.step();
+            if self.all_halted() && self.drained() {
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn all_halted(&self) -> bool {
+        self.tiles.iter().all(|t| t.cores.iter().all(|c| c.halted()))
+    }
+
+    /// No request, response, or completion is in flight anywhere.
+    pub fn drained(&self) -> bool {
+        self.pending_sys.is_empty()
+            && self.net.in_flight() == 0
+            && self.tiles.iter().all(|t| {
+                t.resp_out.is_empty()
+                    && t.deliveries.is_empty()
+                    && t.bank_q.iter().all(|q| q.is_empty())
+                    && t.cores.iter().all(|c| c.drained())
+            })
+    }
+
+    /// Collect run statistics and compose the energy book.
+    pub fn stats(&self) -> ClusterStats {
+        let p = &self.energy_params;
+        let mut s = ClusterStats {
+            cycles: self.now,
+            num_cores: self.cfg.num_cores(),
+            local_accesses: self.local_accesses,
+            group_accesses: self.group_accesses,
+            global_accesses: self.global_accesses,
+            ..Default::default()
+        };
+        let mut e = EnergyBook::default();
+        for tile in &self.tiles {
+            for core in &tile.cores {
+                let cs = &core.stats;
+                s.accumulate_core(cs);
+                e.cores += p.core_issue * cs.issued() as f64
+                    + p.alu * cs.alu_instrs as f64
+                    + p.lsu * (cs.loads + cs.stores + cs.amos) as f64
+                    + p.core_idle * cs.sleep_cycles as f64;
+                e.ipu += p.mul * cs.mul_instrs as f64 + p.mac * cs.mac_instrs as f64;
+            }
+            // Instruction cache events.
+            let kind0 = self.cfg.icache.l0_kind;
+            for l0 in &tile.icache.l0 {
+                e.icache += p.l0_access(kind0) * (l0.hits + l0.misses) as f64;
+            }
+            let c = tile.icache.l1.counters;
+            e.icache += p.l1_tag(self.cfg.icache.l1_tag_kind) * c.tag_reads as f64
+                + p.l1_data(self.cfg.icache.l1_data_kind) * c.data_reads as f64
+                + p.icache_refill * c.refills as f64;
+            // Banks.
+            for b in &tile.banks {
+                e.banks += p.bank_access * (b.reads + b.writes) as f64 + p.bank_amo * b.amos as f64;
+            }
+        }
+        // Interconnect traversals (request + response).
+        e.tile_xbar = p.tile_xbar
+            * (self.local_accesses + self.group_accesses + self.global_accesses) as f64;
+        e.group_net = p.group_xbar * 2.0 * (self.group_accesses + self.global_accesses) as f64;
+        e.global_net = p.global_xbar * 2.0 * self.global_accesses as f64
+            + p.net_static_per_tile_cycle * (self.now * self.cfg.num_tiles() as u64) as f64;
+        // AXI + DMA.
+        let beats: u64 = self
+            .axi
+            .counters
+            .iter()
+            .map(|c| (c.bytes_read + c.bytes_written).div_ceil(64))
+            .sum();
+        e.axi_dma = p.axi_beat * beats as f64 + p.dma_beat * (self.dma.stats.bytes / 64) as f64;
+        e.leakage = p.leakage_per_core_cycle * (self.now * self.cfg.num_cores() as u64) as f64;
+        s.energy = e;
+        s
+    }
+
+    /// Functional (zero-time) SPM access for harnesses.
+    pub fn spm(&mut self) -> SpmView<'_> {
+        SpmView { tiles: &mut self.tiles, map: self.map, banks_per_tile: self.cfg.banks_per_tile }
+    }
+}
+
+/// Serve one bank request from a flit.
+fn serve_bank(bank: &mut SramBank, f: Flit) -> Flit {
+    let resp = bank.access(&BankRequest { row: f.row, op: f.op, wdata: f.wdata, core: f.core });
+    f.into_response(resp.rdata)
+}
+
+/// Zero-time functional window into the SPM (data placement and result
+/// verification — the DMA and cores pay for timed accesses instead).
+pub struct SpmView<'a> {
+    tiles: &'a mut Vec<Tile>,
+    map: AddressMap,
+    banks_per_tile: usize,
+}
+
+impl SpmView<'_> {
+    pub fn read_word(&self, addr: u32) -> u32 {
+        match self.map.decode(addr) {
+            Region::Spm(loc) => {
+                self.tiles[loc.tile as usize].banks[loc.bank as usize].peek(loc.row)
+            }
+            other => panic!("not an SPM address: {addr:#x} ({other:?})"),
+        }
+    }
+
+    pub fn write_word(&mut self, addr: u32, value: u32) {
+        match self.map.decode(addr) {
+            Region::Spm(loc) => {
+                self.tiles[loc.tile as usize].banks[loc.bank as usize].poke(loc.row, value)
+            }
+            other => panic!("not an SPM address: {addr:#x} ({other:?})"),
+        }
+    }
+
+    pub fn write_words(&mut self, addr: u32, words: &[u32]) {
+        for (i, w) in words.iter().enumerate() {
+            self.write_word(addr + 4 * i as u32, *w);
+        }
+    }
+
+    pub fn read_words(&self, addr: u32, n: usize) -> Vec<u32> {
+        (0..n).map(|i| self.read_word(addr + 4 * i as u32)).collect()
+    }
+}
+
+/// The per-tile context handed to the cores.
+struct TileCtx<'a> {
+    tile: usize,
+    group: usize,
+    map: &'a AddressMap,
+    icache: &'a mut TileICache,
+    bank_q: &'a mut Vec<VecDeque<Flit>>,
+    net: &'a mut dyn L1Network,
+    axi: &'a mut AxiSystem,
+    l2: &'a mut L2Memory,
+    ctrl_now: u64,
+    num_cores: u32,
+    cores_per_tile: u32,
+    cores_per_group: u32,
+    /// (lane, tag, kind, ready) for ctrl/L2 accesses.
+    new_sys: &'a mut Vec<(u8, u8, SysKind, u64)>,
+    local_accesses: u64,
+    group_accesses: u64,
+    global_accesses: u64,
+    tiles_per_group: usize,
+}
+
+impl CoreCtx for TileCtx<'_> {
+    fn fetch(&mut self, lane: usize, addr: u32, program: &Program) -> FetchResult {
+        self.icache.fetch(lane, addr, program)
+    }
+
+    fn try_send(&mut self, lane: usize, req: MemRequestOut) -> bool {
+        let now = self.ctrl_now;
+        let core_global =
+            (self.tile as u32) * self.cores_per_tile + lane as u32;
+        match self.map.decode(req.addr) {
+            Region::Spm(loc) => {
+                let flit = Flit {
+                    src_tile: self.tile as u16,
+                    dst_tile: loc.tile as u16,
+                    lane: lane as u8,
+                    tag: req.tag,
+                    core: core_global,
+                    op: req.op,
+                    wdata: req.wdata,
+                    bank: loc.bank as u16,
+                    row: loc.row,
+                    issued_at: now,
+                    rdata: 0,
+                };
+                if loc.tile as usize == self.tile {
+                    // Tile-local: straight into the bank arbiter.
+                    let q = &mut self.bank_q[loc.bank as usize];
+                    if q.len() >= BANK_QUEUE_DEPTH {
+                        return false;
+                    }
+                    q.push_back(flit);
+                    self.local_accesses += 1;
+                    true
+                } else {
+                    let ok = self.net.try_send_req(flit, now);
+                    if ok {
+                        if loc.tile as usize / self.tiles_per_group == self.group {
+                            self.group_accesses += 1;
+                        } else {
+                            self.global_accesses += 1;
+                        }
+                    }
+                    ok
+                }
+            }
+            Region::Ctrl(off) => {
+                let kind = match req.op {
+                    MemOp::Read => SysKind::CtrlLoad(off),
+                    MemOp::Write { .. } => SysKind::CtrlStore(off, req.wdata),
+                    _ => SysKind::Ack, // atomics on ctrl regs: ack only
+                };
+                self.new_sys.push((lane as u8, req.tag, kind, now + CTRL_LATENCY));
+                true
+            }
+            Region::L2(off) => {
+                let master = self.tile % self.tiles_per_group;
+                match req.op {
+                    MemOp::Read => {
+                        let done = self.axi.read(self.group, master, req.addr, 4, now);
+                        self.new_sys.push((lane as u8, req.tag, SysKind::L2Load(off), done + 1));
+                    }
+                    MemOp::Write { .. } => {
+                        // Functional write now; ack at the bus completion.
+                        self.l2.write_word(off & !3, req.wdata);
+                        let done = self.axi.write(self.group, 4, now);
+                        self.new_sys.push((lane as u8, req.tag, SysKind::Ack, done + 1));
+                    }
+                    _ => {
+                        let done = self.axi.read(self.group, master, req.addr, 4, now);
+                        self.new_sys.push((lane as u8, req.tag, SysKind::L2Load(off), done + 1));
+                    }
+                }
+                true
+            }
+            Region::Invalid => panic!(
+                "core {core_global}: access to unmapped address {:#x}",
+                req.addr
+            ),
+        }
+    }
+
+    fn read_csr(&mut self, csr: Csr) -> u32 {
+        match csr {
+            Csr::Mhartid => unreachable!("handled by the core"),
+            Csr::Mcycle => self.ctrl_now as u32,
+            Csr::NumCores => self.num_cores,
+            Csr::CoresPerTile => self.cores_per_tile,
+            Csr::CoresPerGroup => self.cores_per_group,
+        }
+    }
+}
+
+/// Adapter: the tile icache's refill port reads through the AXI tree.
+struct AxiRefillPort<'a> {
+    axi: &'a mut AxiSystem,
+    group: usize,
+    master: usize,
+}
+
+impl crate::icache::RefillPort for AxiRefillPort<'_> {
+    fn read(&mut self, addr: u32, bytes: usize, now: u64) -> u64 {
+        self.axi.read(self.group, self.master, addr, bytes, now)
+    }
+}

@@ -1,0 +1,78 @@
+//! Kernel-run harness: assemble a kernel with harness-provided symbols,
+//! place its data, run the cluster to completion, and collect statistics.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::isa::Program;
+use crate::sim::{Cluster, ClusterStats};
+
+/// How to run a kernel.
+pub struct RunConfig {
+    pub cluster: ClusterConfig,
+    /// Cycle budget; runs abort (with `completed = false`) beyond it.
+    pub max_cycles: u64,
+    /// Invalidate the instruction caches before starting (cold start).
+    pub cold_icache: bool,
+}
+
+impl RunConfig {
+    pub fn new(cluster: ClusterConfig) -> Self {
+        RunConfig { cluster, max_cycles: 10_000_000, cold_icache: true }
+    }
+}
+
+/// Result of a kernel run.
+pub struct KernelResult {
+    pub cluster: Cluster,
+    pub stats: ClusterStats,
+    pub completed: bool,
+    pub cycles: u64,
+}
+
+/// Assemble `src` with `symbols`, initialize the cluster via `setup`
+/// (data placement through the zero-time SPM view), run until all cores
+/// halt, and return statistics plus the final cluster for verification.
+pub fn run_kernel(
+    run: &RunConfig,
+    src: &str,
+    symbols: &HashMap<String, u32>,
+    setup: impl FnOnce(&mut Cluster),
+) -> KernelResult {
+    let program = Program::assemble(src, symbols)
+        .unwrap_or_else(|e| panic!("kernel assembly failed: {e}"));
+    let mut cluster = Cluster::new(run.cluster.clone(), program);
+    cluster.reset_cores(0);
+    if run.cold_icache {
+        for t in &mut cluster.tiles {
+            t.icache.invalidate_all();
+        }
+    }
+    setup(&mut cluster);
+    let completed = cluster.run(run.max_cycles);
+    let cycles = cluster.now();
+    let stats = cluster.stats();
+    KernelResult { cluster, stats, completed, cycles }
+}
+
+/// Standard symbol table entries every kernel receives: cluster geometry
+/// and the control-register addresses.
+pub fn base_symbols(cfg: &ClusterConfig) -> HashMap<String, u32> {
+    use crate::mem::{
+        CTRL_BASE, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS, CTRL_DMA_TRIGGER,
+        CTRL_WAKE_ALL, CTRL_WAKE_CORE,
+    };
+    let mut sym = HashMap::new();
+    sym.insert("NUM_CORES".into(), cfg.num_cores() as u32);
+    sym.insert("CORES_PER_TILE".into(), cfg.cores_per_tile as u32);
+    sym.insert("NUM_TILES".into(), cfg.num_tiles() as u32);
+    sym.insert("CTRL_WAKE_CORE_ADDR".into(), CTRL_BASE + CTRL_WAKE_CORE);
+    sym.insert("CTRL_WAKE_ALL_ADDR".into(), CTRL_BASE + CTRL_WAKE_ALL);
+    sym.insert("DMA_L2_ADDR".into(), CTRL_BASE + CTRL_DMA_L2);
+    sym.insert("DMA_SPM_ADDR".into(), CTRL_BASE + CTRL_DMA_SPM);
+    sym.insert("DMA_BYTES_ADDR".into(), CTRL_BASE + CTRL_DMA_BYTES);
+    sym.insert("DMA_TRIGGER_ADDR".into(), CTRL_BASE + CTRL_DMA_TRIGGER);
+    sym.insert("DMA_STATUS_ADDR".into(), CTRL_BASE + CTRL_DMA_STATUS);
+    sym.insert("L2_BASE".into(), crate::mem::L2_BASE);
+    sym
+}

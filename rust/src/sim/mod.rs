@@ -1,0 +1,16 @@
+//! The cycle-stepped cluster simulator: composes Snitch cores, the tile
+//! instruction caches, the L1 SPM banks with their crossbars, the chosen
+//! remote interconnect topology, the hierarchical AXI system with RO
+//! caches, the distributed DMA, and the control registers into one
+//! deterministic `Cluster::step()`.
+
+mod cluster;
+mod harness;
+mod stats;
+
+pub use cluster::{Cluster, SpmView};
+pub use harness::{base_symbols, run_kernel, KernelResult, RunConfig};
+pub use stats::{ClusterStats, CycleBreakdown};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,110 @@
+//! Aggregated execution statistics: the paper's Fig 14 cycle breakdown,
+//! IPC, OP/cycle, and the energy-derived power figures.
+
+use crate::core::CoreStats;
+use crate::energy::EnergyBook;
+
+/// Fractional cycle breakdown across all cores (Fig 14's stacked bars).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CycleBreakdown {
+    pub compute: f64,
+    pub control: f64,
+    pub synchronization: f64,
+    pub ifetch: f64,
+    pub lsu: f64,
+    pub raw: f64,
+}
+
+impl CycleBreakdown {
+    pub fn ipc(&self) -> f64 {
+        self.compute + self.control
+    }
+}
+
+/// Cluster-level execution statistics for one run.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterStats {
+    /// Cycles the measured phase lasted.
+    pub cycles: u64,
+    pub num_cores: usize,
+    /// Sum over cores.
+    pub issued_compute: u64,
+    pub issued_control: u64,
+    pub ops: u64,
+    pub stall_ifetch: u64,
+    pub stall_raw: u64,
+    pub stall_lsu: u64,
+    pub sleep_cycles: u64,
+    pub halted_cycles: u64,
+    /// Memory traffic split (the hybrid-addressing effect).
+    pub local_accesses: u64,
+    pub group_accesses: u64,
+    pub global_accesses: u64,
+    /// Energy accounting for the run.
+    pub energy: EnergyBook,
+}
+
+impl ClusterStats {
+    pub fn accumulate_core(&mut self, s: &CoreStats) {
+        self.issued_compute += s.issued_compute;
+        self.issued_control += s.issued_control;
+        self.ops += s.ops;
+        self.stall_ifetch += s.stall_ifetch;
+        self.stall_raw += s.stall_raw;
+        self.stall_lsu += s.stall_lsu;
+        self.sleep_cycles += s.sleep_cycles;
+        self.halted_cycles += s.halted_cycles;
+    }
+
+    /// Instructions per cycle per core, over active (non-halted) cycles.
+    pub fn ipc(&self) -> f64 {
+        let active = (self.cycles * self.num_cores as u64).saturating_sub(self.halted_cycles);
+        if active == 0 {
+            return 0.0;
+        }
+        (self.issued_compute + self.issued_control) as f64 / active as f64
+    }
+
+    /// 32-bit operations per cycle across the whole cluster.
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.ops as f64 / self.cycles as f64
+    }
+
+    /// GOPS at the given clock.
+    pub fn gops(&self, clock_hz: f64) -> f64 {
+        self.ops_per_cycle() * clock_hz / 1e9
+    }
+
+    /// Average power in watts.
+    pub fn power_w(&self, clock_hz: f64) -> f64 {
+        self.energy.power_w(self.cycles, clock_hz)
+    }
+
+    /// Energy efficiency in GOPS/W.
+    pub fn gops_per_w(&self, clock_hz: f64) -> f64 {
+        let p = self.power_w(clock_hz);
+        if p == 0.0 {
+            return 0.0;
+        }
+        self.gops(clock_hz) / p
+    }
+
+    /// The Fig 14 stacked-bar fractions.
+    pub fn breakdown(&self) -> CycleBreakdown {
+        let total = (self.cycles * self.num_cores as u64) as f64;
+        if total == 0.0 {
+            return CycleBreakdown::default();
+        }
+        CycleBreakdown {
+            compute: self.issued_compute as f64 / total,
+            control: self.issued_control as f64 / total,
+            synchronization: (self.sleep_cycles + self.halted_cycles) as f64 / total,
+            ifetch: self.stall_ifetch as f64 / total,
+            lsu: self.stall_lsu as f64 / total,
+            raw: self.stall_raw as f64 / total,
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Poisson traffic generators and the network analysis harness
+//! (paper §3.3, Figs 4 and 5).
+//!
+//! Cores are replaced by open-loop traffic generators that create new
+//! requests following a Poisson process of rate λ (requests per core per
+//! cycle) with uniformly distributed destination banks. The harness drives
+//! one of the three topologies plus the per-tile bank stage and measures
+//! achieved throughput and average round-trip latency as a function of the
+//! injected load — reproducing the congestion-collapse curves of Fig 4 and
+//! the hybrid-addressing study of Fig 5 (a fraction `p_local` of requests
+//! targets the generator's own tile, as the sequential regions do).
+
+use std::collections::VecDeque;
+
+use crate::config::{ClusterConfig, Topology};
+use crate::interconnect::{build_network, Flit, L1Network};
+use crate::mem::MemOp;
+use crate::util::stats::Accumulator;
+use crate::util::Rng;
+
+/// Network-study configuration.
+#[derive(Debug, Clone)]
+pub struct NetSimConfig {
+    pub topology: Topology,
+    /// Injection rate, requests per core per cycle.
+    pub lambda: f64,
+    /// Probability that a request targets the core's own tile (the
+    /// sequential region of the hybrid addressing scheme). 1/num_tiles
+    /// reproduces plain interleaving (Fig 4); larger values reproduce
+    /// Fig 5.
+    pub p_local: f64,
+    /// Measured cycles (after warmup).
+    pub cycles: u64,
+    pub warmup: u64,
+    pub seed: u64,
+}
+
+impl NetSimConfig {
+    pub fn fig4(topology: Topology, lambda: f64) -> Self {
+        NetSimConfig {
+            topology,
+            lambda,
+            p_local: 1.0 / 64.0, // uniform over all tiles
+            cycles: 4000,
+            warmup: 1000,
+            seed: 0x5EED,
+        }
+    }
+
+    pub fn fig5(lambda: f64, p_local: f64) -> Self {
+        NetSimConfig {
+            topology: Topology::TopH,
+            lambda,
+            p_local,
+            cycles: 4000,
+            warmup: 1000,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Results of one operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct NetSimResult {
+    /// Completed requests per core per cycle.
+    pub throughput: f64,
+    /// Average round-trip latency in cycles (issue → data usable).
+    pub avg_latency: f64,
+    pub max_latency: f64,
+    /// Fraction of generated requests dropped at full source queues
+    /// (>0 ⇒ the network is saturated at this load).
+    pub dropped: f64,
+    /// Request-path arbitration conflicts per cycle.
+    pub conflicts_per_cycle: f64,
+}
+
+struct PendingResp {
+    flit: Flit,
+}
+
+/// Run a single operating point.
+pub fn run_netsim(cfg: &NetSimConfig) -> NetSimResult {
+    let cluster = base_cluster(cfg.topology);
+    let tiles = cluster.num_tiles();
+    let cores_per_tile = cluster.cores_per_tile;
+    let banks_per_tile = cluster.banks_per_tile;
+    let cores = tiles * cores_per_tile;
+
+    let mut net = build_network(&cluster);
+    let mut rng = Rng::seeded(cfg.seed);
+
+    // Per-core open-loop source queues (bounded: the generator drops when
+    // the network has pushed back long enough — saturation measure).
+    const SRC_DEPTH: usize = 16;
+    let mut src: Vec<VecDeque<Flit>> = (0..cores).map(|_| VecDeque::new()).collect();
+    // Per-bank input queues and per-tile response retry queues.
+    let mut bank_q: Vec<VecDeque<Flit>> = (0..tiles * banks_per_tile).map(|_| VecDeque::new()).collect();
+    let mut resp_retry: Vec<VecDeque<PendingResp>> = (0..tiles).map(|_| VecDeque::new()).collect();
+    // Completed local accesses pending their 1-cycle response.
+    let mut local_done: Vec<(u64, Flit)> = Vec::new();
+
+    let mut completed = 0u64;
+    let mut generated = 0u64;
+    let mut dropped = 0u64;
+    let mut lat = Accumulator::new();
+    let total = cfg.warmup + cfg.cycles;
+
+    for now in 0..total {
+        let measuring = now >= cfg.warmup;
+
+        // 1. Drain request arrivals from the network into bank queues.
+        for t in 0..tiles {
+            while let Some(f) = net.pop_req_arrival(t, now) {
+                debug_assert_eq!(f.dst_tile as usize, t);
+                bank_q[t * banks_per_tile + f.bank as usize].push_back(f);
+            }
+        }
+
+        // 2. Generate + inject new requests (1 injection/core/cycle).
+        for core in 0..cores {
+            if rng.chance(cfg.lambda) {
+                if measuring {
+                    generated += 1;
+                }
+                let tile = (core / cores_per_tile) as u16;
+                let dst = if rng.chance(cfg.p_local) {
+                    tile
+                } else {
+                    // Uniform over all tiles (including occasionally own).
+                    rng.index(tiles) as u16
+                };
+                let f = Flit {
+                    src_tile: tile,
+                    dst_tile: dst,
+                    lane: (core % cores_per_tile) as u8,
+                    tag: 0,
+                    core: core as u32,
+                    op: MemOp::Read,
+                    wdata: 0,
+                    bank: rng.index(banks_per_tile) as u16,
+                    row: 0,
+                    issued_at: now,
+                    rdata: 0,
+                };
+                if src[core].len() < SRC_DEPTH {
+                    src[core].push_back(f);
+                } else if measuring {
+                    dropped += 1;
+                }
+            }
+            // Inject the head request.
+            if let Some(head) = src[core].front().copied() {
+                if head.dst_tile == head.src_tile {
+                    // Local accesses use the tile crossbar directly.
+                    bank_q[head.dst_tile as usize * banks_per_tile + head.bank as usize]
+                        .push_back(head);
+                    src[core].pop_front();
+                } else if net.try_send_req(head, now) {
+                    src[core].pop_front();
+                }
+            }
+        }
+
+        // 3. Banks serve one request each; responses head home.
+        for b in 0..bank_q.len() {
+            if let Some(req) = bank_q[b].pop_front() {
+                let home = req.home_tile();
+                let resp = req.into_response(0);
+                if resp.dst_tile == resp.src_tile {
+                    local_done.push((now + 1, resp));
+                } else {
+                    resp_retry[home as usize].push_back(PendingResp { flit: resp });
+                    // src of the response is the bank tile; home == dst.
+                }
+            }
+        }
+        // Retry queued responses into the response network.
+        for t in 0..tiles {
+            while let Some(p) = resp_retry[t].front() {
+                if net.try_send_resp(p.flit, now) {
+                    resp_retry[t].pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+
+        // 4. Advance the network.
+        net.step(now);
+
+        // 5. Complete responses (remote) and due local accesses.
+        for t in 0..tiles {
+            while let Some(f) = net.pop_resp_arrival(t, now) {
+                if measuring {
+                    completed += 1;
+                    lat.add((now + 1 - f.issued_at) as f64);
+                }
+            }
+        }
+        let mut i = 0;
+        while i < local_done.len() {
+            if local_done[i].0 <= now {
+                let (ready, f) = local_done.swap_remove(i);
+                if measuring {
+                    completed += 1;
+                    // `ready` is the cycle the data becomes usable — the
+                    // 1-cycle tile-crossbar path plus any bank queueing.
+                    lat.add((ready - f.issued_at) as f64);
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    let conflicts = 0.0; // per-topology diagnostic; see TopHNet::req_conflicts
+    let _ = generated;
+    NetSimResult {
+        throughput: completed as f64 / cores as f64 / cfg.cycles as f64,
+        avg_latency: lat.mean(),
+        max_latency: lat.max,
+        dropped: if generated == 0 { 0.0 } else { dropped as f64 / generated as f64 },
+        conflicts_per_cycle: conflicts,
+    }
+}
+
+/// The standard 256-core cluster shape with the requested topology.
+fn base_cluster(topology: Topology) -> ClusterConfig {
+    let mut cfg = ClusterConfig::mempool();
+    cfg.topology = topology;
+    match topology {
+        Topology::Top1 => cfg.remote_ports = 1,
+        Topology::Top4 | Topology::TopH => cfg.remote_ports = 4,
+    }
+    cfg
+}
+
+/// The load sweep used for Fig 4 (req/core/cycle).
+pub fn fig4_loads() -> Vec<f64> {
+    vec![0.02, 0.05, 0.08, 0.10, 0.15, 0.20, 0.25, 0.30, 0.35, 0.40, 0.50, 0.70, 1.0]
+}
+
+/// The `p_local` sweep used for Fig 5.
+pub fn fig5_plocals() -> Vec<f64> {
+    vec![0.0, 0.25, 0.5, 0.75, 1.0]
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,94 @@
+//! Network-study sanity tests tying the harness to the paper's Fig 4/5
+//! claims: latency floors at low load, saturation ordering
+//! Top1 ≪ Top4 ≲ TopH, and the hybrid-addressing benefit.
+
+use super::*;
+use crate::config::Topology;
+
+fn quick(topology: Topology, lambda: f64, p_local: f64) -> NetSimResult {
+    let mut cfg = NetSimConfig { topology, lambda, p_local, cycles: 1500, warmup: 500, seed: 7 };
+    if lambda < 0.05 {
+        cfg.cycles = 3000; // enough samples at low load
+    }
+    run_netsim(&cfg)
+}
+
+#[test]
+fn low_load_latency_floor() {
+    // At λ = 0.02 with uniform destinations almost all requests are
+    // remote; TopH averages between the 3-cycle (same-group) and 5-cycle
+    // (remote-group) paths, well under 6 cycles.
+    let r = quick(Topology::TopH, 0.02, 1.0 / 64.0);
+    assert!(r.throughput > 0.015, "throughput {}", r.throughput);
+    assert!(r.avg_latency >= 3.0, "latency {} below physical floor", r.avg_latency);
+    assert!(r.avg_latency < 6.0, "uncongested latency too high: {}", r.avg_latency);
+    assert_eq!(r.dropped, 0.0);
+}
+
+#[test]
+fn top1_congests_an_order_earlier() {
+    // Paper: Top1 congests around 0.10 req/core/cycle; TopH supports ~0.4.
+    let t1 = quick(Topology::Top1, 0.20, 1.0 / 64.0);
+    let th = quick(Topology::TopH, 0.20, 1.0 / 64.0);
+    assert!(
+        t1.throughput < 0.15,
+        "Top1 must saturate near 0.10 req/core/cycle, got {}",
+        t1.throughput
+    );
+    assert!(
+        th.throughput > 0.18,
+        "TopH must still deliver ~0.20 req/core/cycle, got {}",
+        th.throughput
+    );
+    assert!(t1.dropped > 0.0, "Top1 sources must back up at 2× its saturation load");
+}
+
+#[test]
+fn toph_beats_top4_slightly() {
+    // Fig 4: TopH ≈ 0.40 vs Top4 ≈ 0.37 saturation (smaller diameter).
+    let t4 = quick(Topology::Top4, 1.0, 1.0 / 64.0);
+    let th = quick(Topology::TopH, 1.0, 1.0 / 64.0);
+    assert!(th.throughput >= t4.throughput * 0.95, "TopH {} vs Top4 {}", th.throughput, t4.throughput);
+    assert!(t4.throughput > 0.25, "Top4 saturation too low: {}", t4.throughput);
+    assert!(th.throughput > 0.30, "TopH saturation too low: {}", th.throughput);
+}
+
+#[test]
+fn hybrid_addressing_raises_throughput() {
+    // Fig 5: larger p_local ⇒ higher sustainable throughput and lower
+    // latency (local accesses bypass the global interconnect).
+    let p00 = quick(Topology::TopH, 0.6, 0.0);
+    let p50 = quick(Topology::TopH, 0.6, 0.5);
+    let p100 = quick(Topology::TopH, 0.6, 1.0);
+    assert!(
+        p50.throughput > p00.throughput,
+        "p_local=0.5 ({}) must beat 0.0 ({})",
+        p50.throughput,
+        p00.throughput
+    );
+    assert!(
+        p100.throughput > 0.55,
+        "all-local traffic is only bank-limited, got {}",
+        p100.throughput
+    );
+    assert!(p100.avg_latency < p00.avg_latency);
+}
+
+#[test]
+fn all_local_latency_is_single_cycle_plus_conflicts() {
+    let r = quick(Topology::TopH, 0.1, 1.0);
+    // 16 banks for 4 cores at λ=0.1: essentially conflict-free.
+    assert!(r.avg_latency < 1.5, "local latency {}", r.avg_latency);
+}
+
+#[test]
+fn throughput_tracks_offered_load_below_saturation() {
+    for lambda in [0.05, 0.10, 0.20] {
+        let r = quick(Topology::TopH, lambda, 1.0 / 64.0);
+        assert!(
+            (r.throughput - lambda).abs() < 0.02,
+            "λ={lambda}: throughput {} diverged below saturation",
+            r.throughput
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal benchmark harness used by the `harness = false` bench targets
+//! (the offline vendor set has no `criterion`). Provides wall-clock timing
+//! with warmup, multiple samples, and a criterion-like report line, plus a
+//! table printer for the paper-figure regeneration benches whose primary
+//! output is *simulated* metrics rather than host time.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over the collected samples.
+#[derive(Debug, Clone, Copy)]
+pub struct Samples {
+    pub n: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+/// Run `f` with warmup and sampling; print and return the statistics.
+pub fn bench(name: &str, mut f: impl FnMut()) -> Samples {
+    bench_config(name, 2, 10, &mut f)
+}
+
+/// Like [`bench`] but with explicit warmup iterations and sample count.
+pub fn bench_config(name: &str, warmup: usize, samples: usize, f: &mut dyn FnMut()) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let stats = Samples {
+        n: samples,
+        mean: total / samples as u32,
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    println!(
+        "{name:<44} time: [{} {} {}]",
+        fmt_duration(stats.min),
+        fmt_duration(stats.mean),
+        fmt_duration(stats.max)
+    );
+    stats
+}
+
+/// Pretty-print a duration with an adaptive unit, criterion-style.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Section header for a paper table/figure reproduction.
+pub fn section(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Print an aligned row: first column 24 wide, the rest 14.
+pub fn row(cells: &[String]) {
+    let mut line = String::new();
+    for (i, c) in cells.iter().enumerate() {
+        if i == 0 {
+            line.push_str(&format!("{c:<26}"));
+        } else {
+            line.push_str(&format!("{c:>14}"));
+        }
+    }
+    println!("{line}");
+}
+
+/// Convenience: build a `Vec<String>` row from display values.
+#[macro_export]
+macro_rules! brow {
+    ($($x:expr),* $(,)?) => {
+        $crate::util::bench::row(&[$(format!("{}", $x)),*])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench_config("noop", 1, 5, &mut || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500.0 ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

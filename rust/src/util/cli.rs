@@ -1,0 +1,119 @@
+//! Tiny command-line argument parser for the `mempool` binary and the
+//! examples (the offline vendor set has no `clap`). Supports subcommands,
+//! `--flag`, `--key value` / `--key=value`, and positional arguments.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping the program name).
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(iter: impl Iterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let toks: Vec<String> = iter.collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// First positional (the subcommand), if present.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// True if `--name` was given (with or without a value).
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    /// String value of `--name`.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Parse `--name` as `T`, with a default. Panics with a clear message on
+    /// malformed input (CLI surface, not library surface).
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => panic!("--{name} {s}: {e}"),
+            },
+        }
+    }
+
+    /// Comma-separated list value of `--name`.
+    pub fn list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("netsim --topology TopH --load 0.35 --verbose");
+        assert_eq!(a.subcommand(), Some("netsim"));
+        assert_eq!(a.get("topology"), Some("TopH"));
+        assert_eq!(a.parse_or::<f64>("load", 0.0), 0.35);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = parse("run --kernel=matmul --sizes 16,32,64");
+        assert_eq!(a.get("kernel"), Some("matmul"));
+        assert_eq!(
+            a.list("sizes").unwrap(),
+            vec!["16".to_string(), "32".into(), "64".into()]
+        );
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.parse_or::<usize>("cores", 256), 256);
+        assert_eq!(a.get_or("kernel", "matmul"), "matmul");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities replacing external crates that are not
+//! available in the offline vendor set (`rand`, `proptest`, `criterion`,
+//! `clap`). Everything here is deterministic and dependency-free.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

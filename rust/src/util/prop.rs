@@ -1,0 +1,148 @@
+//! Minimal property-testing harness (the offline vendor set has no
+//! `proptest`). Runs a closure over many seeded random cases; on failure the
+//! panic message carries the case seed so it can be replayed with
+//! [`check_one`].
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't get the xla rpath in this image)
+//! use mempool::util::prop::{check, Gen};
+//! check("addition commutes", |g: &mut Gen| {
+//!     let (a, b) = (g.u32(0..1000), g.u32(0..1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::rng::Rng;
+
+/// Number of cases per property (tuned so the full suite stays fast).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Random value source handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of the current case, for reproduction.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::seeded(seed), seed }
+    }
+
+    pub fn u32(&mut self, r: Range<u32>) -> u32 {
+        self.rng.range_i64(r.start as i64, r.end as i64) as u32
+    }
+
+    pub fn i32(&mut self, r: Range<i32>) -> i32 {
+        self.rng.range_i64(r.start as i64, r.end as i64) as i32
+    }
+
+    pub fn u64(&mut self, r: Range<u64>) -> u64 {
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        self.rng.range_i64(r.start as i64, r.end as i64) as usize
+    }
+
+    pub fn any_u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    pub fn any_i32(&mut self) -> i32 {
+        self.rng.next_u32() as i32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+
+    /// A vector of `len` values drawn by `f`.
+    pub fn vec<T>(&mut self, len: Range<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(len);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `body` for [`DEFAULT_CASES`] random cases.
+pub fn check(name: &str, body: impl Fn(&mut Gen)) {
+    check_n(name, DEFAULT_CASES, body);
+}
+
+/// Run `body` for `cases` random cases; panics with the failing seed.
+pub fn check_n(name: &str, cases: usize, body: impl Fn(&mut Gen)) {
+    // Derive per-case seeds from the property name so distinct properties
+    // explore distinct streams but runs stay reproducible.
+    let base = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut gen = Gen::new(seed);
+            body(&mut gen);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay with `check_one({seed:#x}, body)`"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn check_one(seed: u64, body: impl Fn(&mut Gen)) {
+    let mut gen = Gen::new(seed);
+    body(&mut gen);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("xor self-inverse", |g| {
+            let (a, b) = (g.any_u32(), g.any_u32());
+            assert_eq!(a ^ b ^ b, a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check_n("always fails", 3, |_| panic!("boom"));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed"), "missing seed in: {msg}");
+        assert!(msg.contains("boom"), "missing cause in: {msg}");
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen ranges", |g| {
+            let v = g.u32(10..20);
+            assert!((10..20).contains(&v));
+            let w = g.i32(-5..5);
+            assert!((-5..5).contains(&w));
+        });
+    }
+}

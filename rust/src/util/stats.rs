@@ -1,0 +1,105 @@
+//! Small statistics helpers for the measurement harnesses.
+
+/// Online mean/min/max accumulator (e.g., per-request latency).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accumulator {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Fixed-width histogram over `[0, buckets*width)` with an overflow bucket.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub width: f64,
+    pub buckets: Vec<u64>,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(buckets: usize, width: f64) -> Self {
+        Histogram { width, buckets: vec![0; buckets], overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let idx = (x / self.width) as usize;
+        if idx < self.buckets.len() {
+            self.buckets[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.overflow
+    }
+
+    /// Value below which `q` of the samples fall (bucket-resolution).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64) as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return (i as f64 + 0.5) * self.width;
+            }
+        }
+        self.buckets.len() as f64 * self.width
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_tracks_extrema() {
+        let mut a = Accumulator::new();
+        for x in [3.0, 1.0, 2.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count, 3);
+        assert_eq!(a.mean(), 2.0);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(10, 1.0);
+        for i in 0..100 {
+            h.add((i % 10) as f64);
+        }
+        assert_eq!(h.total(), 100);
+        let med = h.quantile(0.5);
+        assert!((4.0..6.0).contains(&med), "median {med}");
+        h.add(1e9);
+        assert_eq!(h.overflow, 1);
+    }
+}

@@ -1,0 +1,106 @@
+//! Three-layer integration: the cycle-accurate simulator's results are
+//! checked bit-for-bit against the AOT-compiled golden models (Pallas →
+//! JAX → HLO text → PJRT), proving L1/L2/L3 compose. Skips (with a
+//! message) when `make artifacts` has not run.
+
+use mempool::config::ClusterConfig;
+use mempool::kernels::{run_and_verify, Axpy, Dotp, Kernel, Matmul};
+use mempool::runtime::{artifacts_available, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("skipping golden integration: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new().expect("PJRT client"))
+}
+
+#[test]
+fn simulated_matmul_matches_pjrt_golden_model() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // The artifact was lowered for (m, n, k) = (64, 32, 16) =
+    // Matmul::weak_scaled(16)'s shape on the 16-core minpool.
+    let kernel = Matmul::weak_scaled(16);
+    assert_eq!((kernel.m, kernel.n, kernel.k), (64, 32, 32), "artifact shape drifted");
+    let cfg = ClusterConfig::minpool();
+    let mut result = run_and_verify(&kernel, &cfg);
+
+    // Inputs as the simulator placed them.
+    let (a, b) = {
+        let mut rng = mempool::util::Rng::seeded(kernel.seed);
+        let a: Vec<i32> = (0..kernel.m * kernel.k).map(|_| rng.below(256) as i32).collect();
+        let b: Vec<i32> = (0..kernel.k * kernel.n).map(|_| rng.below(256) as i32).collect();
+        (a, b)
+    };
+    let golden = rt
+        .run_i32("matmul", &[(&a, &[kernel.m, kernel.k]), (&b, &[kernel.k, kernel.n])])
+        .expect("golden model");
+
+    // The simulator's C matrix, straight from the SPM banks.
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let c_addr = rt_layout.data_base
+        + (kernel.m * kernel.k * 4) as u32
+        + (kernel.k * kernel.n * 4) as u32;
+    let simulated = result.cluster.spm().read_words(c_addr, kernel.m * kernel.n);
+    assert_eq!(simulated.len(), golden.len());
+    for (i, (s, g)) in simulated.iter().zip(&golden).enumerate() {
+        assert_eq!(
+            *s as i32, *g,
+            "C[{}][{}]: simulator {s:#x} vs golden {g:#x}",
+            i / kernel.n,
+            i % kernel.n
+        );
+    }
+}
+
+#[test]
+fn simulated_axpy_matches_pjrt_golden_model() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let kernel = Axpy::weak_scaled(16); // 256/core × 16 cores = 4096 = artifact len
+    let cfg = ClusterConfig::minpool();
+    let n = kernel.len(&cfg);
+    assert_eq!(n, 4096, "artifact length drifted");
+    let mut result = run_and_verify(&kernel, &cfg);
+
+    let (x, y) = {
+        let mut rng = mempool::util::Rng::seeded(kernel.seed);
+        let x: Vec<i32> = (0..n).map(|_| rng.below(1 << 20) as i32).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(1 << 20) as i32).collect();
+        (x, y)
+    };
+    let alpha = [kernel.alpha as i32];
+    let golden = rt
+        .run_i32("axpy", &[(&alpha, &[]), (&x, &[n]), (&y, &[n])])
+        .expect("golden model");
+
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let y_addr = rt_layout.data_base + (n * 4) as u32;
+    let simulated = result.cluster.spm().read_words(y_addr, n);
+    for (i, (s, g)) in simulated.iter().zip(&golden).enumerate() {
+        assert_eq!(*s as i32, *g, "y[{i}]");
+    }
+}
+
+#[test]
+fn simulated_dotp_matches_pjrt_golden_model() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let kernel = Dotp::weak_scaled(16);
+    let cfg = ClusterConfig::minpool();
+    let n = kernel.len(&cfg);
+    assert_eq!(n, 4096);
+    let mut result = run_and_verify(&kernel, &cfg);
+
+    let (x, y) = {
+        let mut rng = mempool::util::Rng::seeded(kernel.seed);
+        let x: Vec<i32> = (0..n).map(|_| rng.below(1 << 10) as i32).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(1 << 10) as i32).collect();
+        (x, y)
+    };
+    let golden = rt.run_i32("dotp", &[(&x, &[n]), (&y, &[n])]).expect("golden model");
+
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let acc_addr = rt_layout.work_counter + 4;
+    let simulated = result.cluster.spm().read_word(acc_addr) as i32;
+    assert_eq!(simulated, golden[0], "dot product");
+    let _ = kernel.name();
+}

@@ -1,30 +1,42 @@
 //! Perf bench — host-side simulator throughput (core-cycles simulated per
-//! wall-clock second), the §Perf headline metric for the simulator.
+//! wall-clock second), the §Perf headline metric for the simulator, for
+//! both stepping backends. The parallel backend's advantage grows with
+//! the tile count (per-cycle fork/join overhead amortizes over 64 tiles
+//! at 256 cores).
 
 use mempool::config::ClusterConfig;
-use mempool::kernels::{run_and_verify, Matmul};
+use mempool::kernels::{run_with_backend, Matmul};
+use mempool::sim::SimBackend;
 use mempool::util::bench::{bench_config, section};
 use std::time::Instant;
 
 fn main() {
-    section("Simulator throughput");
-    for cores in [16usize, 64, 256] {
-        let cfg = ClusterConfig::with_cores(cores);
-        let k = Matmul::weak_scaled(cores);
-        let t0 = Instant::now();
-        let r = run_and_verify(&k, &cfg);
-        let dt = t0.elapsed().as_secs_f64();
-        let core_cycles = r.cycles * cores as u64;
-        println!(
-            "{cores:>4} cores: {} cycles in {:.3}s = {:.1} M core-cycles/s",
-            r.cycles,
-            dt,
-            core_cycles as f64 / dt / 1e6
-        );
+    section("Simulator throughput — serial vs parallel tile stepping");
+    for backend in [SimBackend::Serial, SimBackend::Parallel] {
+        for cores in [16usize, 64, 256] {
+            let cfg = ClusterConfig::with_cores(cores);
+            let k = Matmul::weak_scaled(cores);
+            let t0 = Instant::now();
+            let r = run_with_backend(&k, &cfg, backend);
+            let dt = t0.elapsed().as_secs_f64();
+            let core_cycles = r.cycles * cores as u64;
+            println!(
+                "{:>8} {cores:>4} cores: {} cycles in {:.3}s = {:.1} M core-cycles/s",
+                backend.name(),
+                r.cycles,
+                dt,
+                core_cycles as f64 / dt / 1e6
+            );
+        }
     }
     bench_config("minpool matmul end-to-end", 1, 5, &mut || {
         let cfg = ClusterConfig::minpool();
         let k = Matmul::weak_scaled(16);
-        std::hint::black_box(run_and_verify(&k, &cfg));
+        std::hint::black_box(run_with_backend(&k, &cfg, SimBackend::Serial));
+    });
+    bench_config("minpool matmul end-to-end (parallel)", 1, 5, &mut || {
+        let cfg = ClusterConfig::minpool();
+        let k = Matmul::weak_scaled(16);
+        std::hint::black_box(run_with_backend(&k, &cfg, SimBackend::Parallel));
     });
 }

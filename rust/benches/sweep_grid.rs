@@ -1,0 +1,39 @@
+//! Perf bench — the scenario sweep runner's wall-clock on the CI grid:
+//! threaded grid + parallel tile stepping vs. one thread forcing the
+//! serial backend. This is the speedup the sweep runner exists for
+//! (large configuration studies like Fig 13/14 are grids of independent
+//! kernel runs).
+
+use std::time::Instant;
+
+use mempool::brow;
+use mempool::sim::SimBackend;
+use mempool::studies::sweep::{run_sweep, SweepSpec};
+use mempool::util::bench::section;
+use mempool::util::par::default_jobs;
+
+fn time_grid(backend: SimBackend, jobs: usize) -> f64 {
+    let spec = SweepSpec { backend, jobs, ..SweepSpec::ci_default() };
+    let t0 = Instant::now();
+    let points = run_sweep(&spec).expect("sweep");
+    assert_eq!(points.len(), spec.grid().len());
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    section("Sweep grid wall-clock — serial 1-thread vs parallel N-thread");
+    let jobs = default_jobs();
+    // Warm up allocators and the thread pool once.
+    let _ = time_grid(SimBackend::Serial, 1);
+    let serial = time_grid(SimBackend::Serial, 1);
+    let parallel = time_grid(SimBackend::Parallel, jobs);
+    brow!("mode", "jobs", "wall s");
+    brow!("serial backend", 1, format!("{serial:.3}"));
+    brow!("parallel backend", jobs, format!("{parallel:.3}"));
+    println!(
+        "\nspeedup: {:.2}x on the {}-point CI grid ({} worker threads)",
+        serial / parallel,
+        SweepSpec::ci_default().grid().len(),
+        jobs
+    );
+}

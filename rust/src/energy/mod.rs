@@ -161,7 +161,7 @@ impl EnergyParams {
 }
 
 /// Aggregated energy per component in pJ (the Fig 17 hierarchy).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyBook {
     pub cores: f64,
     pub ipu: f64,

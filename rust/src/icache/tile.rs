@@ -136,7 +136,21 @@ impl TileICache {
 
     /// Advance one cycle: complete fills, then serve one L1 lookup.
     pub fn step(&mut self, now: u64, port: &mut dyn RefillPort) {
+        if let Some((line, bytes)) = self.step_deferred(now) {
+            let done = port.read(line, bytes, now);
+            self.resolve_refill(line, done);
+        }
+    }
+
+    /// Tile-local part of [`step`]: complete due fills and serve one L1
+    /// lookup, but *defer* any AXI refill — the returned `(line, bytes)`
+    /// request must be resolved with [`resolve_refill`] later in the same
+    /// cycle. Used by the parallel backend, whose tile-local phase may not
+    /// touch the shared AXI tree.
+    pub fn step_deferred(&mut self, now: u64) -> Option<(u32, usize)> {
         // 1. Complete due fills: install into L1 (refills) and waiter L0s.
+        //    (An unresolved refill has `ready_at == u64::MAX` and can never
+        //    complete before it is resolved.)
         let mut i = 0;
         while i < self.fills.len() {
             if self.fills[i].ready_at <= now {
@@ -179,10 +193,26 @@ impl TileICache {
                     fill_l1: false,
                 });
             } else {
-                let done = port.read(line, self.line_bytes as usize, now);
-                self.fills.push(PendingFill { line_addr: line, ready_at: done, waiters, fill_l1: true });
+                self.fills.push(PendingFill {
+                    line_addr: line,
+                    ready_at: u64::MAX,
+                    waiters,
+                    fill_l1: true,
+                });
+                return Some((line, self.line_bytes as usize));
             }
         }
+        None
+    }
+
+    /// Set the completion time of the refill deferred by [`step_deferred`].
+    pub fn resolve_refill(&mut self, line: u32, ready_at: u64) {
+        let fill = self
+            .fills
+            .iter_mut()
+            .find(|f| f.fill_l1 && f.line_addr == line && f.ready_at == u64::MAX)
+            .expect("resolve_refill without a deferred refill");
+        fill.ready_at = ready_at;
     }
 
     /// Flush everything (used between benchmark phases for cold-start runs).

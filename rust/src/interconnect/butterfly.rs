@@ -103,6 +103,12 @@ impl Net {
         true
     }
 
+    /// Free slots left in `tile`'s source-port queue (credit snapshot for
+    /// the parallel backend).
+    fn free_space(&self, tile: usize) -> usize {
+        QUEUE_DEPTH.saturating_sub(self.src_q[tile].len())
+    }
+
     fn step(&mut self, now: u64) {
         // Stage B first (mid → destination), so a flit never crosses both
         // pipeline stages in one cycle.
@@ -247,5 +253,13 @@ impl L1Network for Butterfly {
     fn in_flight(&self) -> usize {
         self.req.iter().map(|n| n.in_flight()).sum::<usize>()
             + self.resp.iter().map(|n| n.in_flight()).sum::<usize>()
+    }
+
+    fn send_credit(&self, flit: &Flit, resp: bool) -> (u64, usize) {
+        // Mirror `try_send_req`/`try_send_resp`: the channel is this lane's
+        // butterfly instance, and its queue is private to the source tile.
+        let n = self.net_of(flit.lane);
+        let nets = if resp { &self.resp } else { &self.req };
+        (((resp as u64) << 63) | n as u64, nets[n].free_space(flit.src_tile as usize))
     }
 }

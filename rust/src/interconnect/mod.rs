@@ -33,7 +33,11 @@ use crate::config::{ClusterConfig, Topology};
 ///
 /// Requests and responses ride separate, mirrored networks (the paper's
 /// interconnects have independent request/response channels).
-pub trait L1Network {
+///
+/// `Send + Sync` lets the parallel tile-stepping backend share the network
+/// immutably across tile workers during the local phase (all mutation
+/// happens in the serial exchange phase).
+pub trait L1Network: Send + Sync {
     /// Try to accept a request flit departing `flit.src_tile`; `false`
     /// means the tile's outgoing port queue is full (backpressure to the
     /// core's LSU).
@@ -55,6 +59,18 @@ pub trait L1Network {
 
     /// Number of flits currently inside the network (debug/invariants).
     fn in_flight(&self) -> usize;
+
+    /// Identify the injection channel `flit` would enter via
+    /// `try_send_req`/`try_send_resp` and how many more flits that channel
+    /// accepts right now: `(key, free_slots)`.
+    ///
+    /// The key is unique per channel *within one source tile* (every
+    /// injection channel is fed by exactly one source tile). The parallel
+    /// backend snapshots these credits at the start of a cycle and counts
+    /// reservations per key, reproducing the serial backend's
+    /// accept/backpressure decisions exactly: nothing else drains or fills
+    /// the channel until the buffered flits are replayed.
+    fn send_credit(&self, flit: &Flit, resp: bool) -> (u64, usize);
 }
 
 /// Instantiate the configured topology.

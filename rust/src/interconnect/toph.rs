@@ -163,4 +163,24 @@ impl L1Network for TopHNet {
             + self.pair_req.iter().flatten().map(|x| x.in_flight()).sum::<usize>()
             + self.pair_resp.iter().flatten().map(|x| x.in_flight()).sum::<usize>()
     }
+
+    fn send_credit(&self, flit: &Flit, resp: bool) -> (u64, usize) {
+        let (sg, dg) = (self.group_of(flit.src_tile), self.group_of(flit.dst_tile));
+        let src_idx = self.index_in_group(flit.src_tile);
+        // Mirror `send`'s crossbar selection exactly.
+        let xbar = if sg == dg {
+            if resp {
+                &self.local_resp[sg]
+            } else {
+                &self.local_req[sg]
+            }
+        } else {
+            let slot = sg * self.groups + dg;
+            let v = if resp { &self.pair_resp } else { &self.pair_req };
+            v[slot].as_ref().expect("pair crossbar")
+        };
+        // Within one source tile the channel is determined by the
+        // destination group and direction.
+        (((resp as u64) << 63) | dg as u64, xbar.free_space(src_idx))
+    }
 }

@@ -56,6 +56,12 @@ impl Xbar16 {
         }
     }
 
+    /// Free slots left in source port `src`'s queue (credit snapshot for
+    /// the parallel backend).
+    pub fn free_space(&self, src: usize) -> usize {
+        PORT_QUEUE_DEPTH.saturating_sub(self.src_queues[src].len())
+    }
+
     /// Enqueue at source port `src` (index within this crossbar).
     pub fn try_send(&mut self, src: usize, flit: Flit) -> bool {
         let q = &mut self.src_queues[src];

@@ -28,7 +28,7 @@ pub use matmul::Matmul;
 use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
-use crate::sim::{base_symbols, run_kernel, KernelResult, RunConfig};
+use crate::sim::{base_symbols, run_kernel, KernelResult, RunConfig, SimBackend};
 
 /// A runnable, verifiable workload.
 pub trait Kernel {
@@ -55,13 +55,24 @@ pub trait Kernel {
 /// Run a kernel end-to-end on a cluster configuration: generate, place
 /// data, simulate, verify.
 pub fn run_and_verify(kernel: &dyn Kernel, cfg: &ClusterConfig) -> KernelResult {
+    run_with_backend(kernel, cfg, SimBackend::from_env())
+}
+
+/// Like [`run_and_verify`] but with an explicit stepping engine — the
+/// determinism tests and the sweep runner pick backends per run.
+pub fn run_with_backend(
+    kernel: &dyn Kernel,
+    cfg: &ClusterConfig,
+    backend: SimBackend,
+) -> KernelResult {
     let mut cfg = cfg.clone();
     kernel.prepare_config(&mut cfg);
     let (src, mut sym) = kernel.generate(&cfg);
     for (k, v) in base_symbols(&cfg) {
         sym.entry(k).or_insert(v);
     }
-    let run = RunConfig::new(cfg);
+    let mut run = RunConfig::new(cfg);
+    run.backend = backend;
     let result = run_kernel(&run, &src, &sym, |c| kernel.setup(c));
     assert!(
         result.completed,

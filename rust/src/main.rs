@@ -11,6 +11,11 @@
 //! mempool scaling [--cores 4,16,64,256]
 //! mempool doublebuf [--cores 16]
 //! mempool apps [--cores 16]
+//! mempool sweep [--config minpool|mempool] [--cores 4,8,16]
+//!               [--kernels matmul,axpy,dotp] [--backend serial|parallel]
+//!               [--jobs N] [--out results.json]
+//!               [--check ci/expected_cycles.json]
+//!               [--write-baseline ci/expected_cycles.json]
 //! mempool report area|instr-energy|power|related-work
 //! mempool golden-check
 //! ```
@@ -18,9 +23,15 @@
 use mempool::brow;
 use mempool::config::ClusterConfig;
 use mempool::kernels::{run_and_verify, table1_kernels};
+use mempool::sim::SimBackend;
 use mempool::studies;
+use mempool::studies::sweep::{
+    baseline_is_bootstrap, baseline_json, check_baseline, results_json, run_sweep, SweepSpec,
+};
 use mempool::util::bench::section;
 use mempool::util::cli::Args;
+use mempool::util::json::Json;
+use mempool::util::par::default_jobs;
 
 fn cfg_for(args: &Args) -> ClusterConfig {
     let cores: usize = args.parse_or("cores", 256);
@@ -38,6 +49,7 @@ fn main() {
         Some("scaling") => cmd_scaling(&args),
         Some("doublebuf") => cmd_doublebuf(&args),
         Some("apps") => cmd_apps(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("golden-check") => cmd_golden(),
         _ => {
@@ -199,6 +211,110 @@ fn cmd_apps(args: &Args) {
             format!("{:.0}%", 100.0 * r.fraction_of_ideal),
             format!("{:.0}%", 100.0 * r.sync_share)
         );
+    }
+}
+
+fn cmd_sweep(args: &Args) {
+    let defaults = SweepSpec::ci_default();
+    let spec = SweepSpec {
+        preset: args.get_or("config", &defaults.preset).to_string(),
+        cores: args
+            .list("cores")
+            .map(|v| v.iter().map(|s| s.parse().expect("core count")).collect())
+            .unwrap_or(defaults.cores),
+        kernels: args.list("kernels").unwrap_or(defaults.kernels),
+        backend: SimBackend::parse(args.get_or("backend", "parallel"))
+            .expect("--backend serial|parallel"),
+        jobs: args.parse_or("jobs", default_jobs()),
+    };
+
+    section(&format!(
+        "Sweep — {} preset, {} backend, {} jobs, {} points",
+        spec.preset,
+        spec.backend.name(),
+        spec.jobs,
+        spec.grid().len()
+    ));
+    let t0 = std::time::Instant::now();
+    let points = match run_sweep(&spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("sweep failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+
+    brow!("kernel", "cores", "cycles", "IPC", "OP/cycle", "sync", "wall ms");
+    for p in &points {
+        brow!(
+            p.kernel,
+            p.cores,
+            p.cycles,
+            format!("{:.2}", p.ipc),
+            format!("{:.1}", p.ops_per_cycle),
+            format!("{:.0}%", 100.0 * p.synchronization),
+            format!("{:.1}", p.wall_ms)
+        );
+    }
+    println!("\ngrid wall-clock: {wall:.3}s ({} backend, {} jobs)", spec.backend.name(), spec.jobs);
+
+    if let Some(path) = args.get("out") {
+        let doc = results_json(&spec, &points, wall);
+        std::fs::write(path, doc.pretty()).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("results written to {path}");
+    }
+    if let Some(path) = args.get("write-baseline") {
+        let doc = baseline_json(&spec, &points);
+        std::fs::write(path, doc.pretty()).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("baseline written to {path}");
+    }
+    if let Some(path) = args.get("check") {
+        let text =
+            std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read baseline {path}: {e}"));
+        let baseline =
+            Json::parse(&text).unwrap_or_else(|e| panic!("parse baseline {path}: {e}"));
+        if baseline_is_bootstrap(&baseline) {
+            // No cycle counts pinned yet: gate on backend determinism
+            // instead — the *other* engine must land on identical cycles.
+            let other = match spec.backend {
+                SimBackend::Serial => SimBackend::Parallel,
+                SimBackend::Parallel => SimBackend::Serial,
+            };
+            println!(
+                "baseline {path} is a bootstrap placeholder; \
+                 checking {}-vs-{} cycle agreement instead",
+                spec.backend.name(),
+                other.name()
+            );
+            let other_spec = SweepSpec { backend: other, ..spec.clone() };
+            let other_points = match run_sweep(&other_spec) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{} sweep failed: {e}", other.name());
+                    std::process::exit(1);
+                }
+            };
+            let self_baseline = baseline_json(&other_spec, &other_points);
+            if let Err(e) = check_baseline(&points, &self_baseline) {
+                eprintln!("BACKEND CYCLE MISMATCH:\n{e}");
+                std::process::exit(1);
+            }
+            println!(
+                "backends agree on all {} points; pin real numbers with \
+                 `mempool sweep --write-baseline {path}`",
+                points.len()
+            );
+        } else if let Err(e) = check_baseline(&points, &baseline) {
+            eprintln!("CYCLE BASELINE DRIFT vs {path}:\n{e}");
+            eprintln!(
+                "(if the change is intended, regenerate with \
+                 `mempool sweep --write-baseline {path}`)"
+            );
+            std::process::exit(1);
+        } else {
+            println!("cycle counts match {path} ({} points)", points.len());
+        }
     }
 }
 

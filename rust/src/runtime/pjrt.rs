@@ -1,0 +1,182 @@
+//! The real PJRT runtime (feature `golden`): loads the AOT-compiled
+//! golden models (`artifacts/*.hlo.txt`, produced once by `make
+//! artifacts`) and executes them on the XLA CPU client from the rust side
+//! — Python never runs at simulation time.
+//!
+//! The golden models verify the cycle-accurate simulator's results
+//! bit-for-bit (both sides compute over wrapping int32), closing the loop
+//! between the three layers: Pallas kernel (L1) → jitted JAX graph (L2) →
+//! HLO text → this loader (L3).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Locate the artifacts directory: `$MEMPOOL_ARTIFACTS`, or `artifacts/`
+/// relative to the crate root (works for `cargo test`/`run` from the
+/// workspace).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("MEMPOOL_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let candidates = [
+        PathBuf::from("artifacts"),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ];
+    for c in &candidates {
+        if c.exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}
+
+/// True if the artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("matmul.hlo.txt").exists()
+}
+
+/// A loaded golden model.
+pub struct GoldenModel {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl GoldenModel {
+    /// Execute on int32 inputs; returns the flattened int32 outputs of
+    /// the (single-element) result tuple.
+    pub fn run_i32(&self, inputs: &[Literal]) -> Result<Vec<i32>> {
+        let result = self.exe.execute::<Literal>(inputs)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let out = result.to_tuple1().context("unwrap 1-tuple")?;
+        Ok(out.to_vec::<i32>()?)
+    }
+}
+
+/// The PJRT runtime: one CPU client, executables cached per model.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, GoldenModel>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        Ok(Runtime {
+            client: PjRtClient::cpu().context("create PJRT CPU client")?,
+            dir: artifacts_dir(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn with_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Ok(Runtime {
+            client: PjRtClient::cpu()?,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the golden model `name`.
+    pub fn load(&mut self, name: &str) -> Result<&GoldenModel> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not unicode")?,
+            )
+            .with_context(|| format!("load HLO text {path:?} (run `make artifacts`?)"))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).context("PJRT compile")?;
+            self.cache
+                .insert(name.to_string(), GoldenModel { exe, name: name.to_string() });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: run model `name` on int32 tensors given as
+    /// (data, dims) pairs.
+    pub fn run_i32(&mut self, name: &str, inputs: &[(&[i32], &[usize])]) -> Result<Vec<i32>> {
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = Literal::vec1(data);
+                if dims.len() > 1 || (dims.len() == 1 && dims[0] != data.len()) || dims.is_empty()
+                {
+                    let d: Vec<i64> = dims.iter().map(|x| *x as i64).collect();
+                    lit.reshape(&d).context("reshape input")
+                } else {
+                    Ok(lit)
+                }
+            })
+            .collect::<Result<_>>()?;
+        self.load(name)?;
+        self.cache[name].run_i32(&lits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::new().expect("PJRT client"))
+    }
+
+    #[test]
+    fn golden_matmul_executes() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        // Shapes must match the registry defaults: (64, 32, 32).
+        let (m, n, k) = (64usize, 32usize, 32usize);
+        let a: Vec<i32> = (0..m * k).map(|i| (i % 7) as i32 - 3).collect();
+        let b: Vec<i32> = (0..k * n).map(|i| (i % 5) as i32 - 2).collect();
+        let got = rt
+            .run_i32("matmul", &[(&a, &[m, k]), (&b, &[k, n])])
+            .expect("execute");
+        assert_eq!(got.len(), m * n);
+        // Host check.
+        for i in [0usize, 17, m * n - 1] {
+            let (r, c) = (i / n, i % n);
+            let mut acc = 0i32;
+            for kk in 0..k {
+                acc = acc.wrapping_add(a[r * k + kk].wrapping_mul(b[kk * n + c]));
+            }
+            assert_eq!(got[i], acc, "C[{r},{c}]");
+        }
+    }
+
+    #[test]
+    fn golden_axpy_executes() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let n = 4096usize;
+        let x: Vec<i32> = (0..n).map(|i| i as i32).collect();
+        let y: Vec<i32> = (0..n).map(|i| 2 * i as i32).collect();
+        let alpha = [3i32];
+        let got = rt
+            .run_i32("axpy", &[(&alpha, &[]), (&x, &[n]), (&y, &[n])])
+            .expect("execute");
+        for i in [0usize, 100, n - 1] {
+            assert_eq!(got[i], 3 * i as i32 + 2 * i as i32);
+        }
+    }
+
+    #[test]
+    fn golden_dotp_executes() {
+        let Some(mut rt) = runtime_or_skip() else { return };
+        let n = 4096usize;
+        let x = vec![2i32; n];
+        let y = vec![3i32; n];
+        let got = rt.run_i32("dotp", &[(&x, &[n]), (&y, &[n])]).expect("execute");
+        assert_eq!(got, vec![6 * n as i32]);
+    }
+}

@@ -13,6 +13,9 @@
 //! 6. the interconnect arbitrates,
 //! 7. due control-register effects apply (wake pulses, DMA frontend).
 
+#[path = "cluster_parallel.rs"]
+mod parallel;
+
 use std::collections::VecDeque;
 
 use crate::axi::AxiSystem;
@@ -33,6 +36,50 @@ use crate::sim::stats::ClusterStats;
 const BANK_QUEUE_DEPTH: usize = 4;
 /// Cycles for a core request to reach the cluster control registers.
 const CTRL_LATENCY: u64 = 3;
+
+/// Which stepping engine drives the cluster.
+///
+/// Both engines are cycle-exact and produce identical state evolution —
+/// the determinism tests assert it — so the choice only affects host
+/// wall-clock time. `Serial` is the reference single-pass schedule;
+/// `Parallel` runs the per-tile local phase (core issue, bank service,
+/// icache advance) across threads and replays all cross-tile effects in
+/// a deterministic serial exchange phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimBackend {
+    Serial,
+    Parallel,
+}
+
+impl SimBackend {
+    /// Read the default backend from `MEMPOOL_BACKEND` (`serial` |
+    /// `parallel`); the reference serial engine when unset. Unknown
+    /// spellings abort rather than silently falling back — a typo must
+    /// not make a benchmark report the wrong engine's numbers.
+    pub fn from_env() -> SimBackend {
+        match std::env::var("MEMPOOL_BACKEND") {
+            Ok(v) => SimBackend::parse(&v)
+                .unwrap_or_else(|| panic!("MEMPOOL_BACKEND={v}: expected serial|parallel")),
+            Err(_) => SimBackend::Serial,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimBackend::Serial => "serial",
+            SimBackend::Parallel => "parallel",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<SimBackend> {
+        match s {
+            "serial" => Some(SimBackend::Serial),
+            "parallel" => Some(SimBackend::Parallel),
+            _ => None,
+        }
+    }
+}
 
 /// One tile: cores, icache, SPM banks and their queues.
 pub struct Tile {
@@ -89,6 +136,10 @@ pub struct Cluster {
     pub group_accesses: u64,
     pub global_accesses: u64,
     pub energy_params: EnergyParams,
+    /// Stepping engine (see [`SimBackend`]); both are cycle-exact.
+    pub backend: SimBackend,
+    /// Per-tile buffers reused by the parallel backend across cycles.
+    scratch: Vec<parallel::TileScratch>,
 }
 
 impl Cluster {
@@ -140,6 +191,8 @@ impl Cluster {
             group_accesses: 0,
             global_accesses: 0,
             energy_params: EnergyParams::default(),
+            backend: SimBackend::from_env(),
+            scratch: Vec::new(),
             cfg,
         }
     }
@@ -223,23 +276,14 @@ impl Cluster {
         self.dma_done_at = self.dma_done_at.max(done);
     }
 
-    /// Advance one cycle.
-    pub fn step(&mut self) {
-        let now = self.now;
-
-        // Phase 1: deliver due completions.
-        for tile in &mut self.tiles {
-            let mut i = 0;
-            while i < tile.deliveries.len() {
-                if tile.deliveries[i].0 <= now {
-                    let (_, lane, c) = tile.deliveries.swap_remove(i);
-                    tile.cores[lane as usize].push_completion(c);
-                } else {
-                    i += 1;
-                }
-            }
-        }
-        // Due system (ctrl/L2) accesses complete here too.
+    /// Pop every pending system (ctrl/L2) access due at `now`, apply its
+    /// side effects (DMA frontend writes and triggers, wake pulses, RO
+    /// flushes), and return the resulting core completions in processing
+    /// order. Shared by both stepping engines; they differ only in *where*
+    /// the completions are delivered (directly into the cores for the
+    /// serial engine, buffered per tile for the parallel one so the
+    /// per-core inbox order matches the serial schedule exactly).
+    fn complete_due_sys(&mut self, now: u64) -> Vec<(usize, u8, MemCompletion)> {
         let mut due = Vec::new();
         let mut i = 0;
         while i < self.pending_sys.len() {
@@ -249,6 +293,7 @@ impl Cluster {
                 i += 1;
             }
         }
+        let mut out = Vec::with_capacity(due.len());
         for p in due {
             let rdata = match p.kind {
                 SysKind::CtrlLoad(off) => match off {
@@ -274,8 +319,38 @@ impl Cluster {
                 SysKind::L2Load(off) => self.l2.read_word(off),
                 SysKind::Ack => 0,
             };
-            self.tiles[p.tile].cores[p.lane as usize]
-                .push_completion(MemCompletion { tag: p.tag, rdata });
+            out.push((p.tile, p.lane, MemCompletion { tag: p.tag, rdata }));
+        }
+        out
+    }
+
+    /// Advance one cycle with the configured backend.
+    pub fn step(&mut self) {
+        match self.backend {
+            SimBackend::Serial => self.step_serial(),
+            SimBackend::Parallel => self.step_parallel(),
+        }
+    }
+
+    /// Advance one cycle with the reference serial schedule.
+    pub fn step_serial(&mut self) {
+        let now = self.now;
+
+        // Phase 1: deliver due completions.
+        for tile in &mut self.tiles {
+            let mut i = 0;
+            while i < tile.deliveries.len() {
+                if tile.deliveries[i].0 <= now {
+                    let (_, lane, c) = tile.deliveries.swap_remove(i);
+                    tile.cores[lane as usize].push_completion(c);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Due system (ctrl/L2) accesses complete here too.
+        for (t, lane, c) in self.complete_due_sys(now) {
+            self.tiles[t].cores[lane as usize].push_completion(c);
         }
 
         // Phase 2: cores issue. Tile fields are split so the context can

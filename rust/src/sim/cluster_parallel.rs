@@ -1,0 +1,486 @@
+//! The data-parallel tile-stepping engine.
+//!
+//! `Cluster::step_serial()` advances tiles one after another, which makes
+//! reproducing the paper's 256-core figures wall-clock-bound on a single
+//! host thread. This module splits each cycle into:
+//!
+//! 1. a **serial intake phase** — network arrivals are drained into
+//!    per-tile inboxes and due control-register/L2 completions are
+//!    computed (both touch shared state: the interconnect, the AXI tree,
+//!    the DMA frontend);
+//! 2. a **parallel local phase** — every tile independently delivers
+//!    completions, issues its cores, services its SPM banks, and advances
+//!    its instruction cache. All cross-tile effects (remote flits, L2 and
+//!    control accesses, icache refills) are *buffered* in a per-tile
+//!    outbox instead of applied;
+//! 3. a **serial exchange phase** — the buffered effects are replayed in
+//!    tile order, reproducing the serial engine's arbitration and AXI
+//!    ordering bit for bit, then the interconnect arbitrates.
+//!
+//! Cycle-exactness hinges on two structural properties of the models:
+//!
+//! - network **injection channels are private to a source tile** (per-port
+//!   FIFOs in `Xbar16`, per-source queues in the butterfly), so a
+//!   snapshot of free slots plus per-tile reservation counting
+//!   ([`L1Network::send_credit`]) reproduces every accept/backpressure
+//!   decision the serial engine would make;
+//! - network **arrival queues are private to a destination tile** and are
+//!   only filled by `L1Network::step`, which runs in the exchange phase,
+//!   so draining them early in the cycle observes the same flits.
+//!
+//! The determinism tests in `sim::tests` assert serial/parallel equality
+//! of cycle counts, statistics, and architectural results for every
+//! covered kernel.
+
+use std::collections::VecDeque;
+
+use super::{serve_bank, Cluster, PendingSys, SysKind, Tile, BANK_QUEUE_DEPTH, CTRL_LATENCY};
+use crate::core::{CoreCtx, MemCompletion, MemRequestOut};
+use crate::icache::{FetchResult, TileICache};
+use crate::interconnect::{Flit, L1Network};
+use crate::isa::{Csr, Program};
+use crate::mem::{AddressMap, MemOp, Region};
+use crate::util::par::par_for_each_pair;
+
+/// A buffered control-register or L2 access, replayed in the exchange
+/// phase in (tile, core, issue) order — the serial engine's AXI order.
+#[derive(Debug, Clone, Copy)]
+pub(super) enum ParSysOp {
+    /// Control-register access: completes `CTRL_LATENCY` cycles later.
+    Ctrl { lane: u8, tag: u8, kind: ParCtrlKind },
+    /// L2 read (plain loads and atomics, which the serial engine also
+    /// treats as reads on the L2 path).
+    L2Read { lane: u8, tag: u8, addr: u32, off: u32 },
+    /// L2 write: functional word write plus a timed AXI write ack.
+    L2Write { lane: u8, tag: u8, off: u32, wdata: u32 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub(super) enum ParCtrlKind {
+    Load(u32),
+    Store(u32, u32),
+    /// Atomics on control registers: ack only (mirrors the serial engine).
+    Ack,
+}
+
+/// Per-tile working state, reused across cycles to stay allocation-free
+/// in the steady state.
+#[derive(Debug, Default)]
+pub(super) struct TileScratch {
+    /// Request flits that arrived for this tile this cycle.
+    req_in: Vec<Flit>,
+    /// System completions due this cycle, in serial processing order.
+    sys_completions: Vec<(u8, MemCompletion)>,
+    /// Remote request flits issued by this tile's cores this cycle.
+    out_req: Vec<Flit>,
+    /// Response flits leaving this tile's banks this cycle.
+    out_resp: Vec<Flit>,
+    /// Buffered control-register / L2 accesses, in issue order.
+    out_sys: Vec<ParSysOp>,
+    /// Deferred icache refill: (line address, bytes).
+    refill: Option<(u32, usize)>,
+    /// Injection-channel credits: (channel key, remaining slots).
+    credits: Vec<(u64, usize)>,
+    local_accesses: u64,
+    group_accesses: u64,
+    global_accesses: u64,
+}
+
+impl TileScratch {
+    fn begin_cycle(&mut self) {
+        debug_assert!(self.req_in.is_empty());
+        debug_assert!(self.sys_completions.is_empty());
+        debug_assert!(self.out_req.is_empty());
+        debug_assert!(self.out_resp.is_empty());
+        debug_assert!(self.out_sys.is_empty());
+        debug_assert!(self.refill.is_none());
+        self.credits.clear();
+    }
+
+    /// Reserve one slot on the injection channel `flit` would enter.
+    /// Returns `false` on backpressure — exactly when the serial engine's
+    /// `try_send_req`/`try_send_resp` would have (the channel is private
+    /// to this tile and the network does not move until the exchange
+    /// phase).
+    fn reserve(&mut self, net: &dyn L1Network, flit: &Flit, resp: bool) -> bool {
+        let (key, free) = net.send_credit(flit, resp);
+        match self.credits.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, remaining)) => {
+                if *remaining == 0 {
+                    false
+                } else {
+                    *remaining -= 1;
+                    true
+                }
+            }
+            None => {
+                if free == 0 {
+                    false
+                } else {
+                    self.credits.push((key, free - 1));
+                    true
+                }
+            }
+        }
+    }
+}
+
+/// Cluster-shape constants shared by every tile worker.
+#[derive(Debug, Clone, Copy)]
+struct ParConsts {
+    now: u64,
+    tiles_per_group: usize,
+    num_cores: u32,
+    cores_per_tile: u32,
+    cores_per_group: u32,
+}
+
+impl Cluster {
+    /// Advance one cycle with the parallel tile-stepping engine.
+    /// Cycle-exact with [`Cluster::step_serial`].
+    pub fn step_parallel(&mut self) {
+        let now = self.now;
+        let n_tiles = self.tiles.len();
+        if self.scratch.len() != n_tiles {
+            self.scratch = (0..n_tiles).map(|_| TileScratch::default()).collect();
+        }
+
+        // --- Serial intake phase ---------------------------------------
+        // Drain this cycle's request arrivals into per-tile inboxes. The
+        // serial engine pops them between core issue and bank service,
+        // but core issue only pushes into the (disjoint) injection
+        // queues, so the same flits arrive either way.
+        for t in 0..n_tiles {
+            self.scratch[t].begin_cycle();
+            while let Some(f) = self.net.pop_req_arrival(t, now) {
+                debug_assert_eq!(f.dst_tile as usize, t);
+                self.scratch[t].req_in.push(f);
+            }
+        }
+        // Due system completions: side effects (wakes, DMA, RO flush)
+        // apply now — before any core steps, as in the serial engine —
+        // while the completions are buffered so each core's inbox sees
+        // them *after* this cycle's due deliveries (serial phase order).
+        for (t, lane, c) in self.complete_due_sys(now) {
+            self.scratch[t].sys_completions.push((lane, c));
+        }
+
+        // --- Parallel local phase --------------------------------------
+        let consts = ParConsts {
+            now,
+            tiles_per_group: self.cfg.tiles_per_group,
+            num_cores: self.cfg.num_cores() as u32,
+            cores_per_tile: self.cfg.cores_per_tile as u32,
+            cores_per_group: (self.cfg.tiles_per_group * self.cfg.cores_per_tile) as u32,
+        };
+        {
+            let tiles = &mut self.tiles;
+            let scratch = &mut self.scratch;
+            let net: &dyn L1Network = &*self.net;
+            let map = &self.map;
+            let program = &self.program;
+            par_for_each_pair(tiles, scratch, |t, tile, scr| {
+                tile_local_phase(t, tile, scr, net, map, program, &consts);
+            });
+        }
+
+        // --- Serial exchange phase -------------------------------------
+        // Replay buffered network traffic in tile order. Each injection
+        // channel is fed by exactly one tile, so every reserved send must
+        // be accepted.
+        for scr in &mut self.scratch {
+            // Real asserts, not debug: a silently dropped flit would hang
+            // the issuing core and surface only as a cycle-budget timeout;
+            // this serial replay loop is cold, so the check is free.
+            for f in scr.out_req.drain(..) {
+                let sent = self.net.try_send_req(f, now);
+                assert!(sent, "reserved request channel slot vanished");
+            }
+            for f in scr.out_resp.drain(..) {
+                let sent = self.net.try_send_resp(f, now);
+                assert!(sent, "reserved response channel slot vanished");
+            }
+            self.local_accesses += scr.local_accesses;
+            self.group_accesses += scr.group_accesses;
+            self.global_accesses += scr.global_accesses;
+            scr.local_accesses = 0;
+            scr.group_accesses = 0;
+            scr.global_accesses = 0;
+        }
+        // Replay control-register and L2 accesses in (tile, core, issue)
+        // order — the exact order the serial engine walks the AXI tree.
+        for t in 0..n_tiles {
+            let group = t / self.cfg.tiles_per_group;
+            let master = t % self.cfg.tiles_per_group;
+            // Detach the buffer so the replay can borrow the AXI tree and
+            // L2; reattached below to keep its capacity across cycles.
+            let mut ops = std::mem::take(&mut self.scratch[t].out_sys);
+            for op in ops.drain(..) {
+                match op {
+                    ParSysOp::Ctrl { lane, tag, kind } => {
+                        let kind = match kind {
+                            ParCtrlKind::Load(off) => SysKind::CtrlLoad(off),
+                            ParCtrlKind::Store(off, value) => SysKind::CtrlStore(off, value),
+                            ParCtrlKind::Ack => SysKind::Ack,
+                        };
+                        self.pending_sys.push(PendingSys {
+                            ready: now + CTRL_LATENCY,
+                            tile: t,
+                            lane,
+                            tag,
+                            kind,
+                        });
+                    }
+                    ParSysOp::L2Read { lane, tag, addr, off } => {
+                        let done = self.axi.read(group, master, addr, 4, now);
+                        self.pending_sys.push(PendingSys {
+                            ready: done + 1,
+                            tile: t,
+                            lane,
+                            tag,
+                            kind: SysKind::L2Load(off),
+                        });
+                    }
+                    ParSysOp::L2Write { lane, tag, off, wdata } => {
+                        self.l2.write_word(off & !3, wdata);
+                        let done = self.axi.write(group, 4, now);
+                        self.pending_sys.push(PendingSys {
+                            ready: done + 1,
+                            tile: t,
+                            lane,
+                            tag,
+                            kind: SysKind::Ack,
+                        });
+                    }
+                }
+            }
+            self.scratch[t].out_sys = ops;
+        }
+        // Resolve deferred instruction-cache refills through the AXI tree
+        // (the serial engine's phase 5 runs after all core-issued L2
+        // traffic of the cycle, hence the separate pass).
+        for t in 0..n_tiles {
+            if let Some((line, bytes)) = self.scratch[t].refill.take() {
+                let group = t / self.cfg.tiles_per_group;
+                let master = t % self.cfg.tiles_per_group;
+                let done = self.axi.read(group, master, line, bytes, now);
+                self.tiles[t].icache.resolve_refill(line, done);
+            }
+        }
+        // The interconnect arbitrates, then response arrivals are
+        // scheduled for delivery next cycle (serial phases 6 and 7).
+        self.net.step(now);
+        for t in 0..n_tiles {
+            while let Some(f) = self.net.pop_resp_arrival(t, now) {
+                debug_assert_eq!(f.dst_tile as usize, t);
+                self.tiles[t].deliveries.push((
+                    now + 1,
+                    f.lane,
+                    MemCompletion { tag: f.tag, rdata: f.rdata },
+                ));
+            }
+        }
+
+        self.now += 1;
+    }
+}
+
+/// Everything one tile does in a cycle that touches only its own state:
+/// the serial engine's phases 1 (delivery), 2 (core issue), 3 (arrival
+/// drain), 4 (bank service), and the local half of 5 (icache), in that
+/// order.
+fn tile_local_phase(
+    t: usize,
+    tile: &mut Tile,
+    scr: &mut TileScratch,
+    net: &dyn L1Network,
+    map: &AddressMap,
+    program: &Program,
+    c: &ParConsts,
+) {
+    let now = c.now;
+
+    // Deliver due completions (same swap_remove scan as the serial
+    // engine, so equal-time completions retire in the same order).
+    let mut i = 0;
+    while i < tile.deliveries.len() {
+        if tile.deliveries[i].0 <= now {
+            let (_, lane, comp) = tile.deliveries.swap_remove(i);
+            tile.cores[lane as usize].push_completion(comp);
+        } else {
+            i += 1;
+        }
+    }
+    // Buffered system completions arrive after the deliveries, exactly
+    // like the serial engine's phase-1 second half.
+    for (lane, comp) in scr.sys_completions.drain(..) {
+        tile.cores[lane as usize].push_completion(comp);
+    }
+
+    // Cores fetch and issue.
+    {
+        let Tile { cores, icache, bank_q, .. } = tile;
+        let mut ctx = ParTileCtx {
+            tile: t,
+            group: t / c.tiles_per_group,
+            tiles_per_group: c.tiles_per_group,
+            now,
+            map,
+            icache,
+            bank_q,
+            net,
+            num_cores: c.num_cores,
+            cores_per_tile: c.cores_per_tile,
+            cores_per_group: c.cores_per_group,
+            // Explicit reborrow: struct literals move `&mut` bindings.
+            scr: &mut *scr,
+        };
+        for core in cores.iter_mut() {
+            core.step(now, program, &mut ctx);
+        }
+    }
+
+    // Network request arrivals join the bank queues behind this cycle's
+    // tile-local requests (serial phase 3 runs after phase 2).
+    for f in scr.req_in.drain(..) {
+        tile.bank_q[f.bank as usize].push_back(f);
+    }
+
+    // Banks serve one request each; responses head home.
+    for b in 0..tile.banks.len() {
+        if let Some(f) = tile.bank_q[b].pop_front() {
+            let resp = serve_bank(&mut tile.banks[b], f);
+            if resp.dst_tile == resp.src_tile {
+                tile.deliveries.push((
+                    now + 1,
+                    resp.lane,
+                    MemCompletion { tag: resp.tag, rdata: resp.rdata },
+                ));
+            } else {
+                tile.resp_out.push_back(resp);
+            }
+        }
+    }
+    // Drain pending responses while the response network has space.
+    while let Some(f) = tile.resp_out.front() {
+        if scr.reserve(net, f, true) {
+            scr.out_resp.push(*f);
+            tile.resp_out.pop_front();
+        } else {
+            break;
+        }
+    }
+
+    // Instruction cache advances; an AXI refill, if any, is deferred to
+    // the exchange phase.
+    scr.refill = tile.icache.step_deferred(now);
+}
+
+/// The per-tile context handed to the cores by the parallel engine.
+/// Mirrors the serial `TileCtx` decision for decision; cross-tile effects
+/// are buffered instead of applied.
+struct ParTileCtx<'a> {
+    tile: usize,
+    group: usize,
+    tiles_per_group: usize,
+    now: u64,
+    map: &'a AddressMap,
+    icache: &'a mut TileICache,
+    bank_q: &'a mut Vec<VecDeque<Flit>>,
+    net: &'a dyn L1Network,
+    num_cores: u32,
+    cores_per_tile: u32,
+    cores_per_group: u32,
+    scr: &'a mut TileScratch,
+}
+
+impl CoreCtx for ParTileCtx<'_> {
+    fn fetch(&mut self, lane: usize, addr: u32, program: &Program) -> FetchResult {
+        self.icache.fetch(lane, addr, program)
+    }
+
+    fn try_send(&mut self, lane: usize, req: MemRequestOut) -> bool {
+        let now = self.now;
+        let core_global = (self.tile as u32) * self.cores_per_tile + lane as u32;
+        match self.map.decode(req.addr) {
+            Region::Spm(loc) => {
+                let flit = Flit {
+                    src_tile: self.tile as u16,
+                    dst_tile: loc.tile as u16,
+                    lane: lane as u8,
+                    tag: req.tag,
+                    core: core_global,
+                    op: req.op,
+                    wdata: req.wdata,
+                    bank: loc.bank as u16,
+                    row: loc.row,
+                    issued_at: now,
+                    rdata: 0,
+                };
+                if loc.tile as usize == self.tile {
+                    // Tile-local: straight into the bank arbiter.
+                    let q = &mut self.bank_q[loc.bank as usize];
+                    if q.len() >= BANK_QUEUE_DEPTH {
+                        return false;
+                    }
+                    q.push_back(flit);
+                    self.scr.local_accesses += 1;
+                    true
+                } else {
+                    let ok = self.scr.reserve(self.net, &flit, false);
+                    if ok {
+                        self.scr.out_req.push(flit);
+                        if loc.tile as usize / self.tiles_per_group == self.group {
+                            self.scr.group_accesses += 1;
+                        } else {
+                            self.scr.global_accesses += 1;
+                        }
+                    }
+                    ok
+                }
+            }
+            Region::Ctrl(off) => {
+                let kind = match req.op {
+                    MemOp::Read => ParCtrlKind::Load(off),
+                    MemOp::Write { .. } => ParCtrlKind::Store(off, req.wdata),
+                    _ => ParCtrlKind::Ack, // atomics on ctrl regs: ack only
+                };
+                self.scr.out_sys.push(ParSysOp::Ctrl { lane: lane as u8, tag: req.tag, kind });
+                true
+            }
+            Region::L2(off) => {
+                match req.op {
+                    MemOp::Write { .. } => self.scr.out_sys.push(ParSysOp::L2Write {
+                        lane: lane as u8,
+                        tag: req.tag,
+                        off,
+                        wdata: req.wdata,
+                    }),
+                    // Reads and atomics both walk the read path, like the
+                    // serial engine.
+                    _ => self.scr.out_sys.push(ParSysOp::L2Read {
+                        lane: lane as u8,
+                        tag: req.tag,
+                        addr: req.addr,
+                        off,
+                    }),
+                }
+                true
+            }
+            Region::Invalid => panic!(
+                "core {core_global}: access to unmapped address {:#x}",
+                req.addr
+            ),
+        }
+    }
+
+    fn read_csr(&mut self, csr: Csr) -> u32 {
+        match csr {
+            Csr::Mhartid => unreachable!("handled by the core"),
+            Csr::Mcycle => self.now as u32,
+            Csr::NumCores => self.num_cores,
+            Csr::CoresPerTile => self.cores_per_tile,
+            Csr::CoresPerGroup => self.cores_per_group,
+        }
+    }
+}

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 use crate::isa::Program;
-use crate::sim::{Cluster, ClusterStats};
+use crate::sim::{Cluster, ClusterStats, SimBackend};
 
 /// How to run a kernel.
 pub struct RunConfig {
@@ -14,11 +14,19 @@ pub struct RunConfig {
     pub max_cycles: u64,
     /// Invalidate the instruction caches before starting (cold start).
     pub cold_icache: bool,
+    /// Stepping engine; both are cycle-exact (defaults to
+    /// `MEMPOOL_BACKEND`, or the reference serial engine).
+    pub backend: SimBackend,
 }
 
 impl RunConfig {
     pub fn new(cluster: ClusterConfig) -> Self {
-        RunConfig { cluster, max_cycles: 10_000_000, cold_icache: true }
+        RunConfig {
+            cluster,
+            max_cycles: 10_000_000,
+            cold_icache: true,
+            backend: SimBackend::from_env(),
+        }
     }
 }
 
@@ -42,6 +50,7 @@ pub fn run_kernel(
     let program = Program::assemble(src, symbols)
         .unwrap_or_else(|e| panic!("kernel assembly failed: {e}"));
     let mut cluster = Cluster::new(run.cluster.clone(), program);
+    cluster.backend = run.backend;
     cluster.reset_cores(0);
     if run.cold_icache {
         for t in &mut cluster.tiles {

@@ -22,7 +22,11 @@ impl CycleBreakdown {
 }
 
 /// Cluster-level execution statistics for one run.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` exists for the backend-determinism tests: two cycle-exact
+/// engines must produce bit-identical statistics (including the derived
+/// energy figures, which are pure functions of the event counts).
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ClusterStats {
     /// Cycles the measured phase lasted.
     pub cycles: u64,

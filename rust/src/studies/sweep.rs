@@ -1,0 +1,363 @@
+//! The scenario sweep runner: fan a grid of `ClusterConfig` × kernel
+//! combinations across host threads, run each through the standard
+//! `run_kernel` harness (with the configured stepping backend), and emit
+//! machine-readable JSON — the workload behind the paper's large
+//! configuration sweeps (Fig 13 scaling, Fig 14 breakdown) and the CI
+//! perf-smoke gate.
+//!
+//! Scenario runs are independent full simulations, so the sweep
+//! parallelizes at two levels: coarse-grained across scenarios (plain
+//! scoped threads, works in every build) and fine-grained inside each
+//! simulation when the parallel backend and the `parallel` feature are
+//! active.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::ClusterConfig;
+use crate::kernels::{run_with_backend, Axpy, Conv2d, Dct, Dotp, Kernel, Matmul};
+use crate::sim::SimBackend;
+use crate::util::json::Json;
+use crate::util::par::default_jobs;
+
+/// Kernel names the sweep understands.
+pub const SWEEP_KERNELS: &[&str] = &["matmul", "conv2d", "dct", "axpy", "dotp"];
+
+/// Instantiate a kernel by name at its paper-shaped weak scaling for
+/// `cores`.
+pub fn kernel_by_name(name: &str, cores: usize) -> Option<Box<dyn Kernel>> {
+    Some(match name {
+        "matmul" => Box::new(Matmul::weak_scaled(cores)),
+        "conv2d" => Box::new(Conv2d::weak_scaled(cores)),
+        "dct" => Box::new(Dct::weak_scaled(cores)),
+        "axpy" => Box::new(Axpy::weak_scaled(cores)),
+        "dotp" => Box::new(Dotp::weak_scaled(cores)),
+        _ => return None,
+    })
+}
+
+/// Cluster shape for a preset at a given core count.
+pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
+    if !cores.is_power_of_two() {
+        return Err(format!("core count {cores} must be a power of two"));
+    }
+    let mut cfg = ClusterConfig::with_cores(cores);
+    match preset {
+        // The paper's large configuration family.
+        "mempool" => {}
+        // The fast-test family: fewer DMA backends, like `minpool()`.
+        "minpool" => cfg.dma.backends_per_group = cfg.dma.backends_per_group.min(2),
+        other => return Err(format!("unknown config preset `{other}` (minpool|mempool)")),
+    }
+    Ok(cfg)
+}
+
+/// What to sweep.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub preset: String,
+    pub cores: Vec<usize>,
+    pub kernels: Vec<String>,
+    pub backend: SimBackend,
+    /// Scenario-level worker threads.
+    pub jobs: usize,
+}
+
+impl SweepSpec {
+    /// The CI perf-smoke grid: 3 kernels × 3 cluster sizes on the fast
+    /// `minpool` family (9 points).
+    pub fn ci_default() -> SweepSpec {
+        SweepSpec {
+            preset: "minpool".to_string(),
+            cores: vec![4, 8, 16],
+            kernels: vec!["matmul".to_string(), "axpy".to_string(), "dotp".to_string()],
+            backend: SimBackend::Parallel,
+            jobs: default_jobs(),
+        }
+    }
+
+    /// The scenario grid in deterministic order (cores-major).
+    pub fn grid(&self) -> Vec<(usize, String)> {
+        let mut g = Vec::new();
+        for &cores in &self.cores {
+            for k in &self.kernels {
+                g.push((cores, k.clone()));
+            }
+        }
+        g
+    }
+}
+
+/// One completed scenario.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub kernel: String,
+    pub cores: usize,
+    pub cycles: u64,
+    pub ipc: f64,
+    pub ops_per_cycle: f64,
+    /// Fig 14 cycle-breakdown shares.
+    pub compute: f64,
+    pub control: f64,
+    pub synchronization: f64,
+    pub ifetch: f64,
+    pub lsu: f64,
+    pub raw: f64,
+    /// L1 traffic split (the hybrid-addressing effect).
+    pub local_accesses: u64,
+    pub group_accesses: u64,
+    pub global_accesses: u64,
+    /// Host-side wall clock for this scenario.
+    pub wall_ms: f64,
+}
+
+/// Run one scenario end-to-end (simulate + verify the architectural
+/// result against the host reference).
+pub fn run_point(
+    preset: &str,
+    kernel_name: &str,
+    cores: usize,
+    backend: SimBackend,
+) -> Result<SweepPoint, String> {
+    let cfg = config_for(preset, cores)?;
+    let kernel = kernel_by_name(kernel_name, cores)
+        .ok_or_else(|| format!("unknown kernel `{kernel_name}` (try {SWEEP_KERNELS:?})"))?;
+    let t0 = Instant::now();
+    let mut result = run_with_backend(kernel.as_ref(), &cfg, backend);
+    kernel
+        .verify(&mut result.cluster)
+        .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let s = &result.stats;
+    let bd = s.breakdown();
+    Ok(SweepPoint {
+        kernel: kernel_name.to_string(),
+        cores,
+        cycles: result.cycles,
+        ipc: s.ipc(),
+        ops_per_cycle: s.ops_per_cycle(),
+        compute: bd.compute,
+        control: bd.control,
+        synchronization: bd.synchronization,
+        ifetch: bd.ifetch,
+        lsu: bd.lsu,
+        raw: bd.raw,
+        local_accesses: s.local_accesses,
+        group_accesses: s.group_accesses,
+        global_accesses: s.global_accesses,
+        wall_ms,
+    })
+}
+
+/// Run the whole grid, fanned across `spec.jobs` worker threads. Results
+/// come back in grid order regardless of scheduling.
+pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
+    let grid = spec.grid();
+    if grid.is_empty() {
+        return Err("empty sweep grid (no kernels or no core counts)".to_string());
+    }
+    let jobs = spec.jobs.clamp(1, grid.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<SweepPoint, String>>>> =
+        grid.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= grid.len() {
+                    break;
+                }
+                let (cores, kernel) = &grid[i];
+                let point = run_point(&spec.preset, kernel, *cores, spec.backend);
+                *slots[i].lock().unwrap() = Some(point);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("scenario worker finished"))
+        .collect()
+}
+
+/// Full results document (what `mempool sweep --out` writes).
+pub fn results_json(spec: &SweepSpec, points: &[SweepPoint], wall_seconds: f64) -> Json {
+    let mut doc = Json::obj();
+    doc.set("version", 1u64.into());
+    doc.set("config", spec.preset.as_str().into());
+    doc.set("backend", spec.backend.name().into());
+    doc.set("jobs", spec.jobs.into());
+    doc.set("wall_seconds", wall_seconds.into());
+    let scenarios = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("kernel", p.kernel.as_str().into());
+            o.set("cores", p.cores.into());
+            o.set("cycles", p.cycles.into());
+            o.set("ipc", p.ipc.into());
+            o.set("ops_per_cycle", p.ops_per_cycle.into());
+            let mut bd = Json::obj();
+            bd.set("compute", p.compute.into());
+            bd.set("control", p.control.into());
+            bd.set("synchronization", p.synchronization.into());
+            bd.set("ifetch", p.ifetch.into());
+            bd.set("lsu", p.lsu.into());
+            bd.set("raw", p.raw.into());
+            o.set("breakdown", bd);
+            let mut tr = Json::obj();
+            tr.set("local", p.local_accesses.into());
+            tr.set("group", p.group_accesses.into());
+            tr.set("global", p.global_accesses.into());
+            o.set("traffic", tr);
+            o.set("wall_ms", p.wall_ms.into());
+            o
+        })
+        .collect();
+    doc.set("scenarios", Json::Arr(scenarios));
+    doc
+}
+
+/// Cycle-count baseline document (what `ci/expected_cycles.json` pins).
+pub fn baseline_json(spec: &SweepSpec, points: &[SweepPoint]) -> Json {
+    let mut doc = Json::obj();
+    doc.set("version", 1u64.into());
+    doc.set("config", spec.preset.as_str().into());
+    let scenarios = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("kernel", p.kernel.as_str().into());
+            o.set("cores", p.cores.into());
+            o.set("cycles", p.cycles.into());
+            o
+        })
+        .collect();
+    doc.set("scenarios", Json::Arr(scenarios));
+    doc
+}
+
+/// Is this baseline the placeholder committed before any toolchain pinned
+/// real numbers?
+pub fn baseline_is_bootstrap(baseline: &Json) -> bool {
+    baseline.get("bootstrap").and_then(Json::as_bool).unwrap_or(false)
+}
+
+/// Compare measured cycle counts against a pinned baseline. Every grid
+/// point must exist in the baseline with exactly matching cycles, and
+/// every baseline scenario must have been measured (so a silently
+/// shrunken grid also fails).
+pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), String> {
+    let scenarios = baseline
+        .get("scenarios")
+        .and_then(Json::as_array)
+        .ok_or("baseline has no `scenarios` array")?;
+    let mut errors = Vec::new();
+    for p in points {
+        let found = scenarios.iter().find(|s| {
+            s.get("kernel").and_then(Json::as_str) == Some(p.kernel.as_str())
+                && s.get("cores").and_then(Json::as_u64) == Some(p.cores as u64)
+        });
+        match found.and_then(|s| s.get("cycles")).and_then(Json::as_u64) {
+            None => errors.push(format!("{} @ {} cores: not in baseline", p.kernel, p.cores)),
+            Some(expected) if expected != p.cycles => errors.push(format!(
+                "{} @ {} cores: {} cycles, baseline {} ({:+})",
+                p.kernel,
+                p.cores,
+                p.cycles,
+                expected,
+                p.cycles as i64 - expected as i64
+            )),
+            Some(_) => {}
+        }
+    }
+    for s in scenarios {
+        let (Some(kernel), Some(cores)) = (
+            s.get("kernel").and_then(Json::as_str),
+            s.get("cores").and_then(Json::as_u64),
+        ) else {
+            errors.push("malformed baseline scenario entry".to_string());
+            continue;
+        };
+        if !points.iter().any(|p| p.kernel == kernel && p.cores as u64 == cores) {
+            errors.push(format!("{kernel} @ {cores} cores: in baseline but not measured"));
+        }
+    }
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors.join("\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_order_is_deterministic() {
+        let spec = SweepSpec::ci_default();
+        let g = spec.grid();
+        assert_eq!(g.len(), 9);
+        assert_eq!(g[0], (4, "matmul".to_string()));
+        assert_eq!(g[8], (16, "dotp".to_string()));
+    }
+
+    #[test]
+    fn sweep_runs_and_checks_out_against_itself() {
+        // A tiny 2-point grid, threaded, parallel backend: results must
+        // verify and must match a baseline pinned from themselves.
+        let spec = SweepSpec {
+            preset: "minpool".to_string(),
+            cores: vec![4],
+            kernels: vec!["axpy".to_string(), "dotp".to_string()],
+            backend: SimBackend::Parallel,
+            jobs: 2,
+        };
+        let points = run_sweep(&spec).expect("sweep");
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.cycles > 0));
+        let baseline = baseline_json(&spec, &points);
+        check_baseline(&points, &baseline).expect("self-baseline must match");
+        // And the serial backend lands on the same cycle counts.
+        let serial = SweepSpec { backend: SimBackend::Serial, ..spec };
+        let serial_points = run_sweep(&serial).expect("serial sweep");
+        check_baseline(&serial_points, &baseline).expect("backends must agree");
+    }
+
+    #[test]
+    fn baseline_drift_is_detected() {
+        let spec = SweepSpec::ci_default();
+        let point = SweepPoint {
+            kernel: "axpy".to_string(),
+            cores: 4,
+            cycles: 1000,
+            ipc: 0.0,
+            ops_per_cycle: 0.0,
+            compute: 0.0,
+            control: 0.0,
+            synchronization: 0.0,
+            ifetch: 0.0,
+            lsu: 0.0,
+            raw: 0.0,
+            local_accesses: 0,
+            group_accesses: 0,
+            global_accesses: 0,
+            wall_ms: 0.0,
+        };
+        let mut drifted = point.clone();
+        drifted.cycles = 1001;
+        let baseline = baseline_json(&spec, &[point.clone()]);
+        check_baseline(&[point], &baseline).expect("identical cycles pass");
+        let err = check_baseline(&[drifted], &baseline).unwrap_err();
+        assert!(err.contains("1001") && err.contains("1000"), "{err}");
+    }
+
+    #[test]
+    fn bootstrap_marker_is_recognized() {
+        let b = Json::parse("{\"version\":1,\"bootstrap\":true,\"scenarios\":[]}").unwrap();
+        assert!(baseline_is_bootstrap(&b));
+        let real = Json::parse("{\"version\":1,\"scenarios\":[]}").unwrap();
+        assert!(!baseline_is_bootstrap(&real));
+    }
+}

@@ -1,0 +1,77 @@
+//! Thread fan-out helpers for the data-parallel simulation backend and
+//! the scenario sweep runner.
+//!
+//! With the `parallel` feature (default) the per-tile local phase runs on
+//! rayon's global pool; without it the same buffered algorithm runs on one
+//! thread. Both paths visit every element exactly once with exclusive
+//! access, so results are identical — parallelism here only changes
+//! wall-clock time, never simulated state.
+
+/// Apply `f` to every `(a[i], b[i])` pair, potentially in parallel.
+///
+/// The two slices must have equal length. Each element pair is touched by
+/// exactly one invocation, so `f` may freely mutate both sides.
+#[cfg(feature = "parallel")]
+pub fn par_for_each_pair<A, B, F>(a: &mut [A], b: &mut [B], f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync + Send,
+{
+    assert_eq!(a.len(), b.len(), "paired slices must match");
+    // Tiny clusters: the fork/join overhead dwarfs the per-tile work.
+    if a.len() < 8 {
+        for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+            f(i, x, y);
+        }
+        return;
+    }
+    use rayon::prelude::*;
+    a.par_iter_mut()
+        .zip(b.par_iter_mut())
+        .enumerate()
+        .for_each(|(i, (x, y))| f(i, x, y));
+}
+
+/// Serial fallback: same contract, one thread.
+#[cfg(not(feature = "parallel"))]
+pub fn par_for_each_pair<A, B, F>(a: &mut [A], b: &mut [B], f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut A, &mut B) + Sync + Send,
+{
+    assert_eq!(a.len(), b.len(), "paired slices must match");
+    for (i, (x, y)) in a.iter_mut().zip(b.iter_mut()).enumerate() {
+        f(i, x, y);
+    }
+}
+
+/// A sensible worker count for coarse-grained fan-out (sweep scenarios).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visits_every_pair_exactly_once() {
+        let mut a: Vec<u64> = (0..37).collect();
+        let mut b = vec![0u64; 37];
+        par_for_each_pair(&mut a, &mut b, |i, x, y| {
+            *x += 1;
+            *y = i as u64 * 2;
+        });
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(*x, i as u64 + 1);
+            assert_eq!(*y, i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn default_jobs_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

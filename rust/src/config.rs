@@ -84,6 +84,93 @@ impl Default for AxiConfig {
     }
 }
 
+/// System fabric configuration: the shared AXI crossbar that connects
+/// several clusters to a banked L2 and to each other (the `system`
+/// module). Latencies are one level above the in-cluster AXI tree — the
+/// fabric spans the whole die, so its wires are longer and its L2 is a
+/// larger, slower macro than the per-cluster SoC port models.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricConfig {
+    /// Fabric data width in bytes (512 bit = 64 B, matching the AXI tree).
+    pub bus_bytes: usize,
+    /// Crossbar traversal latency each way, in cycles.
+    pub hop_latency: u64,
+    /// Access latency of one shared-L2 bank in cycles.
+    pub l2_latency: u64,
+    /// Independent shared-L2 banks (each serves one burst at a time).
+    pub l2_banks: usize,
+    /// Interleaving granularity of the shared L2 across its banks; bursts
+    /// never cross an interleave boundary.
+    pub l2_interleave_bytes: usize,
+    /// Maximum burst length in bytes on the fabric.
+    pub max_burst_bytes: usize,
+    /// Cycles to program one system-DMA transfer through a cluster's
+    /// frontend (a full fabric round trip on top of the cluster DMA's 30).
+    pub setup_cycles: u64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            bus_bytes: 64,
+            hop_latency: 4,
+            l2_latency: 20,
+            l2_banks: 4,
+            l2_interleave_bytes: 1024,
+            max_burst_bytes: 1024,
+            setup_cycles: 40,
+        }
+    }
+}
+
+/// Multi-cluster system configuration: N identical MemPool clusters as
+/// peers on a shared fabric with a banked L2 (the `system` module).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Shape of every cluster (the system is homogeneous).
+    pub cluster: ClusterConfig,
+    pub num_clusters: usize,
+    pub fabric: FabricConfig,
+    /// Shared (system-level) L2 size in bytes.
+    pub l2_bytes: u32,
+}
+
+impl SystemConfig {
+    pub fn new(num_clusters: usize, cluster: ClusterConfig) -> Self {
+        SystemConfig { cluster, num_clusters, fabric: FabricConfig::default(), l2_bytes: 64 << 20 }
+    }
+
+    /// `num_clusters` scaled clusters of `cores_per_cluster` cores each.
+    pub fn with_cores(num_clusters: usize, cores_per_cluster: usize) -> Self {
+        SystemConfig::new(num_clusters, ClusterConfig::with_cores(cores_per_cluster))
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.num_clusters * self.cluster.num_cores()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.cluster.validate()?;
+        if self.num_clusters == 0 {
+            return Err("system needs at least one cluster".into());
+        }
+        if self.fabric.l2_banks == 0 {
+            return Err("shared L2 needs at least one bank".into());
+        }
+        let f = &self.fabric;
+        if f.l2_interleave_bytes % f.bus_bytes != 0 {
+            return Err("L2 interleave must be a multiple of the fabric bus width".into());
+        }
+        if f.max_burst_bytes < f.bus_bytes {
+            return Err("fabric max burst must cover at least one beat".into());
+        }
+        if self.l2_bytes % 4 != 0 {
+            return Err("shared L2 size must be word aligned".into());
+        }
+        Ok(())
+    }
+}
+
 /// Full cluster configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -265,6 +352,22 @@ mod tests {
             assert_eq!(c.num_cores(), n, "n={n}");
             assert_eq!(c.banking_factor(), 4, "n={n}");
         }
+    }
+
+    #[test]
+    fn system_config_geometry_and_validation() {
+        let s = SystemConfig::with_cores(4, 16);
+        s.validate().unwrap();
+        assert_eq!(s.total_cores(), 64);
+        let mut bad = s.clone();
+        bad.num_clusters = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fabric.l2_interleave_bytes = 100;
+        assert!(bad.validate().is_err());
+        let mut bad = s;
+        bad.fabric.max_burst_bytes = 8;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub struct EnergyParams {
     /// DMA backend energy per 64-byte beat moved.
     pub dma_beat: f64,
 
+    // --- System fabric (multi-cluster; the `system` module) ---
+    /// Per 64-byte beat on the shared system crossbar. Higher than
+    /// `axi_beat`: the fabric spans the die, so its wires are longer.
+    pub fabric_beat: f64,
+    /// Per 64-byte beat into a shared-L2 bank macro.
+    pub l2_bank_beat: f64,
+
     // --- Static ---
     /// Leakage per core-equivalent per cycle (the Fig 16 "remainder").
     pub leakage_per_core_cycle: f64,
@@ -102,6 +109,8 @@ impl Default for EnergyParams {
             icache_refill: 2.5,
             axi_beat: 6.0,
             dma_beat: 2.0,
+            fabric_beat: 9.0,
+            l2_bank_beat: 11.0,
             leakage_per_core_cycle: 1.0,
             net_static_per_tile_cycle: 6.0,
         }
@@ -158,6 +167,19 @@ impl EnergyParams {
             MemKind::Register => self.l1_data_latch,
         }
     }
+
+    /// Energy of AXI + cluster-DMA transfer activity, from 64-byte beat
+    /// counts (the `axi_dma` component of the [`EnergyBook`]).
+    pub fn axi_dma_energy(&self, axi_beats: u64, dma_beats: u64) -> f64 {
+        self.axi_beat * axi_beats as f64 + self.dma_beat * dma_beats as f64
+    }
+
+    /// Energy of shared-fabric transfer activity in a multi-cluster
+    /// system: crossbar beats plus shared-L2 bank beats (the `fabric`
+    /// component of the [`EnergyBook`]).
+    pub fn fabric_energy(&self, fabric_beats: u64, l2_beats: u64) -> f64 {
+        self.fabric_beat * fabric_beats as f64 + self.l2_bank_beat * l2_beats as f64
+    }
 }
 
 /// Aggregated energy per component in pJ (the Fig 17 hierarchy).
@@ -171,6 +193,9 @@ pub struct EnergyBook {
     pub global_net: f64,
     pub banks: f64,
     pub axi_dma: f64,
+    /// Shared system fabric + shared-L2 banks (multi-cluster runs only;
+    /// zero for a standalone cluster).
+    pub fabric: f64,
     pub leakage: f64,
 }
 
@@ -184,7 +209,22 @@ impl EnergyBook {
             + self.global_net
             + self.banks
             + self.axi_dma
+            + self.fabric
             + self.leakage
+    }
+
+    /// Add another book component-wise (system-level roll-ups).
+    pub fn accumulate(&mut self, o: &EnergyBook) {
+        self.cores += o.cores;
+        self.ipu += o.ipu;
+        self.icache += o.icache;
+        self.tile_xbar += o.tile_xbar;
+        self.group_net += o.group_net;
+        self.global_net += o.global_net;
+        self.banks += o.banks;
+        self.axi_dma += o.axi_dma;
+        self.fabric += o.fabric;
+        self.leakage += o.leakage;
     }
 
     /// Average power in watts over `cycles` at `clock_hz`.
@@ -297,6 +337,26 @@ mod tests {
         // Interconnect + DMA + AXI are a small share of the group.
         let overhead = (a.group_interconnect + a.dma + a.axi_ro) / group;
         assert!(overhead < 0.15, "overhead share {overhead}");
+    }
+
+    #[test]
+    fn transfer_energy_helpers() {
+        let p = EnergyParams::default();
+        // AXI + DMA energy is linear in the beat counts.
+        assert_eq!(p.axi_dma_energy(0, 0), 0.0);
+        let e = p.axi_dma_energy(10, 4);
+        assert!((e - (10.0 * p.axi_beat + 4.0 * p.dma_beat)).abs() < 1e-9, "{e}");
+        // System-fabric beats cost more than in-cluster AXI beats (longer
+        // wires), and shared-L2 banks more than fabric wires.
+        assert!(p.fabric_beat > p.axi_beat);
+        let f = p.fabric_energy(8, 8);
+        assert!((f - 8.0 * (p.fabric_beat + p.l2_bank_beat)).abs() < 1e-9, "{f}");
+        // The fabric component participates in the total and accumulates.
+        let mut book = EnergyBook { fabric: 5.0, ..Default::default() };
+        assert!((book.total_pj() - 5.0).abs() < 1e-9);
+        book.accumulate(&EnergyBook { fabric: 2.0, cores: 1.0, ..Default::default() });
+        assert!((book.total_pj() - 8.0).abs() < 1e-9);
+        assert!((book.fabric - 7.0).abs() < 1e-9);
     }
 
     #[test]

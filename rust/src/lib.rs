@@ -9,7 +9,9 @@
 //! Layer map (three-layer rust+JAX stack):
 //! - **L3** (this crate): the cluster model — Snitch cores, L1 interconnect
 //!   topologies, hybrid addressing, instruction caches, AXI tree + RO cache,
-//!   distributed DMA, synchronization — plus all experiment harnesses.
+//!   distributed DMA, synchronization — plus all experiment harnesses, and
+//!   the multi-cluster `system` layer (shared fabric + banked L2 +
+//!   inter-cluster DMA) above it.
 //! - **L2/L1** (`python/compile`): the DSP kernels as JAX/Pallas programs,
 //!   AOT-lowered to `artifacts/*.hlo.txt`.
 //! - **runtime**: loads those artifacts through PJRT (`xla` crate) and runs
@@ -28,5 +30,6 @@ pub mod mem;
 pub mod runtime;
 pub mod sim;
 pub mod studies;
+pub mod system;
 pub mod trafficgen;
 pub mod util;

@@ -12,22 +12,27 @@
 //! mempool doublebuf [--cores 16]
 //! mempool apps [--cores 16]
 //! mempool sweep [--config minpool|mempool] [--cores 4,8,16]
-//!               [--kernels matmul,axpy,dotp] [--backend serial|parallel]
+//!               [--clusters 1,2] [--kernels matmul,axpy,dotp]
+//!               [--backend serial|parallel]
 //!               [--jobs N] [--out results.json]
 //!               [--check ci/expected_cycles.json]
 //!               [--write-baseline ci/expected_cycles.json]
+//! mempool system [--clusters 4] [--cores 16] [--kernel matmul|axpy|all]
+//!                [--backend serial|parallel] [--per-cluster]
+//!                [--check-determinism]
 //! mempool report area|instr-energy|power|related-work
 //! mempool golden-check
 //! ```
 
 use mempool::brow;
-use mempool::config::ClusterConfig;
+use mempool::config::{ClusterConfig, SystemConfig};
 use mempool::kernels::{run_and_verify, table1_kernels};
 use mempool::sim::SimBackend;
 use mempool::studies;
 use mempool::studies::sweep::{
     baseline_is_bootstrap, baseline_json, check_baseline, results_json, run_sweep, SweepSpec,
 };
+use mempool::system::{run_system_with_backend, system_kernel_by_name, SYSTEM_KERNELS};
 use mempool::util::bench::section;
 use mempool::util::cli::Args;
 use mempool::util::json::Json;
@@ -50,6 +55,7 @@ fn main() {
         Some("doublebuf") => cmd_doublebuf(&args),
         Some("apps") => cmd_apps(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("system") => cmd_system(&args),
         Some("report") => cmd_report(&args),
         Some("golden-check") => cmd_golden(),
         _ => {
@@ -218,6 +224,10 @@ fn cmd_sweep(args: &Args) {
     let defaults = SweepSpec::ci_default();
     let spec = SweepSpec {
         preset: args.get_or("config", &defaults.preset).to_string(),
+        clusters: args
+            .list("clusters")
+            .map(|v| v.iter().map(|s| s.parse().expect("cluster count")).collect())
+            .unwrap_or(defaults.clusters),
         cores: args
             .list("cores")
             .map(|v| v.iter().map(|s| s.parse().expect("core count")).collect())
@@ -245,11 +255,11 @@ fn cmd_sweep(args: &Args) {
     };
     let wall = t0.elapsed().as_secs_f64();
 
-    brow!("kernel", "cores", "cycles", "IPC", "OP/cycle", "sync", "wall ms");
+    brow!("kernel", "cl x cores", "cycles", "IPC", "OP/cycle", "sync", "wall ms");
     for p in &points {
         brow!(
             p.kernel,
-            p.cores,
+            format!("{}x{}", p.clusters, p.cores),
             p.cycles,
             format!("{:.2}", p.ipc),
             format!("{:.1}", p.ops_per_cycle),
@@ -314,6 +324,88 @@ fn cmd_sweep(args: &Args) {
             std::process::exit(1);
         } else {
             println!("cycle counts match {path} ({} points)", points.len());
+        }
+    }
+}
+
+fn cmd_system(args: &Args) {
+    let clusters: usize = args.parse_or("clusters", 2);
+    let cores: usize = args.parse_or("cores", 16);
+    let cfg = SystemConfig::with_cores(clusters, cores);
+    let which = args.get_or("kernel", "all").to_string();
+    let backend = SimBackend::parse(args.get_or("backend", "parallel"))
+        .expect("--backend serial|parallel");
+    let selected: Vec<&str> =
+        SYSTEM_KERNELS.iter().copied().filter(|n| which == "all" || *n == which).collect();
+    if selected.is_empty() {
+        eprintln!("unknown system kernel `{which}` (try {SYSTEM_KERNELS:?})");
+        std::process::exit(2);
+    }
+
+    if args.has("check-determinism") {
+        section(&format!(
+            "System determinism — {clusters} clusters x {cores} cores, serial vs parallel"
+        ));
+        let mut failed = false;
+        for name in &selected {
+            let kernel = system_kernel_by_name(name, cores).unwrap();
+            let a = run_system_with_backend(kernel.as_ref(), &cfg, SimBackend::Serial);
+            let b = run_system_with_backend(kernel.as_ref(), &cfg, SimBackend::Parallel);
+            if a.cycles != b.cycles || a.stats != b.stats {
+                eprintln!(
+                    "{}: serial {} vs parallel {} cycles — MISMATCH",
+                    kernel.name(),
+                    a.cycles,
+                    b.cycles
+                );
+                failed = true;
+                continue;
+            }
+            let mut sys = b.system;
+            kernel.verify(&mut sys).unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
+            println!("{}: {} cycles on both backends (result verified)", kernel.name(), a.cycles);
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        return;
+    }
+
+    section(&format!(
+        "Multi-cluster system — {clusters} clusters x {cores} cores, {} backend",
+        backend.name()
+    ));
+    brow!("kernel", "cycles", "IPC", "OP/cycle", "fab KiB", "fab wait", "DMA KiB", "W");
+    for name in &selected {
+        let kernel = system_kernel_by_name(name, cores).unwrap();
+        let r = run_system_with_backend(kernel.as_ref(), &cfg, backend);
+        let mut sys = r.system;
+        kernel.verify(&mut sys).unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
+        let s = &r.stats;
+        brow!(
+            kernel.name(),
+            r.cycles,
+            format!("{:.2}", s.ipc()),
+            format!("{:.0}", s.ops_per_cycle()),
+            s.fabric_bytes / 1024,
+            s.fabric_wait_cycles,
+            s.sysdma_bytes() / 1024,
+            format!("{:.2}", s.power_w(cfg.cluster.clock_hz))
+        );
+        if args.has("per-cluster") {
+            for (ci, cs) in s.clusters.iter().enumerate() {
+                let f = &s.fabric[ci];
+                brow!(
+                    format!("  cluster {ci}"),
+                    "",
+                    format!("{:.2}", cs.ipc()),
+                    format!("{:.0}", cs.ops_per_cycle()),
+                    (f.bytes_read + f.bytes_written) / 1024,
+                    f.wait_cycles,
+                    s.sysdma[ci].bytes / 1024,
+                    ""
+                );
+            }
         }
     }
 }

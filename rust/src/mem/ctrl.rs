@@ -14,6 +14,18 @@ pub const CTRL_DMA_SPM: u32 = 0x24; // logical SPM byte address
 pub const CTRL_DMA_BYTES: u32 = 0x28; // transfer length
 pub const CTRL_DMA_TRIGGER: u32 = 0x2C; // write 1 = L2→SPM, 0 = SPM→L2
 pub const CTRL_DMA_STATUS: u32 = 0x30; // read: 1 while a transfer runs
+// Multi-cluster system registers (the `system` module). Inert when the
+// cluster runs standalone: the id reads 0, the frontend never drains.
+pub const CTRL_CLUSTER_ID: u32 = 0x34; // read-only: this cluster's id
+// System-DMA frontend: streams shared-L2 ↔ local L1 and peer-L1 ↔ local
+// L1 over the shared system fabric.
+pub const CTRL_SYSDMA_L2: u32 = 0x40; // shared-L2 byte offset
+pub const CTRL_SYSDMA_LOCAL: u32 = 0x44; // local logical SPM byte address
+pub const CTRL_SYSDMA_BYTES: u32 = 0x48; // transfer length
+pub const CTRL_SYSDMA_RCLUSTER: u32 = 0x4C; // peer cluster id (L1↔L1 ops)
+pub const CTRL_SYSDMA_RADDR: u32 = 0x50; // peer logical SPM byte address
+pub const CTRL_SYSDMA_TRIGGER: u32 = 0x54; // write op code (see SysDmaOp)
+pub const CTRL_SYSDMA_STATUS: u32 = 0x58; // read: 1 while a transfer runs
 
 /// Side effect of a control-register store, interpreted by the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +40,10 @@ pub enum CtrlEffect {
     DmaReg(u32, u32),
     /// Trigger a DMA transfer (1 = to SPM).
     DmaTrigger(bool),
+    /// Write to a system-DMA frontend register (handled by the cluster).
+    SysDmaReg(u32, u32),
+    /// Trigger a system-DMA transfer; the value is the op code.
+    SysDmaTrigger(u32),
 }
 
 /// Control register file.
@@ -53,6 +69,9 @@ impl CtrlRegs {
             CTRL_RO_FLUSH => CtrlEffect::RoFlush,
             CTRL_DMA_L2 | CTRL_DMA_SPM | CTRL_DMA_BYTES => CtrlEffect::DmaReg(offset, value),
             CTRL_DMA_TRIGGER => CtrlEffect::DmaTrigger(value != 0),
+            CTRL_SYSDMA_L2 | CTRL_SYSDMA_LOCAL | CTRL_SYSDMA_BYTES | CTRL_SYSDMA_RCLUSTER
+            | CTRL_SYSDMA_RADDR => CtrlEffect::SysDmaReg(offset, value),
+            CTRL_SYSDMA_TRIGGER => CtrlEffect::SysDmaTrigger(value),
             _ => CtrlEffect::None,
         }
     }

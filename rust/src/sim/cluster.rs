@@ -28,7 +28,9 @@ use crate::interconnect::{build_network, Flit, L1Network};
 use crate::isa::{Csr, Program};
 use crate::mem::{
     AddressMap, BankRequest, CtrlEffect, CtrlRegs, L2Memory, MemOp, Region, SramBank,
-    CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS,
+    CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS,
+    CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR,
+    CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS,
 };
 use crate::sim::stats::ClusterStats;
 
@@ -112,6 +114,52 @@ enum SysKind {
     Ack,
 }
 
+/// Route of a system-level DMA request (multi-cluster systems; the
+/// numeric values are the `CTRL_SYSDMA_TRIGGER` op codes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SysDmaOp {
+    /// Local L1 → shared L2 (write-back); trigger code 0.
+    L1ToL2,
+    /// Shared L2 → local L1 (load); trigger code 1.
+    L2ToL1,
+    /// Peer cluster's L1 → local L1 (pull); trigger code 2.
+    PeerToL1,
+    /// Local L1 → peer cluster's L1 (push); trigger code 3.
+    L1ToPeer,
+}
+
+impl SysDmaOp {
+    pub fn from_code(code: u32) -> Option<SysDmaOp> {
+        match code {
+            0 => Some(SysDmaOp::L1ToL2),
+            1 => Some(SysDmaOp::L2ToL1),
+            2 => Some(SysDmaOp::PeerToL1),
+            3 => Some(SysDmaOp::L1ToPeer),
+            _ => None,
+        }
+    }
+}
+
+/// One system-DMA request, queued by the cluster when a core writes the
+/// trigger register and drained by the `system::System` exchange phase.
+/// A standalone cluster never drains the queue — system kernels only run
+/// under a `System`.
+#[derive(Debug, Clone, Copy)]
+pub struct SysDmaRequest {
+    /// Byte offset in the *shared* L2 (L2↔L1 ops).
+    pub l2_offset: u32,
+    /// Logical SPM byte address in the issuing cluster.
+    pub local_addr: u32,
+    pub bytes: u32,
+    /// Peer cluster id (L1↔L1 ops).
+    pub remote_cluster: u32,
+    /// Logical SPM byte address in the peer cluster (L1↔L1 ops).
+    pub remote_addr: u32,
+    pub op: SysDmaOp,
+    /// Cycle the trigger took effect (the frontend's earliest start).
+    pub issued_at: u64,
+}
+
 /// The cluster.
 pub struct Cluster {
     pub cfg: ClusterConfig,
@@ -131,6 +179,18 @@ pub struct Cluster {
     dma_bytes: u32,
     /// Completion cycle of the most recent DMA transfer.
     pub dma_done_at: u64,
+    /// Identity within a multi-cluster `system::System` (0 standalone).
+    pub cluster_id: u32,
+    /// System-DMA frontend registers (written through the control region).
+    sysdma_l2: u32,
+    sysdma_local: u32,
+    sysdma_bytes: u32,
+    sysdma_rcluster: u32,
+    sysdma_raddr: u32,
+    /// Completion cycle of the most recent system-DMA transfer.
+    pub sys_dma_done_at: u64,
+    /// Triggered system-DMA requests awaiting the system exchange phase.
+    pub sys_dma_outbox: Vec<SysDmaRequest>,
     /// Remote-traffic classification counters.
     pub local_accesses: u64,
     pub group_accesses: u64,
@@ -187,6 +247,14 @@ impl Cluster {
             dma_spm: 0,
             dma_bytes: 0,
             dma_done_at: 0,
+            cluster_id: 0,
+            sysdma_l2: 0,
+            sysdma_local: 0,
+            sysdma_bytes: 0,
+            sysdma_rcluster: 0,
+            sysdma_raddr: 0,
+            sys_dma_done_at: 0,
+            sys_dma_outbox: Vec::new(),
             local_accesses: 0,
             group_accesses: 0,
             global_accesses: 0,
@@ -276,6 +344,24 @@ impl Cluster {
         self.dma_done_at = self.dma_done_at.max(done);
     }
 
+    /// Queue the system-DMA transfer currently programmed in the frontend.
+    /// The surrounding `system::System` drains the queue in its serial
+    /// exchange phase; unknown op codes are ignored (reserved encodings).
+    fn sys_dma_trigger(&mut self, code: u32, now: u64) {
+        let Some(op) = SysDmaOp::from_code(code) else {
+            return;
+        };
+        self.sys_dma_outbox.push(SysDmaRequest {
+            l2_offset: self.sysdma_l2,
+            local_addr: self.sysdma_local,
+            bytes: self.sysdma_bytes,
+            remote_cluster: self.sysdma_rcluster,
+            remote_addr: self.sysdma_raddr,
+            op,
+            issued_at: now,
+        });
+    }
+
     /// Pop every pending system (ctrl/L2) access due at `now`, apply its
     /// side effects (DMA frontend writes and triggers, wake pulses, RO
     /// flushes), and return the resulting core completions in processing
@@ -298,6 +384,10 @@ impl Cluster {
             let rdata = match p.kind {
                 SysKind::CtrlLoad(off) => match off {
                     CTRL_DMA_STATUS => (now < self.dma_done_at) as u32,
+                    CTRL_SYSDMA_STATUS => {
+                        (now < self.sys_dma_done_at || !self.sys_dma_outbox.is_empty()) as u32
+                    }
+                    CTRL_CLUSTER_ID => self.cluster_id,
                     _ => self.ctrl.load(off),
                 },
                 SysKind::CtrlStore(off, value) => {
@@ -305,13 +395,19 @@ impl Cluster {
                         CTRL_DMA_L2 => self.dma_l2 = value,
                         CTRL_DMA_SPM => self.dma_spm = value,
                         CTRL_DMA_BYTES => self.dma_bytes = value,
+                        CTRL_SYSDMA_L2 => self.sysdma_l2 = value,
+                        CTRL_SYSDMA_LOCAL => self.sysdma_local = value,
+                        CTRL_SYSDMA_BYTES => self.sysdma_bytes = value,
+                        CTRL_SYSDMA_RCLUSTER => self.sysdma_rcluster = value,
+                        CTRL_SYSDMA_RADDR => self.sysdma_raddr = value,
                         _ => {}
                     }
                     let effect = self.ctrl.store(off, value);
                     match effect {
                         CtrlEffect::RoFlush => self.axi.flush_ro(),
                         CtrlEffect::DmaTrigger(to_spm) => self.dma_trigger(to_spm, now),
-                        CtrlEffect::DmaReg(..) | CtrlEffect::None => {}
+                        CtrlEffect::SysDmaTrigger(code) => self.sys_dma_trigger(code, now),
+                        CtrlEffect::DmaReg(..) | CtrlEffect::SysDmaReg(..) | CtrlEffect::None => {}
                         wake => self.apply_wake(wake),
                     }
                     0
@@ -524,14 +620,14 @@ impl Cluster {
         e.group_net = p.group_xbar * 2.0 * (self.group_accesses + self.global_accesses) as f64;
         e.global_net = p.global_xbar * 2.0 * self.global_accesses as f64
             + p.net_static_per_tile_cycle * (self.now * self.cfg.num_tiles() as u64) as f64;
-        // AXI + DMA.
+        // AXI + DMA (per-beat transfer energies; see `EnergyParams`).
         let beats: u64 = self
             .axi
             .counters
             .iter()
             .map(|c| (c.bytes_read + c.bytes_written).div_ceil(64))
             .sum();
-        e.axi_dma = p.axi_beat * beats as f64 + p.dma_beat * (self.dma.stats.bytes / 64) as f64;
+        e.axi_dma = p.axi_dma_energy(beats, self.dma.stats.bytes / 64);
         e.leakage = p.leakage_per_core_cycle * (self.now * self.cfg.num_cores() as u64) as f64;
         s.energy = e;
         s

@@ -8,7 +8,7 @@ mod cluster;
 mod harness;
 mod stats;
 
-pub use cluster::{Cluster, SimBackend, SpmView};
+pub use cluster::{Cluster, SimBackend, SpmView, SysDmaOp, SysDmaRequest};
 pub use harness::{base_symbols, run_kernel, KernelResult, RunConfig};
 pub use stats::{ClusterStats, CycleBreakdown};
 

@@ -49,6 +49,24 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
+    /// Add another cluster's counts and energy (system-level roll-ups).
+    /// `cycles` and `num_cores` are identity fields of the receiver and
+    /// are left untouched.
+    pub fn accumulate(&mut self, o: &ClusterStats) {
+        self.issued_compute += o.issued_compute;
+        self.issued_control += o.issued_control;
+        self.ops += o.ops;
+        self.stall_ifetch += o.stall_ifetch;
+        self.stall_raw += o.stall_raw;
+        self.stall_lsu += o.stall_lsu;
+        self.sleep_cycles += o.sleep_cycles;
+        self.halted_cycles += o.halted_cycles;
+        self.local_accesses += o.local_accesses;
+        self.group_accesses += o.group_accesses;
+        self.global_accesses += o.global_accesses;
+        self.energy.accumulate(&o.energy);
+    }
+
     pub fn accumulate_core(&mut self, s: &CoreStats) {
         self.issued_compute += s.issued_compute;
         self.issued_control += s.issued_control;

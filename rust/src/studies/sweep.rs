@@ -15,9 +15,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, SystemConfig};
 use crate::kernels::{run_with_backend, Axpy, Conv2d, Dct, Dotp, Kernel, Matmul};
 use crate::sim::SimBackend;
+use crate::system::{run_system_with_backend, system_kernel_by_name, SYSTEM_KERNELS};
 use crate::util::json::Json;
 use crate::util::par::default_jobs;
 
@@ -57,6 +58,16 @@ pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     pub preset: String,
+    /// Cluster counts (the system axis; 1 = a standalone cluster). Counts
+    /// above 1 run the multi-cluster `system` harness, so only kernels
+    /// with a system variant ([`SYSTEM_KERNELS`]) are valid there. Note
+    /// the *workload* differs across the axis: `clusters = 1` runs the
+    /// classic single-cluster kernel (SPM-resident data, no system DMA),
+    /// while `clusters > 1` runs the system variant (shared-L2 shards
+    /// streamed by system DMA) — cycle counts across the axis compare
+    /// different programs, not the same program scaled.
+    pub clusters: Vec<usize>,
+    /// Cores per cluster.
     pub cores: Vec<usize>,
     pub kernels: Vec<String>,
     pub backend: SimBackend,
@@ -70,6 +81,7 @@ impl SweepSpec {
     pub fn ci_default() -> SweepSpec {
         SweepSpec {
             preset: "minpool".to_string(),
+            clusters: vec![1],
             cores: vec![4, 8, 16],
             kernels: vec!["matmul".to_string(), "axpy".to_string(), "dotp".to_string()],
             backend: SimBackend::Parallel,
@@ -77,12 +89,15 @@ impl SweepSpec {
         }
     }
 
-    /// The scenario grid in deterministic order (cores-major).
-    pub fn grid(&self) -> Vec<(usize, String)> {
+    /// The scenario grid in deterministic order (clusters-major, then
+    /// cores, then kernels): (clusters, cores, kernel).
+    pub fn grid(&self) -> Vec<(usize, usize, String)> {
         let mut g = Vec::new();
-        for &cores in &self.cores {
-            for k in &self.kernels {
-                g.push((cores, k.clone()));
+        for &clusters in &self.clusters {
+            for &cores in &self.cores {
+                for k in &self.kernels {
+                    g.push((clusters, cores, k.clone()));
+                }
             }
         }
         g
@@ -93,6 +108,9 @@ impl SweepSpec {
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub kernel: String,
+    /// Clusters in the system (1 = standalone cluster).
+    pub clusters: usize,
+    /// Cores per cluster.
     pub cores: usize,
     pub cycles: u64,
     pub ipc: f64,
@@ -108,44 +126,62 @@ pub struct SweepPoint {
     pub local_accesses: u64,
     pub group_accesses: u64,
     pub global_accesses: u64,
+    /// Shared-fabric contention (multi-cluster runs; 0 standalone).
+    pub fabric_wait_cycles: u64,
     /// Host-side wall clock for this scenario.
     pub wall_ms: f64,
 }
 
 /// Run one scenario end-to-end (simulate + verify the architectural
-/// result against the host reference).
+/// result against the host reference). `clusters > 1` runs the kernel's
+/// multi-cluster variant through the `system` harness.
 pub fn run_point(
     preset: &str,
     kernel_name: &str,
+    clusters: usize,
     cores: usize,
     backend: SimBackend,
 ) -> Result<SweepPoint, String> {
     let cfg = config_for(preset, cores)?;
-    let kernel = kernel_by_name(kernel_name, cores)
-        .ok_or_else(|| format!("unknown kernel `{kernel_name}` (try {SWEEP_KERNELS:?})"))?;
     let t0 = Instant::now();
-    let mut result = run_with_backend(kernel.as_ref(), &cfg, backend);
-    kernel
-        .verify(&mut result.cluster)
-        .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
+    let (cycles, stats, fabric_wait_cycles) = if clusters <= 1 {
+        let kernel = kernel_by_name(kernel_name, cores)
+            .ok_or_else(|| format!("unknown kernel `{kernel_name}` (try {SWEEP_KERNELS:?})"))?;
+        let mut result = run_with_backend(kernel.as_ref(), &cfg, backend);
+        kernel
+            .verify(&mut result.cluster)
+            .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
+        (result.cycles, result.stats, 0)
+    } else {
+        let kernel = system_kernel_by_name(kernel_name, cores).ok_or_else(|| {
+            format!("kernel `{kernel_name}` has no multi-cluster variant (try {SYSTEM_KERNELS:?})")
+        })?;
+        let syscfg = SystemConfig::new(clusters, cfg);
+        let mut result = run_system_with_backend(kernel.as_ref(), &syscfg, backend);
+        kernel.verify(&mut result.system).map_err(|e| {
+            format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
+        })?;
+        (result.cycles, result.stats.totals, result.stats.fabric_wait_cycles)
+    };
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let s = &result.stats;
-    let bd = s.breakdown();
+    let bd = stats.breakdown();
     Ok(SweepPoint {
         kernel: kernel_name.to_string(),
+        clusters: clusters.max(1),
         cores,
-        cycles: result.cycles,
-        ipc: s.ipc(),
-        ops_per_cycle: s.ops_per_cycle(),
+        cycles,
+        ipc: stats.ipc(),
+        ops_per_cycle: stats.ops_per_cycle(),
         compute: bd.compute,
         control: bd.control,
         synchronization: bd.synchronization,
         ifetch: bd.ifetch,
         lsu: bd.lsu,
         raw: bd.raw,
-        local_accesses: s.local_accesses,
-        group_accesses: s.group_accesses,
-        global_accesses: s.global_accesses,
+        local_accesses: stats.local_accesses,
+        group_accesses: stats.group_accesses,
+        global_accesses: stats.global_accesses,
+        fabric_wait_cycles,
         wall_ms,
     })
 }
@@ -168,8 +204,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
                 if i >= grid.len() {
                     break;
                 }
-                let (cores, kernel) = &grid[i];
-                let point = run_point(&spec.preset, kernel, *cores, spec.backend);
+                let (clusters, cores, kernel) = &grid[i];
+                let point = run_point(&spec.preset, kernel, *clusters, *cores, spec.backend);
                 *slots[i].lock().unwrap() = Some(point);
             });
         }
@@ -193,10 +229,12 @@ pub fn results_json(spec: &SweepSpec, points: &[SweepPoint], wall_seconds: f64) 
         .map(|p| {
             let mut o = Json::obj();
             o.set("kernel", p.kernel.as_str().into());
+            o.set("clusters", p.clusters.into());
             o.set("cores", p.cores.into());
             o.set("cycles", p.cycles.into());
             o.set("ipc", p.ipc.into());
             o.set("ops_per_cycle", p.ops_per_cycle.into());
+            o.set("fabric_wait_cycles", p.fabric_wait_cycles.into());
             let mut bd = Json::obj();
             bd.set("compute", p.compute.into());
             bd.set("control", p.control.into());
@@ -228,6 +266,7 @@ pub fn baseline_json(spec: &SweepSpec, points: &[SweepPoint]) -> Json {
         .map(|p| {
             let mut o = Json::obj();
             o.set("kernel", p.kernel.as_str().into());
+            o.set("clusters", p.clusters.into());
             o.set("cores", p.cores.into());
             o.set("cycles", p.cycles.into());
             o
@@ -246,23 +285,30 @@ pub fn baseline_is_bootstrap(baseline: &Json) -> bool {
 /// Compare measured cycle counts against a pinned baseline. Every grid
 /// point must exist in the baseline with exactly matching cycles, and
 /// every baseline scenario must have been measured (so a silently
-/// shrunken grid also fails).
+/// shrunken grid also fails). Baselines written before the cluster axis
+/// existed carry no `clusters` field; those entries mean 1 cluster.
 pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), String> {
     let scenarios = baseline
         .get("scenarios")
         .and_then(Json::as_array)
         .ok_or("baseline has no `scenarios` array")?;
+    let clusters_of = |s: &Json| s.get("clusters").and_then(Json::as_u64).unwrap_or(1);
     let mut errors = Vec::new();
     for p in points {
         let found = scenarios.iter().find(|s| {
             s.get("kernel").and_then(Json::as_str) == Some(p.kernel.as_str())
+                && clusters_of(s) == p.clusters as u64
                 && s.get("cores").and_then(Json::as_u64) == Some(p.cores as u64)
         });
         match found.and_then(|s| s.get("cycles")).and_then(Json::as_u64) {
-            None => errors.push(format!("{} @ {} cores: not in baseline", p.kernel, p.cores)),
+            None => errors.push(format!(
+                "{} @ {}x{} cores: not in baseline",
+                p.kernel, p.clusters, p.cores
+            )),
             Some(expected) if expected != p.cycles => errors.push(format!(
-                "{} @ {} cores: {} cycles, baseline {} ({:+})",
+                "{} @ {}x{} cores: {} cycles, baseline {} ({:+})",
                 p.kernel,
+                p.clusters,
                 p.cores,
                 p.cycles,
                 expected,
@@ -279,8 +325,12 @@ pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), Stri
             errors.push("malformed baseline scenario entry".to_string());
             continue;
         };
-        if !points.iter().any(|p| p.kernel == kernel && p.cores as u64 == cores) {
-            errors.push(format!("{kernel} @ {cores} cores: in baseline but not measured"));
+        let clusters = clusters_of(s);
+        if !points.iter().any(|p| {
+            p.kernel == kernel && p.clusters as u64 == clusters && p.cores as u64 == cores
+        }) {
+            errors
+                .push(format!("{kernel} @ {clusters}x{cores} cores: in baseline but not measured"));
         }
     }
     if errors.is_empty() {
@@ -299,8 +349,8 @@ mod tests {
         let spec = SweepSpec::ci_default();
         let g = spec.grid();
         assert_eq!(g.len(), 9);
-        assert_eq!(g[0], (4, "matmul".to_string()));
-        assert_eq!(g[8], (16, "dotp".to_string()));
+        assert_eq!(g[0], (1, 4, "matmul".to_string()));
+        assert_eq!(g[8], (1, 16, "dotp".to_string()));
     }
 
     #[test]
@@ -309,6 +359,7 @@ mod tests {
         // verify and must match a baseline pinned from themselves.
         let spec = SweepSpec {
             preset: "minpool".to_string(),
+            clusters: vec![1],
             cores: vec![4],
             kernels: vec!["axpy".to_string(), "dotp".to_string()],
             backend: SimBackend::Parallel,
@@ -330,6 +381,7 @@ mod tests {
         let spec = SweepSpec::ci_default();
         let point = SweepPoint {
             kernel: "axpy".to_string(),
+            clusters: 1,
             cores: 4,
             cycles: 1000,
             ipc: 0.0,
@@ -343,14 +395,45 @@ mod tests {
             local_accesses: 0,
             group_accesses: 0,
             global_accesses: 0,
+            fabric_wait_cycles: 0,
             wall_ms: 0.0,
         };
         let mut drifted = point.clone();
         drifted.cycles = 1001;
         let baseline = baseline_json(&spec, &[point.clone()]);
-        check_baseline(&[point], &baseline).expect("identical cycles pass");
+        check_baseline(&[point.clone()], &baseline).expect("identical cycles pass");
         let err = check_baseline(&[drifted], &baseline).unwrap_err();
         assert!(err.contains("1001") && err.contains("1000"), "{err}");
+        // A multi-cluster point is a distinct scenario, not a match for
+        // the 1-cluster baseline entry.
+        let mut multi = point;
+        multi.clusters = 2;
+        let err = check_baseline(&[multi], &baseline).unwrap_err();
+        assert!(err.contains("not in baseline"), "{err}");
+    }
+
+    #[test]
+    fn cluster_axis_runs_through_the_system_harness() {
+        // One standalone point and one 2-cluster point of the same kernel:
+        // both verify, both land in the baseline as distinct scenarios.
+        let spec = SweepSpec {
+            preset: "minpool".to_string(),
+            clusters: vec![1, 2],
+            cores: vec![4],
+            kernels: vec!["axpy".to_string()],
+            backend: SimBackend::Parallel,
+            jobs: 2,
+        };
+        let points = run_sweep(&spec).expect("sweep with cluster axis");
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].clusters, 1);
+        assert_eq!(points[1].clusters, 2);
+        assert!(points.iter().all(|p| p.cycles > 0));
+        let baseline = baseline_json(&spec, &points);
+        check_baseline(&points, &baseline).expect("self-baseline must match");
+        // Kernels without a system variant fail loudly on the cluster axis.
+        let err = run_point("minpool", "dotp", 2, 4, SimBackend::Serial).unwrap_err();
+        assert!(err.contains("no multi-cluster variant"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,348 @@
+//! The multi-cluster system model: N MemPool clusters as peers on a
+//! shared AXI fabric with a banked shared L2 and an inter-cluster DMA
+//! path — the layer above the single-cluster `sim` top.
+//!
+//! `System::step()` reuses the PR-1 parallel machinery one level up:
+//!
+//! 1. a **concurrent cluster phase** — every cluster advances one cycle
+//!    with its own stepping engine (serial or parallel tile backend).
+//!    Clusters are fully self-contained during this phase: shared state
+//!    (fabric, shared L2) is never touched, so stepping them across host
+//!    threads is trivially deterministic;
+//! 2. a **serial exchange phase** — system-DMA requests the clusters
+//!    queued this cycle (cores write the `CTRL_SYSDMA_*` registers) are
+//!    drained *in cluster order* and serviced on the shared fabric:
+//!    functional data movement between shared L2 and the clusters' SPMs
+//!    (or SPM to SPM between clusters) plus transaction timing with
+//!    cycle-accounted contention at the fabric ports and L2 banks.
+//!
+//! Determinism therefore holds by construction at both levels, and the
+//! system determinism tests assert serial == parallel end to end.
+
+mod fabric;
+mod kernels;
+mod stats;
+
+pub use fabric::{FabricCounters, SystemFabric, FABRIC_REQ_OCCUPANCY};
+pub use kernels::{
+    run_system_with_backend, system_kernel_by_name, SysAxpy, SysMatmul, SystemKernel,
+    SYSTEM_KERNELS,
+};
+pub use stats::{SysDmaStats, SystemStats};
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::isa::Program;
+use crate::mem::L2Memory;
+use crate::sim::{base_symbols, Cluster, ClusterStats, SimBackend, SysDmaOp, SysDmaRequest};
+use crate::util::par::par_for_each;
+
+/// Outstanding fabric bursts per system-DMA frontend (latency hiding).
+const MAX_OUTSTANDING: usize = 4;
+
+/// Per-cluster system-DMA frontend: serializes programming, issues
+/// fabric bursts with a bounded outstanding window.
+#[derive(Debug, Clone, Copy, Default)]
+struct SysDmaFrontend {
+    /// Completion time of the frontend's last programming action.
+    frontend_free: u64,
+    /// Completion times of the last bursts, bounding outstanding txns.
+    inflight: [u64; MAX_OUTSTANDING],
+    stats: SysDmaStats,
+}
+
+/// The multi-cluster system.
+pub struct System {
+    pub cfg: SystemConfig,
+    pub clusters: Vec<Cluster>,
+    pub fabric: SystemFabric,
+    /// The shared (system-level) L2 behind the fabric. Distinct from each
+    /// cluster's private `l2` (program text + cluster-local data).
+    pub l2: L2Memory,
+    frontends: Vec<SysDmaFrontend>,
+    now: u64,
+}
+
+impl System {
+    pub fn new(cfg: SystemConfig, program: Program) -> Self {
+        cfg.validate().expect("invalid system configuration");
+        let clusters = (0..cfg.num_clusters)
+            .map(|i| {
+                let mut c = Cluster::new(cfg.cluster.clone(), program.clone());
+                c.cluster_id = i as u32;
+                c
+            })
+            .collect();
+        System {
+            clusters,
+            fabric: SystemFabric::new(cfg.fabric, cfg.num_clusters),
+            l2: L2Memory::new(cfg.l2_bytes),
+            frontends: vec![SysDmaFrontend::default(); cfg.num_clusters],
+            now: 0,
+            cfg,
+        }
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Set every cluster's stepping engine.
+    pub fn set_backend(&mut self, backend: SimBackend) {
+        for c in &mut self.clusters {
+            c.backend = backend;
+        }
+    }
+
+    /// Reset every core in every cluster to `entry`.
+    pub fn reset_cores(&mut self, entry: u32) {
+        for c in &mut self.clusters {
+            c.reset_cores(entry);
+        }
+    }
+
+    /// Advance one cycle: concurrent cluster phase, then the serial
+    /// system exchange phase (see the module docs).
+    pub fn step(&mut self) {
+        let now = self.now;
+        par_for_each(&mut self.clusters, |_, c| c.step());
+        for c in 0..self.clusters.len() {
+            let reqs = std::mem::take(&mut self.clusters[c].sys_dma_outbox);
+            for req in reqs {
+                self.service(c, req);
+            }
+        }
+        debug_assert!(self.clusters.iter().all(|c| c.now() == now + 1));
+        self.now += 1;
+    }
+
+    /// Run until every cluster halts and drains and all system-DMA
+    /// transfers complete (or `max_cycles` elapse). True on completion.
+    pub fn run(&mut self, max_cycles: u64) -> bool {
+        let deadline = self.now + max_cycles;
+        while self.now < deadline {
+            self.step();
+            if self.done() {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn done(&self) -> bool {
+        self.clusters.iter().all(|c| {
+            c.all_halted()
+                && c.drained()
+                && c.sys_dma_outbox.is_empty()
+                && self.now >= c.sys_dma_done_at
+        })
+    }
+
+    /// Submit a system-DMA request on behalf of cluster `c`, bypassing
+    /// the control registers (tests and host-side harnesses). Returns the
+    /// completion cycle. The same path the exchange phase uses.
+    pub fn sysdma_submit(&mut self, c: usize, req: SysDmaRequest) -> u64 {
+        self.service(c, req);
+        self.clusters[c].sys_dma_done_at
+    }
+
+    /// Service one system-DMA request: functional copy now, transaction
+    /// timing on the shared fabric, completion into the issuing cluster's
+    /// `sys_dma_done_at` (what `CTRL_SYSDMA_STATUS` polls observe).
+    ///
+    /// Malformed programmed transfers (misaligned, out-of-SPM, bad peer)
+    /// panic with a clear message — the same loud-failure policy as the
+    /// cluster DMA's `submit` and the cores' unmapped-address path; only
+    /// *reserved trigger encodings* are silently ignored (at the trigger,
+    /// mirroring unknown control-register offsets).
+    fn service(&mut self, c: usize, req: SysDmaRequest) {
+        assert_eq!(req.bytes % 4, 0, "system DMA requires word alignment");
+        assert_eq!(req.local_addr % 4, 0);
+        let words = (req.bytes / 4) as usize;
+
+        // Functional copy, word by word through each cluster's scrambler
+        // (the zero-time `SpmView`, like the cluster DMA's data path).
+        match req.op {
+            SysDmaOp::L2ToL1 => {
+                assert_eq!(req.l2_offset % 4, 0);
+                let data = self.l2.read_words(req.l2_offset, words);
+                self.clusters[c].spm().write_words(req.local_addr, &data);
+            }
+            SysDmaOp::L1ToL2 => {
+                assert_eq!(req.l2_offset % 4, 0);
+                let data = self.clusters[c].spm().read_words(req.local_addr, words);
+                self.l2.load_words(req.l2_offset, &data);
+            }
+            SysDmaOp::PeerToL1 => {
+                let src = req.remote_cluster as usize;
+                assert!(src != c && src < self.clusters.len(), "bad peer cluster {src}");
+                assert_eq!(req.remote_addr % 4, 0);
+                let data = self.clusters[src].spm().read_words(req.remote_addr, words);
+                self.clusters[c].spm().write_words(req.local_addr, &data);
+            }
+            SysDmaOp::L1ToPeer => {
+                let dst = req.remote_cluster as usize;
+                assert!(dst != c && dst < self.clusters.len(), "bad peer cluster {dst}");
+                assert_eq!(req.remote_addr % 4, 0);
+                let data = self.clusters[c].spm().read_words(req.local_addr, words);
+                self.clusters[dst].spm().write_words(req.remote_addr, &data);
+            }
+        }
+
+        // Frontend: programming takes setup_cycles and is serialized.
+        let start =
+            req.issued_at.max(self.frontends[c].frontend_free) + self.cfg.fabric.setup_cycles;
+        self.frontends[c].frontend_free = start;
+        self.frontends[c].stats.transfers += 1;
+        self.frontends[c].stats.bytes += req.bytes as u64;
+
+        // Timing: split into bursts (at L2 interleave boundaries so no
+        // burst spans two banks; peer bursts split at max length only)
+        // and issue them with a bounded outstanding window.
+        let mut done = start;
+        let max_burst = self.cfg.fabric.max_burst_bytes as u32;
+        let interleave = self.cfg.fabric.l2_interleave_bytes as u32;
+        let mut off = 0u32;
+        while off < req.bytes {
+            let chunk = match req.op {
+                SysDmaOp::L2ToL1 | SysDmaOp::L1ToL2 => {
+                    let l2_off = req.l2_offset + off;
+                    let to_boundary = interleave - (l2_off % interleave);
+                    (req.bytes - off).min(to_boundary).min(max_burst)
+                }
+                SysDmaOp::PeerToL1 | SysDmaOp::L1ToPeer => (req.bytes - off).min(max_burst),
+            };
+            let fe = &self.frontends[c];
+            let slot = (0..MAX_OUTSTANDING).min_by_key(|&i| fe.inflight[i]).unwrap();
+            let issue = start.max(fe.inflight[slot]);
+            let finish = match req.op {
+                SysDmaOp::L2ToL1 => {
+                    self.fabric.l2_read(c, req.l2_offset + off, chunk as usize, issue)
+                }
+                SysDmaOp::L1ToL2 => {
+                    self.fabric.l2_write(c, req.l2_offset + off, chunk as usize, issue)
+                }
+                SysDmaOp::PeerToL1 => {
+                    self.fabric.peer_copy(req.remote_cluster as usize, c, chunk as usize, issue)
+                }
+                SysDmaOp::L1ToPeer => {
+                    self.fabric.peer_copy(c, req.remote_cluster as usize, chunk as usize, issue)
+                }
+            };
+            self.frontends[c].inflight[slot] = finish;
+            self.frontends[c].stats.bursts += 1;
+            done = done.max(finish);
+            off += chunk;
+        }
+        self.clusters[c].sys_dma_done_at = self.clusters[c].sys_dma_done_at.max(done);
+    }
+
+    /// Collect run statistics: per-cluster books plus the shared-fabric
+    /// roll-up (see [`SystemStats`]).
+    pub fn stats(&self) -> SystemStats {
+        let per: Vec<ClusterStats> = self.clusters.iter().map(|c| c.stats()).collect();
+        let mut totals = ClusterStats {
+            cycles: self.now,
+            num_cores: self.cfg.total_cores(),
+            ..Default::default()
+        };
+        for s in &per {
+            totals.accumulate(s);
+        }
+        let p = &self.clusters[0].energy_params;
+        totals.energy.fabric = p.fabric_energy(self.fabric.total_beats(), self.fabric.l2_beats);
+        SystemStats {
+            cycles: self.now,
+            num_clusters: self.cfg.num_clusters,
+            clusters: per,
+            totals,
+            fabric: self.fabric.counters.clone(),
+            fabric_bytes: self.fabric.total_bytes(),
+            fabric_wait_cycles: self.fabric.total_wait_cycles(),
+            sysdma: self.frontends.iter().map(|f| f.stats).collect(),
+        }
+    }
+}
+
+/// How to run a system kernel.
+pub struct SystemRunConfig {
+    pub system: SystemConfig,
+    /// Cycle budget; runs abort (with `completed = false`) beyond it.
+    pub max_cycles: u64,
+    /// Invalidate every instruction cache before starting (cold start).
+    pub cold_icache: bool,
+    /// Stepping engine for every cluster; both are cycle-exact.
+    pub backend: SimBackend,
+}
+
+impl SystemRunConfig {
+    pub fn new(system: SystemConfig) -> Self {
+        SystemRunConfig {
+            system,
+            max_cycles: 10_000_000,
+            cold_icache: true,
+            backend: SimBackend::from_env(),
+        }
+    }
+}
+
+/// Result of a system kernel run.
+pub struct SystemKernelResult {
+    pub system: System,
+    pub stats: SystemStats,
+    pub completed: bool,
+    pub cycles: u64,
+}
+
+/// Assemble `src` with `symbols`, build the system (every cluster runs
+/// the same SPMD program and branches on `CTRL_CLUSTER_ID`), initialize
+/// it via `setup`, run to completion, and return statistics plus the
+/// final system for verification.
+pub fn run_system_kernel(
+    run: &SystemRunConfig,
+    src: &str,
+    symbols: &HashMap<String, u32>,
+    setup: impl FnOnce(&mut System),
+) -> SystemKernelResult {
+    let program = Program::assemble(src, symbols)
+        .unwrap_or_else(|e| panic!("system kernel assembly failed: {e}"));
+    let mut system = System::new(run.system.clone(), program);
+    system.set_backend(run.backend);
+    system.reset_cores(0);
+    if run.cold_icache {
+        for c in &mut system.clusters {
+            for t in &mut c.tiles {
+                t.icache.invalidate_all();
+            }
+        }
+    }
+    setup(&mut system);
+    let completed = system.run(run.max_cycles);
+    let cycles = system.now();
+    let stats = system.stats();
+    SystemKernelResult { system, stats, completed, cycles }
+}
+
+/// Standard symbols for system kernels: the cluster set plus the system
+/// register addresses and the system geometry.
+pub fn system_symbols(cfg: &SystemConfig) -> HashMap<String, u32> {
+    use crate::mem::{
+        CTRL_BASE, CTRL_CLUSTER_ID, CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL,
+        CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER,
+    };
+    let mut sym = base_symbols(&cfg.cluster);
+    sym.insert("NUM_CLUSTERS".into(), cfg.num_clusters as u32);
+    sym.insert("CLUSTER_ID_ADDR".into(), CTRL_BASE + CTRL_CLUSTER_ID);
+    sym.insert("SYSDMA_L2_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_L2);
+    sym.insert("SYSDMA_LOCAL_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_LOCAL);
+    sym.insert("SYSDMA_BYTES_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_BYTES);
+    sym.insert("SYSDMA_RCLUSTER_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_RCLUSTER);
+    sym.insert("SYSDMA_RADDR_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_RADDR);
+    sym.insert("SYSDMA_TRIGGER_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_TRIGGER);
+    sym.insert("SYSDMA_STATUS_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_STATUS);
+    sym
+}
+
+#[cfg(test)]
+mod tests;

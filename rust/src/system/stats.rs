@@ -1,0 +1,68 @@
+//! System-level statistics: per-cluster [`ClusterStats`] plus shared
+//! fabric traffic, system-DMA activity, and the system-wide energy book
+//! (cluster books + shared-fabric transfer energy).
+//!
+//! `PartialEq` exists for the system-level backend-determinism tests:
+//! serial and parallel cluster engines must produce bit-identical system
+//! statistics, including the derived energy figures.
+
+use crate::sim::ClusterStats;
+use crate::system::fabric::FabricCounters;
+
+/// Per-cluster system-DMA statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SysDmaStats {
+    pub transfers: u64,
+    pub bursts: u64,
+    pub bytes: u64,
+}
+
+/// Statistics for one multi-cluster system run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SystemStats {
+    pub cycles: u64,
+    pub num_clusters: usize,
+    /// Per-cluster execution statistics, in cluster order.
+    pub clusters: Vec<ClusterStats>,
+    /// System-wide roll-up: every count summed over the clusters, with
+    /// `cycles` the system cycle count and `num_cores` the total core
+    /// count, so the usual `ClusterStats` metrics (IPC, OP/cycle, power)
+    /// read as system-wide figures. Its energy book adds the shared
+    /// fabric on top of the per-cluster books.
+    pub totals: ClusterStats,
+    /// Per-cluster shared-fabric traffic counters.
+    pub fabric: Vec<FabricCounters>,
+    /// Unique bytes moved over the shared fabric.
+    pub fabric_bytes: u64,
+    /// Aggregate shared-fabric contention (see `FabricCounters`).
+    pub fabric_wait_cycles: u64,
+    /// Per-cluster system-DMA statistics.
+    pub sysdma: Vec<SysDmaStats>,
+}
+
+impl SystemStats {
+    /// System-wide instructions per core-cycle.
+    pub fn ipc(&self) -> f64 {
+        self.totals.ipc()
+    }
+
+    /// System-wide 32-bit operations per cycle.
+    pub fn ops_per_cycle(&self) -> f64 {
+        self.totals.ops_per_cycle()
+    }
+
+    /// System-wide average power in watts.
+    pub fn power_w(&self, clock_hz: f64) -> f64 {
+        self.totals.power_w(clock_hz)
+    }
+
+    /// Total bytes the system-DMA engines moved.
+    pub fn sysdma_bytes(&self) -> u64 {
+        self.sysdma.iter().map(|s| s.bytes).sum()
+    }
+
+    /// Total system-DMA transfers across all clusters.
+    pub fn sysdma_transfers(&self) -> u64 {
+        self.sysdma.iter().map(|s| s.transfers).sum()
+    }
+}

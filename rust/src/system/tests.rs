@@ -1,0 +1,240 @@
+//! System-level integration tests: cluster identity, the system-DMA
+//! functional and timed paths (L2↔L1 and L1↔L1), end-to-end multi-cluster
+//! kernels, shared-fabric contention accounting, and serial-vs-parallel
+//! determinism at the system level.
+
+use super::*;
+use crate::config::SystemConfig;
+use crate::sim::{SimBackend, SysDmaOp, SysDmaRequest};
+
+fn two_by_four() -> SystemConfig {
+    SystemConfig::with_cores(2, 4)
+}
+
+fn l2_req(l2_offset: u32, local_addr: u32, bytes: u32, op: SysDmaOp) -> SysDmaRequest {
+    SysDmaRequest {
+        l2_offset,
+        local_addr,
+        bytes,
+        remote_cluster: 0,
+        remote_addr: 0,
+        op,
+        issued_at: 0,
+    }
+}
+
+#[test]
+fn sysdma_op_codes_roundtrip() {
+    assert_eq!(SysDmaOp::from_code(0), Some(SysDmaOp::L1ToL2));
+    assert_eq!(SysDmaOp::from_code(1), Some(SysDmaOp::L2ToL1));
+    assert_eq!(SysDmaOp::from_code(2), Some(SysDmaOp::PeerToL1));
+    assert_eq!(SysDmaOp::from_code(3), Some(SysDmaOp::L1ToPeer));
+    assert_eq!(SysDmaOp::from_code(4), None);
+}
+
+#[test]
+fn cluster_id_register_distinguishes_clusters() {
+    let cfg = two_by_four();
+    let mut sym = system_symbols(&cfg);
+    let out = crate::mem::AddressMap::from_config(&cfg.cluster).seq_total_bytes();
+    sym.insert("out".into(), out);
+    let src = "\
+        la t0, CLUSTER_ID_ADDR\n\
+        lw t1, 0(t0)\n\
+        csrr t2, mhartid\n\
+        bnez t2, done\n\
+        la t3, out\n\
+        sw t1, 0(t3)\n\
+        done: halt";
+    let run = SystemRunConfig::new(cfg);
+    let mut r = run_system_kernel(&run, src, &sym, |_| {});
+    assert!(r.completed);
+    for (ci, cluster) in r.system.clusters.iter_mut().enumerate() {
+        let got = cluster.spm().read_word(out);
+        assert_eq!(got, ci as u32, "cluster {ci} read the wrong id");
+    }
+}
+
+#[test]
+fn sysdma_l2_roundtrip_preserves_data() {
+    let cfg = two_by_four();
+    let program = crate::isa::Program::assemble_simple("halt").unwrap();
+    let mut sys = System::new(cfg, program);
+    let words: Vec<u32> = (0..64).map(|i| 0xC0DE_0000 | i).collect();
+    sys.l2.load_words(0x1000, &words);
+    let spm = sys.clusters[0].map.seq_total_bytes();
+    let d0 = sys.sysdma_submit(0, l2_req(0x1000, spm, 256, SysDmaOp::L2ToL1));
+    // Setup (40) + request/hop/L2 latency must all be paid.
+    assert!(d0 > 40 + 24, "completion {d0} too early");
+    let d1 = sys.sysdma_submit(0, l2_req(0x8000, spm, 256, SysDmaOp::L1ToL2));
+    assert!(d1 > d0, "frontend must serialize programming ({d1} vs {d0})");
+    assert_eq!(sys.l2.read_words(0x8000, 64), words);
+    let stats = sys.stats();
+    assert_eq!(stats.sysdma_transfers(), 2);
+    assert_eq!(stats.sysdma_bytes(), 512);
+    assert!(stats.fabric_bytes == 512, "fabric bytes {}", stats.fabric_bytes);
+    assert!(stats.totals.energy.fabric > 0.0, "fabric energy must be booked");
+}
+
+#[test]
+fn sysdma_peer_transfers_move_l1_between_clusters() {
+    let cfg = two_by_four();
+    let program = crate::isa::Program::assemble_simple("halt").unwrap();
+    let mut sys = System::new(cfg, program);
+    let base = sys.clusters[0].map.seq_total_bytes();
+    let words: Vec<u32> = (0..32).map(|i| 0xAB00_0000 | i).collect();
+    {
+        let mut spm = sys.clusters[0].spm();
+        spm.write_words(base, &words);
+    }
+    // Cluster 1 pulls from cluster 0's SPM.
+    let pull = SysDmaRequest {
+        l2_offset: 0,
+        local_addr: base,
+        bytes: 128,
+        remote_cluster: 0,
+        remote_addr: base,
+        op: SysDmaOp::PeerToL1,
+        issued_at: 0,
+    };
+    let d = sys.sysdma_submit(1, pull);
+    assert!(d > 40, "peer pull must pay setup + fabric ({d})");
+    assert_eq!(sys.clusters[1].spm().read_words(base, 32), words);
+    // Cluster 1 pushes a modified buffer back to cluster 0.
+    let modified: Vec<u32> = words.iter().map(|w| w ^ 0xFFFF).collect();
+    {
+        let mut spm = sys.clusters[1].spm();
+        spm.write_words(base, &modified);
+    }
+    let push = SysDmaRequest {
+        l2_offset: 0,
+        local_addr: base,
+        bytes: 128,
+        remote_cluster: 0,
+        remote_addr: base,
+        op: SysDmaOp::L1ToPeer,
+        issued_at: d,
+    };
+    let d2 = sys.sysdma_submit(1, push);
+    assert!(d2 > d);
+    assert_eq!(sys.clusters[0].spm().read_words(base, 32), modified);
+    // Peer traffic rides the fabric but never touches the L2 banks.
+    assert_eq!(sys.stats().fabric_bytes, 256);
+    assert_eq!(sys.fabric.l2_beats, 0);
+}
+
+#[test]
+fn sys_axpy_runs_and_verifies_on_two_clusters() {
+    let cfg = two_by_four();
+    let kernel = SysAxpy::new(8, 2);
+    let mut r = run_system_with_backend(&kernel, &cfg, SimBackend::Parallel);
+    kernel.verify(&mut r.system).expect("sys_axpy result");
+    assert_eq!(r.stats.num_clusters, 2);
+    // Each cluster streamed one chunk in (round 1) and two chunks out.
+    let s = &r.stats;
+    assert!(s.sysdma_transfers() >= 2 * 3, "transfers {}", s.sysdma_transfers());
+    assert!(s.sysdma_bytes() > 0);
+    assert!(s.totals.energy.fabric > 0.0, "fabric energy missing");
+    // The op accounting covers at least the kernel's useful MACs.
+    assert!(
+        s.totals.ops >= kernel.total_ops(&cfg),
+        "counted {} ops, kernel performs {}",
+        s.totals.ops,
+        kernel.total_ops(&cfg)
+    );
+}
+
+#[test]
+fn system_backends_agree_on_both_kernels() {
+    let cfg = two_by_four();
+    let kernels: Vec<Box<dyn SystemKernel>> =
+        vec![Box::new(SysAxpy::new(8, 2)), Box::new(SysMatmul::new(8, 8, 8, 2))];
+    for k in kernels {
+        let a = run_system_with_backend(k.as_ref(), &cfg, SimBackend::Serial);
+        let b = run_system_with_backend(k.as_ref(), &cfg, SimBackend::Parallel);
+        assert_eq!(a.cycles, b.cycles, "{}: cycle counts diverge", k.name());
+        assert_eq!(a.stats, b.stats, "{}: statistics diverge", k.name());
+        let mut sa = a.system;
+        let mut sb = b.system;
+        k.verify(&mut sa).unwrap_or_else(|e| panic!("{} serial: {e}", k.name()));
+        k.verify(&mut sb).unwrap_or_else(|e| panic!("{} parallel: {e}", k.name()));
+    }
+}
+
+#[test]
+fn four_cluster_sharded_matmul_contends_and_stays_deterministic() {
+    // The acceptance scenario: a 4-cluster sharded matmul completes with
+    // identical cycles/stats on both backends and shows measurable
+    // shared-fabric contention (non-zero wait cycles).
+    let cfg = SystemConfig::with_cores(4, 16);
+    let kernel = SysMatmul::new(16, 16, 16, 2);
+    let a = run_system_with_backend(&kernel, &cfg, SimBackend::Serial);
+    let b = run_system_with_backend(&kernel, &cfg, SimBackend::Parallel);
+    assert_eq!(a.cycles, b.cycles, "cycle counts diverge");
+    assert_eq!(a.stats, b.stats, "statistics diverge");
+    let mut sys = b.system;
+    kernel.verify(&mut sys).expect("sharded matmul result");
+    assert!(
+        a.stats.fabric_wait_cycles > 0,
+        "four clusters sharing the fabric must contend somewhere"
+    );
+    // Own-channel occupancy also books wait cycles, so `> 0` alone does
+    // not prove *sharing*. A solo cluster runs the identical per-cluster
+    // workload; were the clusters fully independent, the 4-cluster total
+    // would be exactly 4x the solo wait. Strictly more means they really
+    // serialized against each other at the shared banks/ports.
+    let solo = run_system_with_backend(
+        &kernel,
+        &SystemConfig::with_cores(1, 16),
+        SimBackend::Serial,
+    );
+    assert!(
+        a.stats.fabric_wait_cycles > 4 * solo.stats.fabric_wait_cycles,
+        "no cross-cluster contention: 4-cluster wait {} vs 4x solo wait {}",
+        a.stats.fabric_wait_cycles,
+        4 * solo.stats.fabric_wait_cycles
+    );
+    assert!(
+        a.stats.totals.ops >= kernel.total_ops(&cfg),
+        "counted {} ops, kernel performs {}",
+        a.stats.totals.ops,
+        kernel.total_ops(&cfg)
+    );
+    assert_eq!(a.stats.clusters.len(), 4);
+    // Every cluster moved its own shard over the fabric.
+    for (ci, f) in a.stats.fabric.iter().enumerate() {
+        assert!(f.bytes_read > 0, "cluster {ci} never read from shared L2");
+        assert!(f.bytes_written > 0, "cluster {ci} never wrote shared L2");
+    }
+}
+
+#[test]
+fn standalone_cluster_ignores_system_registers() {
+    // A cluster outside any System: the id reads 0, the status reads
+    // idle, and an unknown trigger code is ignored — no hangs.
+    let cfg = crate::config::ClusterConfig::minpool();
+    let mut sym = crate::sim::base_symbols(&cfg);
+    let syscfg = SystemConfig::new(1, cfg.clone());
+    for (k, v) in system_symbols(&syscfg) {
+        sym.entry(k).or_insert(v);
+    }
+    let map = crate::mem::AddressMap::from_config(&cfg);
+    sym.insert("out".into(), map.seq_total_bytes());
+    let src = "\
+        csrr t0, mhartid\n\
+        bnez t0, done\n\
+        la t1, CLUSTER_ID_ADDR\n\
+        lw t2, 0(t1)\n\
+        la t1, SYSDMA_STATUS_ADDR\n\
+        lw t3, 0(t1)\n\
+        add t2, t2, t3\n\
+        la t1, out\n\
+        sw t2, 0(t1)\n\
+        done: halt";
+    let run = crate::sim::RunConfig::new(cfg);
+    let r = crate::sim::run_kernel(&run, src, &sym, |_| {});
+    assert!(r.completed);
+    let mut cluster = r.cluster;
+    let base = cluster.map.seq_total_bytes();
+    assert_eq!(cluster.spm().read_word(base), 0, "id and status must both read 0");
+}

@@ -444,4 +444,103 @@ mod tests {
         assert!(s.contains("\\u0001"), "{s}");
         assert_eq!(Json::parse(&s).unwrap().as_str(), Some("a\u{0001}b"));
     }
+
+    // --- Property-based round trips ------------------------------------
+
+    use crate::util::prop::{check, check_n, Gen};
+
+    /// Strings drawn from a pool that exercises every writer escape.
+    fn gen_string(g: &mut Gen) -> String {
+        let pool =
+            ['a', 'Z', '0', '"', '\\', '/', '\n', '\r', '\t', '\u{1}', '\u{1f}', 'é', '→', ' '];
+        let n = g.usize(0..10);
+        (0..n).map(|_| *g.choose(&pool)).collect()
+    }
+
+    /// Numbers the writer emits exactly: integers (including u64 beyond
+    /// u32 but within f64's 2^53 integer range) and dyadic fractions.
+    fn gen_number(g: &mut Gen) -> f64 {
+        match g.usize(0..3) {
+            0 => g.any_i32() as f64,
+            1 => g.u64(0..(1 << 53)) as f64,
+            _ => g.any_i32() as f64 / 256.0,
+        }
+    }
+
+    /// A random JSON tree, scalars only at depth 0.
+    fn gen_value(g: &mut Gen, depth: usize) -> Json {
+        let variants = if depth == 0 { 4 } else { 6 };
+        match g.usize(0..variants) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(gen_number(g)),
+            3 => Json::Str(gen_string(g)),
+            4 => Json::Arr(g.vec(0..4, |g| gen_value(g, depth - 1))),
+            _ => {
+                let n = g.usize(0..4);
+                let mut o = Json::obj();
+                for i in 0..n {
+                    // Distinct suffix: `set` replaces duplicate keys, so
+                    // colliding random keys would shrink the object.
+                    let key = format!("{}#{i}", gen_string(g));
+                    o.set(&key, gen_value(g, depth - 1));
+                }
+                o
+            }
+        }
+    }
+
+    #[test]
+    fn prop_nested_documents_roundtrip() {
+        check("json nested roundtrip", |g| {
+            let v = gen_value(g, 3);
+            let text = v.pretty();
+            let back = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+            assert_eq!(back, v, "document changed across write+parse:\n{text}");
+        });
+    }
+
+    #[test]
+    fn prop_large_u64_integers_roundtrip_exactly() {
+        check_n("json u64 roundtrip", 512, |g| {
+            let x = g.u64(0..(1 << 53));
+            let text = Json::from(x).pretty();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back.as_u64(), Some(x), "{text}");
+        });
+        // The largest exactly-representable integer boundary.
+        let top = 1u64 << 53;
+        let text = Json::from(top).pretty();
+        assert_eq!(Json::parse(&text).unwrap().as_u64(), Some(top));
+    }
+
+    #[test]
+    fn non_finite_numbers_never_reach_the_wire() {
+        // The writer refuses NaN/Inf (emits null — no invalid JSON out),
+        // and the parser rejects the non-standard spellings.
+        assert_eq!(Json::Num(f64::NAN).pretty().trim(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).pretty().trim(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).pretty().trim(), "null");
+        assert!(Json::parse("NaN").is_err());
+        assert!(Json::parse("nan").is_err());
+        assert!(Json::parse("Infinity").is_err());
+        assert!(Json::parse("-Infinity").is_err());
+        assert!(Json::parse("inf").is_err());
+    }
+
+    #[test]
+    fn prop_as_u64_rejects_negatives_and_fractions() {
+        check("json as_u64 domain", |g| {
+            let x = g.any_i32();
+            let v = Json::Num(x as f64);
+            if x >= 0 {
+                assert_eq!(v.as_u64(), Some(x as u64));
+            } else {
+                assert_eq!(v.as_u64(), None, "negative {x} must not read as u64");
+            }
+            let frac = Json::Num(x as f64 + 0.5);
+            assert_eq!(frac.as_u64(), None, "fraction must not read as u64");
+        });
+    }
 }

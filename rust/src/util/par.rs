@@ -47,6 +47,40 @@ where
     }
 }
 
+/// Apply `f` to every element of `xs`, potentially in parallel — the
+/// single-slice sibling of [`par_for_each_pair`], used by the system
+/// stepper to advance whole clusters concurrently. Each element is
+/// touched by exactly one invocation, so `f` may freely mutate it;
+/// parallelism only changes wall-clock time, never results.
+#[cfg(feature = "parallel")]
+pub fn par_for_each<A, F>(xs: &mut [A], f: F)
+where
+    A: Send,
+    F: Fn(usize, &mut A) + Sync + Send,
+{
+    // A single cluster: skip the fork/join overhead.
+    if xs.len() < 2 {
+        for (i, x) in xs.iter_mut().enumerate() {
+            f(i, x);
+        }
+        return;
+    }
+    use rayon::prelude::*;
+    xs.par_iter_mut().enumerate().for_each(|(i, x)| f(i, x));
+}
+
+/// Serial fallback: same contract, one thread.
+#[cfg(not(feature = "parallel"))]
+pub fn par_for_each<A, F>(xs: &mut [A], f: F)
+where
+    A: Send,
+    F: Fn(usize, &mut A) + Sync + Send,
+{
+    for (i, x) in xs.iter_mut().enumerate() {
+        f(i, x);
+    }
+}
+
 /// A sensible worker count for coarse-grained fan-out (sweep scenarios).
 pub fn default_jobs() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
@@ -67,6 +101,15 @@ mod tests {
         for (i, (x, y)) in a.iter().zip(&b).enumerate() {
             assert_eq!(*x, i as u64 + 1);
             assert_eq!(*y, i as u64 * 2);
+        }
+    }
+
+    #[test]
+    fn single_slice_visits_every_element_once() {
+        let mut xs: Vec<u64> = vec![0; 9];
+        par_for_each(&mut xs, |i, x| *x = i as u64 + 1);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i as u64 + 1);
         }
     }
 

@@ -8,7 +8,7 @@
 
 use mempool::brow;
 use mempool::config::ClusterConfig;
-use mempool::kernels::{run_and_verify, table1_kernels};
+use mempool::runtime::{run_workload, table1_workloads, RunConfig, Workload};
 use mempool::util::bench::section;
 use mempool::util::cli::Args;
 
@@ -18,9 +18,9 @@ fn main() {
     let cfg = ClusterConfig::with_cores(cores);
     section(&format!("Table 1 — DSP suite on {cores} cores @600 MHz"));
     brow!("kernel", "cycles", "IPC", "OP/cycle", "GOPS", "W", "GOPS/W");
-    for k in table1_kernels(&cfg) {
-        let mut r = run_and_verify(k.as_ref(), &cfg);
-        k.verify(&mut r.cluster).expect("kernel result mismatch");
+    for k in table1_workloads(&cfg) {
+        let mut r = run_workload(k.as_ref(), &RunConfig::cluster(&cfg));
+        k.verify(&mut r.machine).expect("kernel result mismatch");
         let s = &r.stats;
         brow!(
             k.name(),

@@ -7,8 +7,8 @@
 //! ```
 
 use mempool::config::ClusterConfig;
-use mempool::kernels::{run_and_verify, Kernel, Matmul};
-use mempool::runtime::{artifacts_available, Runtime};
+use mempool::kernels::Matmul;
+use mempool::runtime::{artifacts_available, run_workload, RunConfig, Runtime, Workload};
 
 fn main() {
     if !artifacts_available() {
@@ -21,7 +21,7 @@ fn main() {
         "simulating {}x{}x{} matmul on {} cores...",
         kernel.m, kernel.n, kernel.k, cfg.num_cores()
     );
-    let mut result = run_and_verify(&kernel, &cfg);
+    let mut result = run_workload(&kernel, &RunConfig::cluster(&cfg));
     println!("simulation: {} cycles, IPC {:.2}", result.cycles, result.stats.ipc());
 
     let mut rt = Runtime::new().expect("PJRT CPU client");
@@ -36,11 +36,12 @@ fn main() {
         .run_i32("matmul", &[(&a, &[kernel.m, kernel.k]), (&b, &[kernel.k, kernel.n])])
         .expect("golden model");
 
-    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let cluster = result.machine.cluster();
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&cluster.cfg);
     let c_addr = rt_layout.data_base
         + (kernel.m * kernel.k * 4) as u32
         + (kernel.k * kernel.n * 4) as u32;
-    let simulated = result.cluster.spm().read_words(c_addr, kernel.m * kernel.n);
+    let simulated = cluster.spm().read_words(c_addr, kernel.m * kernel.n);
     let mismatches = simulated
         .iter()
         .zip(&golden)

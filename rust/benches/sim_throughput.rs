@@ -5,7 +5,8 @@
 //! at 256 cores).
 
 use mempool::config::ClusterConfig;
-use mempool::kernels::{run_with_backend, Matmul};
+use mempool::kernels::Matmul;
+use mempool::runtime::{run_workload, RunConfig};
 use mempool::sim::SimBackend;
 use mempool::util::bench::{bench_config, section};
 use std::time::Instant;
@@ -17,7 +18,7 @@ fn main() {
             let cfg = ClusterConfig::with_cores(cores);
             let k = Matmul::weak_scaled(cores);
             let t0 = Instant::now();
-            let r = run_with_backend(&k, &cfg, backend);
+            let r = run_workload(&k, &RunConfig::cluster(&cfg).with_backend(backend));
             let dt = t0.elapsed().as_secs_f64();
             let core_cycles = r.cycles * cores as u64;
             println!(
@@ -32,11 +33,13 @@ fn main() {
     bench_config("minpool matmul end-to-end", 1, 5, &mut || {
         let cfg = ClusterConfig::minpool();
         let k = Matmul::weak_scaled(16);
-        std::hint::black_box(run_with_backend(&k, &cfg, SimBackend::Serial));
+        let run = RunConfig::cluster(&cfg).with_backend(SimBackend::Serial);
+        std::hint::black_box(run_workload(&k, &run));
     });
     bench_config("minpool matmul end-to-end (parallel)", 1, 5, &mut || {
         let cfg = ClusterConfig::minpool();
         let k = Matmul::weak_scaled(16);
-        std::hint::black_box(run_with_backend(&k, &cfg, SimBackend::Parallel));
+        let run = RunConfig::cluster(&cfg).with_backend(SimBackend::Parallel);
+        std::hint::black_box(run_workload(&k, &run));
     });
 }

@@ -26,6 +26,7 @@ fn main() {
     bench_config("table1: 16-core matmul end-to-end", 1, 3, &mut || {
         let cfg = ClusterConfig::minpool();
         let k = mempool::kernels::Matmul::weak_scaled(16);
-        std::hint::black_box(mempool::kernels::run_and_verify(&k, &cfg));
+        let run = mempool::runtime::RunConfig::cluster(&cfg);
+        std::hint::black_box(mempool::runtime::run_workload(&k, &run));
     });
 }

@@ -5,13 +5,11 @@
 //! and per-level load imbalance make this the hardest of the three apps
 //! (the paper reports ≈51% of ideal speedup).
 
-use std::collections::HashMap;
 use std::collections::VecDeque;
 
 use crate::config::ClusterConfig;
-use crate::kernels::rt::{barrier_asm, RtLayout};
-use crate::kernels::Kernel;
-use crate::sim::Cluster;
+use crate::kernels::rt::RtLayout;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 use crate::util::Rng;
 
 /// Vertices per core.
@@ -110,31 +108,31 @@ impl Default for Bfs {
     }
 }
 
-impl Kernel for Bfs {
+impl Workload for Bfs {
     fn name(&self) -> &'static str {
         "bfs"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let l = self.layout(cfg);
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("row_ptr".into(), l.row_ptr);
-        sym.insert("col_idx".into(), l.col_idx);
-        sym.insert("visited".into(), l.visited);
-        sym.insert("levels".into(), l.level);
-        sym.insert("q_a".into(), l.qa);
-        sym.insert("q_b".into(), l.qb);
-        sym.insert("qa_tail".into(), l.qa_tail);
-        sym.insert("qb_tail".into(), l.qb_tail);
-        sym.insert("q_head".into(), l.head);
+        rt.add_symbols(b.symbols_mut());
+        b.define("row_ptr", l.row_ptr);
+        b.define("col_idx", l.col_idx);
+        b.define("visited", l.visited);
+        b.define("levels", l.level);
+        b.define("q_a", l.qa);
+        b.define("q_b", l.qb);
+        b.define("qa_tail", l.qa_tail);
+        b.define("qb_tail", l.qb_tail);
+        b.define("q_head", l.head);
 
         // s0 = level, s1 = current queue base, s2 = current tail addr,
         // s3 = next queue base, s4 = next tail addr, s5 = current
         // frontier size, s6 = grabbed index, s7 = vertex, s8/s9 = edge
         // range, s10 = neighbour, s11 = scratch.
-        let src = format!(
+        b.raw(
             "\
             li s0, 0\n\
             level_loop:\n\
@@ -195,29 +193,26 @@ impl Kernel for Bfs {
             add t5, t5, s3\n\
             sw s10, 0(t5)\n\
             j edge_loop\n\
-            frontier_done:\n\
-            {bar0}\
-            # core 0 resets the consumed queue + the grab counter\n\
-            csrr t0, mhartid\n\
-            bnez t0, skip_reset\n\
-            sw zero, 0(s2)\n\
-            la t1, q_head\n\
-            sw zero, 0(t1)\n\
-            skip_reset:\n\
-            {bar1}\
-            addi s0, s0, 1\n\
-            j level_loop\n\
-            bfs_done:\n\
-            {bar2}\
-            halt\n",
-            bar0 = barrier_asm(0),
-            bar1 = barrier_asm(1),
-            bar2 = barrier_asm(2),
+            frontier_done:\n",
         );
-        (src, sym)
+        b.barrier(0);
+        b.comment("core 0 resets the consumed queue + the grab counter");
+        b.core_id("t0");
+        b.bnez("t0", "skip_reset");
+        b.sw("zero", 0, "s2");
+        b.la("t1", "q_head");
+        b.sw("zero", 0, "t1");
+        b.label("skip_reset");
+        b.barrier(1);
+        b.addi("s0", "s0", 1);
+        b.j("level_loop");
+        b.label("bfs_done");
+        b.barrier(2);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let l = self.layout(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -239,7 +234,8 @@ impl Kernel for Bfs {
         spm.write_word(l.head, 0);
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let l = self.layout(&cluster.cfg);
         let expect = self.reference(&cluster.cfg);
         let got = cluster.spm().read_words(l.level, expect.len());
@@ -251,7 +247,8 @@ impl Kernel for Bfs {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        let cfg = cfg.cluster();
         let g = self.graph(cfg);
         // One visited test per edge + queue ops.
         (2 * g.col_idx.len() + 4 * self.verts(cfg)) as u64

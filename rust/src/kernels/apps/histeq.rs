@@ -3,12 +3,9 @@
 //! LUT phase on core 0 (the Amdahl bottleneck behind the paper's ≈40%
 //! of linear speedup), and a parallel remap phase.
 
-use std::collections::HashMap;
-
 use crate::config::ClusterConfig;
-use crate::kernels::rt::{barrier_asm, RtLayout};
-use crate::kernels::Kernel;
-use crate::sim::Cluster;
+use crate::kernels::rt::RtLayout;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 /// Intensity levels (6-bit image).
 pub const BINS: usize = 64;
@@ -67,25 +64,25 @@ impl Default for HistEq {
     }
 }
 
-impl Kernel for HistEq {
+impl Workload for HistEq {
     fn name(&self) -> &'static str {
         "histeq"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let (img, out, hist, lut) = self.layout(cfg);
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("img".into(), img);
-        sym.insert("img_out".into(), out);
-        sym.insert("hist".into(), hist);
-        sym.insert("lut".into(), lut);
-        sym.insert("PX_PER_CORE".into(), PX_PER_CORE as u32);
-        sym.insert("NBINS".into(), BINS as u32);
-        let src = format!(
+        rt.add_symbols(b.symbols_mut());
+        b.define("img", img);
+        b.define("img_out", out);
+        b.define("hist", hist);
+        b.define("lut", lut);
+        b.define("PX_PER_CORE", PX_PER_CORE as u32);
+        b.define("NBINS", BINS as u32);
+        b.core_id("s0");
+        b.raw(
             "\
-            csrr s0, mhartid\n\
             li t0, PX_PER_CORE\n\
             mul s1, s0, t0\n\
             slli s1, s1, 2\n\
@@ -101,8 +98,11 @@ impl Kernel for HistEq {
             add t2, t2, t3\n\
             amoadd.w t4, a2, (t2)\n\
             addi a1, a1, -1\n\
-            bnez a1, h_loop\n\
-            {bar0}\
+            bnez a1, h_loop\n",
+        );
+        b.barrier(0);
+        b.raw(
+            "\
             # --- phase 2 (core 0 only): prefix sum + LUT ---\n\
             bnez s0, skip_serial\n\
             la a0, hist\n\
@@ -122,8 +122,11 @@ impl Kernel for HistEq {
             p.sw t3, 4(a1!)\n\
             addi a3, a3, -1\n\
             bnez a3, cdf_loop\n\
-            skip_serial:\n\
-            {bar1}\
+            skip_serial:\n",
+        );
+        b.barrier(1);
+        b.raw(
+            "\
             # --- phase 3: remap ---\n\
             la a0, img\n\
             add a0, a0, s1\n\
@@ -138,17 +141,14 @@ impl Kernel for HistEq {
             lw t4, 0(t2)\n\
             p.sw t4, 4(a1!)\n\
             addi a2, a2, -1\n\
-            bnez a2, m_loop\n\
-            {bar2}\
-            halt\n",
-            bar0 = barrier_asm(0),
-            bar1 = barrier_asm(1),
-            bar2 = barrier_asm(2),
+            bnez a2, m_loop\n",
         );
-        (src, sym)
+        b.barrier(2);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let (img_addr, _, hist, lut) = self.layout(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -161,7 +161,8 @@ impl Kernel for HistEq {
         }
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let (_, out, _, _) = self.layout(&cluster.cfg);
         let expect = self.reference(&cluster.cfg);
         let got = cluster.spm().read_words(out, expect.len());
@@ -173,8 +174,8 @@ impl Kernel for HistEq {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
         // Histogram increment + remap per pixel, plus the serial LUT.
-        (2 * self.pixels(cfg) + 3 * BINS) as u64
+        (2 * self.pixels(cfg.cluster()) + 3 * BINS) as u64
     }
 }

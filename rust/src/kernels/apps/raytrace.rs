@@ -5,12 +5,9 @@
 //! (OpenMP `schedule(dynamic)`), reproducing the paper's ≈91%-of-ideal
 //! speedup despite the imbalance.
 
-use std::collections::HashMap;
-
 use crate::config::ClusterConfig;
-use crate::kernels::rt::{barrier_asm, RtLayout};
-use crate::kernels::Kernel;
-use crate::sim::Cluster;
+use crate::kernels::rt::RtLayout;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 /// Image width in pixels.
 pub const WIDTH: usize = 64;
@@ -107,23 +104,23 @@ impl Default for Raytrace {
     }
 }
 
-impl Kernel for Raytrace {
+impl Workload for Raytrace {
     fn name(&self) -> &'static str {
         "raytrace"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let (scene_addr, fb) = self.layout(cfg);
         let rt = RtLayout::new(cfg);
         let nsph = scene(self.rows(cfg)).len();
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("scene".into(), scene_addr);
-        sym.insert("fb".into(), fb);
-        sym.insert("NROWS".into(), self.rows(cfg) as u32);
-        sym.insert("NSPH".into(), nsph as u32);
-        sym.insert("RT_WIDTH".into(), WIDTH as u32);
-        sym.insert("ISQRT_ITERS".into(), ISQRT_ITERS as u32);
+        rt.add_symbols(b.symbols_mut());
+        b.define("scene", scene_addr);
+        b.define("fb", fb);
+        b.define("NROWS", self.rows(cfg) as u32);
+        b.define("NSPH", nsph as u32);
+        b.define("RT_WIDTH", WIDTH as u32);
+        b.define("ISQRT_ITERS", ISQRT_ITERS as u32);
 
         // The scene is preloaded into registers once per core (the paper's
         // ray tracer keeps scene constants register-resident; reloading
@@ -139,52 +136,40 @@ impl Kernel for Raytrace {
             ["a0", "a1", "gp", "tp"],
         ];
         assert!(nsph <= sph.len());
-        let mut src = String::from("li s1, NROWS\nla t0, scene\n");
+        b.li("s1", "NROWS");
+        b.la("t0", "scene");
         for s in sph.iter().take(nsph) {
             for r in s {
-                src.push_str(&format!("p.lw {r}, 4(t0!)\n"));
+                b.p_lw(r, 4, "t0");
             }
         }
-        src.push_str(
-            "\
-            grab:\n\
-            la t0, rt_work_counter\n\
-            li s0, 1\n\
-            amoadd.w s0, s0, (t0)\n\
-            bge s0, s1, trace_done\n\
-            la s3, fb\n\
-            slli t1, s0, 8\n\
-            add s3, s3, t1\n\
-            li s2, 0\n\
-            pixel:\n\
-            xor s6, s2, s0\n\
-            andi s6, s6, 7\n",
-        );
+        b.label("grab");
+        b.grab_chunk("s0", "s1", "trace_done");
+        b.la("s3", "fb");
+        b.slli("t1", "s0", 8);
+        b.add("s3", "s3", "t1");
+        b.li("s2", 0);
+        b.label("pixel");
+        b.xor("s6", "s2", "s0");
+        b.andi("s6", "s6", 7);
         // Unrolled sphere tests, register-resident.
         for (i, s) in sph.iter().take(nsph).enumerate() {
-            src.push_str(&format!(
-                "\
-                sub t1, s2, {cx}\n\
-                sub t2, s0, {cy}\n\
-                mul t3, t1, t1\n\
-                mul t4, t2, t2\n\
-                add t3, t3, t4\n\
-                blt t3, {r2}, hit_{i}\n",
-                cx = s[0],
-                cy = s[1],
-                r2 = s[2],
-            ));
+            b.sub("t1", "s2", s[0]);
+            b.sub("t2", "s0", s[1]);
+            b.mul("t3", "t1", "t1");
+            b.mul("t4", "t2", "t2");
+            b.add("t3", "t3", "t4");
+            b.blt("t3", s[2], format!("hit_{i}"));
         }
-        src.push_str("j store_px\n");
+        b.j("store_px");
         for (i, s) in sph.iter().take(nsph).enumerate() {
-            src.push_str(&format!(
-                "hit_{i}:\nsub t5, {r2}, t3\nmv t0, {br}\nj shade\n",
-                r2 = s[2],
-                br = s[3],
-            ));
+            b.label(format!("hit_{i}"));
+            b.sub("t5", s[2], "t3");
+            b.mv("t0", s[3]);
+            b.j("shade");
         }
         // Shared shading path: integer Newton sqrt of t5, scaled by t0.
-        src.push_str(
+        b.raw(
             "\
             shade:\n\
             li t6, 1\n\
@@ -208,12 +193,12 @@ impl Kernel for Raytrace {
             j grab\n\
             trace_done:\n",
         );
-        src.push_str(&barrier_asm(0));
-        src.push_str("halt\n");
-        (src, sym)
+        b.barrier(0);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let (scene_addr, fb) = self.layout(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -232,7 +217,8 @@ impl Kernel for Raytrace {
         }
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let (_, fb) = self.layout(&cluster.cfg);
         let expect = self.reference(&cluster.cfg);
         let got = cluster.spm().read_words(fb, expect.len());
@@ -249,8 +235,8 @@ impl Kernel for Raytrace {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
         // Rough: ~8 arithmetic ops per sphere test per pixel.
-        (self.rows(cfg) * WIDTH * 8) as u64
+        (self.rows(cfg.cluster()) * WIDTH * 8) as u64
     }
 }

@@ -4,12 +4,9 @@
 //! tile's banks (the hybrid layout the paper credits for axpy's lack of
 //! interconnect stalls).
 
-use std::collections::HashMap;
-
-use super::rt::{barrier_asm, RtLayout};
-use super::Kernel;
+use super::rt::RtLayout;
 use crate::config::ClusterConfig;
-use crate::sim::Cluster;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 pub struct Axpy {
     /// Elements per core (total = per_core × cores).
@@ -52,69 +49,65 @@ impl Axpy {
     }
 }
 
-impl Kernel for Axpy {
+impl Workload for Axpy {
     fn name(&self) -> &'static str {
         "axpy"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let (x, y) = self.layout(cfg);
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("vec_x".into(), x);
-        sym.insert("vec_y".into(), y);
-        sym.insert("ALPHA".into(), self.alpha);
+        rt.add_symbols(b.symbols_mut());
+        b.define("vec_x", x);
+        b.define("vec_y", y);
+        b.define("ALPHA", self.alpha);
         // Each core owns `per_core/4` islands of 4 words, strided by one
         // full rotation of tile lines.
-        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
-        sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
-        let src = format!(
-            "\
-            csrr t0, mhartid\n\
-            srli t1, t0, 2\n\
-            andi t2, t0, 3\n\
-            # offset of this core's first island: tile*64 + lane*16\n\
-            slli t3, t1, 6\n\
-            slli t4, t2, 4\n\
-            add t5, t3, t4\n\
-            la a0, vec_x\n\
-            add a0, a0, t5\n\
-            la a1, vec_y\n\
-            add a1, a1, t5\n\
-            li a2, ALPHA\n\
-            li a3, BLOCKS\n\
-            li a4, BLOCK_STRIDE\n\
-            .align 8\n\
-            blk:\n\
-            lw t0, 0(a0)\n\
-            lw t1, 4(a0)\n\
-            lw t2, 8(a0)\n\
-            lw t3, 12(a0)\n\
-            lw t4, 0(a1)\n\
-            lw t5, 4(a1)\n\
-            lw t6, 8(a1)\n\
-            lw a6, 12(a1)\n\
-            p.mac t4, a2, t0\n\
-            p.mac t5, a2, t1\n\
-            p.mac t6, a2, t2\n\
-            p.mac a6, a2, t3\n\
-            sw t4, 0(a1)\n\
-            sw t5, 4(a1)\n\
-            sw t6, 8(a1)\n\
-            sw a6, 12(a1)\n\
-            add a0, a0, a4\n\
-            add a1, a1, a4\n\
-            addi a3, a3, -1\n\
-            bnez a3, blk\n\
-            {barrier}\
-            halt\n",
-            barrier = barrier_asm(0)
-        );
-        (src, sym)
+        b.define("BLOCKS", (self.per_core / 4) as u32);
+        b.define("BLOCK_STRIDE", (cfg.num_tiles() * 64) as u32);
+        b.core_id("t0");
+        b.srli("t1", "t0", 2);
+        b.andi("t2", "t0", 3);
+        b.comment("offset of this core's first island: tile*64 + lane*16");
+        b.slli("t3", "t1", 6);
+        b.slli("t4", "t2", 4);
+        b.add("t5", "t3", "t4");
+        b.la("a0", "vec_x");
+        b.add("a0", "a0", "t5");
+        b.la("a1", "vec_y");
+        b.add("a1", "a1", "t5");
+        b.li("a2", "ALPHA");
+        b.li("a3", "BLOCKS");
+        b.li("a4", "BLOCK_STRIDE");
+        b.align(8);
+        b.label("blk");
+        b.lw("t0", 0, "a0");
+        b.lw("t1", 4, "a0");
+        b.lw("t2", 8, "a0");
+        b.lw("t3", 12, "a0");
+        b.lw("t4", 0, "a1");
+        b.lw("t5", 4, "a1");
+        b.lw("t6", 8, "a1");
+        b.lw("a6", 12, "a1");
+        b.p_mac("t4", "a2", "t0");
+        b.p_mac("t5", "a2", "t1");
+        b.p_mac("t6", "a2", "t2");
+        b.p_mac("a6", "a2", "t3");
+        b.sw("t4", 0, "a1");
+        b.sw("t5", 4, "a1");
+        b.sw("t6", 8, "a1");
+        b.sw("a6", 12, "a1");
+        b.add("a0", "a0", "a4");
+        b.add("a1", "a1", "a4");
+        b.addi("a3", "a3", -1);
+        b.bnez("a3", "blk");
+        b.barrier(0);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let (x_addr, y_addr) = self.layout(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -124,7 +117,8 @@ impl Kernel for Axpy {
         spm.write_words(y_addr, &y);
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let (_, y_addr) = self.layout(&cluster.cfg);
         let (x, y) = self.inputs(&cluster.cfg);
         let n = self.len(&cluster.cfg);
@@ -138,7 +132,7 @@ impl Kernel for Axpy {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
-        2 * self.len(cfg) as u64
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        2 * self.len(cfg.cluster()) as u64
     }
 }

@@ -7,12 +7,9 @@
 //! The inner loop is unrolled ×3 with rotating column registers so each
 //! output pixel costs 3 loads + 9 MACs with full column reuse.
 
-use std::collections::HashMap;
-
-use super::rt::{barrier_asm, RtLayout};
-use super::Kernel;
+use super::rt::RtLayout;
 use crate::config::ClusterConfig;
-use crate::sim::Cluster;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 /// Image width in pixels — one tile line (16 words) per row.
 pub const W: usize = 16;
@@ -82,9 +79,9 @@ impl Default for Conv2d {
     }
 }
 
-impl Kernel for Conv2d {
+impl Workload for Conv2d {
     fn name(&self) -> &'static str {
-        "2dconv"
+        "conv2d"
     }
 
     fn prepare_config(&self, cfg: &mut ClusterConfig) {
@@ -93,19 +90,18 @@ impl Kernel for Conv2d {
         cfg.seq_rows_log2 = 7;
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("conv_out".into(), self.out_base(cfg));
-        sym.insert("LAST_ROW".into(), (self.rows(cfg) - 1) as u32);
+        rt.add_symbols(b.symbols_mut());
+        b.define("conv_out", self.out_base(cfg));
+        b.define("LAST_ROW", (self.rows(cfg) - 1) as u32);
 
-        let mut src = String::new();
         // Coefficients into s0..s8 (row-major).
         for (i, k) in COEFF.iter().flatten().enumerate() {
-            src.push_str(&format!("li s{i}, {k}\n"));
+            b.li(&format!("s{i}"), k);
         }
-        src.push_str(
+        b.raw(
             "\
             csrr t0, mhartid\n\
             slli s9, t0, 4\n\
@@ -158,20 +154,17 @@ impl Kernel for Conv2d {
         // `mv`s cost less than thrashing the 32-instruction L0 cache
         // with a 3x-unrolled 45-instruction body (EXPERIMENTS.md #Perf).
         // Window: A = (a2, a3, t4), B = (a5, a6, t5), C = (t0, t1, t2).
-        src.push_str(
-            "\
-            p.lw t0, 4(gp!)\n\
-            p.lw t1, 4(tp!)\n\
-            p.lw t2, 4(ra!)\n\
-            li a7, 0\n",
-        );
+        b.p_lw("t0", 4, "gp");
+        b.p_lw("t1", 4, "tp");
+        b.p_lw("t2", 4, "ra");
+        b.li("a7", 0);
         let cols = [["a2", "a3", "t4"], ["a5", "a6", "t5"], ["t0", "t1", "t2"]];
         for row in 0..3 {
             for (c, col) in cols.iter().enumerate() {
-                src.push_str(&format!("p.mac a7, s{}, {}\n", 3 * row + c, col[row]));
+                b.p_mac("a7", &format!("s{}", 3 * row + c), col[row]);
             }
         }
-        src.push_str(
+        b.raw(
             "\
             p.sw a7, 4(a0!)\n\
             mv a2, a5\n\
@@ -186,12 +179,12 @@ impl Kernel for Conv2d {
             j row_loop\n\
             rows_done:\n",
         );
-        src.push_str(&barrier_asm(0));
-        src.push_str("halt\n");
-        (src, sym)
+        b.barrier(0);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
         let img = self.input(&cluster.cfg);
@@ -209,7 +202,8 @@ impl Kernel for Conv2d {
         }
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let rows = self.rows(&cluster.cfg);
         let expect = self.reference(&cluster.cfg);
         let out = self.out_base(&cluster.cfg);
@@ -228,9 +222,9 @@ impl Kernel for Conv2d {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
         // 9 MACs per interior output pixel.
-        let rows = self.rows(cfg) as u64;
+        let rows = self.rows(cfg.cluster()) as u64;
         18 * (rows - 2) * (W as u64 - 4)
     }
 }

@@ -5,12 +5,9 @@
 //! transform is an integer DCT-II: `Y = (C·X·Cᵀ) >> 2·SHIFT` with an
 //! 8×8 coefficient matrix scaled by 2^SHIFT.
 
-use std::collections::HashMap;
-
-use super::rt::{barrier_asm, RtLayout};
-use super::Kernel;
+use super::rt::RtLayout;
 use crate::config::ClusterConfig;
-use crate::sim::Cluster;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 /// Coefficient fixed-point scale (bits).
 pub const SHIFT: u32 = 7;
@@ -107,7 +104,7 @@ impl Default for Dct {
     }
 }
 
-impl Kernel for Dct {
+impl Workload for Dct {
     fn name(&self) -> &'static str {
         "dct"
     }
@@ -116,19 +113,18 @@ impl Kernel for Dct {
         cfg.seq_rows_log2 = 7; // 2 KiB lane slices
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("dct_out".into(), self.out_base(cfg));
-        sym.insert("DCT_SHIFT".into(), SHIFT);
+        rt.add_symbols(b.symbols_mut());
+        b.define("dct_out", self.out_base(cfg));
+        b.define("DCT_SHIFT", SHIFT);
 
         // Register plan: a0 = lane base, a1 = block counter, a2 = input
         // row/col pointer, a3 = coeff pointer, a4 = scratch pointer,
         // a5 = acc, a7 = output pointer; t0-t6 + a6 hold the 8 inputs of
         // the current 1D transform; s0/s1 = loop counters.
-        let mut src = String::new();
-        src.push_str(
+        b.raw(
             "\
             csrr t0, mhartid\n\
             slli a0, t0, 11\n\
@@ -157,12 +153,12 @@ impl Kernel for Dct {
             row_u:\n",
         );
         // One output coefficient: 8 coeff loads interleaved with 8 MACs.
-        src.push_str("li a5, 0\n");
-        for (i, reg) in ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "a6"].iter().enumerate() {
-            let _ = i;
-            src.push_str(&format!("p.lw s2, 4(a3!)\np.mac a5, s2, {reg}\n"));
+        b.li("a5", 0);
+        for reg in ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "a6"] {
+            b.p_lw("s2", 4, "a3");
+            b.p_mac("a5", "s2", reg);
         }
-        src.push_str(
+        b.raw(
             "\
             srai a5, a5, DCT_SHIFT\n\
             p.sw a5, 4(a4!)\n\
@@ -193,11 +189,12 @@ impl Kernel for Dct {
             li s1, 8\n\
             col_v:\n",
         );
-        src.push_str("li a5, 0\n");
+        b.li("a5", 0);
         for reg in ["t0", "t1", "t2", "t3", "t4", "t5", "t6", "a6"] {
-            src.push_str(&format!("p.lw s2, 4(a3!)\np.mac a5, s2, {reg}\n"));
+            b.p_lw("s2", 4, "a3");
+            b.p_mac("a5", "s2", reg);
         }
-        src.push_str(
+        b.raw(
             "\
             srai a5, a5, DCT_SHIFT\n\
             p.sw a5, 32(s3!)\n\
@@ -212,12 +209,12 @@ impl Kernel for Dct {
             li t1, 4\n\
             blt a1, t1, block_loop\n",
         );
-        src.push_str(&barrier_asm(0));
-        src.push_str("halt\n");
-        (src, sym)
+        b.barrier(0);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
         let input = self.input(&cluster.cfg);
@@ -243,7 +240,8 @@ impl Kernel for Dct {
         }
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let expect = self.reference(&cluster.cfg);
         let out = self.out_base(&cluster.cfg);
         let got = cluster.spm().read_words(out, expect.len());
@@ -261,8 +259,8 @@ impl Kernel for Dct {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
         // 2 passes × 64 outputs × 8 MACs × 2 OPs per block.
-        (self.blocks(cfg) * 2 * 64 * 8 * 2) as u64
+        (self.blocks(cfg.cluster()) * 2 * 64 * 8 * 2) as u64
     }
 }

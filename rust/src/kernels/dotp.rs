@@ -3,12 +3,9 @@
 //! accumulator ("only dotp's reduction step exhibits some conflicts",
 //! Fig 14).
 
-use std::collections::HashMap;
-
-use super::rt::{barrier_asm, RtLayout};
-use super::Kernel;
+use super::rt::RtLayout;
 use crate::config::ClusterConfig;
-use crate::sim::Cluster;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 pub struct Dotp {
     pub per_core: usize,
@@ -48,65 +45,61 @@ impl Dotp {
     }
 }
 
-impl Kernel for Dotp {
+impl Workload for Dotp {
     fn name(&self) -> &'static str {
         "dotp"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let (x, y, acc) = self.layout(cfg);
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("vec_x".into(), x);
-        sym.insert("vec_y".into(), y);
-        sym.insert("dot_acc".into(), acc);
-        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
-        sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
-        let src = format!(
-            "\
-            csrr t0, mhartid\n\
-            srli t1, t0, 2\n\
-            andi t2, t0, 3\n\
-            slli t3, t1, 6\n\
-            slli t4, t2, 4\n\
-            add t5, t3, t4\n\
-            la a0, vec_x\n\
-            add a0, a0, t5\n\
-            la a1, vec_y\n\
-            add a1, a1, t5\n\
-            li a2, 0\n\
-            li a3, BLOCKS\n\
-            li a4, BLOCK_STRIDE\n\
-            .align 8\n\
-            blk:\n\
-            lw t0, 0(a0)\n\
-            lw t1, 4(a0)\n\
-            lw t2, 8(a0)\n\
-            lw t3, 12(a0)\n\
-            lw t4, 0(a1)\n\
-            lw t5, 4(a1)\n\
-            lw t6, 8(a1)\n\
-            lw a6, 12(a1)\n\
-            p.mac a2, t0, t4\n\
-            p.mac a2, t1, t5\n\
-            p.mac a2, t2, t6\n\
-            p.mac a2, t3, a6\n\
-            add a0, a0, a4\n\
-            add a1, a1, a4\n\
-            addi a3, a3, -1\n\
-            bnez a3, blk\n\
-            # reduction: one atomic add into the shared accumulator\n\
-            la t0, dot_acc\n\
-            amoadd.w t1, a2, (t0)\n\
-            {barrier}\
-            halt\n",
-            barrier = barrier_asm(0)
-        );
-        (src, sym)
+        rt.add_symbols(b.symbols_mut());
+        b.define("vec_x", x);
+        b.define("vec_y", y);
+        b.define("dot_acc", acc);
+        b.define("BLOCKS", (self.per_core / 4) as u32);
+        b.define("BLOCK_STRIDE", (cfg.num_tiles() * 64) as u32);
+        b.core_id("t0");
+        b.srli("t1", "t0", 2);
+        b.andi("t2", "t0", 3);
+        b.slli("t3", "t1", 6);
+        b.slli("t4", "t2", 4);
+        b.add("t5", "t3", "t4");
+        b.la("a0", "vec_x");
+        b.add("a0", "a0", "t5");
+        b.la("a1", "vec_y");
+        b.add("a1", "a1", "t5");
+        b.li("a2", 0);
+        b.li("a3", "BLOCKS");
+        b.li("a4", "BLOCK_STRIDE");
+        b.align(8);
+        b.label("blk");
+        b.lw("t0", 0, "a0");
+        b.lw("t1", 4, "a0");
+        b.lw("t2", 8, "a0");
+        b.lw("t3", 12, "a0");
+        b.lw("t4", 0, "a1");
+        b.lw("t5", 4, "a1");
+        b.lw("t6", 8, "a1");
+        b.lw("a6", 12, "a1");
+        b.p_mac("a2", "t0", "t4");
+        b.p_mac("a2", "t1", "t5");
+        b.p_mac("a2", "t2", "t6");
+        b.p_mac("a2", "t3", "a6");
+        b.add("a0", "a0", "a4");
+        b.add("a1", "a1", "a4");
+        b.addi("a3", "a3", -1);
+        b.bnez("a3", "blk");
+        b.comment("reduction: one atomic add into the shared accumulator");
+        b.la("t0", "dot_acc");
+        b.amoadd("t1", "a2", "t0");
+        b.barrier(0);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let (x_addr, y_addr, acc) = self.layout(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -117,7 +110,8 @@ impl Kernel for Dotp {
         spm.write_words(y_addr, &y);
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let (_, _, acc) = self.layout(&cluster.cfg);
         let (x, y) = self.inputs(&cluster.cfg);
         let expect = x
@@ -131,7 +125,7 @@ impl Kernel for Dotp {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
-        2 * self.len(cfg) as u64
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        2 * self.len(cfg.cluster()) as u64
     }
 }

@@ -8,123 +8,405 @@
 //! `DbAxpy` is the memory-bound representative (the paper's axpy compute
 //! phases fill only ~35% of a steady round — L2-bandwidth limited);
 //! `DbMatmul` is the compute-bound one (IPC ≈0.94 in steady rounds).
+//!
+//! The ping-pong plumbing ([`DbPlumbing`]) and the round-structured
+//! compute emitters are shared with the *system*-target variants
+//! (`SysMatmul`/`SysAxpy` in `system/kernels.rs`): the same Fig 15 round
+//! structure runs against either the cluster DMA (`DMA_*` registers,
+//! shard bases immediate) or the system-DMA frontend (`SYSDMA_*`
+//! registers, per-cluster shard bases computed from `CTRL_CLUSTER_ID`
+//! onto the stack). Each variant's instruction sequence is preserved
+//! exactly — the parameterization only removes the duplicated source.
 
-use std::collections::HashMap;
-
-use super::rt::{barrier_asm, dma_wait_asm, RtLayout};
-use super::Kernel;
+use super::rt::RtLayout;
 use crate::config::ClusterConfig;
-use crate::sim::Cluster;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
-/// Ping-pong buffer plumbing shared by the double-buffered kernels.
-struct DbPlumbing {
+/// System-target shard plumbing: this cluster's shared-L2 shard bases
+/// are `l2_in/l2_out + cluster_id * stride`, kept at 16(sp)/20(sp).
+pub(crate) struct SysShard {
+    /// Shared-L2 distance between consecutive clusters' input shards.
+    pub in_stride: u32,
+    /// Shared-L2 distance between consecutive clusters' output shards.
+    pub out_stride: u32,
+}
+
+/// Ping-pong buffer plumbing shared by all double-buffered kernels, on
+/// both targets.
+pub(crate) struct DbPlumbing {
     /// Input chunk size (bytes) per round.
-    chunk_bytes: u32,
+    pub chunk_bytes: u32,
     /// Output chunk size (bytes) per round.
-    out_bytes: u32,
-    in_bufs: [u32; 2],
-    out_bufs: [u32; 2],
-    l2_in: u32,
-    l2_out: u32,
+    pub out_bytes: u32,
+    pub in_bufs: [u32; 2],
+    pub out_bufs: [u32; 2],
+    /// Base of the input stream in (shared) L2 — cluster 0's shard on
+    /// the system target.
+    pub l2_in: u32,
+    /// Base of the output stream in (shared) L2.
+    pub l2_out: u32,
+    /// `Some` = system target (SYSDMA register set + stack shard bases).
+    pub shard: Option<SysShard>,
 }
 
 impl DbPlumbing {
-    /// Assembly for hart 0's DMA orchestration at the top of round s10
-    /// (s9 = hartid, s11 = rounds). Clobbers t0/t1, a0/a1.
-    fn round_prologue(&self) -> String {
-        format!(
-            "\
-            bnez s9, db_skip_dma\n\
-            {wait}\
-            # program the next round's input load (if any)\n\
-            addi t0, s10, 1\n\
-            bge t0, s11, db_no_next_in\n\
-            li t1, {chunk}\n\
-            mul t1, t0, t1\n\
-            li a0, {l2_in}\n\
-            add a0, a0, t1\n\
-            la t0, DMA_L2_ADDR\n\
-            sw a0, 0(t0)\n\
-            andi t1, s10, 1\n\
-            bnez t1, db_next_in_even\n\
-            li a1, {in1}\n\
-            j db_next_in_set\n\
-            db_next_in_even:\n\
-            li a1, {in0}\n\
-            db_next_in_set:\n\
-            la t0, DMA_SPM_ADDR\n\
-            sw a1, 0(t0)\n\
-            la t0, DMA_BYTES_ADDR\n\
-            li t1, {chunk}\n\
-            sw t1, 0(t0)\n\
-            la t0, DMA_TRIGGER_ADDR\n\
-            li t1, 1\n\
-            sw t1, 0(t0)\n\
-            db_no_next_in:\n\
-            # write back the previous round's output (if any)\n\
-            beqz s10, db_no_writeback\n\
-            addi t0, s10, -1\n\
-            li t1, {out_bytes}\n\
-            mul t1, t0, t1\n\
-            li a0, {l2_out}\n\
-            add a0, a0, t1\n\
-            la t0, DMA_L2_ADDR\n\
-            sw a0, 0(t0)\n\
-            andi t1, s10, 1\n\
-            bnez t1, db_wb_odd\n\
-            li a1, {out1}\n\
-            j db_wb_set\n\
-            db_wb_odd:\n\
-            li a1, {out0}\n\
-            db_wb_set:\n\
-            la t0, DMA_SPM_ADDR\n\
-            sw a1, 0(t0)\n\
-            la t0, DMA_BYTES_ADDR\n\
-            li t1, {out_bytes}\n\
-            sw t1, 0(t0)\n\
-            la t0, DMA_TRIGGER_ADDR\n\
-            sw zero, 0(t0)\n\
-            db_no_writeback:\n\
-            db_skip_dma:\n",
-            wait = dma_wait_asm(90),
-            chunk = self.chunk_bytes,
-            l2_in = self.l2_in,
-            in0 = self.in_bufs[0],
-            in1 = self.in_bufs[1],
-            out_bytes = self.out_bytes,
-            l2_out = self.l2_out,
-            out0 = self.out_bufs[0],
-            out1 = self.out_bufs[1],
-        )
+    fn is_sys(&self) -> bool {
+        self.shard.is_some()
+    }
+
+    /// Label prefix: `db_` on the cluster target, `sdb_` on the system
+    /// target (kept distinct for readable disassembly/trace labels).
+    fn prefix(&self) -> &'static str {
+        if self.is_sys() {
+            "sdb"
+        } else {
+            "db"
+        }
+    }
+
+    /// (l2-address, local-address, bytes, trigger) register symbols.
+    fn regs(&self) -> (&'static str, &'static str, &'static str, &'static str) {
+        if self.is_sys() {
+            ("SYSDMA_L2_ADDR", "SYSDMA_LOCAL_ADDR", "SYSDMA_BYTES_ADDR", "SYSDMA_TRIGGER_ADDR")
+        } else {
+            ("DMA_L2_ADDR", "DMA_SPM_ADDR", "DMA_BYTES_ADDR", "DMA_TRIGGER_ADDR")
+        }
+    }
+
+    /// Spin until this target's DMA frontend reports idle. Clobbers
+    /// t0/t1.
+    fn wait(&self, b: &mut AsmBuilder, id: usize) {
+        if self.is_sys() {
+            b.poll_idle("SYSDMA_STATUS_ADDR", format!("sdma_poll_{id}"));
+        } else {
+            b.poll_idle("DMA_STATUS_ADDR", format!("dma_poll_{id}"));
+        }
+    }
+
+    /// Program entry: optional stack frame, round state (s9 = hartid,
+    /// s10 = round, s11 = rounds) and — on the system target — this
+    /// cluster's shard bases computed from `CTRL_CLUSTER_ID` into
+    /// 16(sp)/20(sp). Clobbers t0/t1, a0.
+    pub fn program_prologue(&self, b: &mut AsmBuilder, rounds: u32, frame_bytes: u32) {
+        if frame_bytes > 0 {
+            b.addi("sp", "sp", -(frame_bytes as i64));
+        }
+        b.core_id("s9");
+        b.li("s10", 0);
+        b.li("s11", rounds);
+        if let Some(shard) = &self.shard {
+            assert!(frame_bytes >= 24, "system shard bases live at 16(sp)/20(sp)");
+            b.comment("this cluster's shared-L2 shard bases, kept on the stack");
+            b.cluster_id("t1", "t0");
+            b.li("t0", shard.in_stride);
+            b.mul("t0", "t1", "t0");
+            b.li("a0", self.l2_in);
+            b.add("a0", "a0", "t0");
+            b.sw("a0", 16, "sp");
+            b.li("t0", shard.out_stride);
+            b.mul("t0", "t1", "t0");
+            b.li("a0", self.l2_out);
+            b.add("a0", "a0", "t0");
+            b.sw("a0", 20, "sp");
+        }
+    }
+
+    /// Load the current round's input-stream L2 base into a0: an
+    /// immediate on the cluster target, the shard base from the stack on
+    /// the system target.
+    fn l2_in_base(&self, b: &mut AsmBuilder) {
+        if self.is_sys() {
+            b.lw("a0", 16, "sp");
+        } else {
+            b.li("a0", self.l2_in);
+        }
+    }
+
+    fn l2_out_base(&self, b: &mut AsmBuilder) {
+        if self.is_sys() {
+            b.lw("a0", 20, "sp");
+        } else {
+            b.li("a0", self.l2_out);
+        }
+    }
+
+    /// Hart 0's DMA orchestration at the top of round s10: wait for the
+    /// previous round's transfers, program the next round's input load,
+    /// then the previous round's output write-back. Clobbers t0/t1,
+    /// a0/a1.
+    pub fn round_prologue(&self, b: &mut AsmBuilder) {
+        let p = self.prefix();
+        let (l2_reg, local_reg, bytes_reg, trig_reg) = self.regs();
+        b.bnez("s9", format!("{p}_skip_dma"));
+        self.wait(b, 90);
+        b.comment("program the next round's input load (if any)");
+        b.addi("t0", "s10", 1);
+        b.bge("t0", "s11", format!("{p}_no_next_in"));
+        b.li("t1", self.chunk_bytes);
+        b.mul("t1", "t0", "t1");
+        self.l2_in_base(b);
+        b.add("a0", "a0", "t1");
+        b.la("t0", l2_reg);
+        b.sw("a0", 0, "t0");
+        b.andi("t1", "s10", 1);
+        b.bnez("t1", format!("{p}_next_in_even"));
+        b.li("a1", self.in_bufs[1]);
+        b.j(format!("{p}_next_in_set"));
+        b.label(format!("{p}_next_in_even"));
+        b.li("a1", self.in_bufs[0]);
+        b.label(format!("{p}_next_in_set"));
+        b.la("t0", local_reg);
+        b.sw("a1", 0, "t0");
+        b.la("t0", bytes_reg);
+        b.li("t1", self.chunk_bytes);
+        b.sw("t1", 0, "t0");
+        b.la("t0", trig_reg);
+        b.li("t1", 1);
+        b.sw("t1", 0, "t0");
+        b.label(format!("{p}_no_next_in"));
+        b.comment("write back the previous round's output (if any)");
+        b.beqz("s10", format!("{p}_no_writeback"));
+        b.addi("t0", "s10", -1);
+        b.li("t1", self.out_bytes);
+        b.mul("t1", "t0", "t1");
+        self.l2_out_base(b);
+        b.add("a0", "a0", "t1");
+        b.la("t0", l2_reg);
+        b.sw("a0", 0, "t0");
+        b.andi("t1", "s10", 1);
+        b.bnez("t1", format!("{p}_wb_odd"));
+        b.li("a1", self.out_bufs[1]);
+        b.j(format!("{p}_wb_set"));
+        b.label(format!("{p}_wb_odd"));
+        b.li("a1", self.out_bufs[0]);
+        b.label(format!("{p}_wb_set"));
+        b.la("t0", local_reg);
+        b.sw("a1", 0, "t0");
+        b.la("t0", bytes_reg);
+        b.li("t1", self.out_bytes);
+        b.sw("t1", 0, "t0");
+        b.la("t0", trig_reg);
+        b.sw("zero", 0, "t0");
+        b.label(format!("{p}_no_writeback"));
+        b.label(format!("{p}_skip_dma"));
     }
 
     /// Final write-back of the last round's output.
-    fn epilogue(&self, rounds: u32) -> String {
+    pub fn epilogue(&self, b: &mut AsmBuilder, rounds: u32) {
+        let p = self.prefix();
+        let (l2_reg, local_reg, bytes_reg, trig_reg) = self.regs();
         let last = rounds - 1;
-        format!(
-            "\
-            bnez s9, db_skip_final\n\
-            {wait}\
-            li a0, {l2}\n\
-            la t0, DMA_L2_ADDR\n\
-            sw a0, 0(t0)\n\
-            li a1, {spm}\n\
-            la t0, DMA_SPM_ADDR\n\
-            sw a1, 0(t0)\n\
-            la t0, DMA_BYTES_ADDR\n\
-            li t1, {chunk}\n\
-            sw t1, 0(t0)\n\
-            la t0, DMA_TRIGGER_ADDR\n\
-            sw zero, 0(t0)\n\
-            {wait2}\
-            db_skip_final:\n",
-            wait = dma_wait_asm(91),
-            wait2 = dma_wait_asm(92),
-            l2 = self.l2_out + (last * self.out_bytes),
-            spm = self.out_bufs[(last & 1) as usize],
-            chunk = self.out_bytes,
-        )
+        let spm = self.out_bufs[(last & 1) as usize];
+        b.bnez("s9", format!("{p}_skip_final"));
+        self.wait(b, 91);
+        if self.is_sys() {
+            b.lw("a0", 20, "sp");
+            b.li("t1", last * self.out_bytes);
+            b.add("a0", "a0", "t1");
+            b.la("t0", l2_reg);
+            b.sw("a0", 0, "t0");
+            b.la("t0", local_reg);
+            b.li("a1", spm);
+            b.sw("a1", 0, "t0");
+        } else {
+            b.li("a0", self.l2_out + last * self.out_bytes);
+            b.la("t0", l2_reg);
+            b.sw("a0", 0, "t0");
+            b.li("a1", spm);
+            b.la("t0", local_reg);
+            b.sw("a1", 0, "t0");
+        }
+        b.la("t0", bytes_reg);
+        b.li("t1", self.out_bytes);
+        b.sw("t1", 0, "t0");
+        b.la("t0", trig_reg);
+        b.sw("zero", 0, "t0");
+        self.wait(b, 92);
+        b.label(format!("{p}_skip_final"));
     }
+}
+
+/// Shared streamed-axpy round structure (everything after the program
+/// prologue): island-offset computation, the round loop with hart 0's
+/// DMA orchestration, the ping-pong compute bodies, and the epilogue.
+/// Needs `ALPHA`/`BLOCKS`/`BLOCK_STRIDE` defined.
+pub(crate) fn emit_streamed_axpy(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u32) {
+    let pre = p.prefix();
+    let blk = if p.is_sys() { "sblk" } else { "blk" };
+    b.comment("this core's island offset within a chunk");
+    b.srli("t1", "s9", 2);
+    b.andi("t2", "s9", 3);
+    b.slli("t3", "t1", 6);
+    b.slli("t4", "t2", 4);
+    b.add("s8", "t3", "t4");
+    b.label(format!("{pre}_round"));
+    b.bge("s10", "s11", format!("{pre}_done"));
+    p.round_prologue(b);
+    b.barrier(80);
+    b.andi("t0", "s10", 1);
+    b.bnez("t0", format!("{pre}_odd"));
+    let body = |b: &mut AsmBuilder, inb: u32, outb: u32, tag: &str| {
+        b.li("a0", inb);
+        b.li("a1", outb);
+        b.add("a0", "a0", "s8");
+        b.add("a1", "a1", "s8");
+        b.li("a2", "ALPHA");
+        b.li("a3", "BLOCKS");
+        b.li("a4", "BLOCK_STRIDE");
+        b.align(8);
+        b.label(format!("{blk}_{tag}"));
+        b.lw("t4", 0, "a0");
+        b.lw("t5", 4, "a0");
+        b.lw("t6", 8, "a0");
+        b.lw("a6", 12, "a0");
+        b.p_mac("t4", "a2", "t4");
+        b.p_mac("t5", "a2", "t5");
+        b.p_mac("t6", "a2", "t6");
+        b.p_mac("a6", "a2", "a6");
+        b.sw("t4", 0, "a1");
+        b.sw("t5", 4, "a1");
+        b.sw("t6", 8, "a1");
+        b.sw("a6", 12, "a1");
+        b.add("a0", "a0", "a4");
+        b.add("a1", "a1", "a4");
+        b.addi("a3", "a3", -1);
+        b.bnez("a3", format!("{blk}_{tag}"));
+        b.j(format!("{pre}_compute_done"));
+    };
+    body(b, p.in_bufs[0], p.out_bufs[0], "even");
+    b.label(format!("{pre}_odd"));
+    body(b, p.in_bufs[1], p.out_bufs[1], "odd");
+    b.label(format!("{pre}_compute_done"));
+    b.barrier(81);
+    b.addi("s10", "s10", 1);
+    b.j(format!("{pre}_round"));
+    b.label(format!("{pre}_done"));
+    p.epilogue(b, rounds);
+    b.barrier(82);
+    b.halt();
+}
+
+/// Symbols for the streamed matmul body: B sits right below the A
+/// ping-pong buffers; tile geometry as in the single-buffered kernel.
+pub(crate) fn define_streamed_matmul_symbols(
+    b: &mut AsmBuilder,
+    p: &DbPlumbing,
+    slab_rows: usize,
+    n: usize,
+    k: usize,
+) {
+    let tiles_c = n / 4;
+    let total_tiles = (slab_rows / 4) * tiles_c;
+    b.define("mat_b", p.in_bufs[0] - 4 * (k * n) as u32);
+    b.define("TOTAL_TILES", total_tiles as u32);
+    b.define("LOG_TILES_C", tiles_c.trailing_zeros());
+    b.define("TILES_C_MASK", (tiles_c - 1) as u32);
+    b.define("KBYTES", (k * 4) as u32);
+    b.define("NBYTES", (n * 4) as u32);
+    b.define("KDIM", k as u32);
+    b.define("LOG_K_B", (k * 4).trailing_zeros());
+    b.define("LOG_N_B", (n * 4).trailing_zeros());
+}
+
+/// Shared streamed-matmul round structure (everything after the program
+/// prologue): buffer select onto the stack, the dynamic tile loop with
+/// the 16-accumulator 4×4 kernel, and the epilogue. Needs the symbols
+/// from [`define_streamed_matmul_symbols`].
+///
+/// This variant keeps the accumulators in a reduced register set (s9–s11
+/// hold the round state), reloading B values through s8 each k step.
+pub(crate) fn emit_streamed_matmul(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u32) {
+    let pre = p.prefix();
+    let acc = [
+        "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "a2", "a3", "a4", "a5", "t4", "t5",
+        "t6", "a6",
+    ];
+    b.label(format!("{pre}_round"));
+    b.bge("s10", "s11", format!("{pre}_done"));
+    p.round_prologue(b);
+    b.barrier(80);
+    b.comment("select this round's A and C buffers (kept on the stack)");
+    b.andi("t0", "s10", 1);
+    b.bnez("t0", format!("{pre}_buf_odd"));
+    b.li("t1", p.in_bufs[0]);
+    b.li("t2", p.out_bufs[0]);
+    b.j(format!("{pre}_buf_set"));
+    b.label(format!("{pre}_buf_odd"));
+    b.li("t1", p.in_bufs[1]);
+    b.li("t2", p.out_bufs[1]);
+    b.label(format!("{pre}_buf_set"));
+    b.sw("t1", 8, "sp");
+    b.sw("t2", 12, "sp");
+    b.sw("s9", 0, "sp");
+    b.label("tile_loop");
+    b.lw("t0", 0, "sp");
+    b.li("t1", "TOTAL_TILES");
+    b.bge("t0", "t1", "tiles_done");
+    b.addi("t1", "t0", "NUM_CORES");
+    b.sw("t1", 0, "sp");
+    b.srli("t2", "t0", "LOG_TILES_C");
+    b.slli("t2", "t2", 2);
+    b.andi("t3", "t0", "TILES_C_MASK");
+    b.slli("t3", "t3", 2);
+    b.comment("A row pointers from this round's slab");
+    b.slli("t4", "t2", "LOG_K_B");
+    b.lw("t5", 8, "sp");
+    b.add("a0", "t5", "t4");
+    b.li("t6", "KBYTES");
+    b.add("a1", "a0", "t6");
+    b.add("gp", "a1", "t6");
+    b.add("tp", "gp", "t6");
+    b.la("t5", "mat_b");
+    b.slli("t4", "t3", 2);
+    b.add("ra", "t5", "t4");
+    b.slli("t4", "t2", "LOG_N_B");
+    b.lw("t5", 12, "sp");
+    b.add("t5", "t5", "t4");
+    b.slli("t4", "t3", 2);
+    b.add("t5", "t5", "t4");
+    b.sw("t5", 4, "sp");
+    for r in &acc {
+        b.li(r, 0);
+    }
+    b.li("a7", "KDIM");
+    b.align(8);
+    b.label("kloop");
+    b.p_lw("t0", 4, "a0");
+    b.p_lw("t1", 4, "a1");
+    b.p_lw("t2", 4, "gp");
+    b.p_lw("t3", 4, "tp");
+    b.lw("s8", 0, "ra");
+    // 16 MACs: B values loaded one at a time into s8.
+    let avals = ["t0", "t1", "t2", "t3"];
+    for q in 0..4 {
+        if q > 0 {
+            b.lw("s8", 4 * q, "ra");
+        }
+        for r in 0..4 {
+            b.p_mac(acc[4 * r + q], avals[r], "s8");
+        }
+    }
+    b.addi("ra", "ra", "NBYTES");
+    b.addi("a7", "a7", -1);
+    b.bnez("a7", "kloop");
+    b.lw("t0", 4, "sp");
+    for r in 0..4 {
+        for q in 0..4 {
+            b.sw(acc[4 * r + q], 4 * q, "t0");
+        }
+        if r != 3 {
+            b.addi("t0", "t0", "NBYTES");
+        }
+    }
+    b.j("tile_loop");
+    b.label("tiles_done");
+    b.barrier(81);
+    b.addi("s10", "s10", 1);
+    b.j(format!("{pre}_round"));
+    b.label(format!("{pre}_done"));
+    p.epilogue(b, rounds);
+    b.barrier(82);
+    b.halt();
 }
 
 /// Double-buffered streaming kernel: `out = (alpha + 1) · x`, one input
@@ -168,6 +450,7 @@ impl DbAxpy {
             out_bufs: [out0, out1],
             l2_in: 0x10_0000,
             l2_out: 0x20_0000,
+            shard: None,
         }
     }
 
@@ -178,85 +461,25 @@ impl DbAxpy {
     }
 }
 
-impl Kernel for DbAxpy {
+impl Workload for DbAxpy {
     fn name(&self) -> &'static str {
         "db_axpy"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let p = self.bufs(cfg);
         let rt = RtLayout::new(cfg);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
-        sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
-        sym.insert("ALPHA".into(), self.alpha);
-        let mut src = format!(
-            "\
-            csrr s9, mhartid\n\
-            li s10, 0\n\
-            li s11, {rounds}\n\
-            # this core's island offset within a chunk\n\
-            srli t1, s9, 2\n\
-            andi t2, s9, 3\n\
-            slli t3, t1, 6\n\
-            slli t4, t2, 4\n\
-            add s8, t3, t4\n\
-            db_round:\n\
-            bge s10, s11, db_done\n",
-            rounds = self.rounds
-        );
-        src.push_str(&p.round_prologue());
-        src.push_str(&barrier_asm(80));
-        src.push_str(
-            "\
-            andi t0, s10, 1\n\
-            bnez t0, db_odd\n",
-        );
-        let body = |inb: u32, outb: u32, tag: &str| {
-            format!(
-                "\
-                li a0, {inb}\n\
-                li a1, {outb}\n\
-                add a0, a0, s8\n\
-                add a1, a1, s8\n\
-                li a2, ALPHA\n\
-                li a3, BLOCKS\n\
-                li a4, BLOCK_STRIDE\n\
-                .align 8\n\
-                blk_{tag}:\n\
-                lw t4, 0(a0)\n\
-                lw t5, 4(a0)\n\
-                lw t6, 8(a0)\n\
-                lw a6, 12(a0)\n\
-                p.mac t4, a2, t4\n\
-                p.mac t5, a2, t5\n\
-                p.mac t6, a2, t6\n\
-                p.mac a6, a2, a6\n\
-                sw t4, 0(a1)\n\
-                sw t5, 4(a1)\n\
-                sw t6, 8(a1)\n\
-                sw a6, 12(a1)\n\
-                add a0, a0, a4\n\
-                add a1, a1, a4\n\
-                addi a3, a3, -1\n\
-                bnez a3, blk_{tag}\n\
-                j db_compute_done\n"
-            )
-        };
-        src.push_str(&body(p.in_bufs[0], p.out_bufs[0], "even"));
-        src.push_str("db_odd:\n");
-        src.push_str(&body(p.in_bufs[1], p.out_bufs[1], "odd"));
-        src.push_str("db_compute_done:\n");
-        src.push_str(&barrier_asm(81));
-        src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
-        src.push_str(&p.epilogue(self.rounds as u32));
-        src.push_str(&barrier_asm(82));
-        src.push_str("halt\n");
-        (src, sym)
+        rt.add_symbols(b.symbols_mut());
+        b.define("BLOCKS", (self.per_core / 4) as u32);
+        b.define("BLOCK_STRIDE", (cfg.num_tiles() * 64) as u32);
+        b.define("ALPHA", self.alpha);
+        p.program_prologue(b, self.rounds as u32, 0);
+        emit_streamed_axpy(b, &p, self.rounds as u32);
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let p = self.bufs(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -273,7 +496,8 @@ impl Kernel for DbAxpy {
         }
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let p = self.bufs(&cluster.cfg);
         let x = self.input(&cluster.cfg);
         let scale = self.alpha.wrapping_add(1);
@@ -291,8 +515,8 @@ impl Kernel for DbAxpy {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64 {
-        2 * (self.chunk_words(cfg) * self.rounds) as u64
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        2 * (self.chunk_words(cfg.cluster()) * self.rounds) as u64
     }
 }
 
@@ -344,6 +568,7 @@ impl DbMatmul {
             out_bufs: [c0, c1],
             l2_in: 0x10_0000,
             l2_out: 0x40_0000,
+            shard: None,
         }
     }
 
@@ -356,144 +581,23 @@ impl DbMatmul {
     }
 }
 
-impl Kernel for DbMatmul {
+impl Workload for DbMatmul {
     fn name(&self) -> &'static str {
         "db_matmul"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
         let p = self.bufs(cfg);
         let rt = RtLayout::new(cfg);
-        let tiles_c = self.n / 4;
-        let total_tiles = (self.slab_rows / 4) * tiles_c;
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("mat_b".into(), p.in_bufs[0] - 4 * (self.k * self.n) as u32);
-        sym.insert("TOTAL_TILES".into(), total_tiles as u32);
-        sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
-        sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
-        sym.insert("KBYTES".into(), (self.k * 4) as u32);
-        sym.insert("NBYTES".into(), (self.n * 4) as u32);
-        sym.insert("KDIM".into(), self.k as u32);
-        sym.insert("LOG_K_B".into(), (self.k * 4).trailing_zeros());
-        sym.insert("LOG_N_B".into(), (self.n * 4).trailing_zeros());
-
-        let acc = [
-            "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "a2", "a3", "a4", "a5", "t4", "t5",
-            "t6", "a6",
-        ];
-        // NOTE: this variant keeps the accumulators in a reduced register
-        // set; it trades two extra spill-free B loads per iteration by
-        // reloading B values each k step like the single-buffered kernel.
-        let mut src = format!(
-            "\
-            addi sp, sp, -16\n\
-            csrr s9, mhartid\n\
-            li s10, 0\n\
-            li s11, {rounds}\n\
-            db_round:\n\
-            bge s10, s11, db_done\n",
-            rounds = self.rounds
-        );
-        src.push_str(&p.round_prologue());
-        src.push_str(&barrier_asm(80));
-        // Select this round's A and C buffers (kept on the stack).
-        src.push_str(&format!(
-            "\
-            andi t0, s10, 1\n\
-            bnez t0, db_buf_odd\n\
-            li t1, {a0}\n\
-            li t2, {c0}\n\
-            j db_buf_set\n\
-            db_buf_odd:\n\
-            li t1, {a1}\n\
-            li t2, {c1}\n\
-            db_buf_set:\n\
-            sw t1, 8(sp)\n\
-            sw t2, 12(sp)\n\
-            sw s9, 0(sp)\n\
-            tile_loop:\n\
-            lw t0, 0(sp)\n\
-            li t1, TOTAL_TILES\n\
-            bge t0, t1, tiles_done\n\
-            addi t1, t0, NUM_CORES\n\
-            sw t1, 0(sp)\n\
-            srli t2, t0, LOG_TILES_C\n\
-            slli t2, t2, 2\n\
-            andi t3, t0, TILES_C_MASK\n\
-            slli t3, t3, 2\n\
-            # A row pointers from this round's slab\n\
-            slli t4, t2, LOG_K_B\n\
-            lw t5, 8(sp)\n\
-            add a0, t5, t4\n\
-            li t6, KBYTES\n\
-            add a1, a0, t6\n\
-            add gp, a1, t6\n\
-            add tp, gp, t6\n\
-            la t5, mat_b\n\
-            slli t4, t3, 2\n\
-            add ra, t5, t4\n\
-            slli t4, t2, LOG_N_B\n\
-            lw t5, 12(sp)\n\
-            add t5, t5, t4\n\
-            slli t4, t3, 2\n\
-            add t5, t5, t4\n\
-            sw t5, 4(sp)\n",
-            a0 = p.in_bufs[0],
-            a1 = p.in_bufs[1],
-            c0 = p.out_bufs[0],
-            c1 = p.out_bufs[1],
-        ));
-        for r in &acc {
-            src.push_str(&format!("li {r}, 0\n"));
-        }
-        src.push_str(
-            "\
-            li a7, KDIM\n\
-            .align 8\n\
-            kloop:\n\
-            p.lw t0, 4(a0!)\n\
-            p.lw t1, 4(a1!)\n\
-            p.lw t2, 4(gp!)\n\
-            p.lw t3, 4(tp!)\n\
-            lw s8, 0(ra)\n",
-        );
-        // 16 MACs: B values loaded one at a time into s8 (register budget
-        // is tighter here because s9–s11 hold the round state).
-        let avals = ["t0", "t1", "t2", "t3"];
-        for q in 0..4 {
-            if q > 0 {
-                src.push_str(&format!("lw s8, {}(ra)\n", 4 * q));
-            }
-            for r in 0..4 {
-                src.push_str(&format!("p.mac {}, {}, s8\n", acc[4 * r + q], avals[r]));
-            }
-        }
-        src.push_str(
-            "\
-            addi ra, ra, NBYTES\n\
-            addi a7, a7, -1\n\
-            bnez a7, kloop\n\
-            lw t0, 4(sp)\n",
-        );
-        for r in 0..4 {
-            for q in 0..4 {
-                src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
-            }
-            if r != 3 {
-                src.push_str("addi t0, t0, NBYTES\n");
-            }
-        }
-        src.push_str("j tile_loop\ntiles_done:\n");
-        src.push_str(&barrier_asm(81));
-        src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
-        src.push_str(&p.epilogue(self.rounds as u32));
-        src.push_str(&barrier_asm(82));
-        src.push_str("halt\n");
-        (src, sym)
+        rt.add_symbols(b.symbols_mut());
+        define_streamed_matmul_symbols(b, &p, self.slab_rows, self.n, self.k);
+        p.program_prologue(b, self.rounds as u32, 16);
+        emit_streamed_matmul(b, &p, self.rounds as u32);
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let p = self.bufs(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -511,7 +615,8 @@ impl Kernel for DbMatmul {
         }
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let p = self.bufs(&cluster.cfg);
         let (a, b) = self.inputs();
         let a_words = self.slab_rows * self.k;
@@ -536,7 +641,7 @@ impl Kernel for DbMatmul {
         Ok(())
     }
 
-    fn total_ops(&self, _cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
         2 * (self.slab_rows * self.n * self.k * self.rounds) as u64
     }
 }

@@ -5,12 +5,9 @@
 //! the full TopH interconnect (matmul is the kernel with LSU stalls in
 //! Fig 14).
 
-use std::collections::HashMap;
-
-use super::rt::{barrier_asm, RtLayout};
-use super::Kernel;
+use super::rt::RtLayout;
 use crate::config::ClusterConfig;
-use crate::sim::Cluster;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 /// C[M×N] = A[M×K] × B[K×N] over wrapping i32.
 pub struct Matmul {
@@ -74,120 +71,111 @@ impl Matmul {
     }
 }
 
-impl Kernel for Matmul {
+impl Workload for Matmul {
     fn name(&self) -> &'static str {
         "matmul"
     }
 
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
-        let (a, b, c) = self.layout(cfg);
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
+        let (a_addr, b_addr, c_addr) = self.layout(cfg);
         let rt = RtLayout::new(cfg);
         let tiles_c = self.n / 4;
         let total_tiles = (self.m / 4) * tiles_c;
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("mat_a".into(), a);
-        sym.insert("mat_b".into(), b);
-        sym.insert("mat_c".into(), c);
-        sym.insert("TOTAL_TILES".into(), total_tiles as u32);
-        sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
-        sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
-        sym.insert("KBYTES".into(), (self.k * 4) as u32);
-        sym.insert("NBYTES".into(), (self.n * 4) as u32);
-        sym.insert("KDIM".into(), self.k as u32);
-        sym.insert("LOG_K_B".into(), (self.k * 4).trailing_zeros());
-        sym.insert("LOG_N_B".into(), (self.n * 4).trailing_zeros());
+        rt.add_symbols(b.symbols_mut());
+        b.define("mat_a", a_addr);
+        b.define("mat_b", b_addr);
+        b.define("mat_c", c_addr);
+        b.define("TOTAL_TILES", total_tiles as u32);
+        b.define("LOG_TILES_C", tiles_c.trailing_zeros());
+        b.define("TILES_C_MASK", (tiles_c - 1) as u32);
+        b.define("KBYTES", (self.k * 4) as u32);
+        b.define("NBYTES", (self.n * 4) as u32);
+        b.define("KDIM", self.k as u32);
+        b.define("LOG_K_B", (self.k * 4).trailing_zeros());
+        b.define("LOG_N_B", (self.n * 4).trailing_zeros());
 
         // The sixteen accumulators: c[r][q] = acc[4*r + q].
         let acc = [
             "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "a2",
             "a3", "a4", "a5",
         ];
-        let mut src = String::new();
-        src.push_str(
-            "\
-            addi sp, sp, -16\n\
-            csrr t0, mhartid\n\
-            sw t0, 0(sp)\n\
-            tile_loop:\n\
-            lw t0, 0(sp)\n\
-            li t1, TOTAL_TILES\n\
-            bge t0, t1, tiles_done\n\
-            # claim the next tile for this core\n\
-            addi t1, t0, NUM_CORES\n\
-            sw t1, 0(sp)\n\
-            # row/col of this 4x4 tile\n\
-            srli t2, t0, LOG_TILES_C\n\
-            slli t2, t2, 2\n\
-            andi t3, t0, TILES_C_MASK\n\
-            slli t3, t3, 2\n\
-            # A row pointers (a0, a1, gp, tp), stride KBYTES\n\
-            slli t4, t2, LOG_K_B\n\
-            la t5, mat_a\n\
-            add a0, t5, t4\n\
-            li t6, KBYTES\n\
-            add a1, a0, t6\n\
-            add gp, a1, t6\n\
-            add tp, gp, t6\n\
-            # B pointer: mat_b + col*4\n\
-            la t5, mat_b\n\
-            slli t4, t3, 2\n\
-            add ra, t5, t4\n\
-            # C tile pointer → 4(sp): mat_c + (row*N + col)*4\n\
-            slli t4, t2, LOG_N_B\n\
-            la t5, mat_c\n\
-            add t5, t5, t4\n\
-            slli t4, t3, 2\n\
-            add t5, t5, t4\n\
-            sw t5, 4(sp)\n",
-        );
+        b.addi("sp", "sp", -16);
+        b.core_id("t0");
+        b.sw("t0", 0, "sp");
+        b.label("tile_loop");
+        b.lw("t0", 0, "sp");
+        b.li("t1", "TOTAL_TILES");
+        b.bge("t0", "t1", "tiles_done");
+        b.comment("claim the next tile for this core");
+        b.addi("t1", "t0", "NUM_CORES");
+        b.sw("t1", 0, "sp");
+        b.comment("row/col of this 4x4 tile");
+        b.srli("t2", "t0", "LOG_TILES_C");
+        b.slli("t2", "t2", 2);
+        b.andi("t3", "t0", "TILES_C_MASK");
+        b.slli("t3", "t3", 2);
+        b.comment("A row pointers (a0, a1, gp, tp), stride KBYTES");
+        b.slli("t4", "t2", "LOG_K_B");
+        b.la("t5", "mat_a");
+        b.add("a0", "t5", "t4");
+        b.li("t6", "KBYTES");
+        b.add("a1", "a0", "t6");
+        b.add("gp", "a1", "t6");
+        b.add("tp", "gp", "t6");
+        b.comment("B pointer: mat_b + col*4");
+        b.la("t5", "mat_b");
+        b.slli("t4", "t3", 2);
+        b.add("ra", "t5", "t4");
+        b.comment("C tile pointer → 4(sp): mat_c + (row*N + col)*4");
+        b.slli("t4", "t2", "LOG_N_B");
+        b.la("t5", "mat_c");
+        b.add("t5", "t5", "t4");
+        b.slli("t4", "t3", 2);
+        b.add("t5", "t5", "t4");
+        b.sw("t5", 4, "sp");
         for r in &acc {
-            src.push_str(&format!("li {r}, 0\n"));
+            b.li(r, 0);
         }
-        src.push_str(
-            "\
-            li a7, KDIM\n\
-            .align 8\n\
-            kloop:\n\
-            p.lw t0, 4(a0!)\n\
-            p.lw t1, 4(a1!)\n\
-            p.lw t2, 4(gp!)\n\
-            p.lw t3, 4(tp!)\n\
-            lw t4, 0(ra)\n\
-            lw t5, 4(ra)\n\
-            lw t6, 8(ra)\n\
-            lw a6, 12(ra)\n",
-        );
+        b.li("a7", "KDIM");
+        b.align(8);
+        b.label("kloop");
+        b.p_lw("t0", 4, "a0");
+        b.p_lw("t1", 4, "a1");
+        b.p_lw("t2", 4, "gp");
+        b.p_lw("t3", 4, "tp");
+        b.lw("t4", 0, "ra");
+        b.lw("t5", 4, "ra");
+        b.lw("t6", 8, "ra");
+        b.lw("a6", 12, "ra");
         let avals = ["t0", "t1", "t2", "t3"];
         let bvals = ["t4", "t5", "t6", "a6"];
         for r in 0..4 {
             for q in 0..4 {
-                src.push_str(&format!("p.mac {}, {}, {}\n", acc[4 * r + q], avals[r], bvals[q]));
+                b.p_mac(acc[4 * r + q], avals[r], bvals[q]);
             }
         }
-        src.push_str(
-            "\
-            addi ra, ra, NBYTES\n\
-            addi a7, a7, -1\n\
-            bnez a7, kloop\n\
-            # store the 4x4 C tile\n\
-            lw t0, 4(sp)\n",
-        );
+        b.addi("ra", "ra", "NBYTES");
+        b.addi("a7", "a7", -1);
+        b.bnez("a7", "kloop");
+        b.comment("store the 4x4 C tile");
+        b.lw("t0", 4, "sp");
         for r in 0..4 {
             for q in 0..4 {
-                src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
+                b.sw(acc[4 * r + q], 4 * q, "t0");
             }
             if r != 3 {
-                src.push_str("addi t0, t0, NBYTES\n");
+                b.addi("t0", "t0", "NBYTES");
             }
         }
-        src.push_str("j tile_loop\ntiles_done:\n");
-        src.push_str(&barrier_asm(0));
-        src.push_str("halt\n");
-        (src, sym)
+        b.j("tile_loop");
+        b.label("tiles_done");
+        b.barrier(0);
+        b.halt();
     }
 
-    fn setup(&self, cluster: &mut Cluster) {
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
         let (a_addr, b_addr, _) = self.layout(&cluster.cfg);
         let rt = RtLayout::new(&cluster.cfg);
         rt.init(cluster);
@@ -197,7 +185,8 @@ impl Kernel for Matmul {
         spm.write_words(b_addr, &b);
     }
 
-    fn verify(&self, cluster: &mut Cluster) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
         let (_, _, c_addr) = self.layout(&cluster.cfg);
         let expect = self.reference();
         let got = cluster.spm().read_words(c_addr, self.m * self.n);
@@ -213,7 +202,7 @@ impl Kernel for Matmul {
         Ok(())
     }
 
-    fn total_ops(&self, _cfg: &ClusterConfig) -> u64 {
+    fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
         // One MAC = 2 OPs per (i, j, k).
         2 * (self.m * self.n * self.k) as u64
     }

@@ -3,11 +3,15 @@
 //! (4×4 matmul output tiles with 8 loads per 16 MACs, local-only axpy and
 //! dotp, column-reusing 2D convolution, stack-based 8×8 DCT), plus the
 //! §8.2.2 applications (histogram equalization, ray tracing, BFS) on the
-//! dynamic-scheduling runtime.
+//! dynamic-scheduling runtime and the Fig 15 double-buffered kernels.
 //!
-//! Each kernel knows how to generate its assembly for a cluster shape,
-//! place its input data, verify the simulated result against a host
-//! reference, and report its operation count for the OP/cycle metric.
+//! Every kernel implements the unified [`crate::runtime::Workload`]
+//! trait: it authors its assembly through the typed
+//! [`crate::runtime::AsmBuilder`], places its input data, verifies the
+//! simulated result against a host reference, and reports its operation
+//! count for the OP/cycle metric. Kernels are instantiated by name
+//! through the one registry in `runtime/registry.rs` and run — on the
+//! cluster or the system target — via `runtime::run_workload`.
 
 pub mod apps;
 mod axpy;
@@ -24,75 +28,6 @@ pub use dct::Dct;
 pub use doublebuf::{DbAxpy, DbMatmul};
 pub use dotp::Dotp;
 pub use matmul::Matmul;
-
-use std::collections::HashMap;
-
-use crate::config::ClusterConfig;
-use crate::sim::{base_symbols, run_kernel, KernelResult, RunConfig, SimBackend};
-
-/// A runnable, verifiable workload.
-pub trait Kernel {
-    fn name(&self) -> &'static str;
-
-    /// Adjust the cluster configuration before the run (e.g., conv2d and
-    /// dct enlarge the sequential regions to hold core-local data next to
-    /// the stacks, as the paper's kernels do).
-    fn prepare_config(&self, _cfg: &mut ClusterConfig) {}
-
-    /// Assembly source + extra symbols for this cluster shape.
-    fn generate(&self, cfg: &ClusterConfig) -> (String, HashMap<String, u32>);
-
-    /// Place input data (zero-time SPM/L2 writes).
-    fn setup(&self, cluster: &mut crate::sim::Cluster);
-
-    /// Check the simulated output against the host reference.
-    fn verify(&self, cluster: &mut crate::sim::Cluster) -> Result<(), String>;
-
-    /// 32-bit operations the whole run performs (paper's OP metric).
-    fn total_ops(&self, cfg: &ClusterConfig) -> u64;
-}
-
-/// Run a kernel end-to-end on a cluster configuration: generate, place
-/// data, simulate, verify.
-pub fn run_and_verify(kernel: &dyn Kernel, cfg: &ClusterConfig) -> KernelResult {
-    run_with_backend(kernel, cfg, SimBackend::from_env())
-}
-
-/// Like [`run_and_verify`] but with an explicit stepping engine — the
-/// determinism tests and the sweep runner pick backends per run.
-pub fn run_with_backend(
-    kernel: &dyn Kernel,
-    cfg: &ClusterConfig,
-    backend: SimBackend,
-) -> KernelResult {
-    let mut cfg = cfg.clone();
-    kernel.prepare_config(&mut cfg);
-    let (src, mut sym) = kernel.generate(&cfg);
-    for (k, v) in base_symbols(&cfg) {
-        sym.entry(k).or_insert(v);
-    }
-    let mut run = RunConfig::new(cfg);
-    run.backend = backend;
-    let result = run_kernel(&run, &src, &sym, |c| kernel.setup(c));
-    assert!(
-        result.completed,
-        "kernel {} did not complete within the cycle budget",
-        kernel.name()
-    );
-    result
-}
-
-/// All Table 1 kernels with their paper-scaled default sizes for `cfg`.
-pub fn table1_kernels(cfg: &ClusterConfig) -> Vec<Box<dyn Kernel>> {
-    let cores = cfg.num_cores();
-    vec![
-        Box::new(Matmul::weak_scaled(cores)),
-        Box::new(Conv2d::weak_scaled(cores)),
-        Box::new(Dct::weak_scaled(cores)),
-        Box::new(Axpy::weak_scaled(cores)),
-        Box::new(Dotp::weak_scaled(cores)),
-    ]
-}
 
 #[cfg(test)]
 mod tests;

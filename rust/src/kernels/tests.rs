@@ -1,16 +1,17 @@
 //! Kernel correctness: every Table 1 kernel and every §8.2.2 application
 //! verified bit-exactly against its host reference on the 16-core
 //! minpool, plus spot checks of the paper-scaled shapes and performance
-//! sanity bounds.
+//! sanity bounds — all through the unified `run_workload` entry point.
 
 use super::apps::{Bfs, HistEq, Raytrace};
 use super::*;
 use crate::config::ClusterConfig;
+use crate::runtime::{run_workload, table1_workloads, RunConfig, RunResult, Workload};
 
-fn verify_on_minpool(kernel: &dyn Kernel) -> crate::sim::KernelResult {
+fn verify_on_minpool(kernel: &dyn Workload) -> RunResult {
     let cfg = ClusterConfig::minpool();
-    let mut r = run_and_verify(kernel, &cfg);
-    if let Err(e) = kernel.verify(&mut r.cluster) {
+    let mut r = run_workload(kernel, &RunConfig::cluster(&cfg));
+    if let Err(e) = kernel.verify(&mut r.machine) {
         panic!("{} verification failed: {e}", kernel.name());
     }
     r
@@ -39,43 +40,47 @@ fn matmul_ops_accounting() {
     let k = Matmul::new(16, 16, 16);
     let r = verify_on_minpool(&k);
     // The simulator must have executed at least the mandatory MACs.
-    assert!(r.stats.ops >= k.total_ops(&cfg), "{} < {}", r.stats.ops, k.total_ops(&cfg));
+    let tcfg = crate::runtime::TargetConfig::Cluster(cfg);
+    assert!(r.stats.ops >= k.total_ops(&tcfg), "{} < {}", r.stats.ops, k.total_ops(&tcfg));
 }
 
 #[test]
 fn axpy_correct_all_local() {
     let k = Axpy::new(64);
-    let r = verify_on_minpool(&k);
+    let mut r = verify_on_minpool(&k);
     // The paper's point: axpy's data accesses are all tile-local; the
     // only remote traffic is the final barrier (a handful per core).
-    let remote = r.cluster.group_accesses + r.cluster.global_accesses;
+    let cluster = r.machine.cluster();
+    let remote = cluster.group_accesses + cluster.global_accesses;
     assert!(
         remote <= 8 * r.stats.num_cores as u64,
         "axpy data must stay local (remote = {remote})"
     );
-    assert!(r.cluster.local_accesses > 16 * 64, "streaming loads must be local");
+    assert!(cluster.local_accesses > 16 * 64, "streaming loads must be local");
 }
 
 #[test]
 fn dotp_correct_with_reduction() {
     let k = Dotp::new(64);
-    let r = verify_on_minpool(&k);
+    let mut r = verify_on_minpool(&k);
     // Only the reduction + barrier leave the tiles, not the streaming.
+    let cluster = r.machine.cluster();
     assert!(
-        r.cluster.group_accesses + r.cluster.global_accesses <= 10 * r.stats.num_cores as u64,
+        cluster.group_accesses + cluster.global_accesses <= 10 * r.stats.num_cores as u64,
         "dotp remote traffic should be the reduction + barrier only"
     );
 }
 
 #[test]
 fn conv2d_correct() {
-    let r = verify_on_minpool(&Conv2d::new());
+    let mut r = verify_on_minpool(&Conv2d::new());
     // Halo rows cross lane/tile boundaries; everything else is local.
-    let total = r.cluster.local_accesses + r.cluster.group_accesses + r.cluster.global_accesses;
+    let cluster = r.machine.cluster();
+    let total = cluster.local_accesses + cluster.group_accesses + cluster.global_accesses;
     assert!(
-        r.cluster.local_accesses * 2 > total,
+        cluster.local_accesses * 2 > total,
         "conv2d should be mostly local ({}/{} local)",
-        r.cluster.local_accesses,
+        cluster.local_accesses,
         total
     );
 }
@@ -89,9 +94,9 @@ fn dct_correct() {
 #[test]
 fn table1_kernels_all_verify() {
     let cfg = ClusterConfig::minpool();
-    for k in table1_kernels(&cfg) {
-        let mut r = run_and_verify(k.as_ref(), &cfg);
-        if let Err(e) = k.verify(&mut r.cluster) {
+    for k in table1_workloads(&cfg) {
+        let mut r = run_workload(k.as_ref(), &RunConfig::cluster(&cfg));
+        if let Err(e) = k.verify(&mut r.machine) {
             panic!("{}: {e}", k.name());
         }
     }
@@ -125,17 +130,18 @@ fn compute_kernels_have_high_ipc_on_minpool() {
 #[test]
 fn db_axpy_double_buffered_correct() {
     let k = super::doublebuf::DbAxpy::new(32, 3);
-    let r = verify_on_minpool(&k);
+    let mut r = verify_on_minpool(&k);
     // Several DMA transfers must have flowed (1 prestage skipped, then
     // per-round loads + write-backs + final).
-    assert!(r.cluster.dma.stats.transfers >= 4, "transfers {}", r.cluster.dma.stats.transfers);
+    let transfers = r.machine.cluster().dma.stats.transfers;
+    assert!(transfers >= 4, "transfers {transfers}");
 }
 
 #[test]
 fn db_matmul_double_buffered_correct() {
     let k = super::doublebuf::DbMatmul::new(16, 16, 16, 3);
-    let r = verify_on_minpool(&k);
-    assert!(r.cluster.dma.stats.transfers >= 4);
+    let mut r = verify_on_minpool(&k);
+    assert!(r.machine.cluster().dma.stats.transfers >= 4);
     // Compute-bound: IPC should stay high despite the streaming.
     assert!(r.stats.ipc() > 0.4, "db matmul IPC {}", r.stats.ipc());
 }

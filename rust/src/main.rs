@@ -2,7 +2,8 @@
 //! simulated cluster, drive the paper's experiments, and print reports.
 //!
 //! ```text
-//! mempool run --kernel matmul [--cores 256] [--breakdown]
+//! mempool run [--kernel matmul|...|all] [--cores 256] [--breakdown]
+//!             [--backend serial|parallel]
 //! mempool netsim [--topology Top1|Top4|TopH|all] [--cycles N]
 //! mempool netsim --hybrid
 //! mempool icache-study
@@ -26,13 +27,14 @@
 
 use mempool::brow;
 use mempool::config::{ClusterConfig, SystemConfig};
-use mempool::kernels::{run_and_verify, table1_kernels};
+use mempool::runtime::{
+    run_workload, table1_workloads, workload_by_name, workload_names, RunConfig, Target, Workload,
+};
 use mempool::sim::SimBackend;
 use mempool::studies;
 use mempool::studies::sweep::{
     baseline_is_bootstrap, baseline_json, check_baseline, results_json, run_sweep, SweepSpec,
 };
-use mempool::system::{run_system_with_backend, system_kernel_by_name, SYSTEM_KERNELS};
 use mempool::util::bench::section;
 use mempool::util::cli::Args;
 use mempool::util::json::Json;
@@ -41,6 +43,12 @@ use mempool::util::par::default_jobs;
 fn cfg_for(args: &Args) -> ClusterConfig {
     let cores: usize = args.parse_or("cores", 256);
     ClusterConfig::with_cores(cores)
+}
+
+/// Optional `--backend serial|parallel`; `None` = `MEMPOOL_BACKEND`.
+fn backend_for(args: &Args) -> Option<SimBackend> {
+    args.get("backend")
+        .map(|s| SimBackend::parse(s).expect("--backend serial|parallel"))
 }
 
 fn main() {
@@ -68,13 +76,31 @@ fn main() {
 fn cmd_run(args: &Args) {
     let cfg = cfg_for(args);
     let which = args.get_or("kernel", "all");
-    section(&format!("Table 1 — kernels on {} cores", cfg.num_cores()));
-    brow!("kernel", "cycles", "IPC", "OP/cycle", "GOPS", "W", "GOPS/W");
-    for k in table1_kernels(&cfg) {
-        if which != "all" && k.name() != which {
-            continue;
+    let backend = backend_for(args);
+    // `all` = the Table 1 suite; a name = any cluster-target workload
+    // from the registry (apps and double-buffered kernels included).
+    let workloads = if which == "all" {
+        table1_workloads(&cfg)
+    } else {
+        match workload_by_name(which, Target::Cluster, cfg.num_cores()) {
+            Ok(w) => vec![w],
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
         }
-        let r = run_and_verify(k.as_ref(), &cfg);
+    };
+    let title = if which == "all" {
+        format!("Table 1 — kernels on {} cores", cfg.num_cores())
+    } else {
+        format!("Workload {which} on {} cores", cfg.num_cores())
+    };
+    section(&title);
+    brow!("kernel", "cycles", "IPC", "OP/cycle", "GOPS", "W", "GOPS/W");
+    for k in workloads {
+        let mut run = RunConfig::cluster(&cfg);
+        run.backend = backend;
+        let r = run_workload(k.as_ref(), &run);
         let s = &r.stats;
         brow!(
             k.name(),
@@ -335,10 +361,11 @@ fn cmd_system(args: &Args) {
     let which = args.get_or("kernel", "all").to_string();
     let backend = SimBackend::parse(args.get_or("backend", "parallel"))
         .expect("--backend serial|parallel");
+    let system_names = workload_names(Target::System);
     let selected: Vec<&str> =
-        SYSTEM_KERNELS.iter().copied().filter(|n| which == "all" || *n == which).collect();
+        system_names.iter().copied().filter(|n| which == "all" || *n == which).collect();
     if selected.is_empty() {
-        eprintln!("unknown system kernel `{which}` (try {SYSTEM_KERNELS:?})");
+        eprintln!("unknown system workload `{which}` (try {system_names:?})");
         std::process::exit(2);
     }
 
@@ -348,22 +375,26 @@ fn cmd_system(args: &Args) {
         ));
         let mut failed = false;
         for name in &selected {
-            let kernel = system_kernel_by_name(name, cores).unwrap();
-            let a = run_system_with_backend(kernel.as_ref(), &cfg, SimBackend::Serial);
-            let b = run_system_with_backend(kernel.as_ref(), &cfg, SimBackend::Parallel);
-            if a.cycles != b.cycles || a.stats != b.stats {
+            let kernel = workload_by_name(name, Target::System, cores).unwrap();
+            let a = run_workload(
+                kernel.as_ref(),
+                &RunConfig::system(&cfg).with_backend(SimBackend::Serial),
+            );
+            let b = run_workload(
+                kernel.as_ref(),
+                &RunConfig::system(&cfg).with_backend(SimBackend::Parallel),
+            );
+            if a.cycles != b.cycles || a.system_stats != b.system_stats {
                 eprintln!(
-                    "{}: serial {} vs parallel {} cycles — MISMATCH",
-                    kernel.name(),
-                    a.cycles,
-                    b.cycles
+                    "{name}: serial {} vs parallel {} cycles — MISMATCH",
+                    a.cycles, b.cycles
                 );
                 failed = true;
                 continue;
             }
-            let mut sys = b.system;
-            kernel.verify(&mut sys).unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
-            println!("{}: {} cycles on both backends (result verified)", kernel.name(), a.cycles);
+            let mut machine = b.machine;
+            kernel.verify(&mut machine).unwrap_or_else(|e| panic!("{name}: {e}"));
+            println!("{name}: {} cycles on both backends (result verified)", a.cycles);
         }
         if failed {
             std::process::exit(1);
@@ -377,13 +408,12 @@ fn cmd_system(args: &Args) {
     ));
     brow!("kernel", "cycles", "IPC", "OP/cycle", "fab KiB", "fab wait", "DMA KiB", "W");
     for name in &selected {
-        let kernel = system_kernel_by_name(name, cores).unwrap();
-        let r = run_system_with_backend(kernel.as_ref(), &cfg, backend);
-        let mut sys = r.system;
-        kernel.verify(&mut sys).unwrap_or_else(|e| panic!("{}: {e}", kernel.name()));
-        let s = &r.stats;
+        let kernel = workload_by_name(name, Target::System, cores).unwrap();
+        let mut r = run_workload(kernel.as_ref(), &RunConfig::system(&cfg).with_backend(backend));
+        kernel.verify(&mut r.machine).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let s = r.system_stats.as_ref().expect("system run carries system stats");
         brow!(
-            kernel.name(),
+            name,
             r.cycles,
             format!("{:.2}", s.ipc()),
             format!("{:.0}", s.ops_per_cycle()),

@@ -1,0 +1,291 @@
+//! The typed SPMD assembly builder: the kernel-authoring surface of the
+//! `runtime` programming-model layer.
+//!
+//! Workloads compose their programs from checked instruction methods,
+//! labels, and first-class intrinsics (`core_id`, `cluster_id`,
+//! `barrier`, DMA program/wait) instead of concatenating raw strings.
+//! The builder still *emits* assembly text for the `isa` assembler — the
+//! point is not a new encoding but a single, typed authoring layer whose
+//! output is exactly the instruction sequence the legacy string kernels
+//! produced (the golden tests in `runtime/tests.rs` pin matmul, axpy,
+//! and dotp instruction-for-instruction against the old strings), so the
+//! redesign is cycle-neutral by construction.
+//!
+//! Register operands are validated eagerly against the ISA's register
+//! table — a typo panics at build time with the offending name, not at
+//! assembly time with a line number into generated text. Symbols (data
+//! placement, geometry constants) are collected alongside the source via
+//! [`AsmBuilder::define`], so a workload's program and symbol table are
+//! built in one pass.
+
+use std::collections::HashMap;
+use std::fmt::Display;
+
+use crate::isa::Reg;
+use crate::kernels::rt::{barrier_asm, dma_start_asm, dma_wait_asm, grab_chunk_asm};
+
+/// Builds one SPMD program: assembly source plus its symbol table.
+///
+/// All cores execute the same program; workloads branch on the
+/// [`core_id`](AsmBuilder::core_id) and (on the system target)
+/// [`cluster_id`](AsmBuilder::cluster_id) intrinsics to find their share
+/// of the work.
+#[derive(Debug, Default)]
+pub struct AsmBuilder {
+    src: String,
+    sym: HashMap<String, u32>,
+}
+
+/// Validate a register operand, panicking with the bad name.
+fn chk(reg: &str) -> &str {
+    assert!(Reg::from_name(reg).is_some(), "AsmBuilder: `{reg}` is not a register");
+    reg
+}
+
+impl AsmBuilder {
+    pub fn new() -> AsmBuilder {
+        AsmBuilder::default()
+    }
+
+    /// Consume the builder: (assembly source, symbol table).
+    pub fn finish(self) -> (String, HashMap<String, u32>) {
+        (self.src, self.sym)
+    }
+
+    // ---- symbols ----------------------------------------------------
+
+    /// Define a symbol (a data address or numeric constant) usable
+    /// wherever the assembler accepts an immediate (`li`, `la`, `addi`,
+    /// load/store offsets, ...).
+    pub fn define(&mut self, name: impl Into<String>, value: u32) {
+        self.sym.insert(name.into(), value);
+    }
+
+    /// The symbol table under construction (for bulk installers such as
+    /// `RtLayout::add_symbols`).
+    pub fn symbols_mut(&mut self) -> &mut HashMap<String, u32> {
+        &mut self.sym
+    }
+
+    // ---- raw text ---------------------------------------------------
+
+    /// Append one line of assembly verbatim.
+    fn ins(&mut self, line: String) {
+        self.src.push_str(&line);
+        self.src.push('\n');
+    }
+
+    /// Splice a preformatted, newline-terminated fragment. The escape
+    /// hatch for fixed program blocks that gain nothing from op-by-op
+    /// construction; register-checked methods are preferred for anything
+    /// generated or parameterized.
+    pub fn raw(&mut self, fragment: &str) {
+        self.src.push_str(fragment);
+        if !fragment.is_empty() && !fragment.ends_with('\n') {
+            self.src.push('\n');
+        }
+    }
+
+    /// A comment line (ignored by the assembler).
+    pub fn comment(&mut self, text: &str) {
+        self.ins(format!("# {text}"));
+    }
+
+    // ---- layout -----------------------------------------------------
+
+    /// Place a label at the current position.
+    pub fn label(&mut self, name: impl Display) {
+        self.ins(format!("{name}:"));
+    }
+
+    /// Pad with `nop`s to an `n`-instruction boundary (align hot loop
+    /// heads to icache lines).
+    pub fn align(&mut self, n: usize) {
+        self.ins(format!(".align {n}"));
+    }
+
+    // ---- moves and constants ----------------------------------------
+
+    /// `li rd, imm` — `imm` may be a number or a defined symbol name.
+    pub fn li(&mut self, rd: &str, imm: impl Display) {
+        self.ins(format!("li {}, {imm}", chk(rd)));
+    }
+
+    /// `la rd, symbol` (identical expansion to `li`; reads as "address").
+    pub fn la(&mut self, rd: &str, sym: &str) {
+        self.ins(format!("la {}, {sym}", chk(rd)));
+    }
+
+    pub fn mv(&mut self, rd: &str, rs: &str) {
+        self.ins(format!("mv {}, {}", chk(rd), chk(rs)));
+    }
+
+    // ---- ALU --------------------------------------------------------
+
+    pub fn add(&mut self, rd: &str, rs1: &str, rs2: &str) {
+        self.ins(format!("add {}, {}, {}", chk(rd), chk(rs1), chk(rs2)));
+    }
+
+    pub fn sub(&mut self, rd: &str, rs1: &str, rs2: &str) {
+        self.ins(format!("sub {}, {}, {}", chk(rd), chk(rs1), chk(rs2)));
+    }
+
+    pub fn mul(&mut self, rd: &str, rs1: &str, rs2: &str) {
+        self.ins(format!("mul {}, {}, {}", chk(rd), chk(rs1), chk(rs2)));
+    }
+
+    pub fn divu(&mut self, rd: &str, rs1: &str, rs2: &str) {
+        self.ins(format!("divu {}, {}, {}", chk(rd), chk(rs1), chk(rs2)));
+    }
+
+    pub fn xor(&mut self, rd: &str, rs1: &str, rs2: &str) {
+        self.ins(format!("xor {}, {}, {}", chk(rd), chk(rs1), chk(rs2)));
+    }
+
+    pub fn addi(&mut self, rd: &str, rs1: &str, imm: impl Display) {
+        self.ins(format!("addi {}, {}, {imm}", chk(rd), chk(rs1)));
+    }
+
+    pub fn andi(&mut self, rd: &str, rs1: &str, imm: impl Display) {
+        self.ins(format!("andi {}, {}, {imm}", chk(rd), chk(rs1)));
+    }
+
+    pub fn slli(&mut self, rd: &str, rs1: &str, imm: impl Display) {
+        self.ins(format!("slli {}, {}, {imm}", chk(rd), chk(rs1)));
+    }
+
+    pub fn srli(&mut self, rd: &str, rs1: &str, imm: impl Display) {
+        self.ins(format!("srli {}, {}, {imm}", chk(rd), chk(rs1)));
+    }
+
+    pub fn srai(&mut self, rd: &str, rs1: &str, imm: impl Display) {
+        self.ins(format!("srai {}, {}, {imm}", chk(rd), chk(rs1)));
+    }
+
+    /// `p.mac rd, rs1, rs2` — the Xpulpimg multiply-accumulate.
+    pub fn p_mac(&mut self, rd: &str, rs1: &str, rs2: &str) {
+        self.ins(format!("p.mac {}, {}, {}", chk(rd), chk(rs1), chk(rs2)));
+    }
+
+    // ---- memory -----------------------------------------------------
+
+    pub fn lw(&mut self, rd: &str, off: impl Display, base: &str) {
+        self.ins(format!("lw {}, {off}({})", chk(rd), chk(base)));
+    }
+
+    pub fn sw(&mut self, rs2: &str, off: impl Display, base: &str) {
+        self.ins(format!("sw {}, {off}({})", chk(rs2), chk(base)));
+    }
+
+    /// `p.lw rd, inc(base!)` — post-increment load.
+    pub fn p_lw(&mut self, rd: &str, inc: impl Display, base: &str) {
+        self.ins(format!("p.lw {}, {inc}({}!)", chk(rd), chk(base)));
+    }
+
+    /// `p.sw rs2, inc(base!)` — post-increment store.
+    pub fn p_sw(&mut self, rs2: &str, inc: impl Display, base: &str) {
+        self.ins(format!("p.sw {}, {inc}({}!)", chk(rs2), chk(base)));
+    }
+
+    pub fn amoadd(&mut self, rd: &str, rs2: &str, addr: &str) {
+        self.ins(format!("amoadd.w {}, {}, ({})", chk(rd), chk(rs2), chk(addr)));
+    }
+
+    pub fn amoswap(&mut self, rd: &str, rs2: &str, addr: &str) {
+        self.ins(format!("amoswap.w {}, {}, ({})", chk(rd), chk(rs2), chk(addr)));
+    }
+
+    // ---- control flow -----------------------------------------------
+
+    pub fn j(&mut self, label: impl Display) {
+        self.ins(format!("j {label}"));
+    }
+
+    pub fn beq(&mut self, rs1: &str, rs2: &str, label: impl Display) {
+        self.ins(format!("beq {}, {}, {label}", chk(rs1), chk(rs2)));
+    }
+
+    pub fn bne(&mut self, rs1: &str, rs2: &str, label: impl Display) {
+        self.ins(format!("bne {}, {}, {label}", chk(rs1), chk(rs2)));
+    }
+
+    pub fn blt(&mut self, rs1: &str, rs2: &str, label: impl Display) {
+        self.ins(format!("blt {}, {}, {label}", chk(rs1), chk(rs2)));
+    }
+
+    pub fn bge(&mut self, rs1: &str, rs2: &str, label: impl Display) {
+        self.ins(format!("bge {}, {}, {label}", chk(rs1), chk(rs2)));
+    }
+
+    pub fn ble(&mut self, rs1: &str, rs2: &str, label: impl Display) {
+        self.ins(format!("ble {}, {}, {label}", chk(rs1), chk(rs2)));
+    }
+
+    pub fn beqz(&mut self, rs: &str, label: impl Display) {
+        self.ins(format!("beqz {}, {label}", chk(rs)));
+    }
+
+    pub fn bnez(&mut self, rs: &str, label: impl Display) {
+        self.ins(format!("bnez {}, {label}", chk(rs)));
+    }
+
+    pub fn csrr(&mut self, rd: &str, csr: &str) {
+        self.ins(format!("csrr {}, {csr}", chk(rd)));
+    }
+
+    pub fn fence(&mut self) {
+        self.ins("fence".to_string());
+    }
+
+    pub fn halt(&mut self) {
+        self.ins("halt".to_string());
+    }
+
+    // ---- intrinsics -------------------------------------------------
+
+    /// This core's cluster-wide hart id → `rd`.
+    pub fn core_id(&mut self, rd: &str) {
+        self.csrr(rd, "mhartid");
+    }
+
+    /// This cluster's id within the system → `rd` (0 standalone).
+    /// Clobbers `tmp`.
+    pub fn cluster_id(&mut self, rd: &str, tmp: &str) {
+        self.la(tmp, "CLUSTER_ID_ADDR");
+        self.lw(rd, 0, tmp);
+    }
+
+    /// A full-cluster sense-reversal barrier (paper §7.3.1). Clobbers
+    /// t0–t6; `id` keeps the labels unique across several barriers.
+    pub fn barrier(&mut self, id: usize) {
+        self.raw(&barrier_asm(id));
+    }
+
+    /// Dynamic work sharing: atomically grab the next chunk index from
+    /// the shared runtime counter into `dst`; jump to `done_label` when
+    /// `dst >= limit_reg`. Clobbers t0.
+    pub fn grab_chunk(&mut self, dst: &str, limit_reg: &str, done_label: &str) {
+        self.raw(&grab_chunk_asm(chk(dst), chk(limit_reg), done_label));
+    }
+
+    /// Program the cluster DMA frontend for one transfer and trigger it.
+    /// Operands are symbols/immediates; clobbers t0/t1. `to_spm`:
+    /// true = L2→SPM.
+    pub fn dma_start(&mut self, l2: &str, spm: &str, bytes: &str, to_spm: bool) {
+        self.raw(&dma_start_asm(l2, spm, bytes, to_spm));
+    }
+
+    /// Spin until the cluster DMA frontend reports idle. Clobbers t0/t1.
+    pub fn dma_wait(&mut self, id: usize) {
+        self.raw(&dma_wait_asm(id));
+    }
+
+    /// Spin until a memory-mapped status word at `status_sym` reads zero
+    /// (the DMA-idle polling idiom, shared by the cluster and system
+    /// frontends). `label` names the loop head. Clobbers t0/t1.
+    pub fn poll_idle(&mut self, status_sym: &str, label: impl Display) {
+        self.la("t0", status_sym);
+        self.ins(format!("{label}: lw t1, 0(t0)"));
+        self.bnez("t1", label);
+    }
+}

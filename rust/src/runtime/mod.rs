@@ -1,15 +1,41 @@
-//! The golden-model runtime: executes the AOT-compiled Pallas/JAX models
-//! (`artifacts/*.hlo.txt`) through PJRT so the cycle-accurate simulator's
-//! results can be checked bit-for-bit against the L1/L2 layers.
+//! The `runtime` programming-model layer: the single workload-authoring
+//! surface across the cluster and system targets, plus the PJRT
+//! golden-model runtime.
 //!
-//! The PJRT client needs the `xla` native toolchain, which is a heavy,
-//! environment-specific dependency — so the real implementation lives
-//! behind the `golden` cargo feature, and the `xla`/`anyhow` crates it
-//! uses must be added to `rust/Cargo.toml` by hand before enabling it
-//! (see the feature's comment there; cargo would otherwise resolve them
-//! for every build, enabled or not). The default build ships an
-//! API-compatible stub that reports the artifacts as unavailable; every
-//! golden test and the `golden-check` CLI path skip cleanly through it.
+//! - [`AsmBuilder`] (`builder.rs`): the typed SPMD assembly builder —
+//!   checked instruction methods, labels, and first-class intrinsics
+//!   (`core_id`, `cluster_id`, `barrier`, DMA program/wait).
+//! - [`Workload`] (`workload.rs`): one trait (name, prepare_config,
+//!   build, setup, verify, total_ops) parameterized over [`Target`],
+//!   with one [`RunConfig`]/[`RunResult`] pair and the [`run_workload`]
+//!   entry point serving both targets.
+//! - the registry (`registry.rs`): every workload name exists exactly
+//!   once, with per-target constructors — the CLI, sweep, and studies
+//!   all resolve names here.
+//!
+//! The golden-model runtime executes the AOT-compiled Pallas/JAX models
+//! (`artifacts/*.hlo.txt`) through PJRT so the cycle-accurate
+//! simulator's results can be checked bit-for-bit against the L1/L2
+//! layers. The PJRT client needs the `xla` native toolchain, which is a
+//! heavy, environment-specific dependency — so the real implementation
+//! lives behind the `golden` cargo feature, and the `xla`/`anyhow`
+//! crates it uses must be added to `rust/Cargo.toml` by hand before
+//! enabling it (see the feature's comment there; cargo would otherwise
+//! resolve them for every build, enabled or not). The default build
+//! ships an API-compatible stub that reports the artifacts as
+//! unavailable; every golden test and the `golden-check` CLI path skip
+//! cleanly through it.
+
+mod builder;
+mod registry;
+mod workload;
+
+pub use builder::AsmBuilder;
+pub use registry::{
+    all_workload_names, table1_workloads, workload_by_name, workload_names, WorkloadEntry,
+    WORKLOADS,
+};
+pub use workload::{run_workload, Machine, RunConfig, RunResult, Target, TargetConfig, Workload};
 
 #[cfg(feature = "golden")]
 mod pjrt;
@@ -20,3 +46,6 @@ pub use pjrt::{artifacts_available, artifacts_dir, GoldenModel, Runtime};
 mod stub;
 #[cfg(not(feature = "golden"))]
 pub use stub::{artifacts_available, artifacts_dir, GoldenModel, Runtime};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,136 @@
+//! The one workload registry: every kernel name exists exactly here,
+//! with the targets it supports and its weak-scaled constructor per
+//! target. The CLI (`run`, `system`), the sweep runner, and the studies
+//! all resolve names through this table, so adding a workload is a
+//! single entry (see README "Programming model" for the recipe).
+
+use crate::config::ClusterConfig;
+use crate::kernels::apps::{Bfs, HistEq, Raytrace};
+use crate::kernels::doublebuf::{DbAxpy, DbMatmul};
+use crate::kernels::{Axpy, Conv2d, Dct, Dotp, Matmul};
+use crate::runtime::{Target, Workload};
+use crate::system::{SysAxpy, SysMatmul};
+
+/// Weak-scaled constructor: cores per cluster → boxed workload.
+///
+/// Constructors that ignore the argument (conv2d, dct, the apps) are
+/// still weak-scaled: those workloads size themselves per-core from the
+/// `ClusterConfig` at build/setup time, so total work grows with the
+/// core count either way.
+type Make = fn(usize) -> Box<dyn Workload>;
+
+/// One registry row: a workload name and its per-target constructors.
+pub struct WorkloadEntry {
+    pub name: &'static str,
+    /// Member of the paper's Table 1 suite (the default `run` set).
+    pub table1: bool,
+    cluster: Option<Make>,
+    system: Option<Make>,
+}
+
+impl WorkloadEntry {
+    fn make_for(&self, target: Target) -> Option<Make> {
+        match target {
+            Target::Cluster => self.cluster,
+            Target::System => self.system,
+        }
+    }
+
+    pub fn supports(&self, target: Target) -> bool {
+        self.make_for(target).is_some()
+    }
+}
+
+fn c_matmul(cores: usize) -> Box<dyn Workload> {
+    Box::new(Matmul::weak_scaled(cores))
+}
+fn s_matmul(cores: usize) -> Box<dyn Workload> {
+    Box::new(SysMatmul::weak_scaled(cores))
+}
+fn c_conv2d(cores: usize) -> Box<dyn Workload> {
+    Box::new(Conv2d::weak_scaled(cores))
+}
+fn c_dct(cores: usize) -> Box<dyn Workload> {
+    Box::new(Dct::weak_scaled(cores))
+}
+fn c_axpy(cores: usize) -> Box<dyn Workload> {
+    Box::new(Axpy::weak_scaled(cores))
+}
+fn s_axpy(cores: usize) -> Box<dyn Workload> {
+    Box::new(SysAxpy::weak_scaled(cores))
+}
+fn c_dotp(cores: usize) -> Box<dyn Workload> {
+    Box::new(Dotp::weak_scaled(cores))
+}
+fn c_db_matmul(cores: usize) -> Box<dyn Workload> {
+    Box::new(DbMatmul::weak_scaled(cores))
+}
+fn c_db_axpy(cores: usize) -> Box<dyn Workload> {
+    Box::new(DbAxpy::weak_scaled(cores))
+}
+fn c_histeq(_cores: usize) -> Box<dyn Workload> {
+    Box::new(HistEq::new())
+}
+fn c_raytrace(_cores: usize) -> Box<dyn Workload> {
+    Box::new(Raytrace::new())
+}
+fn c_bfs(_cores: usize) -> Box<dyn Workload> {
+    Box::new(Bfs::new())
+}
+
+/// Every workload, in the paper's presentation order (Table 1 first).
+pub static WORKLOADS: &[WorkloadEntry] = &[
+    WorkloadEntry { name: "matmul", table1: true, cluster: Some(c_matmul), system: Some(s_matmul) },
+    WorkloadEntry { name: "conv2d", table1: true, cluster: Some(c_conv2d), system: None },
+    WorkloadEntry { name: "dct", table1: true, cluster: Some(c_dct), system: None },
+    WorkloadEntry { name: "axpy", table1: true, cluster: Some(c_axpy), system: Some(s_axpy) },
+    WorkloadEntry { name: "dotp", table1: true, cluster: Some(c_dotp), system: None },
+    WorkloadEntry { name: "db_matmul", table1: false, cluster: Some(c_db_matmul), system: None },
+    WorkloadEntry { name: "db_axpy", table1: false, cluster: Some(c_db_axpy), system: None },
+    WorkloadEntry { name: "histeq", table1: false, cluster: Some(c_histeq), system: None },
+    WorkloadEntry { name: "raytrace", table1: false, cluster: Some(c_raytrace), system: None },
+    WorkloadEntry { name: "bfs", table1: false, cluster: Some(c_bfs), system: None },
+];
+
+/// Names available on `target`, in registry order.
+pub fn workload_names(target: Target) -> Vec<&'static str> {
+    WORKLOADS.iter().filter(|e| e.supports(target)).map(|e| e.name).collect()
+}
+
+/// All registry names, in registry order.
+pub fn all_workload_names() -> Vec<&'static str> {
+    WORKLOADS.iter().map(|e| e.name).collect()
+}
+
+/// Instantiate a workload by name at its weak-scaled shape for `cores`
+/// per cluster, on `target`. Unknown names and unsupported targets both
+/// fail with the valid alternatives spelled out.
+pub fn workload_by_name(
+    name: &str,
+    target: Target,
+    cores: usize,
+) -> Result<Box<dyn Workload>, String> {
+    let entry = WORKLOADS
+        .iter()
+        .find(|e| e.name == name)
+        .ok_or_else(|| format!("unknown workload `{name}` (known: {:?})", all_workload_names()))?;
+    let make = entry.make_for(target).ok_or_else(|| {
+        format!(
+            "workload `{name}` has no {}-target variant (available on {}: {:?})",
+            target.name(),
+            target.name(),
+            workload_names(target)
+        )
+    })?;
+    Ok(make(cores))
+}
+
+/// The paper's Table 1 suite at its weak-scaled default sizes for `cfg`.
+pub fn table1_workloads(cfg: &ClusterConfig) -> Vec<Box<dyn Workload>> {
+    let cores = cfg.num_cores();
+    WORKLOADS
+        .iter()
+        .filter(|e| e.table1)
+        .map(|e| (e.cluster.expect("Table 1 workloads run on the cluster target"))(cores))
+        .collect()
+}

@@ -1,0 +1,1072 @@
+//! Programming-model layer tests.
+//!
+//! Golden builder tests: the PR-3 API redesign moved matmul, axpy, and
+//! dotp from raw `format!` strings onto the typed [`AsmBuilder`]. The
+//! legacy strings are pinned *verbatim* below; each test assembles both
+//! and asserts the instruction streams are identical — the property that
+//! makes the redesign cycle-neutral (same instructions ⇒ same cycles on
+//! a deterministic simulator).
+//!
+//! Registry round-trip tests: every CLI/sweep-reachable name resolves on
+//! its declared targets and rejects the others with an error naming the
+//! valid alternatives.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterConfig;
+use crate::isa::Program;
+use crate::kernels::rt::{barrier_asm, RtLayout};
+use crate::kernels::{Axpy, Dotp, Matmul};
+use crate::runtime::{
+    table1_workloads, workload_by_name, workload_names, AsmBuilder, Target, TargetConfig,
+    Workload, WORKLOADS,
+};
+use crate::sim::base_symbols;
+
+/// Assemble a workload's builder-authored program exactly as
+/// `run_workload` does (builder symbols + harness defaults).
+fn assemble_built(w: &dyn Workload, cfg: &ClusterConfig) -> Program {
+    let tcfg = TargetConfig::Cluster(cfg.clone());
+    let mut b = AsmBuilder::new();
+    w.build(&tcfg, &mut b);
+    let (src, mut sym) = b.finish();
+    for (k, v) in base_symbols(cfg) {
+        sym.entry(k).or_insert(v);
+    }
+    Program::assemble(&src, &sym).expect("builder program must assemble")
+}
+
+fn assemble_legacy(src: &str, mut sym: HashMap<String, u32>, cfg: &ClusterConfig) -> Program {
+    for (k, v) in base_symbols(cfg) {
+        sym.entry(k).or_insert(v);
+    }
+    Program::assemble(src, &sym).expect("legacy program must assemble")
+}
+
+fn assert_instruction_identical(kernel: &str, built: &Program, legacy: &Program) {
+    assert_eq!(
+        built.instrs.len(),
+        legacy.instrs.len(),
+        "{kernel}: instruction counts differ (builder {} vs legacy {})",
+        built.instrs.len(),
+        legacy.instrs.len()
+    );
+    for (i, (b, l)) in built.instrs.iter().zip(&legacy.instrs).enumerate() {
+        assert_eq!(b, l, "{kernel}: instruction {i} differs (builder {b:?} vs legacy {l:?})");
+    }
+}
+
+/// The pre-redesign axpy source, verbatim.
+fn legacy_axpy(k: &Axpy, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(cfg);
+    let x = rt.data_base;
+    let y = x + (k.len(cfg) * 4) as u32;
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    sym.insert("vec_x".into(), x);
+    sym.insert("vec_y".into(), y);
+    sym.insert("ALPHA".into(), k.alpha);
+    sym.insert("BLOCKS".into(), (k.per_core / 4) as u32);
+    sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
+    let src = format!(
+        "\
+        csrr t0, mhartid\n\
+        srli t1, t0, 2\n\
+        andi t2, t0, 3\n\
+        # offset of this core's first island: tile*64 + lane*16\n\
+        slli t3, t1, 6\n\
+        slli t4, t2, 4\n\
+        add t5, t3, t4\n\
+        la a0, vec_x\n\
+        add a0, a0, t5\n\
+        la a1, vec_y\n\
+        add a1, a1, t5\n\
+        li a2, ALPHA\n\
+        li a3, BLOCKS\n\
+        li a4, BLOCK_STRIDE\n\
+        .align 8\n\
+        blk:\n\
+        lw t0, 0(a0)\n\
+        lw t1, 4(a0)\n\
+        lw t2, 8(a0)\n\
+        lw t3, 12(a0)\n\
+        lw t4, 0(a1)\n\
+        lw t5, 4(a1)\n\
+        lw t6, 8(a1)\n\
+        lw a6, 12(a1)\n\
+        p.mac t4, a2, t0\n\
+        p.mac t5, a2, t1\n\
+        p.mac t6, a2, t2\n\
+        p.mac a6, a2, t3\n\
+        sw t4, 0(a1)\n\
+        sw t5, 4(a1)\n\
+        sw t6, 8(a1)\n\
+        sw a6, 12(a1)\n\
+        add a0, a0, a4\n\
+        add a1, a1, a4\n\
+        addi a3, a3, -1\n\
+        bnez a3, blk\n\
+        {barrier}\
+        halt\n",
+        barrier = barrier_asm(0)
+    );
+    (src, sym)
+}
+
+/// The pre-redesign dotp source, verbatim.
+fn legacy_dotp(k: &Dotp, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(cfg);
+    let x = rt.data_base;
+    let y = x + (k.len(cfg) * 4) as u32;
+    let acc = rt.work_counter + 4;
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    sym.insert("vec_x".into(), x);
+    sym.insert("vec_y".into(), y);
+    sym.insert("dot_acc".into(), acc);
+    sym.insert("BLOCKS".into(), (k.per_core / 4) as u32);
+    sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
+    let src = format!(
+        "\
+        csrr t0, mhartid\n\
+        srli t1, t0, 2\n\
+        andi t2, t0, 3\n\
+        slli t3, t1, 6\n\
+        slli t4, t2, 4\n\
+        add t5, t3, t4\n\
+        la a0, vec_x\n\
+        add a0, a0, t5\n\
+        la a1, vec_y\n\
+        add a1, a1, t5\n\
+        li a2, 0\n\
+        li a3, BLOCKS\n\
+        li a4, BLOCK_STRIDE\n\
+        .align 8\n\
+        blk:\n\
+        lw t0, 0(a0)\n\
+        lw t1, 4(a0)\n\
+        lw t2, 8(a0)\n\
+        lw t3, 12(a0)\n\
+        lw t4, 0(a1)\n\
+        lw t5, 4(a1)\n\
+        lw t6, 8(a1)\n\
+        lw a6, 12(a1)\n\
+        p.mac a2, t0, t4\n\
+        p.mac a2, t1, t5\n\
+        p.mac a2, t2, t6\n\
+        p.mac a2, t3, a6\n\
+        add a0, a0, a4\n\
+        add a1, a1, a4\n\
+        addi a3, a3, -1\n\
+        bnez a3, blk\n\
+        # reduction: one atomic add into the shared accumulator\n\
+        la t0, dot_acc\n\
+        amoadd.w t1, a2, (t0)\n\
+        {barrier}\
+        halt\n",
+        barrier = barrier_asm(0)
+    );
+    (src, sym)
+}
+
+/// The pre-redesign matmul source, verbatim.
+fn legacy_matmul(k: &Matmul, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(cfg);
+    let a = rt.data_base;
+    let b = a + (k.m * k.k * 4) as u32;
+    let c = b + (k.k * k.n * 4) as u32;
+    let tiles_c = k.n / 4;
+    let total_tiles = (k.m / 4) * tiles_c;
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    sym.insert("mat_a".into(), a);
+    sym.insert("mat_b".into(), b);
+    sym.insert("mat_c".into(), c);
+    sym.insert("TOTAL_TILES".into(), total_tiles as u32);
+    sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
+    sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
+    sym.insert("KBYTES".into(), (k.k * 4) as u32);
+    sym.insert("NBYTES".into(), (k.n * 4) as u32);
+    sym.insert("KDIM".into(), k.k as u32);
+    sym.insert("LOG_K_B".into(), (k.k * 4).trailing_zeros());
+    sym.insert("LOG_N_B".into(), (k.n * 4).trailing_zeros());
+
+    let acc = [
+        "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "s8", "s9", "s10", "s11", "a2", "a3",
+        "a4", "a5",
+    ];
+    let mut src = String::new();
+    src.push_str(
+        "\
+        addi sp, sp, -16\n\
+        csrr t0, mhartid\n\
+        sw t0, 0(sp)\n\
+        tile_loop:\n\
+        lw t0, 0(sp)\n\
+        li t1, TOTAL_TILES\n\
+        bge t0, t1, tiles_done\n\
+        # claim the next tile for this core\n\
+        addi t1, t0, NUM_CORES\n\
+        sw t1, 0(sp)\n\
+        # row/col of this 4x4 tile\n\
+        srli t2, t0, LOG_TILES_C\n\
+        slli t2, t2, 2\n\
+        andi t3, t0, TILES_C_MASK\n\
+        slli t3, t3, 2\n\
+        # A row pointers (a0, a1, gp, tp), stride KBYTES\n\
+        slli t4, t2, LOG_K_B\n\
+        la t5, mat_a\n\
+        add a0, t5, t4\n\
+        li t6, KBYTES\n\
+        add a1, a0, t6\n\
+        add gp, a1, t6\n\
+        add tp, gp, t6\n\
+        # B pointer: mat_b + col*4\n\
+        la t5, mat_b\n\
+        slli t4, t3, 2\n\
+        add ra, t5, t4\n\
+        # C tile pointer → 4(sp): mat_c + (row*N + col)*4\n\
+        slli t4, t2, LOG_N_B\n\
+        la t5, mat_c\n\
+        add t5, t5, t4\n\
+        slli t4, t3, 2\n\
+        add t5, t5, t4\n\
+        sw t5, 4(sp)\n",
+    );
+    for r in &acc {
+        src.push_str(&format!("li {r}, 0\n"));
+    }
+    src.push_str(
+        "\
+        li a7, KDIM\n\
+        .align 8\n\
+        kloop:\n\
+        p.lw t0, 4(a0!)\n\
+        p.lw t1, 4(a1!)\n\
+        p.lw t2, 4(gp!)\n\
+        p.lw t3, 4(tp!)\n\
+        lw t4, 0(ra)\n\
+        lw t5, 4(ra)\n\
+        lw t6, 8(ra)\n\
+        lw a6, 12(ra)\n",
+    );
+    let avals = ["t0", "t1", "t2", "t3"];
+    let bvals = ["t4", "t5", "t6", "a6"];
+    for r in 0..4 {
+        for q in 0..4 {
+            src.push_str(&format!("p.mac {}, {}, {}\n", acc[4 * r + q], avals[r], bvals[q]));
+        }
+    }
+    src.push_str(
+        "\
+        addi ra, ra, NBYTES\n\
+        addi a7, a7, -1\n\
+        bnez a7, kloop\n\
+        # store the 4x4 C tile\n\
+        lw t0, 4(sp)\n",
+    );
+    for r in 0..4 {
+        for q in 0..4 {
+            src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
+        }
+        if r != 3 {
+            src.push_str("addi t0, t0, NBYTES\n");
+        }
+    }
+    src.push_str("j tile_loop\ntiles_done:\n");
+    src.push_str(&barrier_asm(0));
+    src.push_str("halt\n");
+    (src, sym)
+}
+
+#[test]
+fn builder_golden_axpy_matches_legacy_string() {
+    let cfg = ClusterConfig::minpool();
+    let k = Axpy::weak_scaled(cfg.num_cores());
+    let built = assemble_built(&k, &cfg);
+    let (src, sym) = legacy_axpy(&k, &cfg);
+    let legacy = assemble_legacy(&src, sym, &cfg);
+    assert_instruction_identical("axpy", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_dotp_matches_legacy_string() {
+    let cfg = ClusterConfig::minpool();
+    let k = Dotp::weak_scaled(cfg.num_cores());
+    let built = assemble_built(&k, &cfg);
+    let (src, sym) = legacy_dotp(&k, &cfg);
+    let legacy = assemble_legacy(&src, sym, &cfg);
+    assert_instruction_identical("dotp", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_matmul_matches_legacy_string() {
+    let cfg = ClusterConfig::minpool();
+    let k = Matmul::weak_scaled(cfg.num_cores());
+    let built = assemble_built(&k, &cfg);
+    let (src, sym) = legacy_matmul(&k, &cfg);
+    let legacy = assemble_legacy(&src, sym, &cfg);
+    assert_instruction_identical("matmul", &built, &legacy);
+}
+
+#[test]
+#[should_panic(expected = "is not a register")]
+fn builder_rejects_bad_registers_eagerly() {
+    let mut b = AsmBuilder::new();
+    b.lw("t9", 0, "a0"); // t9 does not exist
+}
+
+// ---- registry round-trip ------------------------------------------------
+
+#[test]
+fn registry_every_name_resolves_on_its_declared_targets() {
+    for entry in WORKLOADS {
+        for target in [Target::Cluster, Target::System] {
+            let resolved = workload_by_name(entry.name, target, 16);
+            if entry.supports(target) {
+                let w = resolved.unwrap_or_else(|e| {
+                    panic!("{} should resolve on {}: {e}", entry.name, target.name())
+                });
+                assert_eq!(w.name(), entry.name, "registry name and Workload::name must agree");
+            } else {
+                let err = resolved.err().unwrap_or_else(|| {
+                    panic!("{} must be rejected on {}", entry.name, target.name())
+                });
+                assert!(
+                    err.contains(&format!("no {}-target variant", target.name())),
+                    "unsupported-target error must say so: {err}"
+                );
+                // The error names the valid alternatives.
+                for valid in workload_names(target) {
+                    assert!(err.contains(valid), "error must list `{valid}`: {err}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn registry_rejects_unknown_names_with_alternatives() {
+    let err = workload_by_name("no_such_kernel", Target::Cluster, 4).unwrap_err();
+    assert!(err.contains("unknown workload"), "{err}");
+    assert!(err.contains("matmul"), "error must list the known names: {err}");
+}
+
+#[test]
+fn registry_target_matrix_is_stable() {
+    // The CLI/sweep-reachable sets: every Table 1 kernel plus the apps
+    // and double-buffered kernels on the cluster target; the sharded
+    // matmul/axpy on the system target.
+    assert_eq!(
+        workload_names(Target::Cluster),
+        vec![
+            "matmul",
+            "conv2d",
+            "dct",
+            "axpy",
+            "dotp",
+            "db_matmul",
+            "db_axpy",
+            "histeq",
+            "raytrace",
+            "bfs"
+        ]
+    );
+    assert_eq!(workload_names(Target::System), vec!["matmul", "axpy"]);
+}
+
+#[test]
+fn registry_table1_suite_is_the_paper_order() {
+    let cfg = ClusterConfig::minpool();
+    let names: Vec<&str> = table1_workloads(&cfg).iter().map(|w| w.name()).collect();
+    assert_eq!(names, vec!["matmul", "conv2d", "dct", "axpy", "dotp"]);
+}
+
+// ---- double-buffered / system golden tests ------------------------------
+//
+// The riskiest transcription of the redesign is the shared `DbPlumbing`
+// + `emit_streamed_*` emitters, whose legacy strings (the pre-redesign
+// cluster `DbPlumbing` and system `SysDbPlumbing`) were deleted. They
+// are pinned verbatim below, one per target, and each variant's builder
+// output must stay instruction-identical.
+
+use crate::config::SystemConfig;
+use crate::kernels::doublebuf::{DbAxpy, DbMatmul};
+use crate::system::{system_symbols, SysAxpy, SysMatmul};
+
+fn assemble_built_system(w: &dyn Workload, cfg: &SystemConfig) -> Program {
+    let tcfg = TargetConfig::System(cfg.clone());
+    let mut b = AsmBuilder::new();
+    w.build(&tcfg, &mut b);
+    let (src, mut sym) = b.finish();
+    for (k, v) in system_symbols(cfg) {
+        sym.entry(k).or_insert(v);
+    }
+    Program::assemble(&src, &sym).expect("builder program must assemble")
+}
+
+fn assemble_legacy_system(
+    src: &str,
+    mut sym: HashMap<String, u32>,
+    cfg: &SystemConfig,
+) -> Program {
+    for (k, v) in system_symbols(cfg) {
+        sym.entry(k).or_insert(v);
+    }
+    Program::assemble(src, &sym).expect("legacy program must assemble")
+}
+
+fn legacy_dma_wait(id: usize) -> String {
+    format!(
+        "\
+        la t0, DMA_STATUS_ADDR\n\
+        dma_poll_{id}: lw t1, 0(t0)\n\
+        bnez t1, dma_poll_{id}\n"
+    )
+}
+
+fn legacy_sdma_wait(id: usize) -> String {
+    format!(
+        "\
+        la t0, SYSDMA_STATUS_ADDR\n\
+        sdma_poll_{id}: lw t1, 0(t0)\n\
+        bnez t1, sdma_poll_{id}\n"
+    )
+}
+
+/// The pre-redesign cluster `DbPlumbing`, verbatim.
+struct LegacyDbPlumbing {
+    chunk_bytes: u32,
+    out_bytes: u32,
+    in_bufs: [u32; 2],
+    out_bufs: [u32; 2],
+    l2_in: u32,
+    l2_out: u32,
+}
+
+impl LegacyDbPlumbing {
+    fn round_prologue(&self) -> String {
+        format!(
+            "\
+            bnez s9, db_skip_dma\n\
+            {wait}\
+            # program the next round's input load (if any)\n\
+            addi t0, s10, 1\n\
+            bge t0, s11, db_no_next_in\n\
+            li t1, {chunk}\n\
+            mul t1, t0, t1\n\
+            li a0, {l2_in}\n\
+            add a0, a0, t1\n\
+            la t0, DMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            andi t1, s10, 1\n\
+            bnez t1, db_next_in_even\n\
+            li a1, {in1}\n\
+            j db_next_in_set\n\
+            db_next_in_even:\n\
+            li a1, {in0}\n\
+            db_next_in_set:\n\
+            la t0, DMA_SPM_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, DMA_BYTES_ADDR\n\
+            li t1, {chunk}\n\
+            sw t1, 0(t0)\n\
+            la t0, DMA_TRIGGER_ADDR\n\
+            li t1, 1\n\
+            sw t1, 0(t0)\n\
+            db_no_next_in:\n\
+            # write back the previous round's output (if any)\n\
+            beqz s10, db_no_writeback\n\
+            addi t0, s10, -1\n\
+            li t1, {out_bytes}\n\
+            mul t1, t0, t1\n\
+            li a0, {l2_out}\n\
+            add a0, a0, t1\n\
+            la t0, DMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            andi t1, s10, 1\n\
+            bnez t1, db_wb_odd\n\
+            li a1, {out1}\n\
+            j db_wb_set\n\
+            db_wb_odd:\n\
+            li a1, {out0}\n\
+            db_wb_set:\n\
+            la t0, DMA_SPM_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, DMA_BYTES_ADDR\n\
+            li t1, {out_bytes}\n\
+            sw t1, 0(t0)\n\
+            la t0, DMA_TRIGGER_ADDR\n\
+            sw zero, 0(t0)\n\
+            db_no_writeback:\n\
+            db_skip_dma:\n",
+            wait = legacy_dma_wait(90),
+            chunk = self.chunk_bytes,
+            l2_in = self.l2_in,
+            in0 = self.in_bufs[0],
+            in1 = self.in_bufs[1],
+            out_bytes = self.out_bytes,
+            l2_out = self.l2_out,
+            out0 = self.out_bufs[0],
+            out1 = self.out_bufs[1],
+        )
+    }
+
+    fn epilogue(&self, rounds: u32) -> String {
+        let last = rounds - 1;
+        format!(
+            "\
+            bnez s9, db_skip_final\n\
+            {wait}\
+            li a0, {l2}\n\
+            la t0, DMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            li a1, {spm}\n\
+            la t0, DMA_SPM_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, DMA_BYTES_ADDR\n\
+            li t1, {chunk}\n\
+            sw t1, 0(t0)\n\
+            la t0, DMA_TRIGGER_ADDR\n\
+            sw zero, 0(t0)\n\
+            {wait2}\
+            db_skip_final:\n",
+            wait = legacy_dma_wait(91),
+            wait2 = legacy_dma_wait(92),
+            l2 = self.l2_out + (last * self.out_bytes),
+            spm = self.out_bufs[(last & 1) as usize],
+            chunk = self.out_bytes,
+        )
+    }
+}
+
+/// The pre-redesign system `SysDbPlumbing`, verbatim.
+struct LegacySysDbPlumbing {
+    chunk_bytes: u32,
+    out_bytes: u32,
+    in_bufs: [u32; 2],
+    out_bufs: [u32; 2],
+    l2_in: u32,
+    l2_out: u32,
+    in_shard_stride: u32,
+    out_shard_stride: u32,
+}
+
+impl LegacySysDbPlumbing {
+    fn program_prologue(&self, rounds: u32) -> String {
+        format!(
+            "\
+            addi sp, sp, -32\n\
+            csrr s9, mhartid\n\
+            li s10, 0\n\
+            li s11, {rounds}\n\
+            # this cluster's shared-L2 shard bases, kept on the stack\n\
+            la t0, CLUSTER_ID_ADDR\n\
+            lw t1, 0(t0)\n\
+            li t0, {in_stride}\n\
+            mul t0, t1, t0\n\
+            li a0, {l2_in}\n\
+            add a0, a0, t0\n\
+            sw a0, 16(sp)\n\
+            li t0, {out_stride}\n\
+            mul t0, t1, t0\n\
+            li a0, {l2_out}\n\
+            add a0, a0, t0\n\
+            sw a0, 20(sp)\n",
+            in_stride = self.in_shard_stride,
+            out_stride = self.out_shard_stride,
+            l2_in = self.l2_in,
+            l2_out = self.l2_out,
+        )
+    }
+
+    fn round_prologue(&self) -> String {
+        format!(
+            "\
+            bnez s9, sdb_skip_dma\n\
+            {wait}\
+            # program the next round's input load (if any)\n\
+            addi t0, s10, 1\n\
+            bge t0, s11, sdb_no_next_in\n\
+            li t1, {chunk}\n\
+            mul t1, t0, t1\n\
+            lw a0, 16(sp)\n\
+            add a0, a0, t1\n\
+            la t0, SYSDMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            andi t1, s10, 1\n\
+            bnez t1, sdb_next_in_even\n\
+            li a1, {in1}\n\
+            j sdb_next_in_set\n\
+            sdb_next_in_even:\n\
+            li a1, {in0}\n\
+            sdb_next_in_set:\n\
+            la t0, SYSDMA_LOCAL_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, SYSDMA_BYTES_ADDR\n\
+            li t1, {chunk}\n\
+            sw t1, 0(t0)\n\
+            la t0, SYSDMA_TRIGGER_ADDR\n\
+            li t1, 1\n\
+            sw t1, 0(t0)\n\
+            sdb_no_next_in:\n\
+            # write back the previous round's output (if any)\n\
+            beqz s10, sdb_no_writeback\n\
+            addi t0, s10, -1\n\
+            li t1, {out_bytes}\n\
+            mul t1, t0, t1\n\
+            lw a0, 20(sp)\n\
+            add a0, a0, t1\n\
+            la t0, SYSDMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            andi t1, s10, 1\n\
+            bnez t1, sdb_wb_odd\n\
+            li a1, {out1}\n\
+            j sdb_wb_set\n\
+            sdb_wb_odd:\n\
+            li a1, {out0}\n\
+            sdb_wb_set:\n\
+            la t0, SYSDMA_LOCAL_ADDR\n\
+            sw a1, 0(t0)\n\
+            la t0, SYSDMA_BYTES_ADDR\n\
+            li t1, {out_bytes}\n\
+            sw t1, 0(t0)\n\
+            la t0, SYSDMA_TRIGGER_ADDR\n\
+            sw zero, 0(t0)\n\
+            sdb_no_writeback:\n\
+            sdb_skip_dma:\n",
+            wait = legacy_sdma_wait(90),
+            chunk = self.chunk_bytes,
+            in0 = self.in_bufs[0],
+            in1 = self.in_bufs[1],
+            out_bytes = self.out_bytes,
+            out0 = self.out_bufs[0],
+            out1 = self.out_bufs[1],
+        )
+    }
+
+    fn epilogue(&self, rounds: u32) -> String {
+        let last = rounds - 1;
+        format!(
+            "\
+            bnez s9, sdb_skip_final\n\
+            {wait}\
+            lw a0, 20(sp)\n\
+            li t1, {last_off}\n\
+            add a0, a0, t1\n\
+            la t0, SYSDMA_L2_ADDR\n\
+            sw a0, 0(t0)\n\
+            la t0, SYSDMA_LOCAL_ADDR\n\
+            li a1, {spm}\n\
+            sw a1, 0(t0)\n\
+            la t0, SYSDMA_BYTES_ADDR\n\
+            li t1, {out_bytes}\n\
+            sw t1, 0(t0)\n\
+            la t0, SYSDMA_TRIGGER_ADDR\n\
+            sw zero, 0(t0)\n\
+            {wait2}\
+            sdb_skip_final:\n",
+            wait = legacy_sdma_wait(91),
+            wait2 = legacy_sdma_wait(92),
+            last_off = last * self.out_bytes,
+            spm = self.out_bufs[(last & 1) as usize],
+            out_bytes = self.out_bytes,
+        )
+    }
+}
+
+/// The pre-redesign streamed-axpy body, verbatim (both targets; the
+/// labels differ by prefix).
+fn legacy_axpy_body(inb: u32, outb: u32, blk: &str, tag: &str, done: &str) -> String {
+    format!(
+        "\
+        li a0, {inb}\n\
+        li a1, {outb}\n\
+        add a0, a0, s8\n\
+        add a1, a1, s8\n\
+        li a2, ALPHA\n\
+        li a3, BLOCKS\n\
+        li a4, BLOCK_STRIDE\n\
+        .align 8\n\
+        {blk}_{tag}:\n\
+        lw t4, 0(a0)\n\
+        lw t5, 4(a0)\n\
+        lw t6, 8(a0)\n\
+        lw a6, 12(a0)\n\
+        p.mac t4, a2, t4\n\
+        p.mac t5, a2, t5\n\
+        p.mac t6, a2, t6\n\
+        p.mac a6, a2, a6\n\
+        sw t4, 0(a1)\n\
+        sw t5, 4(a1)\n\
+        sw t6, 8(a1)\n\
+        sw a6, 12(a1)\n\
+        add a0, a0, a4\n\
+        add a1, a1, a4\n\
+        addi a3, a3, -1\n\
+        bnez a3, {blk}_{tag}\n\
+        j {done}\n"
+    )
+}
+
+/// The pre-redesign streamed-matmul round body, verbatim (both targets).
+/// Starts right after the buffer-select `{p}_buf_set` stores.
+fn legacy_matmul_tile_loop(src: &mut String) {
+    let acc = [
+        "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "a2", "a3", "a4", "a5", "t4", "t5",
+        "t6", "a6",
+    ];
+    src.push_str(
+        "\
+        sw t1, 8(sp)\n\
+        sw t2, 12(sp)\n\
+        sw s9, 0(sp)\n\
+        tile_loop:\n\
+        lw t0, 0(sp)\n\
+        li t1, TOTAL_TILES\n\
+        bge t0, t1, tiles_done\n\
+        addi t1, t0, NUM_CORES\n\
+        sw t1, 0(sp)\n\
+        srli t2, t0, LOG_TILES_C\n\
+        slli t2, t2, 2\n\
+        andi t3, t0, TILES_C_MASK\n\
+        slli t3, t3, 2\n\
+        # A row pointers from this round's slab\n\
+        slli t4, t2, LOG_K_B\n\
+        lw t5, 8(sp)\n\
+        add a0, t5, t4\n\
+        li t6, KBYTES\n\
+        add a1, a0, t6\n\
+        add gp, a1, t6\n\
+        add tp, gp, t6\n\
+        la t5, mat_b\n\
+        slli t4, t3, 2\n\
+        add ra, t5, t4\n\
+        slli t4, t2, LOG_N_B\n\
+        lw t5, 12(sp)\n\
+        add t5, t5, t4\n\
+        slli t4, t3, 2\n\
+        add t5, t5, t4\n\
+        sw t5, 4(sp)\n",
+    );
+    for r in &acc {
+        src.push_str(&format!("li {r}, 0\n"));
+    }
+    src.push_str(
+        "\
+        li a7, KDIM\n\
+        .align 8\n\
+        kloop:\n\
+        p.lw t0, 4(a0!)\n\
+        p.lw t1, 4(a1!)\n\
+        p.lw t2, 4(gp!)\n\
+        p.lw t3, 4(tp!)\n\
+        lw s8, 0(ra)\n",
+    );
+    let avals = ["t0", "t1", "t2", "t3"];
+    for q in 0..4 {
+        if q > 0 {
+            src.push_str(&format!("lw s8, {}(ra)\n", 4 * q));
+        }
+        for r in 0..4 {
+            src.push_str(&format!("p.mac {}, {}, s8\n", acc[4 * r + q], avals[r]));
+        }
+    }
+    src.push_str(
+        "\
+        addi ra, ra, NBYTES\n\
+        addi a7, a7, -1\n\
+        bnez a7, kloop\n\
+        lw t0, 4(sp)\n",
+    );
+    for r in 0..4 {
+        for q in 0..4 {
+            src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
+        }
+        if r != 3 {
+            src.push_str("addi t0, t0, NBYTES\n");
+        }
+    }
+    src.push_str("j tile_loop\ntiles_done:\n");
+}
+
+fn legacy_db_axpy(k: &DbAxpy, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(cfg);
+    let words = k.chunk_words(cfg) as u32;
+    let in0 = rt.data_base;
+    let in1 = in0 + 4 * words;
+    let out0 = in1 + 4 * words;
+    let out1 = out0 + 4 * words;
+    let p = LegacyDbPlumbing {
+        chunk_bytes: 4 * words,
+        out_bytes: 4 * words,
+        in_bufs: [in0, in1],
+        out_bufs: [out0, out1],
+        l2_in: 0x10_0000,
+        l2_out: 0x20_0000,
+    };
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    sym.insert("BLOCKS".into(), (k.per_core / 4) as u32);
+    sym.insert("BLOCK_STRIDE".into(), (cfg.num_tiles() * 64) as u32);
+    sym.insert("ALPHA".into(), k.alpha);
+    let mut src = format!(
+        "\
+        csrr s9, mhartid\n\
+        li s10, 0\n\
+        li s11, {rounds}\n\
+        # this core's island offset within a chunk\n\
+        srli t1, s9, 2\n\
+        andi t2, s9, 3\n\
+        slli t3, t1, 6\n\
+        slli t4, t2, 4\n\
+        add s8, t3, t4\n\
+        db_round:\n\
+        bge s10, s11, db_done\n",
+        rounds = k.rounds
+    );
+    src.push_str(&p.round_prologue());
+    src.push_str(&barrier_asm(80));
+    src.push_str("andi t0, s10, 1\nbnez t0, db_odd\n");
+    src.push_str(&legacy_axpy_body(p.in_bufs[0], p.out_bufs[0], "blk", "even", "db_compute_done"));
+    src.push_str("db_odd:\n");
+    src.push_str(&legacy_axpy_body(p.in_bufs[1], p.out_bufs[1], "blk", "odd", "db_compute_done"));
+    src.push_str("db_compute_done:\n");
+    src.push_str(&barrier_asm(81));
+    src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
+    src.push_str(&p.epilogue(k.rounds as u32));
+    src.push_str(&barrier_asm(82));
+    src.push_str("halt\n");
+    (src, sym)
+}
+
+fn legacy_matmul_symbols(
+    sym: &mut HashMap<String, u32>,
+    a0_buf: u32,
+    slab_rows: usize,
+    n: usize,
+    kdim: usize,
+) {
+    let tiles_c = n / 4;
+    let total_tiles = (slab_rows / 4) * tiles_c;
+    sym.insert("mat_b".into(), a0_buf - 4 * (kdim * n) as u32);
+    sym.insert("TOTAL_TILES".into(), total_tiles as u32);
+    sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
+    sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
+    sym.insert("KBYTES".into(), (kdim * 4) as u32);
+    sym.insert("NBYTES".into(), (n * 4) as u32);
+    sym.insert("KDIM".into(), kdim as u32);
+    sym.insert("LOG_K_B".into(), (kdim * 4).trailing_zeros());
+    sym.insert("LOG_N_B".into(), (n * 4).trailing_zeros());
+}
+
+fn legacy_db_matmul(k: &DbMatmul, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(cfg);
+    let b_words = (k.k * k.n) as u32;
+    let a_words = (k.slab_rows * k.k) as u32;
+    let c_words = (k.slab_rows * k.n) as u32;
+    let b = rt.data_base;
+    let a0 = b + 4 * b_words;
+    let a1 = a0 + 4 * a_words;
+    let c0 = a1 + 4 * a_words;
+    let c1 = c0 + 4 * c_words;
+    let p = LegacyDbPlumbing {
+        chunk_bytes: 4 * a_words,
+        out_bytes: 4 * c_words,
+        in_bufs: [a0, a1],
+        out_bufs: [c0, c1],
+        l2_in: 0x10_0000,
+        l2_out: 0x40_0000,
+    };
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    legacy_matmul_symbols(&mut sym, p.in_bufs[0], k.slab_rows, k.n, k.k);
+    let mut src = format!(
+        "\
+        addi sp, sp, -16\n\
+        csrr s9, mhartid\n\
+        li s10, 0\n\
+        li s11, {rounds}\n\
+        db_round:\n\
+        bge s10, s11, db_done\n",
+        rounds = k.rounds
+    );
+    src.push_str(&p.round_prologue());
+    src.push_str(&barrier_asm(80));
+    src.push_str(&format!(
+        "\
+        andi t0, s10, 1\n\
+        bnez t0, db_buf_odd\n\
+        li t1, {a0}\n\
+        li t2, {c0}\n\
+        j db_buf_set\n\
+        db_buf_odd:\n\
+        li t1, {a1}\n\
+        li t2, {c1}\n\
+        db_buf_set:\n",
+        a0 = p.in_bufs[0],
+        a1 = p.in_bufs[1],
+        c0 = p.out_bufs[0],
+        c1 = p.out_bufs[1],
+    ));
+    legacy_matmul_tile_loop(&mut src);
+    src.push_str(&barrier_asm(81));
+    src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
+    src.push_str(&p.epilogue(k.rounds as u32));
+    src.push_str(&barrier_asm(82));
+    src.push_str("halt\n");
+    (src, sym)
+}
+
+fn legacy_sys_axpy(k: &SysAxpy, cfg: &SystemConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(&cfg.cluster);
+    let chunk = 4 * (k.per_core * cfg.cluster.num_cores()) as u32;
+    let in0 = rt.data_base;
+    let in1 = in0 + chunk;
+    let out0 = in1 + chunk;
+    let out1 = out0 + chunk;
+    let p = LegacySysDbPlumbing {
+        chunk_bytes: chunk,
+        out_bytes: chunk,
+        in_bufs: [in0, in1],
+        out_bufs: [out0, out1],
+        l2_in: 0x10_0000,
+        l2_out: 0x200_0000,
+        in_shard_stride: chunk * k.rounds as u32,
+        out_shard_stride: chunk * k.rounds as u32,
+    };
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    sym.insert("BLOCKS".into(), (k.per_core / 4) as u32);
+    sym.insert("BLOCK_STRIDE".into(), (cfg.cluster.num_tiles() * 64) as u32);
+    sym.insert("ALPHA".into(), k.alpha);
+    let mut src = p.program_prologue(k.rounds as u32);
+    src.push_str(
+        "\
+        # this core's island offset within a chunk\n\
+        srli t1, s9, 2\n\
+        andi t2, s9, 3\n\
+        slli t3, t1, 6\n\
+        slli t4, t2, 4\n\
+        add s8, t3, t4\n\
+        sdb_round:\n\
+        bge s10, s11, sdb_done\n",
+    );
+    src.push_str(&p.round_prologue());
+    src.push_str(&barrier_asm(80));
+    src.push_str("andi t0, s10, 1\nbnez t0, sdb_odd\n");
+    src.push_str(&legacy_axpy_body(
+        p.in_bufs[0],
+        p.out_bufs[0],
+        "sblk",
+        "even",
+        "sdb_compute_done",
+    ));
+    src.push_str("sdb_odd:\n");
+    src.push_str(&legacy_axpy_body(
+        p.in_bufs[1],
+        p.out_bufs[1],
+        "sblk",
+        "odd",
+        "sdb_compute_done",
+    ));
+    src.push_str("sdb_compute_done:\n");
+    src.push_str(&barrier_asm(81));
+    src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
+    src.push_str(&p.epilogue(k.rounds as u32));
+    src.push_str(&barrier_asm(82));
+    src.push_str("halt\n");
+    (src, sym)
+}
+
+fn legacy_sys_matmul(k: &SysMatmul, cfg: &SystemConfig) -> (String, HashMap<String, u32>) {
+    let rt = RtLayout::new(&cfg.cluster);
+    let b_words = (k.k * k.n) as u32;
+    let a_bytes = 4 * (k.slab_rows * k.k) as u32;
+    let c_bytes = 4 * (k.slab_rows * k.n) as u32;
+    let b = rt.data_base;
+    let a0 = b + 4 * b_words;
+    let a1 = a0 + a_bytes;
+    let c0 = a1 + a_bytes;
+    let c1 = c0 + c_bytes;
+    let p = LegacySysDbPlumbing {
+        chunk_bytes: a_bytes,
+        out_bytes: c_bytes,
+        in_bufs: [a0, a1],
+        out_bufs: [c0, c1],
+        l2_in: 0x10_0000,
+        l2_out: 0x200_0000,
+        in_shard_stride: a_bytes * k.rounds as u32,
+        out_shard_stride: c_bytes * k.rounds as u32,
+    };
+    let mut sym = HashMap::new();
+    rt.add_symbols(&mut sym);
+    legacy_matmul_symbols(&mut sym, p.in_bufs[0], k.slab_rows, k.n, k.k);
+    let mut src = p.program_prologue(k.rounds as u32);
+    src.push_str("sdb_round:\nbge s10, s11, sdb_done\n");
+    src.push_str(&p.round_prologue());
+    src.push_str(&barrier_asm(80));
+    src.push_str(&format!(
+        "\
+        andi t0, s10, 1\n\
+        bnez t0, sdb_buf_odd\n\
+        li t1, {a0}\n\
+        li t2, {c0}\n\
+        j sdb_buf_set\n\
+        sdb_buf_odd:\n\
+        li t1, {a1}\n\
+        li t2, {c1}\n\
+        sdb_buf_set:\n",
+        a0 = p.in_bufs[0],
+        a1 = p.in_bufs[1],
+        c0 = p.out_bufs[0],
+        c1 = p.out_bufs[1],
+    ));
+    legacy_matmul_tile_loop(&mut src);
+    src.push_str(&barrier_asm(81));
+    src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
+    src.push_str(&p.epilogue(k.rounds as u32));
+    src.push_str(&barrier_asm(82));
+    src.push_str("halt\n");
+    (src, sym)
+}
+
+#[test]
+fn builder_golden_db_axpy_matches_legacy_string() {
+    let cfg = ClusterConfig::minpool();
+    let k = DbAxpy::new(32, 3);
+    let built = assemble_built(&k, &cfg);
+    let (src, sym) = legacy_db_axpy(&k, &cfg);
+    let legacy = assemble_legacy(&src, sym, &cfg);
+    assert_instruction_identical("db_axpy", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_db_matmul_matches_legacy_string() {
+    let cfg = ClusterConfig::minpool();
+    let k = DbMatmul::new(16, 16, 16, 3);
+    let built = assemble_built(&k, &cfg);
+    let (src, sym) = legacy_db_matmul(&k, &cfg);
+    let legacy = assemble_legacy(&src, sym, &cfg);
+    assert_instruction_identical("db_matmul", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_sys_axpy_matches_legacy_string() {
+    let cfg = SystemConfig::with_cores(2, 4);
+    let k = SysAxpy::new(8, 2);
+    let built = assemble_built_system(&k, &cfg);
+    let (src, sym) = legacy_sys_axpy(&k, &cfg);
+    let legacy = assemble_legacy_system(&src, sym, &cfg);
+    assert_instruction_identical("sys_axpy", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_sys_matmul_matches_legacy_string() {
+    let cfg = SystemConfig::with_cores(2, 4);
+    let k = SysMatmul::new(8, 8, 8, 2);
+    let built = assemble_built_system(&k, &cfg);
+    let (src, sym) = legacy_sys_matmul(&k, &cfg);
+    let legacy = assemble_legacy_system(&src, sym, &cfg);
+    assert_instruction_identical("sys_matmul", &built, &legacy);
+}

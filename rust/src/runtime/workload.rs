@@ -1,0 +1,253 @@
+//! The unified workload-run layer: one [`Workload`] trait, one
+//! [`RunConfig`]/[`RunResult`] pair, and one [`run_workload`] entry point
+//! serving both the single-cluster and the multi-cluster (system)
+//! targets.
+//!
+//! A workload authors its program once through the [`AsmBuilder`]; the
+//! [`Target`] it runs on decides which machine is built around that
+//! program — a standalone [`Cluster`] or a [`System`] of clusters on the
+//! shared fabric. Data placement and verification see the machine
+//! through the [`Machine`] accessor enum, so a cluster-only workload
+//! reads exactly like the old `Kernel` implementations did.
+//!
+//! Backend selection happens exactly once, here: `RunConfig.backend` is
+//! `None` for "respect `MEMPOOL_BACKEND`", resolved a single time at the
+//! top of [`run_workload`] and passed down explicitly — no layer below
+//! reads the environment again.
+
+use crate::config::{ClusterConfig, SystemConfig};
+use crate::isa::Program;
+use crate::runtime::AsmBuilder;
+use crate::sim::{base_symbols, prepare_cluster, Cluster, ClusterStats, SimBackend};
+use crate::system::{prepare_system, system_symbols, System, SystemRunConfig, SystemStats};
+
+/// Which machine a workload runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// One MemPool cluster: cores + shared L1 SPM + cluster DMA.
+    Cluster,
+    /// N clusters on the shared AXI fabric with the banked shared L2 and
+    /// the inter-cluster system DMA.
+    System,
+}
+
+impl Target {
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::Cluster => "cluster",
+            Target::System => "system",
+        }
+    }
+}
+
+/// The concrete configuration a workload builds its program for.
+#[derive(Debug, Clone)]
+pub enum TargetConfig {
+    Cluster(ClusterConfig),
+    System(SystemConfig),
+}
+
+impl TargetConfig {
+    pub fn target(&self) -> Target {
+        match self {
+            TargetConfig::Cluster(_) => Target::Cluster,
+            TargetConfig::System(_) => Target::System,
+        }
+    }
+
+    /// The per-cluster shape (both targets have one).
+    pub fn cluster(&self) -> &ClusterConfig {
+        match self {
+            TargetConfig::Cluster(c) => c,
+            TargetConfig::System(s) => &s.cluster,
+        }
+    }
+
+    /// The system shape; panics on the cluster target (a workload asking
+    /// for it on the wrong target is a registry bug, not a user error).
+    pub fn system(&self) -> &SystemConfig {
+        match self {
+            TargetConfig::System(s) => s,
+            TargetConfig::Cluster(_) => {
+                panic!("cluster-target run has no SystemConfig")
+            }
+        }
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        match self {
+            TargetConfig::Cluster(_) => 1,
+            TargetConfig::System(s) => s.num_clusters,
+        }
+    }
+}
+
+/// The simulated machine a run produced, for data placement (`setup`)
+/// and result inspection (`verify`, tests, studies).
+pub enum Machine {
+    Cluster(Box<Cluster>),
+    System(Box<System>),
+}
+
+impl Machine {
+    /// The standalone cluster; panics on a system-target machine.
+    pub fn cluster(&mut self) -> &mut Cluster {
+        match self {
+            Machine::Cluster(c) => c,
+            Machine::System(_) => {
+                panic!("workload ran on the system target; use Machine::system()")
+            }
+        }
+    }
+
+    /// The multi-cluster system; panics on a cluster-target machine.
+    pub fn system(&mut self) -> &mut System {
+        match self {
+            Machine::System(s) => s,
+            Machine::Cluster(_) => {
+                panic!("workload ran on the cluster target; use Machine::cluster()")
+            }
+        }
+    }
+}
+
+/// A runnable, verifiable workload — the single authoring surface for
+/// every kernel, on every target.
+pub trait Workload {
+    /// Registry name (one name per workload, shared across its targets).
+    fn name(&self) -> &'static str;
+
+    /// Adjust the per-cluster configuration before the run (e.g. conv2d
+    /// and dct enlarge the sequential regions to hold core-local data
+    /// next to the stacks, as the paper's kernels do).
+    fn prepare_config(&self, _cfg: &mut ClusterConfig) {}
+
+    /// Author the SPMD program (instructions + symbols) for this shape.
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder);
+
+    /// Place input data (zero-time SPM / shared-L2 writes).
+    fn setup(&self, machine: &mut Machine);
+
+    /// Check the simulated output against the host reference.
+    fn verify(&self, machine: &mut Machine) -> Result<(), String>;
+
+    /// 32-bit operations the whole run performs (paper's OP metric).
+    fn total_ops(&self, cfg: &TargetConfig) -> u64;
+}
+
+/// How to run a workload.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub target: TargetConfig,
+    /// Cycle budget; runs panic beyond it.
+    pub max_cycles: u64,
+    /// Invalidate every instruction cache before starting (cold start).
+    pub cold_icache: bool,
+    /// Stepping engine; `None` = read `MEMPOOL_BACKEND` once at the
+    /// [`run_workload`] entry (the reference serial engine when unset).
+    pub backend: Option<SimBackend>,
+}
+
+impl RunConfig {
+    fn on(target: TargetConfig) -> RunConfig {
+        RunConfig { target, max_cycles: 10_000_000, cold_icache: true, backend: None }
+    }
+
+    /// Run on a standalone cluster.
+    pub fn cluster(cfg: &ClusterConfig) -> RunConfig {
+        RunConfig::on(TargetConfig::Cluster(cfg.clone()))
+    }
+
+    /// Run on a multi-cluster system.
+    pub fn system(cfg: &SystemConfig) -> RunConfig {
+        RunConfig::on(TargetConfig::System(cfg.clone()))
+    }
+
+    /// Pin the stepping engine (determinism tests, the sweep runner).
+    pub fn with_backend(mut self, backend: SimBackend) -> RunConfig {
+        self.backend = Some(backend);
+        self
+    }
+}
+
+/// Result of a workload run.
+pub struct RunResult {
+    /// The final machine, for verification and state inspection.
+    pub machine: Machine,
+    /// Execution statistics: the cluster book, or the system-wide
+    /// totals roll-up on the system target (same metrics either way).
+    pub stats: ClusterStats,
+    /// The full system book — per-cluster stats, fabric counters,
+    /// system-DMA activity (system target only).
+    pub system_stats: Option<SystemStats>,
+    pub cycles: u64,
+}
+
+/// Run a workload end-to-end on its target: build the program, construct
+/// the machine, place data, simulate to completion, and collect
+/// statistics. Panics if the run exceeds the cycle budget or the program
+/// fails to assemble — both are authoring bugs, not input errors.
+pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
+    // The only environment read on the whole path (see module docs).
+    let backend = run.backend.unwrap_or_else(SimBackend::from_env);
+    match &run.target {
+        TargetConfig::Cluster(cluster_cfg) => {
+            let mut cfg = cluster_cfg.clone();
+            w.prepare_config(&mut cfg);
+            let tcfg = TargetConfig::Cluster(cfg.clone());
+            let program = assemble_workload(w, &tcfg, base_symbols(&cfg));
+            // The same bring-up recipe the raw-assembly harness uses.
+            let mut low = crate::sim::RunConfig::with_backend(cfg, backend);
+            low.max_cycles = run.max_cycles;
+            low.cold_icache = run.cold_icache;
+            let cluster = prepare_cluster(&low, program);
+            let mut machine = Machine::Cluster(Box::new(cluster));
+            w.setup(&mut machine);
+            let completed = machine.cluster().run(run.max_cycles);
+            assert!(completed, "workload {} did not complete within the cycle budget", w.name());
+            let (cycles, stats) = {
+                let c = machine.cluster();
+                (c.now(), c.stats())
+            };
+            RunResult { machine, stats, system_stats: None, cycles }
+        }
+        TargetConfig::System(system_cfg) => {
+            let mut cfg = system_cfg.clone();
+            w.prepare_config(&mut cfg.cluster);
+            let tcfg = TargetConfig::System(cfg.clone());
+            let program = assemble_workload(w, &tcfg, system_symbols(&cfg));
+            // The same bring-up recipe the raw-assembly harness uses.
+            let mut low = SystemRunConfig::with_backend(cfg, backend);
+            low.max_cycles = run.max_cycles;
+            low.cold_icache = run.cold_icache;
+            let system = prepare_system(&low, program);
+            let mut machine = Machine::System(Box::new(system));
+            w.setup(&mut machine);
+            let completed = machine.system().run(run.max_cycles);
+            assert!(completed, "workload {} did not complete within the cycle budget", w.name());
+            let (cycles, sys_stats) = {
+                let s = machine.system();
+                (s.now(), s.stats())
+            };
+            let stats = sys_stats.totals.clone();
+            RunResult { machine, stats, system_stats: Some(sys_stats), cycles }
+        }
+    }
+}
+
+/// Build + assemble a workload's program, merging in the harness symbols
+/// (geometry, control-register addresses) the workload did not override.
+fn assemble_workload(
+    w: &dyn Workload,
+    tcfg: &TargetConfig,
+    harness_symbols: std::collections::HashMap<String, u32>,
+) -> Program {
+    let mut b = AsmBuilder::new();
+    w.build(tcfg, &mut b);
+    let (src, mut sym) = b.finish();
+    for (k, v) in harness_symbols {
+        sym.entry(k).or_insert(v);
+    }
+    Program::assemble(&src, &sym)
+        .unwrap_or_else(|e| panic!("workload {}: assembly failed: {e}", w.name()))
+}

@@ -259,7 +259,11 @@ impl Cluster {
             group_accesses: 0,
             global_accesses: 0,
             energy_params: EnergyParams::default(),
-            backend: SimBackend::from_env(),
+            // The reference serial engine; every harness overrides this
+            // from its run configuration, so backend selection (and the
+            // `MEMPOOL_BACKEND` read) happens exactly once per run at
+            // the entry point, not here.
+            backend: SimBackend::Serial,
             scratch: Vec::new(),
             cfg,
         }

@@ -20,13 +20,16 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Default backend from `MEMPOOL_BACKEND` — the environment is read
+    /// exactly once, here (kernel-level runs go through
+    /// `runtime::run_workload`, which resolves the backend itself and
+    /// uses [`RunConfig::with_backend`]).
     pub fn new(cluster: ClusterConfig) -> Self {
-        RunConfig {
-            cluster,
-            max_cycles: 10_000_000,
-            cold_icache: true,
-            backend: SimBackend::from_env(),
-        }
+        RunConfig::with_backend(cluster, SimBackend::from_env())
+    }
+
+    pub fn with_backend(cluster: ClusterConfig, backend: SimBackend) -> Self {
+        RunConfig { cluster, max_cycles: 10_000_000, cold_icache: true, backend }
     }
 }
 
@@ -36,6 +39,23 @@ pub struct KernelResult {
     pub stats: ClusterStats,
     pub completed: bool,
     pub cycles: u64,
+}
+
+/// Construct the cluster around an assembled program in this run's
+/// cold-start state: stepping backend, cores reset to entry 0, and
+/// (optionally) invalidated instruction caches. The single bring-up
+/// recipe shared by [`run_kernel`] and the kernel-level
+/// `runtime::run_workload` path.
+pub fn prepare_cluster(run: &RunConfig, program: Program) -> Cluster {
+    let mut cluster = Cluster::new(run.cluster.clone(), program);
+    cluster.backend = run.backend;
+    cluster.reset_cores(0);
+    if run.cold_icache {
+        for t in &mut cluster.tiles {
+            t.icache.invalidate_all();
+        }
+    }
+    cluster
 }
 
 /// Assemble `src` with `symbols`, initialize the cluster via `setup`
@@ -49,14 +69,7 @@ pub fn run_kernel(
 ) -> KernelResult {
     let program = Program::assemble(src, symbols)
         .unwrap_or_else(|e| panic!("kernel assembly failed: {e}"));
-    let mut cluster = Cluster::new(run.cluster.clone(), program);
-    cluster.backend = run.backend;
-    cluster.reset_cores(0);
-    if run.cold_icache {
-        for t in &mut cluster.tiles {
-            t.icache.invalidate_all();
-        }
-    }
+    let mut cluster = prepare_cluster(run, program);
     setup(&mut cluster);
     let completed = cluster.run(run.max_cycles);
     let cycles = cluster.now();

@@ -9,7 +9,7 @@ mod harness;
 mod stats;
 
 pub use cluster::{Cluster, SimBackend, SpmView, SysDmaOp, SysDmaRequest};
-pub use harness::{base_symbols, run_kernel, KernelResult, RunConfig};
+pub use harness::{base_symbols, prepare_cluster, run_kernel, KernelResult, RunConfig};
 pub use stats::{ClusterStats, CycleBreakdown};
 
 #[cfg(test)]

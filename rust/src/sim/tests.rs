@@ -352,22 +352,29 @@ fn assert_backends_agree(
 
 #[test]
 fn parallel_backend_matches_serial_for_covered_kernels() {
-    use crate::kernels::{run_with_backend, Axpy, Dotp, Kernel, Matmul};
+    use crate::kernels::{Axpy, Dotp, Matmul};
+    use crate::runtime::{run_workload, RunConfig, Workload};
     let cfg = ClusterConfig::minpool();
-    let kernels: Vec<Box<dyn Kernel>> = vec![
+    let kernels: Vec<Box<dyn Workload>> = vec![
         Box::new(Matmul::weak_scaled(cfg.num_cores())),
         Box::new(Axpy::weak_scaled(cfg.num_cores())),
         Box::new(Dotp::weak_scaled(cfg.num_cores())),
     ];
     for k in kernels {
-        let a = run_with_backend(k.as_ref(), &cfg, SimBackend::Serial);
-        let b = run_with_backend(k.as_ref(), &cfg, SimBackend::Parallel);
+        let a = run_workload(
+            k.as_ref(),
+            &RunConfig::cluster(&cfg).with_backend(SimBackend::Serial),
+        );
+        let b = run_workload(
+            k.as_ref(),
+            &RunConfig::cluster(&cfg).with_backend(SimBackend::Parallel),
+        );
         assert_eq!(a.cycles, b.cycles, "{}: cycle counts diverge", k.name());
         assert_eq!(a.stats, b.stats, "{}: statistics diverge", k.name());
-        let mut ca = a.cluster;
-        let mut cb = b.cluster;
-        k.verify(&mut ca).unwrap_or_else(|e| panic!("{} serial: {e}", k.name()));
-        k.verify(&mut cb).unwrap_or_else(|e| panic!("{} parallel: {e}", k.name()));
+        let mut ma = a.machine;
+        let mut mb = b.machine;
+        k.verify(&mut ma).unwrap_or_else(|e| panic!("{} serial: {e}", k.name()));
+        k.verify(&mut mb).unwrap_or_else(|e| panic!("{} parallel: {e}", k.name()));
     }
 }
 

@@ -11,10 +11,17 @@ use crate::energy::AreaBreakdown;
 use crate::icache::ICacheConfig;
 use crate::kernels::apps::{Bfs, HistEq, Raytrace};
 use crate::kernels::doublebuf::{DbAxpy, DbMatmul};
-use crate::kernels::{run_and_verify, table1_kernels, Kernel, Matmul};
+use crate::kernels::Matmul;
 use crate::mem::{AddressMap, L2Memory, SramBank};
-use crate::sim::{ClusterStats, KernelResult};
+use crate::runtime::{run_workload, table1_workloads, RunConfig, RunResult, Workload};
+use crate::sim::ClusterStats;
 use crate::trafficgen::{fig4_loads, fig5_plocals, run_netsim, NetSimConfig};
+
+/// Run one workload on a standalone cluster with the environment-chosen
+/// backend (the studies' common case).
+fn run_on_cluster(w: &dyn Workload, cfg: &ClusterConfig) -> RunResult {
+    run_workload(w, &RunConfig::cluster(cfg))
+}
 
 /// Fig 4 — network throughput/latency vs injected load per topology.
 #[derive(Debug, Clone)]
@@ -266,10 +273,10 @@ pub struct Table1Row {
 }
 
 pub fn table1(cfg: &ClusterConfig) -> Vec<Table1Row> {
-    table1_kernels(cfg)
+    table1_workloads(cfg)
         .into_iter()
         .map(|k| {
-            let r = run_and_verify(k.as_ref(), cfg);
+            let r = run_on_cluster(k.as_ref(), cfg);
             let s = &r.stats;
             let clock = cfg.clock_hz;
             Table1Row {
@@ -304,8 +311,8 @@ pub fn fig13_scaling(core_counts: &[usize]) -> Vec<ScalingRow> {
     let mut rows = Vec::new();
     for &cores in core_counts {
         let cfg = ClusterConfig::with_cores(cores);
-        for k in table1_kernels(&cfg) {
-            let r = run_and_verify(k.as_ref(), &cfg);
+        for k in table1_workloads(&cfg) {
+            let r = run_on_cluster(k.as_ref(), &cfg);
             let s = &r.stats;
             let issued = (s.issued_compute + s.issued_control) as f64;
             let speedup = issued / r.cycles as f64;
@@ -327,10 +334,10 @@ pub fn fig13_scaling(core_counts: &[usize]) -> Vec<ScalingRow> {
 
 /// Fig 14 — cycle breakdown per kernel.
 pub fn fig14_breakdown(cfg: &ClusterConfig) -> Vec<(&'static str, ClusterStats)> {
-    table1_kernels(cfg)
+    table1_workloads(cfg)
         .into_iter()
         .map(|k| {
-            let r = run_and_verify(k.as_ref(), cfg);
+            let r = run_on_cluster(k.as_ref(), cfg);
             (k.name(), r.stats)
         })
         .collect()
@@ -350,24 +357,25 @@ pub struct DoubleBufRow {
 }
 
 pub fn fig15_doublebuf(cfg: &ClusterConfig) -> Vec<DoubleBufRow> {
-    let kernels: Vec<Box<dyn Kernel>> = vec![
+    let kernels: Vec<Box<dyn Workload>> = vec![
         Box::new(DbMatmul::weak_scaled(cfg.num_cores())),
         Box::new(DbAxpy::weak_scaled(cfg.num_cores())),
     ];
     kernels
         .into_iter()
         .map(|k| {
-            let r = run_and_verify(k.as_ref(), cfg);
+            let mut r = run_on_cluster(k.as_ref(), cfg);
             let s = &r.stats;
             let bd = s.breakdown();
+            let dma = &r.machine.cluster().dma.stats;
             DoubleBufRow {
                 kernel: if k.name() == "db_matmul" { "db_matmul" } else { "db_axpy" },
                 cycles: r.cycles,
                 ipc: s.ipc(),
                 ops_per_cycle: s.ops_per_cycle(),
                 compute_fraction: bd.compute + bd.control,
-                dma_transfers: r.cluster.dma.stats.transfers,
-                dma_bytes: r.cluster.dma.stats.bytes,
+                dma_transfers: dma.transfers,
+                dma_bytes: dma.bytes,
             }
         })
         .collect()
@@ -385,7 +393,7 @@ pub struct AppRow {
 }
 
 pub fn apps_study(cfg: &ClusterConfig) -> Vec<AppRow> {
-    let kernels: Vec<(&'static str, Box<dyn Kernel>)> = vec![
+    let kernels: Vec<(&'static str, Box<dyn Workload>)> = vec![
         ("histeq", Box::new(HistEq::new())),
         ("raytrace", Box::new(Raytrace::new())),
         ("bfs", Box::new(Bfs::new())),
@@ -393,8 +401,8 @@ pub fn apps_study(cfg: &ClusterConfig) -> Vec<AppRow> {
     kernels
         .into_iter()
         .map(|(name, k)| {
-            let mut r = run_and_verify(k.as_ref(), cfg);
-            k.verify(&mut r.cluster).unwrap_or_else(|e| panic!("{name}: {e}"));
+            let mut r = run_on_cluster(k.as_ref(), cfg);
+            k.verify(&mut r.machine).unwrap_or_else(|e| panic!("{name}: {e}"));
             let bd = r.stats.breakdown();
             AppRow {
                 app: name,
@@ -431,9 +439,9 @@ pub fn fig16_instr_energy() -> Vec<InstrEnergyRow> {
 }
 
 /// Fig 17 — hierarchical power breakdown of a matmul run.
-pub fn fig17_power(cfg: &ClusterConfig) -> (KernelResult, f64, f64, f64) {
+pub fn fig17_power(cfg: &ClusterConfig) -> (RunResult, f64, f64, f64) {
     let kernel = Matmul::weak_scaled(cfg.num_cores());
-    let r = run_and_verify(&kernel, cfg);
+    let r = run_on_cluster(&kernel, cfg);
     let (cores, net, banks) = r.stats.energy.shares();
     (r, cores, net, banks)
 }

@@ -1,6 +1,7 @@
 //! The scenario sweep runner: fan a grid of `ClusterConfig` × kernel
-//! combinations across host threads, run each through the standard
-//! `run_kernel` harness (with the configured stepping backend), and emit
+//! combinations across host threads, run each through the unified
+//! `run_workload` entry point (with the configured stepping backend,
+//! resolving names in the one workload registry), and emit
 //! machine-readable JSON — the workload behind the paper's large
 //! configuration sweeps (Fig 13 scaling, Fig 14 breakdown) and the CI
 //! perf-smoke gate.
@@ -16,27 +17,10 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{ClusterConfig, SystemConfig};
-use crate::kernels::{run_with_backend, Axpy, Conv2d, Dct, Dotp, Kernel, Matmul};
+use crate::runtime::{run_workload, workload_by_name, RunConfig, Target, Workload};
 use crate::sim::SimBackend;
-use crate::system::{run_system_with_backend, system_kernel_by_name, SYSTEM_KERNELS};
 use crate::util::json::Json;
 use crate::util::par::default_jobs;
-
-/// Kernel names the sweep understands.
-pub const SWEEP_KERNELS: &[&str] = &["matmul", "conv2d", "dct", "axpy", "dotp"];
-
-/// Instantiate a kernel by name at its paper-shaped weak scaling for
-/// `cores`.
-pub fn kernel_by_name(name: &str, cores: usize) -> Option<Box<dyn Kernel>> {
-    Some(match name {
-        "matmul" => Box::new(Matmul::weak_scaled(cores)),
-        "conv2d" => Box::new(Conv2d::weak_scaled(cores)),
-        "dct" => Box::new(Dct::weak_scaled(cores)),
-        "axpy" => Box::new(Axpy::weak_scaled(cores)),
-        "dotp" => Box::new(Dotp::weak_scaled(cores)),
-        _ => return None,
-    })
-}
 
 /// Cluster shape for a preset at a given core count.
 pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
@@ -59,8 +43,8 @@ pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
 pub struct SweepSpec {
     pub preset: String,
     /// Cluster counts (the system axis; 1 = a standalone cluster). Counts
-    /// above 1 run the multi-cluster `system` harness, so only kernels
-    /// with a system variant ([`SYSTEM_KERNELS`]) are valid there. Note
+    /// above 1 run the multi-cluster `system` harness, so only workloads
+    /// with a system-target registry entry are valid there. Note
     /// the *workload* differs across the axis: `clusters = 1` runs the
     /// classic single-cluster kernel (SPM-resident data, no system DMA),
     /// while `clusters > 1` runs the system variant (shared-L2 shards
@@ -145,23 +129,23 @@ pub fn run_point(
     let cfg = config_for(preset, cores)?;
     let t0 = Instant::now();
     let (cycles, stats, fabric_wait_cycles) = if clusters <= 1 {
-        let kernel = kernel_by_name(kernel_name, cores)
-            .ok_or_else(|| format!("unknown kernel `{kernel_name}` (try {SWEEP_KERNELS:?})"))?;
-        let mut result = run_with_backend(kernel.as_ref(), &cfg, backend);
-        kernel
-            .verify(&mut result.cluster)
+        let workload = workload_by_name(kernel_name, Target::Cluster, cores)?;
+        let run = RunConfig::cluster(&cfg).with_backend(backend);
+        let mut result = run_workload(workload.as_ref(), &run);
+        workload
+            .verify(&mut result.machine)
             .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
         (result.cycles, result.stats, 0)
     } else {
-        let kernel = system_kernel_by_name(kernel_name, cores).ok_or_else(|| {
-            format!("kernel `{kernel_name}` has no multi-cluster variant (try {SYSTEM_KERNELS:?})")
-        })?;
+        let workload = workload_by_name(kernel_name, Target::System, cores)?;
         let syscfg = SystemConfig::new(clusters, cfg);
-        let mut result = run_system_with_backend(kernel.as_ref(), &syscfg, backend);
-        kernel.verify(&mut result.system).map_err(|e| {
+        let run = RunConfig::system(&syscfg).with_backend(backend);
+        let mut result = run_workload(workload.as_ref(), &run);
+        workload.verify(&mut result.machine).map_err(|e| {
             format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
         })?;
-        (result.cycles, result.stats.totals, result.stats.fabric_wait_cycles)
+        let fabric_wait = result.system_stats.as_ref().map_or(0, |s| s.fabric_wait_cycles);
+        (result.cycles, result.stats, fabric_wait)
     };
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let bd = stats.breakdown();
@@ -431,9 +415,10 @@ mod tests {
         assert!(points.iter().all(|p| p.cycles > 0));
         let baseline = baseline_json(&spec, &points);
         check_baseline(&points, &baseline).expect("self-baseline must match");
-        // Kernels without a system variant fail loudly on the cluster axis.
+        // Workloads without a system variant fail loudly on the cluster
+        // axis, naming the ones that have one.
         let err = run_point("minpool", "dotp", 2, 4, SimBackend::Serial).unwrap_err();
-        assert!(err.contains("no multi-cluster variant"), "{err}");
+        assert!(err.contains("no system-target variant"), "{err}");
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! Multi-cluster (system-level) kernels: SPMD programs every cluster runs
-//! identically, branching on `CTRL_CLUSTER_ID` to find its shard of the
-//! shared-L2-resident problem. Both kernels double-buffer through the
-//! per-cluster system-DMA frontend — the Fig 15 round structure lifted to
-//! the system fabric:
+//! Multi-cluster (system-target) workloads: SPMD programs every cluster
+//! runs identically, branching on `CTRL_CLUSTER_ID` to find its shard of
+//! the shared-L2-resident problem. Both double-buffer through the
+//! per-cluster system-DMA frontend — the Fig 15 round structure lifted
+//! to the system fabric, authored through the same [`DbPlumbing`] and
+//! round emitters as the cluster-target double-buffered kernels (only
+//! the DMA register set and the stack-held shard bases differ):
 //!
 //! - [`SysMatmul`]: C = A·B with A (and C) row-sharded across clusters,
 //!   B resident in every cluster's SPM; A slabs stream in from shared L2
@@ -16,228 +18,17 @@
 //! each other — shards are independent — so system scaling is limited
 //! only by the shared fabric, which is exactly what the contention stats
 //! measure.
+//!
+//! Both register in the unified workload registry under their kernel's
+//! plain name (`matmul`, `axpy`) as the `system`-target variant.
 
-use std::collections::HashMap;
-
-use super::{run_system_kernel, system_symbols, System, SystemKernelResult, SystemRunConfig};
 use crate::config::SystemConfig;
-use crate::kernels::rt::{barrier_asm, RtLayout};
-use crate::sim::SimBackend;
-
-/// Kernel names with a multi-cluster variant (the sweep's cluster axis).
-pub const SYSTEM_KERNELS: &[&str] = &["matmul", "axpy"];
-
-/// A runnable, verifiable multi-cluster workload.
-pub trait SystemKernel {
-    fn name(&self) -> &'static str;
-
-    /// Assembly source + extra symbols for this system shape. The same
-    /// program runs on every cluster (SPMD over `CTRL_CLUSTER_ID`).
-    fn generate(&self, cfg: &SystemConfig) -> (String, HashMap<String, u32>);
-
-    /// Place input data (zero-time SPM and shared-L2 writes).
-    fn setup(&self, system: &mut System);
-
-    /// Check the shared-L2 output against the host reference.
-    fn verify(&self, system: &mut System) -> Result<(), String>;
-
-    /// 32-bit operations the whole system performs.
-    fn total_ops(&self, cfg: &SystemConfig) -> u64;
-}
-
-/// Instantiate a system kernel by sweep name at its weak-scaled shape
-/// for `cores` per cluster.
-pub fn system_kernel_by_name(name: &str, cores: usize) -> Option<Box<dyn SystemKernel>> {
-    Some(match name {
-        "matmul" => Box::new(SysMatmul::weak_scaled(cores)),
-        "axpy" => Box::new(SysAxpy::weak_scaled(cores)),
-        _ => return None,
-    })
-}
-
-/// Run a system kernel end-to-end with an explicit stepping engine:
-/// generate, place data, simulate, and assert completion. Callers verify
-/// separately (the sweep wants the error, tests want the panic site).
-pub fn run_system_with_backend(
-    kernel: &dyn SystemKernel,
-    cfg: &SystemConfig,
-    backend: SimBackend,
-) -> SystemKernelResult {
-    let (src, mut sym) = kernel.generate(cfg);
-    for (k, v) in system_symbols(cfg) {
-        sym.entry(k).or_insert(v);
-    }
-    let mut run = SystemRunConfig::new(cfg.clone());
-    run.backend = backend;
-    let result = run_system_kernel(&run, &src, &sym, |s| kernel.setup(s));
-    assert!(
-        result.completed,
-        "system kernel {} did not complete within the cycle budget",
-        kernel.name()
-    );
-    result
-}
-
-/// Spin until the system-DMA frontend reports idle. Clobbers t0/t1.
-fn sdma_wait_asm(id: usize) -> String {
-    format!(
-        "\
-        la t0, SYSDMA_STATUS_ADDR\n\
-        sdma_poll_{id}: lw t1, 0(t0)\n\
-        bnez t1, sdma_poll_{id}\n"
-    )
-}
-
-/// Ping-pong plumbing for the system-level double-buffered kernels.
-/// Shard bases live on each core's stack (16(sp) input, 20(sp) output)
-/// because the matmul variant needs every saved register for its
-/// accumulators.
-struct SysDbPlumbing {
-    /// Input chunk size (bytes) per round.
-    chunk_bytes: u32,
-    /// Output chunk size (bytes) per round.
-    out_bytes: u32,
-    in_bufs: [u32; 2],
-    out_bufs: [u32; 2],
-    /// Base of cluster 0's input shard in shared L2.
-    l2_in: u32,
-    /// Base of cluster 0's output shard in shared L2.
-    l2_out: u32,
-    /// Shared-L2 distance between consecutive clusters' shards.
-    in_shard_stride: u32,
-    out_shard_stride: u32,
-}
-
-impl SysDbPlumbing {
-    /// Program entry: stack frame, round state (s9 = hartid, s10 = round,
-    /// s11 = rounds), and this cluster's shard bases computed from
-    /// `CTRL_CLUSTER_ID` into 16(sp)/20(sp). Clobbers t0/t1, a0.
-    fn program_prologue(&self, rounds: u32) -> String {
-        format!(
-            "\
-            addi sp, sp, -32\n\
-            csrr s9, mhartid\n\
-            li s10, 0\n\
-            li s11, {rounds}\n\
-            # this cluster's shared-L2 shard bases, kept on the stack\n\
-            la t0, CLUSTER_ID_ADDR\n\
-            lw t1, 0(t0)\n\
-            li t0, {in_stride}\n\
-            mul t0, t1, t0\n\
-            li a0, {l2_in}\n\
-            add a0, a0, t0\n\
-            sw a0, 16(sp)\n\
-            li t0, {out_stride}\n\
-            mul t0, t1, t0\n\
-            li a0, {l2_out}\n\
-            add a0, a0, t0\n\
-            sw a0, 20(sp)\n",
-            in_stride = self.in_shard_stride,
-            out_stride = self.out_shard_stride,
-            l2_in = self.l2_in,
-            l2_out = self.l2_out,
-        )
-    }
-
-    /// Hart 0's system-DMA orchestration at the top of round s10: wait
-    /// for the previous round's transfers, program the next round's input
-    /// load, then the previous round's output write-back. Clobbers t0/t1,
-    /// a0/a1.
-    fn round_prologue(&self) -> String {
-        format!(
-            "\
-            bnez s9, sdb_skip_dma\n\
-            {wait}\
-            # program the next round's input load (if any)\n\
-            addi t0, s10, 1\n\
-            bge t0, s11, sdb_no_next_in\n\
-            li t1, {chunk}\n\
-            mul t1, t0, t1\n\
-            lw a0, 16(sp)\n\
-            add a0, a0, t1\n\
-            la t0, SYSDMA_L2_ADDR\n\
-            sw a0, 0(t0)\n\
-            andi t1, s10, 1\n\
-            bnez t1, sdb_next_in_even\n\
-            li a1, {in1}\n\
-            j sdb_next_in_set\n\
-            sdb_next_in_even:\n\
-            li a1, {in0}\n\
-            sdb_next_in_set:\n\
-            la t0, SYSDMA_LOCAL_ADDR\n\
-            sw a1, 0(t0)\n\
-            la t0, SYSDMA_BYTES_ADDR\n\
-            li t1, {chunk}\n\
-            sw t1, 0(t0)\n\
-            la t0, SYSDMA_TRIGGER_ADDR\n\
-            li t1, 1\n\
-            sw t1, 0(t0)\n\
-            sdb_no_next_in:\n\
-            # write back the previous round's output (if any)\n\
-            beqz s10, sdb_no_writeback\n\
-            addi t0, s10, -1\n\
-            li t1, {out_bytes}\n\
-            mul t1, t0, t1\n\
-            lw a0, 20(sp)\n\
-            add a0, a0, t1\n\
-            la t0, SYSDMA_L2_ADDR\n\
-            sw a0, 0(t0)\n\
-            andi t1, s10, 1\n\
-            bnez t1, sdb_wb_odd\n\
-            li a1, {out1}\n\
-            j sdb_wb_set\n\
-            sdb_wb_odd:\n\
-            li a1, {out0}\n\
-            sdb_wb_set:\n\
-            la t0, SYSDMA_LOCAL_ADDR\n\
-            sw a1, 0(t0)\n\
-            la t0, SYSDMA_BYTES_ADDR\n\
-            li t1, {out_bytes}\n\
-            sw t1, 0(t0)\n\
-            la t0, SYSDMA_TRIGGER_ADDR\n\
-            sw zero, 0(t0)\n\
-            sdb_no_writeback:\n\
-            sdb_skip_dma:\n",
-            wait = sdma_wait_asm(90),
-            chunk = self.chunk_bytes,
-            in0 = self.in_bufs[0],
-            in1 = self.in_bufs[1],
-            out_bytes = self.out_bytes,
-            out0 = self.out_bufs[0],
-            out1 = self.out_bufs[1],
-        )
-    }
-
-    /// Final write-back of the last round's output.
-    fn epilogue(&self, rounds: u32) -> String {
-        let last = rounds - 1;
-        format!(
-            "\
-            bnez s9, sdb_skip_final\n\
-            {wait}\
-            lw a0, 20(sp)\n\
-            li t1, {last_off}\n\
-            add a0, a0, t1\n\
-            la t0, SYSDMA_L2_ADDR\n\
-            sw a0, 0(t0)\n\
-            la t0, SYSDMA_LOCAL_ADDR\n\
-            li a1, {spm}\n\
-            sw a1, 0(t0)\n\
-            la t0, SYSDMA_BYTES_ADDR\n\
-            li t1, {out_bytes}\n\
-            sw t1, 0(t0)\n\
-            la t0, SYSDMA_TRIGGER_ADDR\n\
-            sw zero, 0(t0)\n\
-            {wait2}\
-            sdb_skip_final:\n",
-            wait = sdma_wait_asm(91),
-            wait2 = sdma_wait_asm(92),
-            last_off = last * self.out_bytes,
-            spm = self.out_bufs[(last & 1) as usize],
-            out_bytes = self.out_bytes,
-        )
-    }
-}
+use crate::kernels::doublebuf::{
+    define_streamed_matmul_symbols, emit_streamed_axpy, emit_streamed_matmul, DbPlumbing,
+    SysShard,
+};
+use crate::kernels::rt::RtLayout;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
 
 /// System-level double-buffered streaming kernel: `out = (α+1)·x` over a
 /// shared-L2-resident vector sharded across clusters.
@@ -265,22 +56,24 @@ impl SysAxpy {
         self.per_core * cfg.cluster.num_cores()
     }
 
-    fn plumbing(&self, cfg: &SystemConfig) -> SysDbPlumbing {
+    fn plumbing(&self, cfg: &SystemConfig) -> DbPlumbing {
         let rt = RtLayout::new(&cfg.cluster);
         let chunk = 4 * self.chunk_words(cfg) as u32;
         let in0 = rt.data_base;
         let in1 = in0 + chunk;
         let out0 = in1 + chunk;
         let out1 = out0 + chunk;
-        SysDbPlumbing {
+        DbPlumbing {
             chunk_bytes: chunk,
             out_bytes: chunk,
             in_bufs: [in0, in1],
             out_bufs: [out0, out1],
             l2_in: 0x10_0000,
             l2_out: 0x200_0000,
-            in_shard_stride: chunk * self.rounds as u32,
-            out_shard_stride: chunk * self.rounds as u32,
+            shard: Some(SysShard {
+                in_stride: chunk * self.rounds as u32,
+                out_stride: chunk * self.rounds as u32,
+            }),
         }
     }
 
@@ -292,82 +85,25 @@ impl SysAxpy {
     }
 }
 
-impl SystemKernel for SysAxpy {
+impl Workload for SysAxpy {
     fn name(&self) -> &'static str {
-        "sys_axpy"
+        "axpy"
     }
 
-    fn generate(&self, cfg: &SystemConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.system();
         let p = self.plumbing(cfg);
         let rt = RtLayout::new(&cfg.cluster);
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("BLOCKS".into(), (self.per_core / 4) as u32);
-        sym.insert("BLOCK_STRIDE".into(), (cfg.cluster.num_tiles() * 64) as u32);
-        sym.insert("ALPHA".into(), self.alpha);
-        let mut src = p.program_prologue(self.rounds as u32);
-        src.push_str(
-            "\
-            # this core's island offset within a chunk\n\
-            srli t1, s9, 2\n\
-            andi t2, s9, 3\n\
-            slli t3, t1, 6\n\
-            slli t4, t2, 4\n\
-            add s8, t3, t4\n\
-            sdb_round:\n\
-            bge s10, s11, sdb_done\n",
-        );
-        src.push_str(&p.round_prologue());
-        src.push_str(&barrier_asm(80));
-        src.push_str(
-            "\
-            andi t0, s10, 1\n\
-            bnez t0, sdb_odd\n",
-        );
-        let body = |inb: u32, outb: u32, tag: &str| {
-            format!(
-                "\
-                li a0, {inb}\n\
-                li a1, {outb}\n\
-                add a0, a0, s8\n\
-                add a1, a1, s8\n\
-                li a2, ALPHA\n\
-                li a3, BLOCKS\n\
-                li a4, BLOCK_STRIDE\n\
-                .align 8\n\
-                sblk_{tag}:\n\
-                lw t4, 0(a0)\n\
-                lw t5, 4(a0)\n\
-                lw t6, 8(a0)\n\
-                lw a6, 12(a0)\n\
-                p.mac t4, a2, t4\n\
-                p.mac t5, a2, t5\n\
-                p.mac t6, a2, t6\n\
-                p.mac a6, a2, a6\n\
-                sw t4, 0(a1)\n\
-                sw t5, 4(a1)\n\
-                sw t6, 8(a1)\n\
-                sw a6, 12(a1)\n\
-                add a0, a0, a4\n\
-                add a1, a1, a4\n\
-                addi a3, a3, -1\n\
-                bnez a3, sblk_{tag}\n\
-                j sdb_compute_done\n"
-            )
-        };
-        src.push_str(&body(p.in_bufs[0], p.out_bufs[0], "even"));
-        src.push_str("sdb_odd:\n");
-        src.push_str(&body(p.in_bufs[1], p.out_bufs[1], "odd"));
-        src.push_str("sdb_compute_done:\n");
-        src.push_str(&barrier_asm(81));
-        src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
-        src.push_str(&p.epilogue(self.rounds as u32));
-        src.push_str(&barrier_asm(82));
-        src.push_str("halt\n");
-        (src, sym)
+        rt.add_symbols(b.symbols_mut());
+        b.define("BLOCKS", (self.per_core / 4) as u32);
+        b.define("BLOCK_STRIDE", (cfg.cluster.num_tiles() * 64) as u32);
+        b.define("ALPHA", self.alpha);
+        p.program_prologue(b, self.rounds as u32, 32);
+        emit_streamed_axpy(b, &p, self.rounds as u32);
     }
 
-    fn setup(&self, system: &mut System) {
+    fn setup(&self, machine: &mut Machine) {
+        let system = machine.system();
         let p = self.plumbing(&system.cfg);
         let rt = RtLayout::new(&system.cfg.cluster);
         let x = self.input(&system.cfg);
@@ -385,18 +121,19 @@ impl SystemKernel for SysAxpy {
         }
     }
 
-    fn verify(&self, system: &mut System) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let system = machine.system();
         let p = self.plumbing(&system.cfg);
         let x = self.input(&system.cfg);
         let scale = self.alpha.wrapping_add(1);
+        // The program's own shard layout — one source of truth.
+        let out_stride = p.shard.as_ref().expect("system plumbing").out_stride;
         let shard_words = self.chunk_words(&system.cfg) * self.rounds;
         for (i, xv) in x.iter().enumerate() {
             let cluster = i / shard_words;
             let within = (i % shard_words) as u32;
             let e = xv.wrapping_mul(scale);
-            let got = system
-                .l2
-                .read_word(p.l2_out + cluster as u32 * p.out_shard_stride + 4 * within);
+            let got = system.l2.read_word(p.l2_out + cluster as u32 * out_stride + 4 * within);
             if got != e {
                 return Err(format!(
                     "cluster {cluster} out[{within}] = {got:#x}, expected {e:#x}"
@@ -406,7 +143,8 @@ impl SystemKernel for SysAxpy {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &SystemConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        let cfg = cfg.system();
         2 * (self.chunk_words(cfg) * self.rounds * cfg.num_clusters) as u64
     }
 }
@@ -449,7 +187,7 @@ impl SysMatmul {
         self.slab_rows * self.n
     }
 
-    fn plumbing(&self, cfg: &SystemConfig) -> SysDbPlumbing {
+    fn plumbing(&self, cfg: &SystemConfig) -> DbPlumbing {
         let rt = RtLayout::new(&cfg.cluster);
         let b_words = (self.k * self.n) as u32;
         let a_bytes = 4 * self.a_words() as u32;
@@ -460,15 +198,17 @@ impl SysMatmul {
         let a1 = a0 + a_bytes;
         let c0 = a1 + a_bytes;
         let c1 = c0 + c_bytes;
-        SysDbPlumbing {
+        DbPlumbing {
             chunk_bytes: a_bytes,
             out_bytes: c_bytes,
             in_bufs: [a0, a1],
             out_bufs: [c0, c1],
             l2_in: 0x10_0000,
             l2_out: 0x200_0000,
-            in_shard_stride: a_bytes * self.rounds as u32,
-            out_shard_stride: c_bytes * self.rounds as u32,
+            shard: Some(SysShard {
+                in_stride: a_bytes * self.rounds as u32,
+                out_stride: c_bytes * self.rounds as u32,
+            }),
         }
     }
 
@@ -483,133 +223,23 @@ impl SysMatmul {
     }
 }
 
-impl SystemKernel for SysMatmul {
+impl Workload for SysMatmul {
     fn name(&self) -> &'static str {
-        "sys_matmul"
+        "matmul"
     }
 
-    fn generate(&self, cfg: &SystemConfig) -> (String, HashMap<String, u32>) {
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.system();
         let p = self.plumbing(cfg);
         let rt = RtLayout::new(&cfg.cluster);
-        let tiles_c = self.n / 4;
-        let total_tiles = (self.slab_rows / 4) * tiles_c;
-        let mut sym = HashMap::new();
-        rt.add_symbols(&mut sym);
-        sym.insert("mat_b".into(), p.in_bufs[0] - 4 * (self.k * self.n) as u32);
-        sym.insert("TOTAL_TILES".into(), total_tiles as u32);
-        sym.insert("LOG_TILES_C".into(), tiles_c.trailing_zeros());
-        sym.insert("TILES_C_MASK".into(), (tiles_c - 1) as u32);
-        sym.insert("KBYTES".into(), (self.k * 4) as u32);
-        sym.insert("NBYTES".into(), (self.n * 4) as u32);
-        sym.insert("KDIM".into(), self.k as u32);
-        sym.insert("LOG_K_B".into(), (self.k * 4).trailing_zeros());
-        sym.insert("LOG_N_B".into(), (self.n * 4).trailing_zeros());
-
-        let acc = [
-            "s0", "s1", "s2", "s3", "s4", "s5", "s6", "s7", "a2", "a3", "a4", "a5", "t4", "t5",
-            "t6", "a6",
-        ];
-        let mut src = p.program_prologue(self.rounds as u32);
-        src.push_str("sdb_round:\nbge s10, s11, sdb_done\n");
-        src.push_str(&p.round_prologue());
-        src.push_str(&barrier_asm(80));
-        // Select this round's A and C buffers (kept on the stack).
-        src.push_str(&format!(
-            "\
-            andi t0, s10, 1\n\
-            bnez t0, sdb_buf_odd\n\
-            li t1, {a0}\n\
-            li t2, {c0}\n\
-            j sdb_buf_set\n\
-            sdb_buf_odd:\n\
-            li t1, {a1}\n\
-            li t2, {c1}\n\
-            sdb_buf_set:\n\
-            sw t1, 8(sp)\n\
-            sw t2, 12(sp)\n\
-            sw s9, 0(sp)\n\
-            tile_loop:\n\
-            lw t0, 0(sp)\n\
-            li t1, TOTAL_TILES\n\
-            bge t0, t1, tiles_done\n\
-            addi t1, t0, NUM_CORES\n\
-            sw t1, 0(sp)\n\
-            srli t2, t0, LOG_TILES_C\n\
-            slli t2, t2, 2\n\
-            andi t3, t0, TILES_C_MASK\n\
-            slli t3, t3, 2\n\
-            # A row pointers from this round's slab\n\
-            slli t4, t2, LOG_K_B\n\
-            lw t5, 8(sp)\n\
-            add a0, t5, t4\n\
-            li t6, KBYTES\n\
-            add a1, a0, t6\n\
-            add gp, a1, t6\n\
-            add tp, gp, t6\n\
-            la t5, mat_b\n\
-            slli t4, t3, 2\n\
-            add ra, t5, t4\n\
-            slli t4, t2, LOG_N_B\n\
-            lw t5, 12(sp)\n\
-            add t5, t5, t4\n\
-            slli t4, t3, 2\n\
-            add t5, t5, t4\n\
-            sw t5, 4(sp)\n",
-            a0 = p.in_bufs[0],
-            a1 = p.in_bufs[1],
-            c0 = p.out_bufs[0],
-            c1 = p.out_bufs[1],
-        ));
-        for r in &acc {
-            src.push_str(&format!("li {r}, 0\n"));
-        }
-        src.push_str(
-            "\
-            li a7, KDIM\n\
-            .align 8\n\
-            kloop:\n\
-            p.lw t0, 4(a0!)\n\
-            p.lw t1, 4(a1!)\n\
-            p.lw t2, 4(gp!)\n\
-            p.lw t3, 4(tp!)\n\
-            lw s8, 0(ra)\n",
-        );
-        // 16 MACs: B values loaded one at a time into s8 (the register
-        // budget matches the single-cluster double-buffered matmul).
-        let avals = ["t0", "t1", "t2", "t3"];
-        for q in 0..4 {
-            if q > 0 {
-                src.push_str(&format!("lw s8, {}(ra)\n", 4 * q));
-            }
-            for r in 0..4 {
-                src.push_str(&format!("p.mac {}, {}, s8\n", acc[4 * r + q], avals[r]));
-            }
-        }
-        src.push_str(
-            "\
-            addi ra, ra, NBYTES\n\
-            addi a7, a7, -1\n\
-            bnez a7, kloop\n\
-            lw t0, 4(sp)\n",
-        );
-        for r in 0..4 {
-            for q in 0..4 {
-                src.push_str(&format!("sw {}, {}(t0)\n", acc[4 * r + q], 4 * q));
-            }
-            if r != 3 {
-                src.push_str("addi t0, t0, NBYTES\n");
-            }
-        }
-        src.push_str("j tile_loop\ntiles_done:\n");
-        src.push_str(&barrier_asm(81));
-        src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
-        src.push_str(&p.epilogue(self.rounds as u32));
-        src.push_str(&barrier_asm(82));
-        src.push_str("halt\n");
-        (src, sym)
+        rt.add_symbols(b.symbols_mut());
+        define_streamed_matmul_symbols(b, &p, self.slab_rows, self.n, self.k);
+        p.program_prologue(b, self.rounds as u32, 32);
+        emit_streamed_matmul(b, &p, self.rounds as u32);
     }
 
-    fn setup(&self, system: &mut System) {
+    fn setup(&self, machine: &mut Machine) {
+        let system = machine.system();
         let p = self.plumbing(&system.cfg);
         let rt = RtLayout::new(&system.cfg.cluster);
         let (a, b) = self.inputs(&system.cfg);
@@ -628,17 +258,19 @@ impl SystemKernel for SysMatmul {
         }
     }
 
-    fn verify(&self, system: &mut System) -> Result<(), String> {
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let system = machine.system();
         let p = self.plumbing(&system.cfg);
         let (a, b) = self.inputs(&system.cfg);
         let a_words = self.a_words();
         let c_words = self.c_words();
+        // The program's own shard layout — one source of truth.
+        let out_stride = p.shard.as_ref().expect("system plumbing").out_stride;
         for ci in 0..system.cfg.num_clusters {
             for round in 0..self.rounds {
                 let slab = ci * self.rounds + round;
                 let a_slab = &a[slab * a_words..(slab + 1) * a_words];
-                let out_base =
-                    p.l2_out + ci as u32 * p.out_shard_stride + (round * c_words * 4) as u32;
+                let out_base = p.l2_out + ci as u32 * out_stride + (round * c_words * 4) as u32;
                 for idx in 0..c_words {
                     let (i, j) = (idx / self.n, idx % self.n);
                     let mut e = 0u32;
@@ -658,7 +290,8 @@ impl SystemKernel for SysMatmul {
         Ok(())
     }
 
-    fn total_ops(&self, cfg: &SystemConfig) -> u64 {
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        let cfg = cfg.system();
         2 * (self.slab_rows * self.n * self.k * self.rounds * cfg.num_clusters) as u64
     }
 }

@@ -24,10 +24,7 @@ mod kernels;
 mod stats;
 
 pub use fabric::{FabricCounters, SystemFabric, FABRIC_REQ_OCCUPANCY};
-pub use kernels::{
-    run_system_with_backend, system_kernel_by_name, SysAxpy, SysMatmul, SystemKernel,
-    SYSTEM_KERNELS,
-};
+pub use kernels::{SysAxpy, SysMatmul};
 pub use stats::{SysDmaStats, SystemStats};
 
 use std::collections::HashMap;
@@ -277,13 +274,16 @@ pub struct SystemRunConfig {
 }
 
 impl SystemRunConfig {
+    /// Default backend from `MEMPOOL_BACKEND` — the environment is read
+    /// exactly once, here (kernel-level runs go through
+    /// `runtime::run_workload`, which resolves the backend itself and
+    /// uses [`SystemRunConfig::with_backend`]).
     pub fn new(system: SystemConfig) -> Self {
-        SystemRunConfig {
-            system,
-            max_cycles: 10_000_000,
-            cold_icache: true,
-            backend: SimBackend::from_env(),
-        }
+        SystemRunConfig::with_backend(system, SimBackend::from_env())
+    }
+
+    pub fn with_backend(system: SystemConfig, backend: SimBackend) -> Self {
+        SystemRunConfig { system, max_cycles: 10_000_000, cold_icache: true, backend }
     }
 }
 
@@ -293,6 +293,25 @@ pub struct SystemKernelResult {
     pub stats: SystemStats,
     pub completed: bool,
     pub cycles: u64,
+}
+
+/// Construct the system around an assembled program in this run's
+/// cold-start state: stepping backend on every cluster, cores reset to
+/// entry 0, and (optionally) invalidated instruction caches. The single
+/// bring-up recipe shared by [`run_system_kernel`] and the kernel-level
+/// `runtime::run_workload` path.
+pub fn prepare_system(run: &SystemRunConfig, program: Program) -> System {
+    let mut system = System::new(run.system.clone(), program);
+    system.set_backend(run.backend);
+    system.reset_cores(0);
+    if run.cold_icache {
+        for c in &mut system.clusters {
+            for t in &mut c.tiles {
+                t.icache.invalidate_all();
+            }
+        }
+    }
+    system
 }
 
 /// Assemble `src` with `symbols`, build the system (every cluster runs
@@ -307,16 +326,7 @@ pub fn run_system_kernel(
 ) -> SystemKernelResult {
     let program = Program::assemble(src, symbols)
         .unwrap_or_else(|e| panic!("system kernel assembly failed: {e}"));
-    let mut system = System::new(run.system.clone(), program);
-    system.set_backend(run.backend);
-    system.reset_cores(0);
-    if run.cold_icache {
-        for c in &mut system.clusters {
-            for t in &mut c.tiles {
-                t.icache.invalidate_all();
-            }
-        }
-    }
+    let mut system = prepare_system(run, program);
     setup(&mut system);
     let completed = system.run(run.max_cycles);
     let cycles = system.now();

@@ -5,7 +5,12 @@
 
 use super::*;
 use crate::config::SystemConfig;
+use crate::runtime::{run_workload, RunConfig, RunResult, TargetConfig, Workload};
 use crate::sim::{SimBackend, SysDmaOp, SysDmaRequest};
+
+fn run_sys(w: &dyn Workload, cfg: &SystemConfig, backend: SimBackend) -> RunResult {
+    run_workload(w, &RunConfig::system(cfg).with_backend(backend))
+}
 
 fn two_by_four() -> SystemConfig {
     SystemConfig::with_cores(2, 4)
@@ -127,35 +132,36 @@ fn sysdma_peer_transfers_move_l1_between_clusters() {
 fn sys_axpy_runs_and_verifies_on_two_clusters() {
     let cfg = two_by_four();
     let kernel = SysAxpy::new(8, 2);
-    let mut r = run_system_with_backend(&kernel, &cfg, SimBackend::Parallel);
-    kernel.verify(&mut r.system).expect("sys_axpy result");
-    assert_eq!(r.stats.num_clusters, 2);
+    let mut r = run_sys(&kernel, &cfg, SimBackend::Parallel);
+    kernel.verify(&mut r.machine).expect("sys_axpy result");
+    let s = r.system_stats.as_ref().expect("system stats");
+    assert_eq!(s.num_clusters, 2);
     // Each cluster streamed one chunk in (round 1) and two chunks out.
-    let s = &r.stats;
     assert!(s.sysdma_transfers() >= 2 * 3, "transfers {}", s.sysdma_transfers());
     assert!(s.sysdma_bytes() > 0);
     assert!(s.totals.energy.fabric > 0.0, "fabric energy missing");
     // The op accounting covers at least the kernel's useful MACs.
+    let tcfg = TargetConfig::System(cfg);
     assert!(
-        s.totals.ops >= kernel.total_ops(&cfg),
+        s.totals.ops >= kernel.total_ops(&tcfg),
         "counted {} ops, kernel performs {}",
         s.totals.ops,
-        kernel.total_ops(&cfg)
+        kernel.total_ops(&tcfg)
     );
 }
 
 #[test]
 fn system_backends_agree_on_both_kernels() {
     let cfg = two_by_four();
-    let kernels: Vec<Box<dyn SystemKernel>> =
+    let kernels: Vec<Box<dyn Workload>> =
         vec![Box::new(SysAxpy::new(8, 2)), Box::new(SysMatmul::new(8, 8, 8, 2))];
     for k in kernels {
-        let a = run_system_with_backend(k.as_ref(), &cfg, SimBackend::Serial);
-        let b = run_system_with_backend(k.as_ref(), &cfg, SimBackend::Parallel);
+        let a = run_sys(k.as_ref(), &cfg, SimBackend::Serial);
+        let b = run_sys(k.as_ref(), &cfg, SimBackend::Parallel);
         assert_eq!(a.cycles, b.cycles, "{}: cycle counts diverge", k.name());
-        assert_eq!(a.stats, b.stats, "{}: statistics diverge", k.name());
-        let mut sa = a.system;
-        let mut sb = b.system;
+        assert_eq!(a.system_stats, b.system_stats, "{}: statistics diverge", k.name());
+        let mut sa = a.machine;
+        let mut sb = b.machine;
         k.verify(&mut sa).unwrap_or_else(|e| panic!("{} serial: {e}", k.name()));
         k.verify(&mut sb).unwrap_or_else(|e| panic!("{} parallel: {e}", k.name()));
     }
@@ -168,14 +174,15 @@ fn four_cluster_sharded_matmul_contends_and_stays_deterministic() {
     // shared-fabric contention (non-zero wait cycles).
     let cfg = SystemConfig::with_cores(4, 16);
     let kernel = SysMatmul::new(16, 16, 16, 2);
-    let a = run_system_with_backend(&kernel, &cfg, SimBackend::Serial);
-    let b = run_system_with_backend(&kernel, &cfg, SimBackend::Parallel);
+    let a = run_sys(&kernel, &cfg, SimBackend::Serial);
+    let b = run_sys(&kernel, &cfg, SimBackend::Parallel);
     assert_eq!(a.cycles, b.cycles, "cycle counts diverge");
-    assert_eq!(a.stats, b.stats, "statistics diverge");
-    let mut sys = b.system;
+    assert_eq!(a.system_stats, b.system_stats, "statistics diverge");
+    let mut sys = b.machine;
     kernel.verify(&mut sys).expect("sharded matmul result");
+    let stats = a.system_stats.as_ref().expect("system stats");
     assert!(
-        a.stats.fabric_wait_cycles > 0,
+        stats.fabric_wait_cycles > 0,
         "four clusters sharing the fabric must contend somewhere"
     );
     // Own-channel occupancy also books wait cycles, so `> 0` alone does
@@ -183,26 +190,24 @@ fn four_cluster_sharded_matmul_contends_and_stays_deterministic() {
     // workload; were the clusters fully independent, the 4-cluster total
     // would be exactly 4x the solo wait. Strictly more means they really
     // serialized against each other at the shared banks/ports.
-    let solo = run_system_with_backend(
-        &kernel,
-        &SystemConfig::with_cores(1, 16),
-        SimBackend::Serial,
-    );
+    let solo = run_sys(&kernel, &SystemConfig::with_cores(1, 16), SimBackend::Serial);
+    let solo_stats = solo.system_stats.as_ref().expect("solo system stats");
     assert!(
-        a.stats.fabric_wait_cycles > 4 * solo.stats.fabric_wait_cycles,
+        stats.fabric_wait_cycles > 4 * solo_stats.fabric_wait_cycles,
         "no cross-cluster contention: 4-cluster wait {} vs 4x solo wait {}",
-        a.stats.fabric_wait_cycles,
-        4 * solo.stats.fabric_wait_cycles
+        stats.fabric_wait_cycles,
+        4 * solo_stats.fabric_wait_cycles
     );
+    let tcfg = TargetConfig::System(cfg);
     assert!(
-        a.stats.totals.ops >= kernel.total_ops(&cfg),
+        stats.totals.ops >= kernel.total_ops(&tcfg),
         "counted {} ops, kernel performs {}",
-        a.stats.totals.ops,
-        kernel.total_ops(&cfg)
+        stats.totals.ops,
+        kernel.total_ops(&tcfg)
     );
-    assert_eq!(a.stats.clusters.len(), 4);
+    assert_eq!(stats.clusters.len(), 4);
     // Every cluster moved its own shard over the fabric.
-    for (ci, f) in a.stats.fabric.iter().enumerate() {
+    for (ci, f) in stats.fabric.iter().enumerate() {
         assert!(f.bytes_read > 0, "cluster {ci} never read from shared L2");
         assert!(f.bytes_written > 0, "cluster {ci} never wrote shared L2");
     }

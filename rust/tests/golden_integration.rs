@@ -4,8 +4,8 @@
 //! message) when `make artifacts` has not run.
 
 use mempool::config::ClusterConfig;
-use mempool::kernels::{run_and_verify, Axpy, Dotp, Kernel, Matmul};
-use mempool::runtime::{artifacts_available, Runtime};
+use mempool::kernels::{Axpy, Dotp, Matmul};
+use mempool::runtime::{artifacts_available, run_workload, RunConfig, Runtime, Workload};
 
 fn runtime_or_skip() -> Option<Runtime> {
     if !artifacts_available() {
@@ -23,7 +23,7 @@ fn simulated_matmul_matches_pjrt_golden_model() {
     let kernel = Matmul::weak_scaled(16);
     assert_eq!((kernel.m, kernel.n, kernel.k), (64, 32, 32), "artifact shape drifted");
     let cfg = ClusterConfig::minpool();
-    let mut result = run_and_verify(&kernel, &cfg);
+    let mut result = run_workload(&kernel, &RunConfig::cluster(&cfg));
 
     // Inputs as the simulator placed them.
     let (a, b) = {
@@ -37,11 +37,12 @@ fn simulated_matmul_matches_pjrt_golden_model() {
         .expect("golden model");
 
     // The simulator's C matrix, straight from the SPM banks.
-    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let cluster = result.machine.cluster();
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&cluster.cfg);
     let c_addr = rt_layout.data_base
         + (kernel.m * kernel.k * 4) as u32
         + (kernel.k * kernel.n * 4) as u32;
-    let simulated = result.cluster.spm().read_words(c_addr, kernel.m * kernel.n);
+    let simulated = cluster.spm().read_words(c_addr, kernel.m * kernel.n);
     assert_eq!(simulated.len(), golden.len());
     for (i, (s, g)) in simulated.iter().zip(&golden).enumerate() {
         assert_eq!(
@@ -60,7 +61,7 @@ fn simulated_axpy_matches_pjrt_golden_model() {
     let cfg = ClusterConfig::minpool();
     let n = kernel.len(&cfg);
     assert_eq!(n, 4096, "artifact length drifted");
-    let mut result = run_and_verify(&kernel, &cfg);
+    let mut result = run_workload(&kernel, &RunConfig::cluster(&cfg));
 
     let (x, y) = {
         let mut rng = mempool::util::Rng::seeded(kernel.seed);
@@ -73,9 +74,10 @@ fn simulated_axpy_matches_pjrt_golden_model() {
         .run_i32("axpy", &[(&alpha, &[]), (&x, &[n]), (&y, &[n])])
         .expect("golden model");
 
-    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let cluster = result.machine.cluster();
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&cluster.cfg);
     let y_addr = rt_layout.data_base + (n * 4) as u32;
-    let simulated = result.cluster.spm().read_words(y_addr, n);
+    let simulated = cluster.spm().read_words(y_addr, n);
     for (i, (s, g)) in simulated.iter().zip(&golden).enumerate() {
         assert_eq!(*s as i32, *g, "y[{i}]");
     }
@@ -88,7 +90,7 @@ fn simulated_dotp_matches_pjrt_golden_model() {
     let cfg = ClusterConfig::minpool();
     let n = kernel.len(&cfg);
     assert_eq!(n, 4096);
-    let mut result = run_and_verify(&kernel, &cfg);
+    let mut result = run_workload(&kernel, &RunConfig::cluster(&cfg));
 
     let (x, y) = {
         let mut rng = mempool::util::Rng::seeded(kernel.seed);
@@ -98,9 +100,10 @@ fn simulated_dotp_matches_pjrt_golden_model() {
     };
     let golden = rt.run_i32("dotp", &[(&x, &[n]), (&y, &[n])]).expect("golden model");
 
-    let rt_layout = mempool::kernels::rt::RtLayout::new(&result.cluster.cfg);
+    let cluster = result.machine.cluster();
+    let rt_layout = mempool::kernels::rt::RtLayout::new(&cluster.cfg);
     let acc_addr = rt_layout.work_counter + 4;
-    let simulated = result.cluster.spm().read_word(acc_addr) as i32;
+    let simulated = cluster.spm().read_word(acc_addr) as i32;
     assert_eq!(simulated, golden[0], "dot product");
     let _ = kernel.name();
 }

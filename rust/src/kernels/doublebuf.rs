@@ -283,6 +283,12 @@ pub(crate) fn emit_streamed_axpy(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u32
     b.label(format!("{pre}_done"));
     p.epilogue(b, rounds);
     b.barrier(82);
+    if p.is_sys() {
+        // System target: the clusters rendezvous on the fabric before
+        // halting, so the run's cycle count reflects the slowest cluster
+        // (the weak-scaling measurement barrier).
+        b.global_barrier(83);
+    }
     b.halt();
 }
 
@@ -406,6 +412,11 @@ pub(crate) fn emit_streamed_matmul(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u
     b.label(format!("{pre}_done"));
     p.epilogue(b, rounds);
     b.barrier(82);
+    if p.is_sys() {
+        // System target: the clusters rendezvous on the fabric before
+        // halting (the weak-scaling measurement barrier).
+        b.global_barrier(83);
+    }
     b.halt();
 }
 

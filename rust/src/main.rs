@@ -18,7 +18,7 @@
 //!               [--jobs N] [--out results.json]
 //!               [--check ci/expected_cycles.json]
 //!               [--write-baseline ci/expected_cycles.json]
-//! mempool system [--clusters 4] [--cores 16] [--kernel matmul|axpy|all]
+//! mempool system [--clusters 4] [--cores 16] [--kernel matmul|axpy|reduce|all]
 //!                [--backend serial|parallel] [--per-cluster]
 //!                [--check-determinism]
 //! mempool report area|instr-energy|power|related-work
@@ -317,9 +317,13 @@ fn cmd_sweep(args: &Args) {
                 SimBackend::Serial => SimBackend::Parallel,
                 SimBackend::Parallel => SimBackend::Serial,
             };
-            println!(
-                "baseline {path} is a bootstrap placeholder; \
-                 checking {}-vs-{} cycle agreement instead",
+            // Loud and unmissable: a bootstrap baseline silently gates on
+            // much less than a pinned one, so say exactly which file
+            // degraded the check and how to pin it.
+            eprintln!(
+                "WARNING: baseline {path} is a bootstrap placeholder — no cycle numbers are \
+                 pinned, degrading to {}-vs-{} backend agreement; pin real numbers with \
+                 `mempool sweep --write-baseline {path}` from a trusted run",
                 spec.backend.name(),
                 other.name()
             );

@@ -26,6 +26,10 @@ pub const CTRL_SYSDMA_RCLUSTER: u32 = 0x4C; // peer cluster id (L1↔L1 ops)
 pub const CTRL_SYSDMA_RADDR: u32 = 0x50; // peer logical SPM byte address
 pub const CTRL_SYSDMA_TRIGGER: u32 = 0x54; // write op code (see SysDmaOp)
 pub const CTRL_SYSDMA_STATUS: u32 = 0x58; // read: 1 while a transfer runs
+// Global barrier over the system fabric: a store pulses this cluster's
+// arrival to the fabric-side counter; a load reads 1 while the cluster
+// is waiting for the release broadcast (0 when idle or released).
+pub const CTRL_GBARRIER: u32 = 0x5C;
 
 /// Side effect of a control-register store, interpreted by the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +48,8 @@ pub enum CtrlEffect {
     SysDmaReg(u32, u32),
     /// Trigger a system-DMA transfer; the value is the op code.
     SysDmaTrigger(u32),
+    /// Arrive at the fabric global barrier (handled by the cluster).
+    GBarrierArrive,
 }
 
 /// Control register file.
@@ -72,6 +78,7 @@ impl CtrlRegs {
             CTRL_SYSDMA_L2 | CTRL_SYSDMA_LOCAL | CTRL_SYSDMA_BYTES | CTRL_SYSDMA_RCLUSTER
             | CTRL_SYSDMA_RADDR => CtrlEffect::SysDmaReg(offset, value),
             CTRL_SYSDMA_TRIGGER => CtrlEffect::SysDmaTrigger(value),
+            CTRL_GBARRIER => CtrlEffect::GBarrierArrive,
             _ => CtrlEffect::None,
         }
     }

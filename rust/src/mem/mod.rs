@@ -11,8 +11,8 @@ pub use address::{AddressMap, Location, Region, CTRL_BASE, L2_BASE, L2_SIZE};
 pub use bank::{BankRequest, BankResponse, MemOp, SramBank};
 pub use ctrl::{
     CtrlEffect, CtrlRegs, CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM,
-    CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_NUM_CORES, CTRL_RO_FLUSH, CTRL_SYSDMA_BYTES,
-    CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
+    CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_GBARRIER, CTRL_NUM_CORES, CTRL_RO_FLUSH,
+    CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
     CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER, CTRL_WAKE_ALL, CTRL_WAKE_CORE, CTRL_WAKE_GROUP,
     CTRL_WAKE_TILE,
 };

@@ -261,6 +261,28 @@ impl AsmBuilder {
         self.raw(&barrier_asm(id));
     }
 
+    /// A system-wide barrier over the shared fabric (system target
+    /// only): the cluster's cores rendezvous locally, then hart 0 pulses
+    /// this cluster's arrival to the fabric-side epoch counter
+    /// (`CTRL_GBARRIER`) and spins until the fabric broadcasts the
+    /// release — once every cluster has arrived — before a second local
+    /// rendezvous lets the other harts out. Uses local-barrier ids
+    /// `900 + 2*id` and `901 + 2*id`; clobbers t0–t6. Needs the
+    /// `GBARRIER_ADDR` harness symbol (installed by `system_symbols`),
+    /// so cluster-target programs fail loudly at assembly time.
+    pub fn global_barrier(&mut self, id: usize) {
+        self.barrier(900 + 2 * id);
+        self.csrr("t0", "mhartid");
+        self.bnez("t0", format!("gbar_skip_{id}"));
+        self.la("t1", "GBARRIER_ADDR");
+        self.sw("zero", 0, "t1");
+        self.label(format!("gbar_poll_{id}"));
+        self.lw("t2", 0, "t1");
+        self.bnez("t2", format!("gbar_poll_{id}"));
+        self.label(format!("gbar_skip_{id}"));
+        self.barrier(901 + 2 * id);
+    }
+
     /// Dynamic work sharing: atomically grab the next chunk index from
     /// the shared runtime counter into `dst`; jump to `done_label` when
     /// `dst >= limit_reg`. Clobbers t0.
@@ -287,5 +309,39 @@ impl AsmBuilder {
         self.la("t0", status_sym);
         self.ins(format!("{label}: lw t1, 0(t0)"));
         self.bnez("t1", label);
+    }
+
+    /// Program the system-DMA frontend for one shared-L2 ↔ local-L1
+    /// transfer and spin until it completes (system target): the
+    /// shared-L2 byte address must already sit in `a0` (it is usually
+    /// computed from the cluster id); `local` and `bytes` are symbols or
+    /// immediates; `code` is the `CTRL_SYSDMA_TRIGGER` op code (0 =
+    /// L1→L2, 1 = L2→L1 — the peer op codes additionally need
+    /// `SYSDMA_RCLUSTER/RADDR` programmed first). `poll` names the
+    /// status loop head. Clobbers t0/t1.
+    pub fn sysdma_transfer(
+        &mut self,
+        local: &str,
+        bytes: impl Display,
+        code: u32,
+        poll: impl Display,
+    ) {
+        self.la("t0", "SYSDMA_L2_ADDR");
+        self.sw("a0", 0, "t0");
+        self.la("t0", "SYSDMA_LOCAL_ADDR");
+        self.li("t1", local);
+        self.sw("t1", 0, "t0");
+        self.la("t0", "SYSDMA_BYTES_ADDR");
+        self.li("t1", bytes);
+        self.sw("t1", 0, "t0");
+        self.la("t0", "SYSDMA_TRIGGER_ADDR");
+        if code == 0 {
+            self.sw("zero", 0, "t0");
+        } else {
+            self.li("t1", code);
+            self.sw("t1", 0, "t0");
+        }
+        self.fence();
+        self.poll_idle("SYSDMA_STATUS_ADDR", poll);
     }
 }

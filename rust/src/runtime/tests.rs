@@ -372,7 +372,7 @@ fn registry_target_matrix_is_stable() {
             "bfs"
         ]
     );
-    assert_eq!(workload_names(Target::System), vec!["matmul", "axpy"]);
+    assert_eq!(workload_names(Target::System), vec!["matmul", "axpy", "reduce"]);
 }
 
 #[test]
@@ -431,6 +431,26 @@ fn legacy_sdma_wait(id: usize) -> String {
         la t0, SYSDMA_STATUS_ADDR\n\
         sdma_poll_{id}: lw t1, 0(t0)\n\
         bnez t1, sdma_poll_{id}\n"
+    )
+}
+
+/// The expected `global_barrier` expansion, verbatim: local rendezvous,
+/// hart 0's arrival pulse + release poll on `CTRL_GBARRIER`, and the
+/// final local rendezvous.
+fn legacy_global_barrier(id: usize) -> String {
+    format!(
+        "{b0}\
+        csrr t0, mhartid\n\
+        bnez t0, gbar_skip_{id}\n\
+        la t1, GBARRIER_ADDR\n\
+        sw zero, 0(t1)\n\
+        gbar_poll_{id}:\n\
+        lw t2, 0(t1)\n\
+        bnez t2, gbar_poll_{id}\n\
+        gbar_skip_{id}:\n\
+        {b1}",
+        b0 = barrier_asm(900 + 2 * id),
+        b1 = barrier_asm(901 + 2 * id),
     )
 }
 
@@ -975,6 +995,8 @@ fn legacy_sys_axpy(k: &SysAxpy, cfg: &SystemConfig) -> (String, HashMap<String, 
     src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
     src.push_str(&p.epilogue(k.rounds as u32));
     src.push_str(&barrier_asm(82));
+    // The trailing fabric rendezvous every system kernel now carries.
+    src.push_str(&legacy_global_barrier(83));
     src.push_str("halt\n");
     (src, sym)
 }
@@ -1027,6 +1049,8 @@ fn legacy_sys_matmul(k: &SysMatmul, cfg: &SystemConfig) -> (String, HashMap<Stri
     src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
     src.push_str(&p.epilogue(k.rounds as u32));
     src.push_str(&barrier_asm(82));
+    // The trailing fabric rendezvous every system kernel now carries.
+    src.push_str(&legacy_global_barrier(83));
     src.push_str("halt\n");
     (src, sym)
 }
@@ -1069,4 +1093,22 @@ fn builder_golden_sys_matmul_matches_legacy_string() {
     let (src, sym) = legacy_sys_matmul(&k, &cfg);
     let legacy = assemble_legacy_system(&src, sym, &cfg);
     assert_instruction_identical("sys_matmul", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_global_barrier_text_is_pinned() {
+    // The intrinsic's emitted source, pinned verbatim: two local
+    // rendezvous around hart 0's CTRL_GBARRIER pulse + release poll.
+    let mut b = AsmBuilder::new();
+    b.global_barrier(0);
+    let (src, _) = b.finish();
+    assert_eq!(src, legacy_global_barrier(0));
+    // And it assembles against the system harness symbols.
+    let cfg = SystemConfig::with_cores(2, 4);
+    let mut sym = system_symbols(&cfg);
+    sym.insert("rt_barrier_count".into(), 0x100);
+    sym.insert("rt_barrier_epoch".into(), 0x104);
+    let mut full = src;
+    full.push_str("halt\n");
+    Program::assemble(&full, &sym).expect("global barrier must assemble");
 }

@@ -28,7 +28,7 @@ use crate::interconnect::{build_network, Flit, L1Network};
 use crate::isa::{Csr, Program};
 use crate::mem::{
     AddressMap, BankRequest, CtrlEffect, CtrlRegs, L2Memory, MemOp, Region, SramBank,
-    CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS,
+    CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS, CTRL_GBARRIER,
     CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR,
     CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS,
 };
@@ -94,6 +94,57 @@ pub struct Tile {
     resp_out: VecDeque<Flit>,
     /// Completions scheduled for delivery: (ready, lane, completion).
     deliveries: Vec<(u64, u8, MemCompletion)>,
+    /// Timed system-DMA beat reservations per bank: `(cycle, is_write)`
+    /// slots where an inter-cluster DMA beat owns the bank port, kept in
+    /// strictly increasing cycle order by [`Cluster::sysdma_reserve_word`]
+    /// (the system exchange phase schedules them; both stepping engines
+    /// serve them in [`Tile::serve_banks`]).
+    sysdma_beats: Vec<VecDeque<(u64, bool)>>,
+    /// Request-wait cycles booked when a queued core request stalled
+    /// behind a system-DMA beat holding the bank port — the DMA-vs-core
+    /// L1 contention the timed system-DMA data path makes visible.
+    sysdma_conflicts: u64,
+}
+
+impl Tile {
+    /// Phase 4 of the cycle, shared verbatim by both stepping engines:
+    /// every bank serves one request. A due timed system-DMA beat wins
+    /// the port (the DMA side of the tile crossbar has priority, exactly
+    /// like the paper's dedicated DMA bank ports); queued core requests
+    /// then wait a cycle each, booked as `sysdma_conflicts`. Responses
+    /// are scheduled for local delivery or queued for the response
+    /// network, exactly as before.
+    fn serve_banks(&mut self, now: u64) {
+        for b in 0..self.banks.len() {
+            if let Some(&(at, write)) = self.sysdma_beats[b].front() {
+                if at <= now {
+                    self.sysdma_beats[b].pop_front();
+                    // The beat touches the SRAM: count the access for the
+                    // energy model (data moved functionally at service
+                    // time, like the cluster DMA's data path).
+                    if write {
+                        self.banks[b].writes += 1;
+                    } else {
+                        self.banks[b].reads += 1;
+                    }
+                    self.sysdma_conflicts += self.bank_q[b].len() as u64;
+                    continue;
+                }
+            }
+            if let Some(f) = self.bank_q[b].pop_front() {
+                let resp = serve_bank(&mut self.banks[b], f);
+                if resp.dst_tile == resp.src_tile {
+                    self.deliveries.push((
+                        now + 1,
+                        resp.lane,
+                        MemCompletion { tag: resp.tag, rdata: resp.rdata },
+                    ));
+                } else {
+                    self.resp_out.push_back(resp);
+                }
+            }
+        }
+    }
 }
 
 /// A pending control-register or L2 access by a core.
@@ -191,6 +242,15 @@ pub struct Cluster {
     pub sys_dma_done_at: u64,
     /// Triggered system-DMA requests awaiting the system exchange phase.
     pub sys_dma_outbox: Vec<SysDmaRequest>,
+    /// Global-barrier arrival pulses (store cycles) awaiting the system
+    /// exchange phase. A standalone cluster never drains the queue, like
+    /// the system-DMA outbox.
+    pub gbarrier_outbox: Vec<u64>,
+    /// Fabric release cycle of the current global-barrier epoch:
+    /// `u64::MAX` while this cluster waits for the release broadcast
+    /// (what `CTRL_GBARRIER` loads poll), 0 when the barrier was never
+    /// armed.
+    pub gbarrier_release_at: u64,
     /// Remote-traffic classification counters.
     pub local_accesses: u64,
     pub group_accesses: u64,
@@ -219,6 +279,8 @@ impl Cluster {
                 bank_q: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
                 resp_out: VecDeque::new(),
                 deliveries: Vec::new(),
+                sysdma_beats: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
+                sysdma_conflicts: 0,
             })
             .collect();
         let axi = AxiSystem::new(
@@ -255,6 +317,8 @@ impl Cluster {
             sysdma_raddr: 0,
             sys_dma_done_at: 0,
             sys_dma_outbox: Vec::new(),
+            gbarrier_outbox: Vec::new(),
+            gbarrier_release_at: 0,
             local_accesses: 0,
             group_accesses: 0,
             global_accesses: 0,
@@ -366,6 +430,46 @@ impl Cluster {
         });
     }
 
+    /// Reserve this cluster's L1 bank port for one word of a timed
+    /// system-DMA burst: the word at logical SPM address `addr` is
+    /// accessed (`write` = inbound data) in the first free cycle at or
+    /// after `at`, slipping past cycles other DMA beats already hold on
+    /// the same bank so each bank port carries at most one DMA beat per
+    /// cycle — a transfer whose beats arrive while the bank is idle
+    /// takes the idle cycles, regardless of exchange-phase service
+    /// order. Returns the cycle the port is actually taken. Called by
+    /// the system exchange phase; both stepping engines then serve the
+    /// reservation at exactly that cycle (DMA wins the port), so the
+    /// completion time computed at schedule time is exact.
+    pub fn sysdma_reserve_word(&mut self, addr: u32, at: u64, write: bool) -> u64 {
+        let loc = match self.map.decode(addr) {
+            Region::Spm(loc) => loc,
+            other => panic!("system DMA outside SPM: {addr:#x} → {other:?}"),
+        };
+        let q = &mut self.tiles[loc.tile as usize].sysdma_beats[loc.bank as usize];
+        // The queue is sorted with unique cycles; find the first gap at
+        // or after the requested cycle and insert there.
+        let mut t = at.max(self.now);
+        let mut idx = 0;
+        for &(c, _) in q.iter() {
+            if c < t {
+                idx += 1;
+            } else if c == t {
+                t += 1;
+                idx += 1;
+            } else {
+                break;
+            }
+        }
+        q.insert(idx, (t, write));
+        t
+    }
+
+    /// No timed system-DMA beat is still waiting for its bank-port slot.
+    pub fn sysdma_beats_drained(&self) -> bool {
+        self.tiles.iter().all(|t| t.sysdma_beats.iter().all(|q| q.is_empty()))
+    }
+
     /// Pop every pending system (ctrl/L2) access due at `now`, apply its
     /// side effects (DMA frontend writes and triggers, wake pulses, RO
     /// flushes), and return the resulting core completions in processing
@@ -391,6 +495,7 @@ impl Cluster {
                     CTRL_SYSDMA_STATUS => {
                         (now < self.sys_dma_done_at || !self.sys_dma_outbox.is_empty()) as u32
                     }
+                    CTRL_GBARRIER => (now < self.gbarrier_release_at) as u32,
                     CTRL_CLUSTER_ID => self.cluster_id,
                     _ => self.ctrl.load(off),
                 },
@@ -411,6 +516,12 @@ impl Cluster {
                         CtrlEffect::RoFlush => self.axi.flush_ro(),
                         CtrlEffect::DmaTrigger(to_spm) => self.dma_trigger(to_spm, now),
                         CtrlEffect::SysDmaTrigger(code) => self.sys_dma_trigger(code, now),
+                        CtrlEffect::GBarrierArrive => {
+                            // Arm the wait (loads read 1) and queue the
+                            // arrival pulse for the system exchange phase.
+                            self.gbarrier_release_at = u64::MAX;
+                            self.gbarrier_outbox.push(now);
+                        }
                         CtrlEffect::DmaReg(..) | CtrlEffect::SysDmaReg(..) | CtrlEffect::None => {}
                         wake => self.apply_wake(wake),
                     }
@@ -500,22 +611,10 @@ impl Cluster {
             }
         }
 
-        // Phase 4: banks serve one request each.
+        // Phase 4: banks serve one request each (due system-DMA beats
+        // take the port first — see `Tile::serve_banks`).
         for tile in &mut self.tiles {
-            for b in 0..tile.banks.len() {
-                if let Some(f) = tile.bank_q[b].pop_front() {
-                    let resp = serve_bank(&mut tile.banks[b], f);
-                    if resp.dst_tile == resp.src_tile {
-                        tile.deliveries.push((
-                            now + 1,
-                            resp.lane,
-                            MemCompletion { tag: resp.tag, rdata: resp.rdata },
-                        ));
-                    } else {
-                        tile.resp_out.push_back(resp);
-                    }
-                }
-            }
+            tile.serve_banks(now);
             // Push pending responses into the response network.
             while let Some(f) = tile.resp_out.front() {
                 if self.net.try_send_resp(*f, now) {
@@ -591,6 +690,7 @@ impl Cluster {
             local_accesses: self.local_accesses,
             group_accesses: self.group_accesses,
             global_accesses: self.global_accesses,
+            sysdma_l1_conflict_cycles: self.tiles.iter().map(|t| t.sysdma_conflicts).sum(),
             ..Default::default()
         };
         let mut e = EnergyBook::default();

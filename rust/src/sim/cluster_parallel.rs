@@ -34,7 +34,7 @@
 
 use std::collections::VecDeque;
 
-use super::{serve_bank, Cluster, PendingSys, SysKind, Tile, BANK_QUEUE_DEPTH, CTRL_LATENCY};
+use super::{Cluster, PendingSys, SysKind, Tile, BANK_QUEUE_DEPTH, CTRL_LATENCY};
 use crate::core::{CoreCtx, MemCompletion, MemRequestOut};
 use crate::icache::{FetchResult, TileICache};
 use crate::interconnect::{Flit, L1Network};
@@ -346,21 +346,11 @@ fn tile_local_phase(
         tile.bank_q[f.bank as usize].push_back(f);
     }
 
-    // Banks serve one request each; responses head home.
-    for b in 0..tile.banks.len() {
-        if let Some(f) = tile.bank_q[b].pop_front() {
-            let resp = serve_bank(&mut tile.banks[b], f);
-            if resp.dst_tile == resp.src_tile {
-                tile.deliveries.push((
-                    now + 1,
-                    resp.lane,
-                    MemCompletion { tag: resp.tag, rdata: resp.rdata },
-                ));
-            } else {
-                tile.resp_out.push_back(resp);
-            }
-        }
-    }
+    // Banks serve one request each; responses head home. Due system-DMA
+    // beats win the bank ports, identically to the serial engine's
+    // phase 4 — the beat schedule lives in the tile, so the parallel
+    // local phase observes exactly the serial decisions.
+    tile.serve_banks(now);
     // Drain pending responses while the response network has space.
     while let Some(f) = tile.resp_out.front() {
         if scr.reserve(net, f, true) {

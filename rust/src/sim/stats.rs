@@ -44,6 +44,10 @@ pub struct ClusterStats {
     pub local_accesses: u64,
     pub group_accesses: u64,
     pub global_accesses: u64,
+    /// Request-wait cycles where a core's queued L1 bank request stalled
+    /// behind a timed system-DMA beat holding the bank port (always 0
+    /// outside a multi-cluster system — the DMA-vs-core L1 contention).
+    pub sysdma_l1_conflict_cycles: u64,
     /// Energy accounting for the run.
     pub energy: EnergyBook,
 }
@@ -64,6 +68,7 @@ impl ClusterStats {
         self.local_accesses += o.local_accesses;
         self.group_accesses += o.group_accesses;
         self.global_accesses += o.global_accesses;
+        self.sysdma_l1_conflict_cycles += o.sysdma_l1_conflict_cycles;
         self.energy.accumulate(&o.energy);
     }
 

@@ -269,15 +269,21 @@ pub fn baseline_is_bootstrap(baseline: &Json) -> bool {
 /// Compare measured cycle counts against a pinned baseline. Every grid
 /// point must exist in the baseline with exactly matching cycles, and
 /// every baseline scenario must have been measured (so a silently
-/// shrunken grid also fails). Baselines written before the cluster axis
-/// existed carry no `clusters` field; those entries mean 1 cluster.
+/// shrunken grid also fails). When the scenario grids diverge — e.g.
+/// the sweep's `--clusters` axis changed after the baseline was pinned —
+/// the error leads with a missing/extra diff of the grid points instead
+/// of a bare mismatch, plus the re-pin command. Baselines written before
+/// the cluster axis existed carry no `clusters` field; those entries
+/// mean 1 cluster.
 pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), String> {
     let scenarios = baseline
         .get("scenarios")
         .and_then(Json::as_array)
         .ok_or("baseline has no `scenarios` array")?;
     let clusters_of = |s: &Json| s.get("clusters").and_then(Json::as_u64).unwrap_or(1);
-    let mut errors = Vec::new();
+    let mut drift = Vec::new();
+    let mut missing = Vec::new();
+    let mut extra = Vec::new();
     for p in points {
         let found = scenarios.iter().find(|s| {
             s.get("kernel").and_then(Json::as_str) == Some(p.kernel.as_str())
@@ -285,11 +291,11 @@ pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), Stri
                 && s.get("cores").and_then(Json::as_u64) == Some(p.cores as u64)
         });
         match found.and_then(|s| s.get("cycles")).and_then(Json::as_u64) {
-            None => errors.push(format!(
+            None => missing.push(format!(
                 "{} @ {}x{} cores: not in baseline",
                 p.kernel, p.clusters, p.cores
             )),
-            Some(expected) if expected != p.cycles => errors.push(format!(
+            Some(expected) if expected != p.cycles => drift.push(format!(
                 "{} @ {}x{} cores: {} cycles, baseline {} ({:+})",
                 p.kernel,
                 p.clusters,
@@ -306,17 +312,33 @@ pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), Stri
             s.get("kernel").and_then(Json::as_str),
             s.get("cores").and_then(Json::as_u64),
         ) else {
-            errors.push("malformed baseline scenario entry".to_string());
+            // File corruption, not a grid change: report it as its own
+            // error line so the grid-diff's re-pin advice (which would
+            // overwrite the evidence) does not fire for it.
+            drift.push("malformed baseline scenario entry".to_string());
             continue;
         };
         let clusters = clusters_of(s);
         if !points.iter().any(|p| {
             p.kernel == kernel && p.clusters as u64 == clusters && p.cores as u64 == cores
         }) {
-            errors
+            extra
                 .push(format!("{kernel} @ {clusters}x{cores} cores: in baseline but not measured"));
         }
     }
+    let mut errors = Vec::new();
+    if !missing.is_empty() || !extra.is_empty() {
+        errors.push(format!(
+            "baseline scenario grid does not match the sweep grid \
+             ({} point(s) missing from the baseline, {} extra in it); \
+             re-pin with `mempool sweep --write-baseline <file>` after a grid change:",
+            missing.len(),
+            extra.len()
+        ));
+        errors.extend(missing);
+        errors.extend(extra);
+    }
+    errors.extend(drift);
     if errors.is_empty() {
         Ok(())
     } else {
@@ -419,6 +441,42 @@ mod tests {
         // axis, naming the ones that have one.
         let err = run_point("minpool", "dotp", 2, 4, SimBackend::Serial).unwrap_err();
         assert!(err.contains("no system-target variant"), "{err}");
+    }
+
+    #[test]
+    fn grid_mismatch_diffs_missing_and_extra_points() {
+        // The baseline was pinned before the cluster axis changed: it
+        // carries a 4-cluster point the sweep no longer runs, and the
+        // sweep now has a 2-cluster point the baseline never saw. The
+        // error must lead with the grid diff and the re-pin hint, naming
+        // both sides.
+        let spec = SweepSpec::ci_default();
+        let point = |clusters: usize| SweepPoint {
+            kernel: "axpy".to_string(),
+            clusters,
+            cores: 4,
+            cycles: 1000,
+            ipc: 0.0,
+            ops_per_cycle: 0.0,
+            compute: 0.0,
+            control: 0.0,
+            synchronization: 0.0,
+            ifetch: 0.0,
+            lsu: 0.0,
+            raw: 0.0,
+            local_accesses: 0,
+            group_accesses: 0,
+            global_accesses: 0,
+            fabric_wait_cycles: 0,
+            wall_ms: 0.0,
+        };
+        let baseline = baseline_json(&spec, &[point(1), point(4)]);
+        let err = check_baseline(&[point(1), point(2)], &baseline).unwrap_err();
+        assert!(err.contains("grid does not match"), "{err}");
+        assert!(err.contains("1 point(s) missing") && err.contains("1 extra"), "{err}");
+        assert!(err.contains("axpy @ 2x4 cores: not in baseline"), "{err}");
+        assert!(err.contains("axpy @ 4x4 cores: in baseline but not measured"), "{err}");
+        assert!(err.contains("--write-baseline"), "{err}");
     }
 
     #[test]

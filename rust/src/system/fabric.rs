@@ -16,15 +16,38 @@
 //!   pay `l2_latency` at the bank.
 //!
 //! Like the cluster AXI model, the fabric is transaction-timed: each call
-//! returns the completion cycle, and channel/bank occupancy serializes
-//! concurrent bursts exactly like busy hardware would. *Wait cycles*
-//! count how long a burst's data phase stalled beyond its conflict-free
-//! start — non-zero exactly when bursts contend for a channel or bank.
+//! returns a [`BurstTiming`] — the cycle the data phase started (what the
+//! timed system-DMA path uses to lay the burst's beats onto the cluster's
+//! L1 bank ports) and the completion cycle — and channel/bank occupancy
+//! serializes concurrent bursts exactly like busy hardware would.
+//!
+//! *Wait cycles* count how long a burst's data phase stalled beyond its
+//! conflict-free start — non-zero exactly when bursts contend for a
+//! channel or bank. A peer burst ties up the source *and* destination
+//! ports, so its stall is visible on both per-cluster counters; the
+//! aggregate ([`SystemFabric::total_wait_cycles`]) still books each
+//! burst's stall exactly once, so system-wide contention is never
+//! double-counted.
+//!
+//! The fabric also hosts the **global barrier**: a counting register that
+//! collects one arrival pulse per cluster (cores store to
+//! `CTRL_GBARRIER`) and releases every cluster one broadcast hop after
+//! the last arrival — the inter-cluster synchronization primitive the
+//! `global_barrier()` builder intrinsic spins on.
 
 use crate::config::FabricConfig;
 
 /// Cycles the request channel is held per burst (AR/AW handshake).
 pub const FABRIC_REQ_OCCUPANCY: u64 = 2;
+
+/// Timing of one fabric burst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstTiming {
+    /// Cycle the data phase started moving beats (post-contention).
+    pub data_start: u64,
+    /// Cycle the burst completed at the issuing port.
+    pub done: u64,
+}
 
 /// Occupancy state of one cluster's fabric master port.
 #[derive(Debug, Clone, Copy, Default)]
@@ -48,6 +71,9 @@ pub struct FabricCounters {
     pub beats: u64,
     /// Cycles this cluster's bursts waited on busy channels or L2 banks
     /// beyond their conflict-free start — the shared-fabric contention.
+    /// Peer bursts tie up two ports, so their stall appears on both the
+    /// source's and the destination's counter (the aggregate counts it
+    /// once; see [`SystemFabric::total_wait_cycles`]).
     pub wait_cycles: u64,
 }
 
@@ -64,6 +90,15 @@ pub struct SystemFabric {
     l2_bytes: u64,
     /// Unique bytes moved cluster↔cluster (booked once per burst).
     peer_bytes: u64,
+    /// Aggregate burst-stall cycles, booked once per burst (peer bursts
+    /// charge both port counters but only one aggregate entry).
+    wait_total: u64,
+    /// Global barrier: which clusters have arrived this epoch.
+    gbarrier_arrived: Vec<bool>,
+    /// Latest fabric-side arrival time of the current epoch.
+    gbarrier_latest: u64,
+    /// Completed global-barrier epochs (statistics).
+    pub gbarrier_epochs: u64,
 }
 
 impl SystemFabric {
@@ -75,6 +110,10 @@ impl SystemFabric {
             l2_beats: 0,
             l2_bytes: 0,
             peer_bytes: 0,
+            wait_total: 0,
+            gbarrier_arrived: vec![false; clusters],
+            gbarrier_latest: 0,
+            gbarrier_epochs: 0,
             cfg,
         }
     }
@@ -93,8 +132,8 @@ impl SystemFabric {
     }
 
     /// Timed read of one burst from shared L2 at `offset` by cluster `c`.
-    /// Returns the cycle the data is back at the cluster's port.
-    pub fn l2_read(&mut self, c: usize, offset: u32, bytes: usize, now: u64) -> u64 {
+    /// `done` is the cycle the data is back at the cluster's port.
+    pub fn l2_read(&mut self, c: usize, offset: u32, bytes: usize, now: u64) -> BurstTiming {
         let beats = self.beats(bytes);
         let bank = self.bank_of(offset);
         let req_at = now.max(self.ports[c].req_free);
@@ -105,19 +144,21 @@ impl SystemFabric {
         let done = start + beats;
         self.ports[c].r_free = done;
         self.bank_free[bank] = done;
+        let wait = start - earliest;
         let ctr = &mut self.counters[c];
         ctr.read_txns += 1;
         ctr.bytes_read += bytes as u64;
         ctr.beats += beats;
-        ctr.wait_cycles += start - earliest;
+        ctr.wait_cycles += wait;
+        self.wait_total += wait;
         self.l2_beats += beats;
         self.l2_bytes += bytes as u64;
-        done + self.cfg.hop_latency
+        BurstTiming { data_start: start, done: done + self.cfg.hop_latency }
     }
 
     /// Timed write of one burst to shared L2 at `offset` by cluster `c`.
-    /// Returns the cycle the bank acknowledges the last beat.
-    pub fn l2_write(&mut self, c: usize, offset: u32, bytes: usize, now: u64) -> u64 {
+    /// `done` is the cycle the bank acknowledges the last beat.
+    pub fn l2_write(&mut self, c: usize, offset: u32, bytes: usize, now: u64) -> BurstTiming {
         let beats = self.beats(bytes);
         let bank = self.bank_of(offset);
         let req_at = now.max(self.ports[c].req_free);
@@ -128,20 +169,23 @@ impl SystemFabric {
         let end = start + beats;
         self.ports[c].w_free = end;
         self.bank_free[bank] = end;
+        let wait = start - earliest;
         let ctr = &mut self.counters[c];
         ctr.write_txns += 1;
         ctr.bytes_written += bytes as u64;
         ctr.beats += beats;
-        ctr.wait_cycles += start - earliest;
+        ctr.wait_cycles += wait;
+        self.wait_total += wait;
         self.l2_beats += beats;
         self.l2_bytes += bytes as u64;
-        end + self.cfg.l2_latency + self.cfg.hop_latency
+        BurstTiming { data_start: start, done: end + self.cfg.l2_latency + self.cfg.hop_latency }
     }
 
     /// Timed cluster→cluster burst (L1↔L1): occupies the source port's R
     /// channel and the destination port's W channel; never touches L2.
-    /// Wait cycles are charged to the data-source port `src`.
-    pub fn peer_copy(&mut self, src: usize, dst: usize, bytes: usize, now: u64) -> u64 {
+    /// The burst stalls both ports, so its wait cycles are charged to the
+    /// `src` *and* `dst` counters (and once to the aggregate).
+    pub fn peer_copy(&mut self, src: usize, dst: usize, bytes: usize, now: u64) -> BurstTiming {
         assert_ne!(src, dst, "peer burst within one cluster");
         let beats = self.beats(bytes);
         let req_at = now.max(self.ports[src].req_free).max(self.ports[dst].req_free);
@@ -153,14 +197,50 @@ impl SystemFabric {
         let end = start + beats;
         self.ports[src].r_free = end;
         self.ports[dst].w_free = end;
+        let wait = start - earliest;
         self.counters[src].read_txns += 1;
         self.counters[src].bytes_read += bytes as u64;
         self.counters[src].beats += beats;
-        self.counters[src].wait_cycles += start - earliest;
+        self.counters[src].wait_cycles += wait;
         self.counters[dst].write_txns += 1;
         self.counters[dst].bytes_written += bytes as u64;
+        self.counters[dst].wait_cycles += wait;
+        self.wait_total += wait;
         self.peer_bytes += bytes as u64;
-        end + self.cfg.hop_latency
+        BurstTiming { data_start: start, done: end + self.cfg.hop_latency }
+    }
+
+    /// Register cluster `c`'s global-barrier arrival pulse, stored at
+    /// cluster cycle `at`. The pulse pays one hop to the fabric-side
+    /// counter; the arrival that completes the epoch releases every
+    /// cluster one broadcast hop later — `Some(release_cycle)`.
+    ///
+    /// A cluster arriving twice within one epoch is malformed
+    /// synchronization (a program pulsing `CTRL_GBARRIER` from more than
+    /// one hart) and panics — releasing early on a miscounted epoch
+    /// would silently corrupt data, and the loud-failure policy of the
+    /// system DMA applies here too.
+    pub fn gbarrier_arrive(&mut self, c: usize, at: u64) -> Option<u64> {
+        assert!(
+            !self.gbarrier_arrived[c],
+            "cluster {c} arrived twice at the global barrier within one epoch"
+        );
+        self.gbarrier_arrived[c] = true;
+        self.gbarrier_latest = self.gbarrier_latest.max(at + self.cfg.hop_latency);
+        if self.gbarrier_arrived.iter().all(|&a| a) {
+            let release = self.gbarrier_latest + self.cfg.hop_latency;
+            self.gbarrier_arrived.fill(false);
+            self.gbarrier_latest = 0;
+            self.gbarrier_epochs += 1;
+            Some(release)
+        } else {
+            None
+        }
+    }
+
+    /// Arrivals waiting for the current global-barrier epoch to complete.
+    pub fn gbarrier_pending(&self) -> usize {
+        self.gbarrier_arrived.iter().filter(|&&a| a).count()
     }
 
     /// Total unique bytes moved over the fabric by all clusters (peer
@@ -174,9 +254,11 @@ impl SystemFabric {
         self.counters.iter().map(|c| c.beats).sum()
     }
 
-    /// Aggregate wait (contention) cycles across all clusters.
+    /// Aggregate wait (contention) cycles across all clusters, booked
+    /// once per burst — NOT the sum of the per-cluster counters, which
+    /// see a peer burst's stall from both of its ports.
     pub fn total_wait_cycles(&self) -> u64 {
-        self.counters.iter().map(|c| c.wait_cycles).sum()
+        self.wait_total
     }
 }
 
@@ -192,8 +274,9 @@ mod tests {
     fn conflict_free_l2_read_latency() {
         let mut f = fabric(2);
         // req(≤2 into hop) + hop(4) + L2(20) + 1 beat + hop(4) = 29.
-        let done = f.l2_read(0, 0, 64, 0);
-        assert_eq!(done, 29);
+        let t = f.l2_read(0, 0, 64, 0);
+        assert_eq!(t.done, 29);
+        assert_eq!(t.data_start, 24, "data phase starts after req+hop+L2");
         assert_eq!(f.counters[0].wait_cycles, 0, "no contention alone");
     }
 
@@ -202,19 +285,20 @@ mod tests {
         let mut f = fabric(2);
         // Both clusters hit bank 0 at cycle 0: the second serializes at
         // the bank and books the stall as wait cycles.
-        let d0 = f.l2_read(0, 0, 1024, 0);
-        let d1 = f.l2_read(1, 0, 1024, 0);
+        let d0 = f.l2_read(0, 0, 1024, 0).done;
+        let d1 = f.l2_read(1, 0, 1024, 0).done;
         assert!(d1 > d0, "second burst must finish later ({d1} vs {d0})");
         assert_eq!(f.counters[0].wait_cycles, 0);
         assert!(f.counters[1].wait_cycles > 0, "bank conflict must be visible");
+        assert_eq!(f.total_wait_cycles(), f.counters[1].wait_cycles);
     }
 
     #[test]
     fn different_banks_do_not_contend() {
         let mut f = fabric(2);
         let interleave = f.cfg.l2_interleave_bytes as u32;
-        let d0 = f.l2_read(0, 0, 512, 0);
-        let d1 = f.l2_read(1, interleave, 512, 0);
+        let d0 = f.l2_read(0, 0, 512, 0).done;
+        let d1 = f.l2_read(1, interleave, 512, 0).done;
         assert_eq!(d0, d1, "distinct banks and ports are independent");
         assert_eq!(f.total_wait_cycles(), 0);
     }
@@ -225,33 +309,64 @@ mod tests {
         // Back-to-back reads from one cluster to distinct banks: the R
         // channel serializes the beats, hiding latency behind streaming.
         let interleave = f.cfg.l2_interleave_bytes as u32;
-        let d0 = f.l2_read(0, 0, 1024, 0);
-        let d1 = f.l2_read(0, interleave, 1024, 0);
+        let d0 = f.l2_read(0, 0, 1024, 0).done;
+        let d1 = f.l2_read(0, interleave, 1024, 0).done;
         assert_eq!(d1, d0 + 16, "16 beats stream right after the first burst");
         assert!(f.counters[0].wait_cycles > 0, "R-channel occupancy is wait");
+        assert_eq!(f.total_wait_cycles(), f.counters[0].wait_cycles);
     }
 
     #[test]
     fn writes_ack_after_bank_latency() {
         let mut f = fabric(2);
         // req(2→hop 4) + 4 beats + L2(20) + hop(4).
-        let done = f.l2_write(0, 0, 256, 0);
-        assert_eq!(done, 4 + 4 + 20 + 4);
+        let t = f.l2_write(0, 0, 256, 0);
+        assert_eq!(t.done, 4 + 4 + 20 + 4);
+        assert_eq!(t.data_start, 4, "write data moves right after the hop");
         assert_eq!(f.counters[0].bytes_written, 256);
     }
 
     #[test]
     fn peer_copy_ties_up_both_ports() {
         let mut f = fabric(3);
-        let d = f.peer_copy(0, 1, 512, 0);
+        let d = f.peer_copy(0, 1, 512, 0).done;
         // 2 hops out + 8 beats + 1 hop home.
         assert_eq!(d, 8 + 8 + 4);
         // A second peer push into cluster 1 queues on its W channel.
-        let d2 = f.peer_copy(2, 1, 512, 0);
+        let d2 = f.peer_copy(2, 1, 512, 0).done;
         assert!(d2 > d, "shared destination W channel serializes ({d2} vs {d})");
         assert!(f.counters[2].wait_cycles > 0);
         // Peer traffic never touches the L2 banks.
         assert_eq!(f.l2_beats, 0);
+    }
+
+    #[test]
+    fn peer_copy_wait_is_symmetric_and_counted_once() {
+        let mut f = fabric(2);
+        // Two same-direction bursts back to back: the second stalls on
+        // the busy R/W channels of *both* ports.
+        let first = f.peer_copy(0, 1, 1024, 0);
+        let second = f.peer_copy(0, 1, 1024, 0);
+        assert!(second.data_start >= first.done - f.cfg.hop_latency);
+        let w = f.counters[0].wait_cycles;
+        assert!(w > 0, "back-to-back peer bursts must stall");
+        // Symmetric: the burst tied up both ports for the same stall.
+        assert_eq!(f.counters[1].wait_cycles, w, "src and dst must book the same wait");
+        // Once in the aggregate, not twice.
+        assert_eq!(f.total_wait_cycles(), w, "aggregate must not double-count peer waits");
+    }
+
+    #[test]
+    fn opposite_direction_peer_copies_are_full_duplex() {
+        let mut f = fabric(2);
+        // 0→1 rides 0's R and 1's W; 1→0 rides 1's R and 0's W — disjoint
+        // channels, so overlapping opposite-direction bursts never stall
+        // each other (only the shared request handshake serializes).
+        let a = f.peer_copy(0, 1, 1024, 0);
+        let b = f.peer_copy(1, 0, 1024, 0);
+        assert_eq!(b.done - a.done, FABRIC_REQ_OCCUPANCY, "only the AR/AW handshake queues");
+        assert_eq!(f.counters[0].wait_cycles, f.counters[1].wait_cycles);
+        assert_eq!(f.total_wait_cycles(), f.counters[0].wait_cycles);
     }
 
     #[test]
@@ -263,5 +378,31 @@ mod tests {
         // L2 bytes once per side + peer bytes once.
         assert_eq!(f.total_bytes(), 1024 + 512 + 256);
         assert_eq!(f.l2_beats, 16 + 8);
+    }
+
+    #[test]
+    fn gbarrier_releases_on_the_last_arrival() {
+        let mut f = fabric(3);
+        assert_eq!(f.gbarrier_arrive(0, 10), None);
+        assert_eq!(f.gbarrier_pending(), 1);
+        assert_eq!(f.gbarrier_arrive(2, 14), None);
+        // Last arrival at cycle 20: release = 20 + hop + hop = 28.
+        let release = f.gbarrier_arrive(1, 20).expect("third arrival completes the epoch");
+        assert_eq!(release, 20 + 2 * f.cfg.hop_latency);
+        assert_eq!(f.gbarrier_pending(), 0, "epoch state must reset");
+        assert_eq!(f.gbarrier_epochs, 1);
+        // The next epoch starts clean.
+        assert_eq!(f.gbarrier_arrive(1, 30), None);
+        assert_eq!(f.gbarrier_arrive(0, 31), None);
+        assert!(f.gbarrier_arrive(2, 29).is_some());
+        assert_eq!(f.gbarrier_epochs, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arrived twice")]
+    fn gbarrier_rejects_a_double_arrival() {
+        let mut f = fabric(3);
+        assert_eq!(f.gbarrier_arrive(1, 5), None);
+        f.gbarrier_arrive(1, 6); // same cluster again: malformed sync
     }
 }

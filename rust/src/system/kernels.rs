@@ -14,13 +14,20 @@
 //!   shared fabric and makes the L2-bank contention visible.
 //!
 //! Hart 0 of each cluster orchestrates that cluster's DMA; the other
-//! harts meet it at per-cluster barriers. Clusters never synchronize with
-//! each other — shards are independent — so system scaling is limited
-//! only by the shared fabric, which is exactly what the contention stats
-//! measure.
+//! harts meet it at per-cluster barriers. Shards are independent, so the
+//! matmul/axpy clusters only synchronize once: a trailing
+//! `global_barrier` rendezvous over the fabric before halting, making
+//! every run's cycle count the slowest cluster's (the weak-scaling
+//! measurement barrier).
 //!
-//! Both register in the unified workload registry under their kernel's
-//! plain name (`matmul`, `axpy`) as the `system`-target variant.
+//! [`SysReduce`] goes further — it *depends* on the global barrier:
+//! every cluster reduces its shared-L2 shard locally, publishes the
+//! partial sum back to shared L2 through the system DMA, and only after
+//! the fabric-wide rendezvous may cluster 0 gather the partials and
+//! produce the final sum.
+//!
+//! All register in the unified workload registry under plain names
+//! (`matmul`, `axpy`, `reduce`) as the `system`-target variants.
 
 use crate::config::SystemConfig;
 use crate::kernels::doublebuf::{
@@ -293,5 +300,206 @@ impl Workload for SysMatmul {
     fn total_ops(&self, cfg: &TargetConfig) -> u64 {
         let cfg = cfg.system();
         2 * (self.slab_rows * self.n * self.k * self.rounds * cfg.num_clusters) as u64
+    }
+}
+
+/// Cluster-sharded sum reduction over a shared-L2-resident vector — the
+/// weak-scaling workload built on the fabric global barrier. Phases:
+///
+/// 1. every cluster streams its shard from shared L2 into its SPM
+///    (timed system DMA), and its cores sum their interleaved islands
+///    into a cluster-local accumulator (`amoadd`);
+/// 2. hart 0 publishes the cluster's partial sum back to shared L2;
+/// 3. **`global_barrier`** — the fabric-wide rendezvous that makes every
+///    partial visible;
+/// 4. cluster 0's hart 0 gathers the partials over the system DMA, adds
+///    them, and writes the final sum to shared L2.
+///
+/// Total work grows linearly with the cluster count (`per_core` elements
+/// per core per cluster), so the cycle count across a `--clusters` sweep
+/// is the weak-scaling curve of the fabric + barrier.
+pub struct SysReduce {
+    /// Elements per core (the weak-scaling unit); must be a multiple of 4.
+    pub per_core: usize,
+    pub seed: u64,
+}
+
+impl SysReduce {
+    /// Shard base of the input vector in shared L2.
+    const L2_IN: u32 = 0x10_0000;
+    /// Per-cluster partial sums (word `c` = cluster `c`).
+    const L2_PARTS: u32 = 0x100_0000;
+    /// The final sum.
+    const L2_OUT: u32 = 0x180_0000;
+
+    pub fn new(per_core: usize) -> Self {
+        assert_eq!(per_core % 4, 0, "cores sum 4-word islands");
+        SysReduce { per_core, seed: 0x5A5E }
+    }
+
+    pub fn weak_scaled(_cores_per_cluster: usize) -> Self {
+        SysReduce::new(64)
+    }
+
+    /// Words per cluster (one shard).
+    fn chunk_words(&self, cfg: &SystemConfig) -> usize {
+        self.per_core * cfg.cluster.num_cores()
+    }
+
+    /// The full input vector (all clusters' shards, cluster-major).
+    fn input(&self, cfg: &SystemConfig) -> Vec<u32> {
+        let n = self.chunk_words(cfg) * cfg.num_clusters;
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        (0..n).map(|_| rng.below(1 << 16) as u32).collect()
+    }
+
+}
+
+impl Workload for SysReduce {
+    fn name(&self) -> &'static str {
+        "reduce"
+    }
+
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.system();
+        // The island addressing below (tile = hart/4, lane = hart%4,
+        // 16-byte islands in 64-byte tile lines) is the suite's standard
+        // layout and assumes the paper's 4 cores per tile; fail loudly
+        // rather than silently skipping part of the shard.
+        assert_eq!(
+            cfg.cluster.cores_per_tile, 4,
+            "reduce's island layout assumes 4 cores per tile"
+        );
+        let rt = RtLayout::new(&cfg.cluster);
+        rt.add_symbols(b.symbols_mut());
+        let chunk_bytes = 4 * self.chunk_words(cfg) as u32;
+        let in_buf = rt.data_base;
+        let part_src = in_buf + chunk_bytes;
+        let parts_buf = part_src + 64;
+        let out_src = parts_buf + 4 * cfg.num_clusters as u32;
+        b.define("red_acc", rt.work_counter + 4);
+        b.define("IN_BUF", in_buf);
+        b.define("PART_SRC", part_src);
+        b.define("PARTS_BUF", parts_buf);
+        b.define("OUT_SRC", out_src);
+        b.define("CHUNK_BYTES", chunk_bytes);
+        b.define("PARTS_BYTES", 4 * cfg.num_clusters as u32);
+        b.define("L2_IN", Self::L2_IN);
+        b.define("L2_PARTS", Self::L2_PARTS);
+        b.define("L2_OUT", Self::L2_OUT);
+        b.define("BLOCKS", (self.per_core / 4) as u32);
+        b.define("BLOCK_STRIDE", (cfg.cluster.num_tiles() * 64) as u32);
+
+        b.comment("cluster-sharded sum reduction over a shared-L2 vector");
+        b.core_id("s9");
+        b.cluster_id("s8", "t0");
+        b.comment("hart 0 streams this cluster's shard in from shared L2");
+        b.bnez("s9", "r_in_staged");
+        b.li("t1", "CHUNK_BYTES");
+        b.mul("t1", "s8", "t1");
+        b.li("a0", "L2_IN");
+        b.add("a0", "a0", "t1");
+        b.sysdma_transfer("IN_BUF", "CHUNK_BYTES", 1, "r_poll_in");
+        b.label("r_in_staged");
+        b.barrier(70);
+        b.comment("each core sums its interleaved islands");
+        b.srli("t1", "s9", 2);
+        b.andi("t2", "s9", 3);
+        b.slli("t3", "t1", 6);
+        b.slli("t4", "t2", 4);
+        b.add("t5", "t3", "t4");
+        b.li("a0", "IN_BUF");
+        b.add("a0", "a0", "t5");
+        b.li("a2", 0);
+        b.li("a3", "BLOCKS");
+        b.li("a4", "BLOCK_STRIDE");
+        b.align(8);
+        b.label("r_blk");
+        b.lw("t0", 0, "a0");
+        b.lw("t1", 4, "a0");
+        b.lw("t2", 8, "a0");
+        b.lw("t3", 12, "a0");
+        b.add("a2", "a2", "t0");
+        b.add("a2", "a2", "t1");
+        b.add("a2", "a2", "t2");
+        b.add("a2", "a2", "t3");
+        b.add("a0", "a0", "a4");
+        b.addi("a3", "a3", -1);
+        b.bnez("a3", "r_blk");
+        b.la("t0", "red_acc");
+        b.amoadd("t1", "a2", "t0");
+        b.barrier(71);
+        b.comment("hart 0 publishes this cluster's partial sum");
+        b.bnez("s9", "r_part_done");
+        b.la("t0", "red_acc");
+        b.lw("t1", 0, "t0");
+        b.li("t2", "PART_SRC");
+        b.sw("t1", 0, "t2");
+        b.fence();
+        b.slli("t3", "s8", 2);
+        b.li("a0", "L2_PARTS");
+        b.add("a0", "a0", "t3");
+        b.sysdma_transfer("PART_SRC", 4, 0, "r_poll_part");
+        b.label("r_part_done");
+        b.comment("fabric-wide rendezvous: every partial is in shared L2");
+        b.global_barrier(0);
+        b.comment("cluster 0's hart 0 gathers and reduces the partials");
+        b.bnez("s9", "r_skip_final");
+        b.bnez("s8", "r_skip_final");
+        b.li("a0", "L2_PARTS");
+        b.sysdma_transfer("PARTS_BUF", "PARTS_BYTES", 1, "r_poll_parts");
+        b.li("a0", "PARTS_BUF");
+        b.li("a1", "NUM_CLUSTERS");
+        b.li("a2", 0);
+        b.label("r_sum");
+        b.lw("t0", 0, "a0");
+        b.add("a2", "a2", "t0");
+        b.addi("a0", "a0", 4);
+        b.addi("a1", "a1", -1);
+        b.bnez("a1", "r_sum");
+        b.li("t2", "OUT_SRC");
+        b.sw("a2", 0, "t2");
+        b.fence();
+        b.li("a0", "L2_OUT");
+        b.sysdma_transfer("OUT_SRC", 4, 0, "r_poll_out");
+        b.label("r_skip_final");
+        b.barrier(72);
+        b.halt();
+    }
+
+    fn setup(&self, machine: &mut Machine) {
+        let system = machine.system();
+        let x = self.input(&system.cfg);
+        system.l2.load_words(Self::L2_IN, &x);
+        let rt = RtLayout::new(&system.cfg.cluster);
+        let acc = rt.work_counter + 4;
+        for cluster in system.clusters.iter_mut() {
+            rt.init(cluster);
+            cluster.spm().write_word(acc, 0);
+        }
+    }
+
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let system = machine.system();
+        let x = self.input(&system.cfg);
+        let chunk = self.chunk_words(&system.cfg);
+        for ci in 0..system.cfg.num_clusters {
+            let e = x[ci * chunk..(ci + 1) * chunk].iter().fold(0u32, |a, v| a.wrapping_add(*v));
+            let got = system.l2.read_word(Self::L2_PARTS + 4 * ci as u32);
+            if got != e {
+                return Err(format!("cluster {ci} partial = {got:#x}, expected {e:#x}"));
+            }
+        }
+        let e = x.iter().fold(0u32, |a, v| a.wrapping_add(*v));
+        let got = system.l2.read_word(Self::L2_OUT);
+        if got != e {
+            return Err(format!("final sum = {got:#x}, expected {e:#x}"));
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        let cfg = cfg.system();
+        (self.chunk_words(cfg) * cfg.num_clusters + cfg.num_clusters) as u64
     }
 }

@@ -11,10 +11,17 @@
 //!    threads is trivially deterministic;
 //! 2. a **serial exchange phase** — system-DMA requests the clusters
 //!    queued this cycle (cores write the `CTRL_SYSDMA_*` registers) are
-//!    drained *in cluster order* and serviced on the shared fabric:
-//!    functional data movement between shared L2 and the clusters' SPMs
-//!    (or SPM to SPM between clusters) plus transaction timing with
-//!    cycle-accounted contention at the fabric ports and L2 banks.
+//!    drained in *rotating round-robin order* (start index seeded from
+//!    the cycle count, so no cluster gets structural priority under
+//!    contention) and serviced on the shared fabric: functional data
+//!    movement between shared L2 and the clusters' SPMs (or SPM to SPM
+//!    between clusters), transaction timing with cycle-accounted
+//!    contention at the fabric ports and L2 banks, and — the timed data
+//!    path — the burst's beats laid onto the destination (and source)
+//!    cluster's L1 bank ports, where they contend with core loads and
+//!    stores through the ordinary bank arbiters on subsequent cycles.
+//!    Global-barrier arrival pulses drain here too, into the fabric-side
+//!    epoch counter.
 //!
 //! Determinism therefore holds by construction at both levels, and the
 //! system determinism tests assert serial == parallel end to end.
@@ -23,8 +30,8 @@ mod fabric;
 mod kernels;
 mod stats;
 
-pub use fabric::{FabricCounters, SystemFabric, FABRIC_REQ_OCCUPANCY};
-pub use kernels::{SysAxpy, SysMatmul};
+pub use fabric::{BurstTiming, FabricCounters, SystemFabric, FABRIC_REQ_OCCUPANCY};
+pub use kernels::{SysAxpy, SysMatmul, SysReduce};
 pub use stats::{SysDmaStats, SystemStats};
 
 use std::collections::HashMap;
@@ -104,10 +111,31 @@ impl System {
     pub fn step(&mut self) {
         let now = self.now;
         par_for_each(&mut self.clusters, |_, c| c.step());
-        for c in 0..self.clusters.len() {
+        // Drain the outboxes in rotating round-robin order, the start
+        // index seeded from the cycle count: under sustained contention
+        // every cluster gets the first claim on the fabric equally often,
+        // instead of cluster 0 structurally winning every cycle. Still
+        // fully deterministic — the rotation depends only on `now`.
+        let n = self.clusters.len();
+        let start = (now % n as u64) as usize;
+        for i in 0..n {
+            let c = (start + i) % n;
             let reqs = std::mem::take(&mut self.clusters[c].sys_dma_outbox);
             for req in reqs {
                 self.service(c, req);
+            }
+        }
+        // Global-barrier arrival pulses (count-based: the drain order
+        // within a cycle cannot change the release time).
+        for i in 0..n {
+            let c = (start + i) % n;
+            let arrivals = std::mem::take(&mut self.clusters[c].gbarrier_outbox);
+            for at in arrivals {
+                if let Some(release) = self.fabric.gbarrier_arrive(c, at) {
+                    for cl in &mut self.clusters {
+                        cl.gbarrier_release_at = release;
+                    }
+                }
             }
         }
         debug_assert!(self.clusters.iter().all(|c| c.now() == now + 1));
@@ -128,12 +156,15 @@ impl System {
     }
 
     fn done(&self) -> bool {
-        self.clusters.iter().all(|c| {
-            c.all_halted()
-                && c.drained()
-                && c.sys_dma_outbox.is_empty()
-                && self.now >= c.sys_dma_done_at
-        })
+        self.fabric.gbarrier_pending() == 0
+            && self.clusters.iter().all(|c| {
+                c.all_halted()
+                    && c.drained()
+                    && c.sys_dma_outbox.is_empty()
+                    && c.gbarrier_outbox.is_empty()
+                    && c.sysdma_beats_drained()
+                    && self.now >= c.sys_dma_done_at
+            })
     }
 
     /// Submit a system-DMA request on behalf of cluster `c`, bypassing
@@ -144,9 +175,39 @@ impl System {
         self.clusters[c].sys_dma_done_at
     }
 
-    /// Service one system-DMA request: functional copy now, transaction
-    /// timing on the shared fabric, completion into the issuing cluster's
-    /// `sys_dma_done_at` (what `CTRL_SYSDMA_STATUS` polls observe).
+    /// Lay one fabric burst's words onto a cluster's L1 bank ports: word
+    /// `w` of the chunk wants the port in cycle `first + w/words_per_beat`
+    /// (a full fabric beat lands across the word-interleaved banks in one
+    /// cycle), slipping behind DMA beats already reserved on the same
+    /// bank. Returns the cycle after the last word's port slot — the
+    /// L1-side completion of the burst.
+    fn lay_beats(
+        cluster: &mut Cluster,
+        base: u32,
+        bytes: u32,
+        first: u64,
+        write: bool,
+        words_per_beat: u32,
+    ) -> u64 {
+        let mut last = first;
+        for w in 0..bytes / 4 {
+            let at = first + (w / words_per_beat) as u64;
+            let got = cluster.sysdma_reserve_word(base + 4 * w, at, write);
+            last = last.max(got + 1);
+        }
+        last
+    }
+
+    /// Service one system-DMA request: functional copy now (data
+    /// correctness — software must not touch the region before the
+    /// status register reports idle, the same contract as the cluster
+    /// DMA), then the **timed data path**: each burst pays the fabric's
+    /// transaction timing (port channels, L2 banks) *and* occupies the
+    /// source/destination cluster's L1 bank ports beat by beat, where it
+    /// contends with core loads/stores through the ordinary bank
+    /// arbiters. Completion lands in the issuing cluster's
+    /// `sys_dma_done_at` (what `CTRL_SYSDMA_STATUS` polls observe) and
+    /// covers both the fabric and the L1-side landing.
     ///
     /// Malformed programmed transfers (misaligned, out-of-SPM, bad peer)
     /// panic with a clear message — the same loud-failure policy as the
@@ -196,10 +257,16 @@ impl System {
 
         // Timing: split into bursts (at L2 interleave boundaries so no
         // burst spans two banks; peer bursts split at max length only)
-        // and issue them with a bounded outstanding window.
+        // and issue them with a bounded outstanding window. Each burst
+        // pays the fabric transaction *and* its beats' L1 bank-port
+        // occupancy: outbound data is read from the source banks one hop
+        // before its fabric data phase, inbound data lands in the
+        // destination banks one hop after.
         let mut done = start;
         let max_burst = self.cfg.fabric.max_burst_bytes as u32;
         let interleave = self.cfg.fabric.l2_interleave_bytes as u32;
+        let hop = self.cfg.fabric.hop_latency;
+        let wpb = (self.cfg.fabric.bus_bytes / 4) as u32;
         let mut off = 0u32;
         while off < req.bytes {
             let chunk = match req.op {
@@ -213,20 +280,45 @@ impl System {
             let fe = &self.frontends[c];
             let slot = (0..MAX_OUTSTANDING).min_by_key(|&i| fe.inflight[i]).unwrap();
             let issue = start.max(fe.inflight[slot]);
-            let finish = match req.op {
+            let local = req.local_addr + off;
+            let remote = req.remote_addr + off;
+            // Fabric transaction plus the burst's L1 sides: which
+            // cluster's banks source the data and which receive it.
+            let (timing, l1_read, l1_write) = match req.op {
                 SysDmaOp::L2ToL1 => {
-                    self.fabric.l2_read(c, req.l2_offset + off, chunk as usize, issue)
+                    let t = self.fabric.l2_read(c, req.l2_offset + off, chunk as usize, issue);
+                    (t, None, Some((c, local)))
                 }
                 SysDmaOp::L1ToL2 => {
-                    self.fabric.l2_write(c, req.l2_offset + off, chunk as usize, issue)
+                    let t = self.fabric.l2_write(c, req.l2_offset + off, chunk as usize, issue);
+                    (t, Some((c, local)), None)
                 }
                 SysDmaOp::PeerToL1 => {
-                    self.fabric.peer_copy(req.remote_cluster as usize, c, chunk as usize, issue)
+                    let src = req.remote_cluster as usize;
+                    let t = self.fabric.peer_copy(src, c, chunk as usize, issue);
+                    (t, Some((src, remote)), Some((c, local)))
                 }
                 SysDmaOp::L1ToPeer => {
-                    self.fabric.peer_copy(c, req.remote_cluster as usize, chunk as usize, issue)
+                    let dst = req.remote_cluster as usize;
+                    let t = self.fabric.peer_copy(c, dst, chunk as usize, issue);
+                    (t, Some((c, local)), Some((dst, remote)))
                 }
             };
+            // Outbound data leaves the source banks one hop before the
+            // fabric data phase; inbound data lands one hop after. The
+            // burst completes once the fabric transaction and both L1
+            // sides have finished.
+            let mut finish = timing.done;
+            if let Some((cl, addr)) = l1_read {
+                let first = timing.data_start.saturating_sub(hop);
+                let read = Self::lay_beats(&mut self.clusters[cl], addr, chunk, first, false, wpb);
+                finish = finish.max(read);
+            }
+            if let Some((cl, addr)) = l1_write {
+                let first = timing.data_start + hop;
+                let land = Self::lay_beats(&mut self.clusters[cl], addr, chunk, first, true, wpb);
+                finish = finish.max(land);
+            }
             self.frontends[c].inflight[slot] = finish;
             self.frontends[c].stats.bursts += 1;
             done = done.max(finish);
@@ -257,6 +349,7 @@ impl System {
             fabric: self.fabric.counters.clone(),
             fabric_bytes: self.fabric.total_bytes(),
             fabric_wait_cycles: self.fabric.total_wait_cycles(),
+            gbarrier_epochs: self.fabric.gbarrier_epochs,
             sysdma: self.frontends.iter().map(|f| f.stats).collect(),
         }
     }
@@ -338,12 +431,14 @@ pub fn run_system_kernel(
 /// register addresses and the system geometry.
 pub fn system_symbols(cfg: &SystemConfig) -> HashMap<String, u32> {
     use crate::mem::{
-        CTRL_BASE, CTRL_CLUSTER_ID, CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL,
-        CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER,
+        CTRL_BASE, CTRL_CLUSTER_ID, CTRL_GBARRIER, CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2,
+        CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS,
+        CTRL_SYSDMA_TRIGGER,
     };
     let mut sym = base_symbols(&cfg.cluster);
     sym.insert("NUM_CLUSTERS".into(), cfg.num_clusters as u32);
     sym.insert("CLUSTER_ID_ADDR".into(), CTRL_BASE + CTRL_CLUSTER_ID);
+    sym.insert("GBARRIER_ADDR".into(), CTRL_BASE + CTRL_GBARRIER);
     sym.insert("SYSDMA_L2_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_L2);
     sym.insert("SYSDMA_LOCAL_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_LOCAL);
     sym.insert("SYSDMA_BYTES_ADDR".into(), CTRL_BASE + CTRL_SYSDMA_BYTES);

@@ -34,8 +34,11 @@ pub struct SystemStats {
     pub fabric: Vec<FabricCounters>,
     /// Unique bytes moved over the shared fabric.
     pub fabric_bytes: u64,
-    /// Aggregate shared-fabric contention (see `FabricCounters`).
+    /// Aggregate shared-fabric contention (see `FabricCounters`), booked
+    /// once per burst even when a peer burst stalls two ports.
     pub fabric_wait_cycles: u64,
+    /// Completed global-barrier epochs on the fabric.
+    pub gbarrier_epochs: u64,
     /// Per-cluster system-DMA statistics.
     pub sysdma: Vec<SysDmaStats>,
 }

@@ -21,6 +21,11 @@
 //! mempool system [--clusters 4] [--cores 16] [--kernel matmul|axpy|reduce|all]
 //!                [--backend serial|parallel] [--per-cluster]
 //!                [--check-determinism]
+//! mempool report [--campaign cluster|system|all] [--preset minpool|mempool]
+//!                [--jobs N] [--out report.json]
+//!                [--check ci/expected_report.json]
+//!                [--host-tolerance 0.5] [--md-summary summary.md]
+//! mempool report --diff old.json new.json [--host-tolerance 0.5]
 //! mempool report area|instr-energy|power|related-work
 //! mempool golden-check
 //! ```
@@ -32,12 +37,16 @@ use mempool::runtime::{
 };
 use mempool::sim::SimBackend;
 use mempool::studies;
+use mempool::studies::report::{
+    check_backend_agreement, diff_reports, report_is_bootstrap, run_report, summary_markdown,
+    DiffTolerance, ReportSpec,
+};
 use mempool::studies::sweep::{
     baseline_is_bootstrap, baseline_json, check_baseline, results_json, run_sweep, SweepSpec,
 };
 use mempool::util::bench::section;
 use mempool::util::cli::Args;
-use mempool::util::json::Json;
+use mempool::util::json::{write_pretty, Json};
 use mempool::util::par::default_jobs;
 
 fn cfg_for(args: &Args) -> ClusterConfig {
@@ -287,9 +296,9 @@ fn cmd_sweep(args: &Args) {
             p.kernel,
             format!("{}x{}", p.clusters, p.cores),
             p.cycles,
-            format!("{:.2}", p.ipc),
-            format!("{:.1}", p.ops_per_cycle),
-            format!("{:.0}%", 100.0 * p.synchronization),
+            format!("{:.2}", p.ipc()),
+            format!("{:.1}", p.ops_per_cycle()),
+            format!("{:.0}%", 100.0 * p.breakdown().synchronization),
             format!("{:.1}", p.wall_ms)
         );
     }
@@ -297,12 +306,12 @@ fn cmd_sweep(args: &Args) {
 
     if let Some(path) = args.get("out") {
         let doc = results_json(&spec, &points, wall);
-        std::fs::write(path, doc.pretty()).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        write_pretty(path, &doc).unwrap_or_else(|e| panic!("write {path}: {e}"));
         println!("results written to {path}");
     }
     if let Some(path) = args.get("write-baseline") {
         let doc = baseline_json(&spec, &points);
-        std::fs::write(path, doc.pretty()).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        write_pretty(path, &doc).unwrap_or_else(|e| panic!("write {path}: {e}"));
         println!("baseline written to {path}");
     }
     if let Some(path) = args.get("check") {
@@ -445,7 +454,11 @@ fn cmd_system(args: &Args) {
 }
 
 fn cmd_report(args: &Args) {
+    if args.has("diff") {
+        return cmd_report_diff(args);
+    }
     match args.positional.get(1).map(|s| s.as_str()) {
+        None => cmd_report_campaign(args),
         Some("area") => {
             let cfg = ClusterConfig::mempool();
             let a = studies::fig12_area(&cfg);
@@ -495,8 +508,185 @@ fn cmd_report(args: &Args) {
                 brow!(a, isa, cc, t, l1, ind);
             }
         }
-        _ => eprintln!("report: area | instr-energy | power | related-work"),
+        Some(other) => {
+            eprintln!(
+                "unknown report kind `{other}` (area | instr-energy | power | related-work); \
+                 run `mempool report` with no positional for the campaign runner"
+            );
+            std::process::exit(2);
+        }
     }
+}
+
+/// Read + parse a JSON file, exiting with a clear message on failure.
+fn load_json(path: &str) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("read {path}: {e}");
+        std::process::exit(1)
+    });
+    Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("parse {path}: {e}");
+        std::process::exit(1)
+    })
+}
+
+/// Optional `--host-tolerance R` (relative host-throughput slowdown).
+/// Only fractions in (0, 1) make sense — at 1.0 or above no slowdown
+/// could ever fail, silently disabling the gate — and a bare flag with
+/// no value is an error, not a silent skip.
+fn host_tolerance(args: &Args) -> DiffTolerance {
+    if args.has("host-tolerance") && args.get("host-tolerance").is_none() {
+        eprintln!("--host-tolerance needs a value: a fraction in (0, 1), e.g. 0.5");
+        std::process::exit(2);
+    }
+    DiffTolerance {
+        host_rel: args.get("host-tolerance").map(|s| match s.parse::<f64>() {
+            Ok(r) if r > 0.0 && r < 1.0 => r,
+            _ => {
+                eprintln!("--host-tolerance {s}: expected a fraction in (0, 1), e.g. 0.5");
+                std::process::exit(2)
+            }
+        }),
+    }
+}
+
+/// `mempool report --diff OLD NEW`: compare two report files under the
+/// per-field tolerance rules; exit 1 on any mismatch. No simulation.
+fn cmd_report_diff(args: &Args) {
+    let old_path = args.get("diff").unwrap_or_else(|| {
+        eprintln!("usage: mempool report --diff OLD.json NEW.json");
+        std::process::exit(2)
+    });
+    let Some(new_path) = args.positional.get(1).map(String::as_str) else {
+        eprintln!("usage: mempool report --diff OLD.json NEW.json");
+        std::process::exit(2)
+    };
+    let old = load_json(old_path);
+    let new = load_json(new_path);
+    match diff_reports(&old, &new, &host_tolerance(args)) {
+        Ok(msg) => println!("report diff OK: {msg}"),
+        Err(e) => {
+            eprintln!("REPORT DIFF {old_path} vs {new_path}:\n{e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The campaign runner: execute the declared scenario grid on every
+/// configured backend, print the table, optionally write the report,
+/// append a markdown summary, and gate against a pinned report. The
+/// serial-vs-parallel agreement invariant is always enforced; the
+/// pinned diff is exact on simulated fields. Any failed gate exits 1 —
+/// after the artifact and summary are written, so CI keeps the evidence.
+fn cmd_report_campaign(args: &Args) {
+    let mut spec = ReportSpec::ci_default();
+    if let Some(p) = args.get("preset") {
+        spec.preset = p.to_string();
+    }
+    spec.jobs = args.parse_or("jobs", spec.jobs);
+    if let Some(which) = args.get("campaign") {
+        spec = spec.campaign(which).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
+    }
+    let n = spec.scenarios().len();
+    section(&format!(
+        "Performance report — {} preset, {} scenarios, {} jobs",
+        spec.preset, n, spec.jobs
+    ));
+    let report = run_report(&spec).unwrap_or_else(|e| {
+        eprintln!("report campaign failed: {e}");
+        std::process::exit(1)
+    });
+    brow!("campaign", "kernel", "cl x cores", "backend", "cycles", "IPC", "GOPS/W", "Mcyc/s");
+    for (campaign, p) in &report.points {
+        brow!(
+            campaign,
+            p.kernel,
+            format!("{}x{}", p.clusters, p.cores),
+            p.backend.name(),
+            p.cycles,
+            format!("{:.2}", p.ipc()),
+            format!("{:.0}", p.gops_per_w()),
+            format!("{:.2}", p.sim_cycles_per_sec() / 1e6)
+        );
+    }
+    println!("\ncampaign wall-clock: {:.3}s ({} jobs)", report.wall_seconds, report.jobs);
+    let doc = report.to_json();
+
+    // Gates are evaluated first, but only *reported* (exit) after the
+    // artifact and the markdown summary are on disk.
+    let mut status = Vec::new();
+    let mut failures = Vec::new();
+    match check_backend_agreement(&doc) {
+        Ok(n) if n > 0 => {
+            status.push(format!("✅ serial and parallel agree on all {n} scenario group(s)"));
+        }
+        Ok(_) => {}
+        Err(e) => {
+            status.push("❌ BACKEND CYCLE MISMATCH — see the job log".to_string());
+            failures.push(format!("BACKEND CYCLE MISMATCH:\n{e}"));
+        }
+    }
+    if let Some(path) = args.get("check") {
+        let pinned = load_json(path);
+        if report_is_bootstrap(&pinned) {
+            let warn = format!(
+                "DEGRADED GATE: pinned report {path} is a bootstrap placeholder — no cycle \
+                 numbers pinned, gating on serial-vs-parallel agreement only; pin by committing \
+                 a trusted run's report artifact as {path}"
+            );
+            eprintln!("WARNING: {warn}");
+            status.push(format!("⚠️ {warn}"));
+        } else {
+            match diff_reports(&pinned, &doc, &host_tolerance(args)) {
+                Ok(msg) => {
+                    println!("report matches {path}: {msg}");
+                    status.push(format!("✅ matches pinned report {path} ({msg})"));
+                }
+                Err(e) => {
+                    status.push(format!("❌ drift vs pinned report {path} — see the job log"));
+                    failures.push(format!(
+                        "REPORT DRIFT vs {path}:\n{e}\n(if the change is intended, re-pin with \
+                         `mempool report --out {path}`)"
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(path) = args.get("out") {
+        write_pretty(path, &doc).unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("report written to {path}");
+    }
+    if let Some(path) = args.get("md-summary") {
+        append_text(path, &summary_markdown(&doc, &status));
+        println!("markdown summary appended to {path}");
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("{f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+/// Append to a text file (creating it and its parents if missing) —
+/// `$GITHUB_STEP_SUMMARY` is append-oriented.
+fn append_text(path: &str, text: &str) {
+    use std::io::Write as _;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .unwrap_or_else(|e| panic!("create {}: {e}", dir.display()));
+        }
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .unwrap_or_else(|e| panic!("open {path}: {e}"));
+    f.write_all(text.as_bytes()).unwrap_or_else(|e| panic!("write {path}: {e}"));
 }
 
 fn cmd_golden() {

@@ -3,6 +3,7 @@
 
 use crate::core::CoreStats;
 use crate::energy::EnergyBook;
+use crate::util::json::Json;
 
 /// Fractional cycle breakdown across all cores (Fig 14's stacked bars).
 #[derive(Debug, Clone, Copy, Default)]
@@ -18,6 +19,18 @@ pub struct CycleBreakdown {
 impl CycleBreakdown {
     pub fn ipc(&self) -> f64 {
         self.compute + self.control
+    }
+
+    /// The six Fig 14 fractions as a JSON object (report/sweep schema).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("compute", self.compute.into());
+        o.set("control", self.control.into());
+        o.set("synchronization", self.synchronization.into());
+        o.set("ifetch", self.ifetch.into());
+        o.set("lsu", self.lsu.into());
+        o.set("raw", self.raw.into());
+        o
     }
 }
 
@@ -117,6 +130,32 @@ impl ClusterStats {
             return 0.0;
         }
         self.gops(clock_hz) / p
+    }
+
+    /// Every raw event counter as a JSON object — the exact-match
+    /// section of the report schema (all pure simulation counts, so two
+    /// cycle-exact engines must serialize byte-identically). Includes
+    /// the issue/stall counts behind the Fig 14 fractions, the traffic
+    /// split, the DMA-vs-core L1 contention, and the total energy.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("num_cores", self.num_cores.into());
+        o.set("issued_compute", self.issued_compute.into());
+        o.set("issued_control", self.issued_control.into());
+        o.set("ops", self.ops.into());
+        o.set("stall_ifetch", self.stall_ifetch.into());
+        o.set("stall_raw", self.stall_raw.into());
+        o.set("stall_lsu", self.stall_lsu.into());
+        o.set("sleep_cycles", self.sleep_cycles.into());
+        o.set("halted_cycles", self.halted_cycles.into());
+        let mut tr = Json::obj();
+        tr.set("local", self.local_accesses.into());
+        tr.set("group", self.group_accesses.into());
+        tr.set("global", self.global_accesses.into());
+        o.set("traffic", tr);
+        o.set("sysdma_l1_conflict_cycles", self.sysdma_l1_conflict_cycles.into());
+        o.set("energy_pj", self.energy.total_pj().into());
+        o
     }
 
     /// The Fig 14 stacked-bar fractions.

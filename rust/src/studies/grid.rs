@@ -1,0 +1,259 @@
+//! The shared grid-execution core behind the sweep runner and the
+//! performance-report campaign runner: resolve one scenario request
+//! (kernel × clusters × cores × backend) through the unified
+//! `run_workload` entry point, collect the *full* statistics book, and
+//! serialize every completed scenario in the one JSON schema both
+//! consumers emit — so the sweep and the report cannot drift apart on
+//! either execution or format.
+//!
+//! Scenario runs are independent full simulations, so grids parallelize
+//! at two levels: coarse-grained across scenarios (plain scoped threads,
+//! works in every build) and fine-grained inside each simulation when
+//! the parallel backend and the `parallel` feature are active.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::{ClusterConfig, SystemConfig};
+use crate::runtime::{run_workload, workload_by_name, RunConfig, Target, Workload};
+use crate::sim::{ClusterStats, SimBackend};
+use crate::system::SystemStats;
+use crate::util::json::Json;
+
+/// Cluster shape for a preset at a given core count.
+pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
+    if !cores.is_power_of_two() {
+        return Err(format!("core count {cores} must be a power of two"));
+    }
+    let mut cfg = ClusterConfig::with_cores(cores);
+    match preset {
+        // The paper's large configuration family.
+        "mempool" => {}
+        // The fast-test family: fewer DMA backends, like `minpool()`.
+        "minpool" => cfg.dma.backends_per_group = cfg.dma.backends_per_group.min(2),
+        other => return Err(format!("unknown config preset `{other}` (minpool|mempool)")),
+    }
+    Ok(cfg)
+}
+
+/// One scenario request: which kernel, at which shape, on which engine.
+#[derive(Debug, Clone)]
+pub struct ScenarioReq {
+    pub kernel: String,
+    /// Clusters in the system (1 = standalone cluster).
+    pub clusters: usize,
+    /// Cores per cluster.
+    pub cores: usize,
+    pub backend: SimBackend,
+}
+
+/// The human-readable identity of a scenario, used consistently across
+/// baseline-drift and report-diff error messages.
+pub fn scenario_label(kernel: &str, clusters: u64, cores: u64) -> String {
+    format!("{kernel} @ {clusters}x{cores} cores")
+}
+
+/// Is this baseline/report document the placeholder committed before any
+/// toolchain pinned real numbers? One marker, one rule, shared by the
+/// sweep baselines and the report (so the two gates cannot degrade under
+/// different conventions).
+pub fn is_bootstrap_doc(doc: &Json) -> bool {
+    doc.get("bootstrap").and_then(Json::as_bool).unwrap_or(false)
+}
+
+/// One completed scenario, carrying the full statistics book (not just
+/// the headline numbers) so every consumer — the sweep table, the
+/// report schema, CI diffs — reads from the same measurement.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub kernel: String,
+    /// Clusters in the system (1 = standalone cluster).
+    pub clusters: usize,
+    /// Cores per cluster.
+    pub cores: usize,
+    /// The stepping engine this scenario ran on.
+    pub backend: SimBackend,
+    /// Simulated cycles the measured phase lasted.
+    pub cycles: u64,
+    /// Cluster clock, for the energy-derived GOPS / GOPS/W figures.
+    pub clock_hz: f64,
+    /// The run's statistics book — the system-wide totals roll-up on
+    /// multi-cluster scenarios, so the same metrics read either way.
+    pub stats: ClusterStats,
+    /// The full system book (multi-cluster scenarios only).
+    pub system: Option<SystemStats>,
+    /// Host-side wall clock for this scenario.
+    pub wall_ms: f64,
+}
+
+impl GridPoint {
+    pub fn ipc(&self) -> f64 {
+        self.stats.ipc()
+    }
+
+    pub fn ops_per_cycle(&self) -> f64 {
+        self.stats.ops_per_cycle()
+    }
+
+    pub fn breakdown(&self) -> crate::sim::CycleBreakdown {
+        self.stats.breakdown()
+    }
+
+    pub fn gops(&self) -> f64 {
+        self.stats.gops(self.clock_hz)
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.stats.power_w(self.clock_hz)
+    }
+
+    pub fn gops_per_w(&self) -> f64 {
+        self.stats.gops_per_w(self.clock_hz)
+    }
+
+    /// Shared-fabric contention (multi-cluster scenarios; 0 standalone).
+    pub fn fabric_wait_cycles(&self) -> u64 {
+        self.system.as_ref().map_or(0, |s| s.fabric_wait_cycles)
+    }
+
+    /// Simulated cycles per host-side second — the simulator-speed
+    /// trajectory CI tracks (a host metric, never an exact-match field).
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        if self.wall_ms <= 0.0 {
+            0.0
+        } else {
+            self.cycles as f64 / (self.wall_ms / 1e3)
+        }
+    }
+
+    /// The one scenario schema: simulated cycles, derived rates, the
+    /// Fig 14 breakdown fractions, the raw stall/traffic counters, the
+    /// energy-derived GOPS/W figures, the system-level book when
+    /// present, and the host-side throughput under a separate `host`
+    /// key (everything outside `host` is deterministic and compared
+    /// exactly; `host` is masked or tolerance-checked).
+    pub fn scenario_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kernel", self.kernel.as_str().into());
+        o.set("clusters", self.clusters.into());
+        o.set("cores", self.cores.into());
+        o.set("backend", self.backend.name().into());
+        o.set("cycles", self.cycles.into());
+        o.set("ipc", self.ipc().into());
+        o.set("ops_per_cycle", self.ops_per_cycle().into());
+        o.set("gops", self.gops().into());
+        o.set("power_w", self.power_w().into());
+        o.set("gops_per_w", self.gops_per_w().into());
+        o.set("breakdown", self.breakdown().to_json());
+        // Each raw count lives in exactly one place — `energy_pj` and
+        // the DMA-contention counter inside `counters`, the fabric wait
+        // inside `system` — so the exact-match diff reports any drift at
+        // one path and schema changes are single-sourced.
+        o.set("counters", self.stats.to_json());
+        if let Some(sys) = &self.system {
+            o.set("system", sys.to_json());
+        }
+        let mut host = Json::obj();
+        host.set("wall_ms", self.wall_ms.into());
+        host.set("sim_cycles_per_sec", self.sim_cycles_per_sec().into());
+        o.set("host", host);
+        o
+    }
+
+    /// A bare-bones point for baseline/diff tests: real identity fields
+    /// and cycle count, empty statistics.
+    #[cfg(test)]
+    pub fn synthetic(kernel: &str, clusters: usize, cores: usize, cycles: u64) -> GridPoint {
+        GridPoint {
+            kernel: kernel.to_string(),
+            clusters,
+            cores,
+            backend: SimBackend::Serial,
+            cycles,
+            clock_hz: 1e9,
+            stats: ClusterStats { cycles, num_cores: cores, ..ClusterStats::default() },
+            system: None,
+            wall_ms: 0.0,
+        }
+    }
+}
+
+/// Run one scenario end-to-end (simulate + verify the architectural
+/// result against the host reference). `clusters > 1` runs the kernel's
+/// multi-cluster variant through the `system` harness.
+pub fn run_point(
+    preset: &str,
+    kernel_name: &str,
+    clusters: usize,
+    cores: usize,
+    backend: SimBackend,
+) -> Result<GridPoint, String> {
+    let cfg = config_for(preset, cores)?;
+    let clock_hz = cfg.clock_hz;
+    let t0 = Instant::now();
+    let (cycles, stats, system) = if clusters <= 1 {
+        let workload = workload_by_name(kernel_name, Target::Cluster, cores)?;
+        let run = RunConfig::cluster(&cfg).with_backend(backend);
+        let mut result = run_workload(workload.as_ref(), &run);
+        workload
+            .verify(&mut result.machine)
+            .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
+        (result.cycles, result.stats, None)
+    } else {
+        let workload = workload_by_name(kernel_name, Target::System, cores)?;
+        let syscfg = SystemConfig::new(clusters, cfg);
+        let run = RunConfig::system(&syscfg).with_backend(backend);
+        let mut result = run_workload(workload.as_ref(), &run);
+        workload.verify(&mut result.machine).map_err(|e| {
+            format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
+        })?;
+        (result.cycles, result.stats, result.system_stats)
+    };
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    Ok(GridPoint {
+        kernel: kernel_name.to_string(),
+        clusters: clusters.max(1),
+        cores,
+        backend,
+        cycles,
+        clock_hz,
+        stats,
+        system,
+        wall_ms,
+    })
+}
+
+/// Run a list of scenario requests, fanned across `jobs` worker
+/// threads. Results come back in request order regardless of
+/// scheduling; the first scenario error aborts the whole batch.
+pub fn run_scenarios(
+    preset: &str,
+    reqs: &[ScenarioReq],
+    jobs: usize,
+) -> Result<Vec<GridPoint>, String> {
+    if reqs.is_empty() {
+        return Err("empty scenario grid (no kernels or no core counts)".to_string());
+    }
+    let jobs = jobs.clamp(1, reqs.len());
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<GridPoint, String>>>> =
+        reqs.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= reqs.len() {
+                    break;
+                }
+                let r = &reqs[i];
+                let point = run_point(preset, &r.kernel, r.clusters, r.cores, r.backend);
+                *slots[i].lock().unwrap() = Some(point);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("scenario worker finished"))
+        .collect()
+}

@@ -2,6 +2,8 @@
 //! the `mempool` CLI, the examples, and the bench targets. Each returns
 //! structured rows so callers can print, assert, or serialize them.
 
+pub mod grid;
+pub mod report;
 pub mod sweep;
 
 use crate::axi::AxiSystem;

@@ -1,0 +1,637 @@
+//! The unified performance-report campaign runner — the repo's one
+//! quantitative artifact. It executes a declared grid of scenarios
+//! (Table 1 kernels × cores on the cluster target; the system kernels ×
+//! cluster counts on the multi-cluster target, every point on both
+//! stepping engines) through the shared [`grid`](crate::studies::grid)
+//! core and emits one schema-versioned `report.json` per run: simulated
+//! cycles, IPC, OP/cycle, the Fig 14 breakdown fractions, the raw
+//! stall/traffic/DMA-contention counters, energy-derived GOPS and
+//! GOPS/W, and host-side simulator throughput.
+//!
+//! Comparison semantics (`diff_reports`) are the CI gate: every field
+//! outside a `host` object is a pure simulation quantity and must match
+//! *exactly* (the determinism invariant); `host` fields are masked, and
+//! host throughput is optionally gated by a relative tolerance (the
+//! simulator-speed trajectory). While the pinned report is still a
+//! bootstrap placeholder, [`check_backend_agreement`] — serial and
+//! parallel scenario sections byte-identical — is the degraded gate,
+//! and the CLI surfaces that degradation in the CI job summary.
+
+use std::time::Instant;
+
+use crate::sim::SimBackend;
+use crate::studies::grid::{run_scenarios, scenario_label, GridPoint, ScenarioReq};
+use crate::util::json::{first_diff, Json};
+use crate::util::par::default_jobs;
+
+/// The report document's `schema` tag.
+pub const REPORT_SCHEMA: &str = "mempool-report";
+/// The report document's `version`; bump on any incompatible change.
+pub const REPORT_SCHEMA_VERSION: u64 = 1;
+
+/// One rectangular block of the campaign grid.
+#[derive(Debug, Clone)]
+pub struct GridBlock {
+    /// Clusters in the system (1 = standalone cluster).
+    pub clusters: Vec<usize>,
+    /// Cores per cluster.
+    pub cores: Vec<usize>,
+    pub kernels: Vec<String>,
+}
+
+/// The declared campaign: grid blocks on the cluster and system
+/// targets, each scenario run once per backend.
+#[derive(Debug, Clone)]
+pub struct ReportSpec {
+    pub preset: String,
+    /// Cluster-target campaign blocks (`clusters` must be `[1]`).
+    pub cluster: Vec<GridBlock>,
+    /// System-target campaign blocks (`clusters` above 1).
+    pub system: Vec<GridBlock>,
+    pub backends: Vec<SimBackend>,
+    /// Scenario-level worker threads.
+    pub jobs: usize,
+}
+
+fn names(ns: &[&str]) -> Vec<String> {
+    ns.iter().map(|s| s.to_string()).collect()
+}
+
+impl ReportSpec {
+    /// The declared CI campaign: the Table 1 kernels across core counts
+    /// on the cluster target, and the system kernels on the 2-cluster
+    /// system, every point on both stepping engines.
+    pub fn ci_default() -> ReportSpec {
+        ReportSpec {
+            preset: "minpool".to_string(),
+            cluster: vec![
+                GridBlock {
+                    clusters: vec![1],
+                    cores: vec![4, 8, 16],
+                    kernels: names(&["matmul", "axpy", "dotp"]),
+                },
+                // The remaining Table 1 kernels size themselves per-core
+                // from the config; one representative core count keeps
+                // the campaign fast.
+                GridBlock {
+                    clusters: vec![1],
+                    cores: vec![16],
+                    kernels: names(&["conv2d", "dct"]),
+                },
+            ],
+            system: vec![GridBlock {
+                clusters: vec![2],
+                cores: vec![8],
+                kernels: names(&["matmul", "axpy", "reduce"]),
+            }],
+            backends: vec![SimBackend::Serial, SimBackend::Parallel],
+            jobs: default_jobs(),
+        }
+    }
+
+    /// Restrict the campaign to one target (`cluster` | `system` | `all`).
+    pub fn campaign(mut self, which: &str) -> Result<ReportSpec, String> {
+        match which {
+            "all" => Ok(self),
+            "cluster" => {
+                self.system.clear();
+                Ok(self)
+            }
+            "system" => {
+                self.cluster.clear();
+                Ok(self)
+            }
+            other => Err(format!("unknown campaign `{other}` (cluster|system|all)")),
+        }
+    }
+
+    /// The scenario list in declared order: campaign-major (cluster
+    /// first), block grid order within, backends innermost.
+    pub fn scenarios(&self) -> Vec<(&'static str, ScenarioReq)> {
+        let mut out = Vec::new();
+        for (campaign, blocks) in [("cluster", &self.cluster), ("system", &self.system)] {
+            for blk in blocks {
+                for &clusters in &blk.clusters {
+                    for &cores in &blk.cores {
+                        for kernel in &blk.kernels {
+                            for &backend in &self.backends {
+                                out.push((
+                                    campaign,
+                                    ScenarioReq {
+                                        kernel: kernel.clone(),
+                                        clusters,
+                                        cores,
+                                        backend,
+                                    },
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One completed campaign.
+pub struct Report {
+    pub preset: String,
+    pub backends: Vec<SimBackend>,
+    pub jobs: usize,
+    /// `(campaign, point)` in declared order.
+    pub points: Vec<(&'static str, GridPoint)>,
+    pub wall_seconds: f64,
+}
+
+/// Run the whole campaign through the shared grid executor. The first
+/// scenario failure (simulation or verification) aborts the campaign.
+pub fn run_report(spec: &ReportSpec) -> Result<Report, String> {
+    let scen = spec.scenarios();
+    let reqs: Vec<ScenarioReq> = scen.iter().map(|(_, r)| r.clone()).collect();
+    let t0 = Instant::now();
+    let points = run_scenarios(&spec.preset, &reqs, spec.jobs)?;
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(Report {
+        preset: spec.preset.clone(),
+        backends: spec.backends.clone(),
+        jobs: spec.jobs,
+        points: scen.into_iter().map(|(c, _)| c).zip(points).collect(),
+        wall_seconds,
+    })
+}
+
+impl Report {
+    /// The schema-versioned report document (what `report.json` holds).
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("schema", REPORT_SCHEMA.into());
+        doc.set("version", REPORT_SCHEMA_VERSION.into());
+        doc.set("preset", self.preset.as_str().into());
+        doc.set(
+            "backends",
+            Json::Arr(self.backends.iter().map(|b| Json::from(b.name())).collect()),
+        );
+        let scenarios = self
+            .points
+            .iter()
+            .map(|(campaign, p)| {
+                let mut s = p.scenario_json();
+                s.set("campaign", (*campaign).into());
+                s
+            })
+            .collect();
+        doc.set("scenarios", Json::Arr(scenarios));
+        let mut host = Json::obj();
+        host.set("wall_seconds", self.wall_seconds.into());
+        host.set("jobs", self.jobs.into());
+        doc.set("host", host);
+        doc
+    }
+}
+
+/// Structural validation of a report document: schema tag, version, and
+/// the identity+cycles fields of every scenario.
+pub fn validate_report(doc: &Json) -> Result<(), String> {
+    fn identity_fields(s: &Json) -> Result<(), String> {
+        s.req_str("kernel")?;
+        s.req_u64("clusters")?;
+        s.req_u64("cores")?;
+        s.req_str("backend")?;
+        s.req_u64("cycles")?;
+        Ok(())
+    }
+    let schema = doc.req_str("schema")?;
+    if schema != REPORT_SCHEMA {
+        return Err(format!("not a mempool report (schema `{schema}`, want `{REPORT_SCHEMA}`)"));
+    }
+    let version = doc.req_u64("version")?;
+    if version != REPORT_SCHEMA_VERSION {
+        return Err(format!(
+            "report schema version {version} unsupported \
+             (this build reads v{REPORT_SCHEMA_VERSION})"
+        ));
+    }
+    let scenarios = doc.req_array("scenarios")?;
+    for (i, s) in scenarios.iter().enumerate() {
+        identity_fields(s).map_err(|e| format!("scenario[{i}]: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Is this the placeholder committed before any toolchain pinned real
+/// numbers? (Same marker and rule as the sweep baselines.)
+pub fn report_is_bootstrap(doc: &Json) -> bool {
+    crate::studies::grid::is_bootstrap_doc(doc)
+}
+
+/// Null out every host-side (wall-clock-derived) field, leaving only
+/// deterministic simulation quantities — after this, two reports of the
+/// same commit must be byte-identical per backend.
+pub fn mask_host_fields(doc: &mut Json) {
+    if !matches!(doc, Json::Obj(_)) {
+        return;
+    }
+    doc.set("host", Json::Null);
+    if let Json::Obj(fields) = doc {
+        for (key, value) in fields.iter_mut() {
+            if key != "scenarios" {
+                continue;
+            }
+            if let Json::Arr(scenarios) = value {
+                for s in scenarios {
+                    s.set("host", Json::Null);
+                }
+            }
+        }
+    }
+}
+
+/// The identity of one scenario row (campaign + shape + backend), used
+/// as the match key and in every diff message.
+fn scenario_key(s: &Json) -> String {
+    let campaign = s.get("campaign").and_then(Json::as_str).unwrap_or("cluster");
+    let kernel = s.get("kernel").and_then(Json::as_str).unwrap_or("?");
+    let clusters = s.get("clusters").and_then(Json::as_u64).unwrap_or(1);
+    let cores = s.get("cores").and_then(Json::as_u64).unwrap_or(0);
+    let backend = s.get("backend").and_then(Json::as_str).unwrap_or("?");
+    format!("[{campaign}] {} on {backend}", scenario_label(kernel, clusters, cores))
+}
+
+fn host_throughput(s: &Json) -> f64 {
+    s.get("host")
+        .and_then(|h| h.get("sim_cycles_per_sec"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0)
+}
+
+/// Per-field tolerance rules for `diff_reports`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DiffTolerance {
+    /// Allowed relative *slowdown* of host simulator throughput
+    /// (`host.sim_cycles_per_sec`) before the diff fails; speedups
+    /// always pass. `None` = host fields are informational only (the
+    /// right setting when the two reports come from different hosts).
+    pub host_rel: Option<f64>,
+}
+
+/// Compare two reports under the per-field tolerance rules: simulated
+/// fields (everything outside `host`) must match exactly, scenario for
+/// scenario; missing and extra scenarios are both errors; host
+/// throughput is gated only when a tolerance is given. `old` is the
+/// pinned/expected side, `new` the measured side. Returns a one-line
+/// summary on success, the full drift list on failure.
+pub fn diff_reports(old: &Json, new: &Json, tol: &DiffTolerance) -> Result<String, String> {
+    validate_report(old).map_err(|e| format!("old report: {e}"))?;
+    validate_report(new).map_err(|e| format!("new report: {e}"))?;
+    if report_is_bootstrap(old) || report_is_bootstrap(new) {
+        return Err("cannot diff a bootstrap placeholder report (no scenarios pinned)".to_string());
+    }
+    let mut errors = Vec::new();
+    if old.req_str("preset")? != new.req_str("preset")? {
+        errors.push(format!(
+            "preset differs: {} vs {}",
+            old.req_str("preset")?,
+            new.req_str("preset")?
+        ));
+    }
+    fn keyed(doc: &Json) -> Result<Vec<(String, Json)>, String> {
+        Ok(doc.req_array("scenarios")?.iter().map(|s| (scenario_key(s), s.clone())).collect())
+    }
+    let olds = keyed(old)?;
+    let news = keyed(new)?;
+    let mut compared = 0usize;
+    for (key, s_new) in &news {
+        match olds.iter().find(|(k, _)| k == key) {
+            None => errors.push(format!("{key}: not in the old report")),
+            Some((_, s_old)) => {
+                compared += 1;
+                let mut a = s_old.clone();
+                let mut b = s_new.clone();
+                a.set("host", Json::Null);
+                b.set("host", Json::Null);
+                if let Some((path, va, vb)) = first_diff(&a, &b) {
+                    errors.push(format!(
+                        "{key}: `{path}` differs: {va} -> {vb} \
+                         (simulated fields must match exactly)"
+                    ));
+                } else if let Some(rel) = tol.host_rel {
+                    let (h_old, h_new) = (host_throughput(s_old), host_throughput(s_new));
+                    if h_old > 0.0 && h_new < h_old * (1.0 - rel) {
+                        errors.push(format!(
+                            "{key}: host throughput regressed {:.1}% \
+                             ({h_old:.0} -> {h_new:.0} sim cycles/s, tolerance {:.0}%)",
+                            100.0 * (1.0 - h_new / h_old),
+                            100.0 * rel
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    for (key, _) in &olds {
+        if !news.iter().any(|(k, _)| k == key) {
+            errors.push(format!("{key}: in the old report but not the new one"));
+        }
+    }
+    if errors.is_empty() {
+        Ok(format!("{compared} scenario(s) match exactly"))
+    } else {
+        Err(errors.join("\n"))
+    }
+}
+
+/// The degraded (agreement-mode) gate, and a standing invariant of every
+/// multi-backend report: scenarios that share a campaign/kernel/shape
+/// must be identical across backends in every simulated field. Returns
+/// the number of multi-backend scenario groups checked.
+pub fn check_backend_agreement(doc: &Json) -> Result<usize, String> {
+    validate_report(doc)?;
+    let scenarios = doc.req_array("scenarios")?;
+    let group_key = |s: &Json| {
+        let campaign = s.get("campaign").and_then(Json::as_str).unwrap_or("cluster");
+        let kernel = s.get("kernel").and_then(Json::as_str).unwrap_or("?");
+        let clusters = s.get("clusters").and_then(Json::as_u64).unwrap_or(1);
+        let cores = s.get("cores").and_then(Json::as_u64).unwrap_or(0);
+        format!("[{campaign}] {}", scenario_label(kernel, clusters, cores))
+    };
+    let mut groups: Vec<(String, Vec<&Json>)> = Vec::new();
+    for s in scenarios {
+        let k = group_key(s);
+        match groups.iter_mut().find(|(g, _)| *g == k) {
+            Some((_, members)) => members.push(s),
+            None => groups.push((k, vec![s])),
+        }
+    }
+    let normalize = |s: &Json| {
+        let mut c = s.clone();
+        c.set("host", Json::Null);
+        c.set("backend", Json::Null);
+        c
+    };
+    let backend_of =
+        |s: &Json| s.get("backend").and_then(Json::as_str).unwrap_or("?").to_string();
+    let mut errors = Vec::new();
+    let mut checked = 0usize;
+    for (key, members) in &groups {
+        if members.len() < 2 {
+            continue;
+        }
+        checked += 1;
+        let reference = normalize(members[0]);
+        for m in &members[1..] {
+            if let Some((path, va, vb)) = first_diff(&reference, &normalize(m)) {
+                errors.push(format!(
+                    "{key}: {} vs {} disagree at `{path}`: {va} -> {vb}",
+                    backend_of(members[0]),
+                    backend_of(m)
+                ));
+            }
+        }
+    }
+    if errors.is_empty() {
+        Ok(checked)
+    } else {
+        Err(errors.join("\n"))
+    }
+}
+
+/// A GitHub-flavored markdown rendering of the report (per-scenario
+/// table plus the given status lines) for `$GITHUB_STEP_SUMMARY`.
+pub fn summary_markdown(doc: &Json, status: &[String]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str("## MemPool performance report\n\n");
+    let preset = doc.get("preset").and_then(Json::as_str).unwrap_or("?");
+    let version = doc.get("version").and_then(Json::as_u64).unwrap_or(0);
+    let scenarios = doc.get("scenarios").and_then(Json::as_array).unwrap_or(&[]);
+    let _ = writeln!(
+        out,
+        "- preset `{preset}` · {} scenario(s) · schema v{version}",
+        scenarios.len()
+    );
+    for line in status {
+        let _ = writeln!(out, "- {line}");
+    }
+    out.push('\n');
+    out.push_str(
+        "| campaign | kernel | clusters×cores | backend | cycles | IPC | OP/cycle \
+         | GOPS/W | sync | Msim-cyc/s |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+    for s in scenarios {
+        let str_of = |k: &str| s.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+        let u64_of = |k: &str| s.get(k).and_then(Json::as_u64).unwrap_or(0);
+        let f64_of = |k: &str| s.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let sync = s
+            .get("breakdown")
+            .and_then(|b| b.get("synchronization"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "| {} | {} | {}×{} | {} | {} | {:.2} | {:.1} | {:.0} | {:.0}% | {:.2} |",
+            str_of("campaign"),
+            str_of("kernel"),
+            u64_of("clusters"),
+            u64_of("cores"),
+            str_of("backend"),
+            u64_of("cycles"),
+            f64_of("ipc"),
+            f64_of("ops_per_cycle"),
+            f64_of("gops_per_w"),
+            100.0 * sync,
+            host_throughput(s) / 1e6
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{workload_by_name, Target, WORKLOADS};
+
+    /// A fast two-scenario campaign (one per target) for the live tests.
+    fn tiny_spec(backends: Vec<SimBackend>) -> ReportSpec {
+        ReportSpec {
+            preset: "minpool".to_string(),
+            cluster: vec![GridBlock {
+                clusters: vec![1],
+                cores: vec![4],
+                kernels: names(&["axpy"]),
+            }],
+            system: vec![GridBlock {
+                clusters: vec![2],
+                cores: vec![4],
+                kernels: names(&["axpy"]),
+            }],
+            backends,
+            jobs: 2,
+        }
+    }
+
+    #[test]
+    fn ci_campaign_is_well_formed_and_covers_table1() {
+        let spec = ReportSpec::ci_default();
+        let scen = spec.scenarios();
+        // (9 + 2) cluster points + 3 system points, each on 2 backends.
+        assert_eq!(scen.len(), 28);
+        // Every declared kernel resolves in the registry on its target.
+        for (_, r) in &scen {
+            let target = if r.clusters > 1 { Target::System } else { Target::Cluster };
+            workload_by_name(&r.kernel, target, r.cores)
+                .unwrap_or_else(|e| panic!("campaign kernel must resolve: {e}"));
+        }
+        // The cluster campaign covers the full Table 1 suite.
+        for entry in WORKLOADS.iter().filter(|e| e.table1) {
+            assert!(
+                spec.cluster.iter().any(|b| b.kernels.iter().any(|k| k == entry.name)),
+                "Table 1 kernel {} missing from the cluster campaign",
+                entry.name
+            );
+        }
+        // Campaign filters drop exactly the other target.
+        let only_sys = spec.clone().campaign("system").unwrap();
+        assert!(only_sys.cluster.is_empty() && !only_sys.system.is_empty());
+        assert!(ReportSpec::ci_default().campaign("bogus").is_err());
+    }
+
+    #[test]
+    fn report_runs_backends_agree_and_schema_roundtrips() {
+        let report = run_report(&tiny_spec(vec![SimBackend::Serial, SimBackend::Parallel]))
+            .expect("campaign");
+        assert_eq!(report.points.len(), 4);
+        assert!(report.points.iter().all(|(_, p)| p.cycles > 0));
+        let doc = report.to_json();
+        validate_report(&doc).expect("schema-valid report");
+        assert!(!report_is_bootstrap(&doc));
+        // Both scenario groups (one per target) agree across backends.
+        assert_eq!(check_backend_agreement(&doc), Ok(2));
+        // The document round-trips through the writer+parser unchanged.
+        let back = Json::parse(&doc.pretty()).expect("reparse");
+        assert_eq!(back, doc);
+        // And a self-diff passes with byte-identical simulated sections.
+        diff_reports(&doc, &doc, &DiffTolerance::default()).expect("self-diff");
+    }
+
+    #[test]
+    fn masked_reports_are_backend_invariant() {
+        // The determinism contract on the report artifact itself: after
+        // masking host-throughput fields (and the backend labels), a
+        // serial-only and a parallel-only campaign of the same grid
+        // serialize byte-identically.
+        let mut docs = Vec::new();
+        for backend in [SimBackend::Serial, SimBackend::Parallel] {
+            let mut doc = run_report(&tiny_spec(vec![backend])).expect("campaign").to_json();
+            mask_host_fields(&mut doc);
+            doc.set("backends", Json::Null);
+            if let Json::Obj(fields) = &mut doc {
+                for (key, value) in fields.iter_mut() {
+                    if key != "scenarios" {
+                        continue;
+                    }
+                    if let Json::Arr(scenarios) = value {
+                        for s in scenarios {
+                            s.set("backend", Json::Null);
+                        }
+                    }
+                }
+            }
+            docs.push(doc.pretty());
+        }
+        assert_eq!(docs[0], docs[1], "masked serial and parallel reports must be byte-identical");
+    }
+
+    /// A minimal schema-valid single-scenario report for the diff tests.
+    fn synthetic_report(kernel: &str, cycles: u64, throughput: f64) -> Json {
+        let mut s = Json::obj();
+        s.set("kernel", kernel.into());
+        s.set("clusters", 1u64.into());
+        s.set("cores", 4u64.into());
+        s.set("backend", "serial".into());
+        s.set("cycles", cycles.into());
+        s.set("ipc", 0.5.into());
+        let mut host = Json::obj();
+        host.set("wall_ms", 1.0.into());
+        host.set("sim_cycles_per_sec", throughput.into());
+        s.set("host", host);
+        s.set("campaign", "cluster".into());
+        let mut doc = Json::obj();
+        doc.set("schema", REPORT_SCHEMA.into());
+        doc.set("version", REPORT_SCHEMA_VERSION.into());
+        doc.set("preset", "minpool".into());
+        doc.set("scenarios", Json::Arr(vec![s]));
+        doc
+    }
+
+    #[test]
+    fn diff_exact_fields_fail_on_any_drift() {
+        let pinned = synthetic_report("axpy", 1000, 1e6);
+        let same = synthetic_report("axpy", 1000, 2e6);
+        // Host throughput differs wildly, but without a tolerance the
+        // diff only gates simulated fields.
+        diff_reports(&pinned, &same, &DiffTolerance::default()).expect("host is masked");
+        let drifted = synthetic_report("axpy", 1001, 1e6);
+        let err = diff_reports(&pinned, &drifted, &DiffTolerance::default()).unwrap_err();
+        assert!(err.contains("cycles") && err.contains("1000") && err.contains("1001"), "{err}");
+    }
+
+    #[test]
+    fn diff_host_tolerance_gates_only_real_slowdowns() {
+        let tol = DiffTolerance { host_rel: Some(0.1) };
+        let pinned = synthetic_report("axpy", 1000, 100.0);
+        // A 5% slowdown is within the 10% tolerance; a speedup passes.
+        diff_reports(&pinned, &synthetic_report("axpy", 1000, 95.0), &tol).expect("within");
+        diff_reports(&pinned, &synthetic_report("axpy", 1000, 200.0), &tol).expect("speedup");
+        // A 20% slowdown fails, naming the throughput numbers.
+        let err = diff_reports(&pinned, &synthetic_report("axpy", 1000, 80.0), &tol).unwrap_err();
+        assert!(err.contains("throughput regressed"), "{err}");
+    }
+
+    #[test]
+    fn diff_missing_and_extra_scenarios_both_fail() {
+        let pinned = synthetic_report("axpy", 1000, 1e6);
+        let other = synthetic_report("dotp", 1000, 1e6);
+        let err = diff_reports(&pinned, &other, &DiffTolerance::default()).unwrap_err();
+        assert!(err.contains("dotp") && err.contains("not in the old report"), "{err}");
+        assert!(err.contains("axpy") && err.contains("not the new one"), "{err}");
+        // Bootstrap placeholders refuse to diff instead of vacuously passing.
+        let mut boot = synthetic_report("axpy", 1000, 1e6);
+        boot.set("bootstrap", true.into());
+        boot.set("scenarios", Json::Arr(Vec::new()));
+        let err = diff_reports(&boot, &pinned, &DiffTolerance::default()).unwrap_err();
+        assert!(err.contains("bootstrap"), "{err}");
+    }
+
+    #[test]
+    fn backend_disagreement_is_detected() {
+        // Two scenarios with the same identity but different backends
+        // and different cycle counts: the agreement gate must fail and
+        // name the field.
+        let mut doc = synthetic_report("axpy", 1000, 1e6);
+        let a = doc.req_array("scenarios").unwrap()[0].clone();
+        let mut b = a.clone();
+        b.set("backend", "parallel".into());
+        b.set("cycles", 1001u64.into());
+        doc.set("scenarios", Json::Arr(vec![a.clone(), b]));
+        let err = check_backend_agreement(&doc).unwrap_err();
+        assert!(err.contains("disagree") && err.contains("cycles"), "{err}");
+        // Identical sections agree.
+        let mut ok = a.clone();
+        ok.set("backend", "parallel".into());
+        doc.set("scenarios", Json::Arr(vec![a, ok]));
+        assert_eq!(check_backend_agreement(&doc), Ok(1));
+    }
+
+    #[test]
+    fn summary_markdown_renders_a_row_per_scenario() {
+        let doc = synthetic_report("axpy", 1000, 2.5e6);
+        let md = summary_markdown(&doc, &["⚠️ degraded".to_string()]);
+        assert!(md.contains("## MemPool performance report"), "{md}");
+        assert!(md.contains("degraded"), "{md}");
+        assert!(md.contains("| cluster | axpy | 1×4 | serial | 1000 |"), "{md}");
+        // One header row, one separator, one scenario row.
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 3, "{md}");
+    }
+}

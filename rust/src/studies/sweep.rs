@@ -1,42 +1,22 @@
 //! The scenario sweep runner: fan a grid of `ClusterConfig` × kernel
-//! combinations across host threads, run each through the unified
-//! `run_workload` entry point (with the configured stepping backend,
-//! resolving names in the one workload registry), and emit
-//! machine-readable JSON — the workload behind the paper's large
-//! configuration sweeps (Fig 13 scaling, Fig 14 breakdown) and the CI
-//! perf-smoke gate.
+//! combinations across host threads and emit machine-readable JSON —
+//! the workload behind the paper's large configuration sweeps (Fig 13
+//! scaling, Fig 14 breakdown) and local cycle-baseline checks.
 //!
-//! Scenario runs are independent full simulations, so the sweep
-//! parallelizes at two levels: coarse-grained across scenarios (plain
-//! scoped threads, works in every build) and fine-grained inside each
-//! simulation when the parallel backend and the `parallel` feature are
-//! active.
+//! Execution and the per-scenario JSON schema live in the shared
+//! [`grid`](crate::studies::grid) core, which the performance-report
+//! campaign runner ([`report`](crate::studies::report)) also runs on;
+//! this module adds the rectangular-grid spec, the results/baseline
+//! documents, and the cycle-baseline comparison. CI's perf gate goes
+//! through `mempool report --check`/`--diff`; `mempool sweep --check`
+//! remains the local, single-grid form of the same exact-cycles rule.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
-
-use crate::config::{ClusterConfig, SystemConfig};
-use crate::runtime::{run_workload, workload_by_name, RunConfig, Target, Workload};
 use crate::sim::SimBackend;
+use crate::studies::grid::{run_scenarios, scenario_label, ScenarioReq};
 use crate::util::json::Json;
 use crate::util::par::default_jobs;
 
-/// Cluster shape for a preset at a given core count.
-pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
-    if !cores.is_power_of_two() {
-        return Err(format!("core count {cores} must be a power of two"));
-    }
-    let mut cfg = ClusterConfig::with_cores(cores);
-    match preset {
-        // The paper's large configuration family.
-        "mempool" => {}
-        // The fast-test family: fewer DMA backends, like `minpool()`.
-        "minpool" => cfg.dma.backends_per_group = cfg.dma.backends_per_group.min(2),
-        other => return Err(format!("unknown config preset `{other}` (minpool|mempool)")),
-    }
-    Ok(cfg)
-}
+pub use crate::studies::grid::{config_for, run_point, GridPoint as SweepPoint};
 
 /// What to sweep.
 #[derive(Debug, Clone)]
@@ -60,8 +40,8 @@ pub struct SweepSpec {
 }
 
 impl SweepSpec {
-    /// The CI perf-smoke grid: 3 kernels × 3 cluster sizes on the fast
-    /// `minpool` family (9 points).
+    /// The classic CI smoke grid: 3 kernels × 3 cluster sizes on the
+    /// fast `minpool` family (9 points).
     pub fn ci_default() -> SweepSpec {
         SweepSpec {
             preset: "minpool".to_string(),
@@ -86,157 +66,38 @@ impl SweepSpec {
         }
         g
     }
-}
 
-/// One completed scenario.
-#[derive(Debug, Clone)]
-pub struct SweepPoint {
-    pub kernel: String,
-    /// Clusters in the system (1 = standalone cluster).
-    pub clusters: usize,
-    /// Cores per cluster.
-    pub cores: usize,
-    pub cycles: u64,
-    pub ipc: f64,
-    pub ops_per_cycle: f64,
-    /// Fig 14 cycle-breakdown shares.
-    pub compute: f64,
-    pub control: f64,
-    pub synchronization: f64,
-    pub ifetch: f64,
-    pub lsu: f64,
-    pub raw: f64,
-    /// L1 traffic split (the hybrid-addressing effect).
-    pub local_accesses: u64,
-    pub group_accesses: u64,
-    pub global_accesses: u64,
-    /// Shared-fabric contention (multi-cluster runs; 0 standalone).
-    pub fabric_wait_cycles: u64,
-    /// Host-side wall clock for this scenario.
-    pub wall_ms: f64,
-}
-
-/// Run one scenario end-to-end (simulate + verify the architectural
-/// result against the host reference). `clusters > 1` runs the kernel's
-/// multi-cluster variant through the `system` harness.
-pub fn run_point(
-    preset: &str,
-    kernel_name: &str,
-    clusters: usize,
-    cores: usize,
-    backend: SimBackend,
-) -> Result<SweepPoint, String> {
-    let cfg = config_for(preset, cores)?;
-    let t0 = Instant::now();
-    let (cycles, stats, fabric_wait_cycles) = if clusters <= 1 {
-        let workload = workload_by_name(kernel_name, Target::Cluster, cores)?;
-        let run = RunConfig::cluster(&cfg).with_backend(backend);
-        let mut result = run_workload(workload.as_ref(), &run);
-        workload
-            .verify(&mut result.machine)
-            .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
-        (result.cycles, result.stats, 0)
-    } else {
-        let workload = workload_by_name(kernel_name, Target::System, cores)?;
-        let syscfg = SystemConfig::new(clusters, cfg);
-        let run = RunConfig::system(&syscfg).with_backend(backend);
-        let mut result = run_workload(workload.as_ref(), &run);
-        workload.verify(&mut result.machine).map_err(|e| {
-            format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
-        })?;
-        let fabric_wait = result.system_stats.as_ref().map_or(0, |s| s.fabric_wait_cycles);
-        (result.cycles, result.stats, fabric_wait)
-    };
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let bd = stats.breakdown();
-    Ok(SweepPoint {
-        kernel: kernel_name.to_string(),
-        clusters: clusters.max(1),
-        cores,
-        cycles,
-        ipc: stats.ipc(),
-        ops_per_cycle: stats.ops_per_cycle(),
-        compute: bd.compute,
-        control: bd.control,
-        synchronization: bd.synchronization,
-        ifetch: bd.ifetch,
-        lsu: bd.lsu,
-        raw: bd.raw,
-        local_accesses: stats.local_accesses,
-        group_accesses: stats.group_accesses,
-        global_accesses: stats.global_accesses,
-        fabric_wait_cycles,
-        wall_ms,
-    })
+    /// The grid as scenario requests for the shared executor.
+    fn scenario_reqs(&self) -> Vec<ScenarioReq> {
+        self.grid()
+            .into_iter()
+            .map(|(clusters, cores, kernel)| ScenarioReq {
+                kernel,
+                clusters,
+                cores,
+                backend: self.backend,
+            })
+            .collect()
+    }
 }
 
 /// Run the whole grid, fanned across `spec.jobs` worker threads. Results
 /// come back in grid order regardless of scheduling.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
-    let grid = spec.grid();
-    if grid.is_empty() {
-        return Err("empty sweep grid (no kernels or no core counts)".to_string());
-    }
-    let jobs = spec.jobs.clamp(1, grid.len());
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Result<SweepPoint, String>>>> =
-        grid.iter().map(|_| Mutex::new(None)).collect();
-    std::thread::scope(|s| {
-        for _ in 0..jobs {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= grid.len() {
-                    break;
-                }
-                let (clusters, cores, kernel) = &grid[i];
-                let point = run_point(&spec.preset, kernel, *clusters, *cores, spec.backend);
-                *slots[i].lock().unwrap() = Some(point);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("scenario worker finished"))
-        .collect()
+    run_scenarios(&spec.preset, &spec.scenario_reqs(), spec.jobs)
 }
 
-/// Full results document (what `mempool sweep --out` writes).
+/// Full results document (what `mempool sweep --out` writes). Scenario
+/// entries use the shared schema (`GridPoint::scenario_json`), identical
+/// to the report's `scenarios` entries.
 pub fn results_json(spec: &SweepSpec, points: &[SweepPoint], wall_seconds: f64) -> Json {
     let mut doc = Json::obj();
-    doc.set("version", 1u64.into());
+    doc.set("version", 2u64.into());
     doc.set("config", spec.preset.as_str().into());
     doc.set("backend", spec.backend.name().into());
     doc.set("jobs", spec.jobs.into());
     doc.set("wall_seconds", wall_seconds.into());
-    let scenarios = points
-        .iter()
-        .map(|p| {
-            let mut o = Json::obj();
-            o.set("kernel", p.kernel.as_str().into());
-            o.set("clusters", p.clusters.into());
-            o.set("cores", p.cores.into());
-            o.set("cycles", p.cycles.into());
-            o.set("ipc", p.ipc.into());
-            o.set("ops_per_cycle", p.ops_per_cycle.into());
-            o.set("fabric_wait_cycles", p.fabric_wait_cycles.into());
-            let mut bd = Json::obj();
-            bd.set("compute", p.compute.into());
-            bd.set("control", p.control.into());
-            bd.set("synchronization", p.synchronization.into());
-            bd.set("ifetch", p.ifetch.into());
-            bd.set("lsu", p.lsu.into());
-            bd.set("raw", p.raw.into());
-            o.set("breakdown", bd);
-            let mut tr = Json::obj();
-            tr.set("local", p.local_accesses.into());
-            tr.set("group", p.group_accesses.into());
-            tr.set("global", p.global_accesses.into());
-            o.set("traffic", tr);
-            o.set("wall_ms", p.wall_ms.into());
-            o
-        })
-        .collect();
-    doc.set("scenarios", Json::Arr(scenarios));
+    doc.set("scenarios", Json::Arr(points.iter().map(SweepPoint::scenario_json).collect()));
     doc
 }
 
@@ -263,7 +124,7 @@ pub fn baseline_json(spec: &SweepSpec, points: &[SweepPoint]) -> Json {
 /// Is this baseline the placeholder committed before any toolchain pinned
 /// real numbers?
 pub fn baseline_is_bootstrap(baseline: &Json) -> bool {
-    baseline.get("bootstrap").and_then(Json::as_bool).unwrap_or(false)
+    crate::studies::grid::is_bootstrap_doc(baseline)
 }
 
 /// Compare measured cycle counts against a pinned baseline. Every grid
@@ -290,16 +151,11 @@ pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), Stri
                 && clusters_of(s) == p.clusters as u64
                 && s.get("cores").and_then(Json::as_u64) == Some(p.cores as u64)
         });
+        let label = scenario_label(&p.kernel, p.clusters as u64, p.cores as u64);
         match found.and_then(|s| s.get("cycles")).and_then(Json::as_u64) {
-            None => missing.push(format!(
-                "{} @ {}x{} cores: not in baseline",
-                p.kernel, p.clusters, p.cores
-            )),
+            None => missing.push(format!("{label}: not in baseline")),
             Some(expected) if expected != p.cycles => drift.push(format!(
-                "{} @ {}x{} cores: {} cycles, baseline {} ({:+})",
-                p.kernel,
-                p.clusters,
-                p.cores,
+                "{label}: {} cycles, baseline {} ({:+})",
                 p.cycles,
                 expected,
                 p.cycles as i64 - expected as i64
@@ -322,8 +178,10 @@ pub fn check_baseline(points: &[SweepPoint], baseline: &Json) -> Result<(), Stri
         if !points.iter().any(|p| {
             p.kernel == kernel && p.clusters as u64 == clusters && p.cores as u64 == cores
         }) {
-            extra
-                .push(format!("{kernel} @ {clusters}x{cores} cores: in baseline but not measured"));
+            extra.push(format!(
+                "{}: in baseline but not measured",
+                scenario_label(kernel, clusters, cores)
+            ));
         }
     }
     let mut errors = Vec::new();
@@ -385,25 +243,7 @@ mod tests {
     #[test]
     fn baseline_drift_is_detected() {
         let spec = SweepSpec::ci_default();
-        let point = SweepPoint {
-            kernel: "axpy".to_string(),
-            clusters: 1,
-            cores: 4,
-            cycles: 1000,
-            ipc: 0.0,
-            ops_per_cycle: 0.0,
-            compute: 0.0,
-            control: 0.0,
-            synchronization: 0.0,
-            ifetch: 0.0,
-            lsu: 0.0,
-            raw: 0.0,
-            local_accesses: 0,
-            group_accesses: 0,
-            global_accesses: 0,
-            fabric_wait_cycles: 0,
-            wall_ms: 0.0,
-        };
+        let point = SweepPoint::synthetic("axpy", 1, 4, 1000);
         let mut drifted = point.clone();
         drifted.cycles = 1001;
         let baseline = baseline_json(&spec, &[point.clone()]);
@@ -435,6 +275,7 @@ mod tests {
         assert_eq!(points[0].clusters, 1);
         assert_eq!(points[1].clusters, 2);
         assert!(points.iter().all(|p| p.cycles > 0));
+        assert!(points[1].system.is_some(), "multi-cluster point carries the system book");
         let baseline = baseline_json(&spec, &points);
         check_baseline(&points, &baseline).expect("self-baseline must match");
         // Workloads without a system variant fail loudly on the cluster
@@ -451,25 +292,7 @@ mod tests {
         // error must lead with the grid diff and the re-pin hint, naming
         // both sides.
         let spec = SweepSpec::ci_default();
-        let point = |clusters: usize| SweepPoint {
-            kernel: "axpy".to_string(),
-            clusters,
-            cores: 4,
-            cycles: 1000,
-            ipc: 0.0,
-            ops_per_cycle: 0.0,
-            compute: 0.0,
-            control: 0.0,
-            synchronization: 0.0,
-            ifetch: 0.0,
-            lsu: 0.0,
-            raw: 0.0,
-            local_accesses: 0,
-            group_accesses: 0,
-            global_accesses: 0,
-            fabric_wait_cycles: 0,
-            wall_ms: 0.0,
-        };
+        let point = |clusters: usize| SweepPoint::synthetic("axpy", clusters, 4, 1000);
         let baseline = baseline_json(&spec, &[point(1), point(4)]);
         let err = check_baseline(&[point(1), point(2)], &baseline).unwrap_err();
         assert!(err.contains("grid does not match"), "{err}");
@@ -485,5 +308,21 @@ mod tests {
         assert!(baseline_is_bootstrap(&b));
         let real = Json::parse("{\"version\":1,\"scenarios\":[]}").unwrap();
         assert!(!baseline_is_bootstrap(&real));
+    }
+
+    #[test]
+    fn results_document_uses_the_shared_scenario_schema() {
+        let spec = SweepSpec::ci_default();
+        let point = SweepPoint::synthetic("axpy", 1, 4, 1000);
+        let doc = results_json(&spec, &[point], 1.25);
+        assert_eq!(doc.get("version").and_then(Json::as_u64), Some(2));
+        let sc = doc.get("scenarios").and_then(Json::as_array).unwrap();
+        assert_eq!(sc.len(), 1);
+        assert_eq!(sc[0].get("cycles").and_then(Json::as_u64), Some(1000));
+        assert!(sc[0].get("breakdown").is_some());
+        assert!(sc[0].get("counters").is_some());
+        assert!(sc[0].get("host").is_some());
+        // Round-trips through the writer+parser unchanged.
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), doc);
     }
 }

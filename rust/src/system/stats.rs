@@ -8,6 +8,7 @@
 
 use crate::sim::ClusterStats;
 use crate::system::fabric::FabricCounters;
+use crate::util::json::Json;
 
 /// Per-cluster system-DMA statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -67,5 +68,22 @@ impl SystemStats {
     /// Total system-DMA transfers across all clusters.
     pub fn sysdma_transfers(&self) -> u64 {
         self.sysdma.iter().map(|s| s.transfers).sum()
+    }
+
+    /// The system-level section of the report schema: shared-fabric
+    /// traffic/contention, global-barrier epochs, and system-DMA
+    /// aggregates. All pure simulation counts (exact-match fields).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("num_clusters", self.num_clusters.into());
+        o.set("fabric_bytes", self.fabric_bytes.into());
+        o.set("fabric_wait_cycles", self.fabric_wait_cycles.into());
+        o.set("gbarrier_epochs", self.gbarrier_epochs.into());
+        let mut dma = Json::obj();
+        dma.set("transfers", self.sysdma_transfers().into());
+        dma.set("bursts", self.sysdma.iter().map(|s| s.bursts).sum::<u64>().into());
+        dma.set("bytes", self.sysdma_bytes().into());
+        o.set("sysdma", dma);
+        o
     }
 }

@@ -131,6 +131,33 @@ impl Json {
         }
     }
 
+    /// Required-field accessors: like `get` + `as_*`, but absence or a
+    /// type mismatch is an error naming the key — the schema-validation
+    /// primitives for pinned baseline/report files.
+    pub fn req_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("missing or non-integer field `{key}`"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing or non-numeric field `{key}`"))
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("missing or non-string field `{key}`"))
+    }
+
+    pub fn req_array(&self, key: &str) -> Result<&[Json], String> {
+        self.get(key)
+            .and_then(Json::as_array)
+            .ok_or_else(|| format!("missing or non-array field `{key}`"))
+    }
+
     /// Parse a JSON document (single value, trailing whitespace allowed).
     pub fn parse(src: &str) -> Result<Json, String> {
         let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
@@ -178,6 +205,87 @@ impl From<bool> for Json {
     fn from(b: bool) -> Json {
         Json::Bool(b)
     }
+}
+
+/// Path and value pair of the first structural difference between two
+/// documents, walking `a`'s field order — `None` when equal. Objects
+/// report absent keys on either side, arrays report the first differing
+/// element (then a length mismatch), scalars compare exactly. Report
+/// diffs use this to name precisely which field drifted.
+pub fn first_diff(a: &Json, b: &Json) -> Option<(String, String, String)> {
+    fn summary(j: &Json) -> String {
+        match j {
+            Json::Obj(f) => format!("object with {} field(s)", f.len()),
+            Json::Arr(x) => format!("array with {} element(s)", x.len()),
+            scalar => scalar.pretty().trim().to_string(),
+        }
+    }
+    fn join(path: &str, key: &str) -> String {
+        if path.is_empty() {
+            key.to_string()
+        } else {
+            format!("{path}.{key}")
+        }
+    }
+    fn walk(a: &Json, b: &Json, path: &str) -> Option<(String, String, String)> {
+        match (a, b) {
+            (Json::Obj(fa), Json::Obj(fb)) => {
+                for (k, va) in fa {
+                    let p = join(path, k);
+                    match b.get(k) {
+                        None => return Some((p, summary(va), "<absent>".to_string())),
+                        Some(vb) => {
+                            if let Some(d) = walk(va, vb, &p) {
+                                return Some(d);
+                            }
+                        }
+                    }
+                }
+                for (k, vb) in fb {
+                    if a.get(k).is_none() {
+                        return Some((join(path, k), "<absent>".to_string(), summary(vb)));
+                    }
+                }
+                None
+            }
+            (Json::Arr(xa), Json::Arr(xb)) => {
+                for (i, (va, vb)) in xa.iter().zip(xb.iter()).enumerate() {
+                    if let Some(d) = walk(va, vb, &format!("{path}[{i}]")) {
+                        return Some(d);
+                    }
+                }
+                if xa.len() != xb.len() {
+                    return Some((
+                        format!("{path}.length"),
+                        xa.len().to_string(),
+                        xb.len().to_string(),
+                    ));
+                }
+                None
+            }
+            (a, b) => {
+                if a == b {
+                    None
+                } else {
+                    Some((path.to_string(), summary(a), summary(b)))
+                }
+            }
+        }
+    }
+    walk(a, b, "")
+}
+
+/// Write `doc` pretty-printed at `path`, creating missing parent
+/// directories first — so `--out`/`--write-baseline`/report paths under
+/// a fresh directory never error on the directory.
+pub fn write_pretty(path: impl AsRef<std::path::Path>, doc: &Json) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.pretty())
 }
 
 fn pad(out: &mut String, indent: usize) {
@@ -527,6 +635,58 @@ mod tests {
         assert!(Json::parse("Infinity").is_err());
         assert!(Json::parse("-Infinity").is_err());
         assert!(Json::parse("inf").is_err());
+    }
+
+    #[test]
+    fn required_field_accessors_name_the_key() {
+        let v = Json::parse("{\"n\": 3, \"s\": \"x\", \"a\": [1], \"f\": 0.5}").unwrap();
+        assert_eq!(v.req_u64("n"), Ok(3));
+        assert_eq!(v.req_str("s"), Ok("x"));
+        assert_eq!(v.req_f64("f"), Ok(0.5));
+        assert_eq!(v.req_array("a").map(<[Json]>::len), Ok(1));
+        assert!(v.req_u64("missing").unwrap_err().contains("`missing`"));
+        assert!(v.req_u64("s").unwrap_err().contains("`s`"));
+        assert!(v.req_str("n").unwrap_err().contains("`n`"));
+        assert!(v.req_array("f").unwrap_err().contains("`f`"));
+    }
+
+    #[test]
+    fn first_diff_names_the_differing_path() {
+        let a = Json::parse("{\"x\": {\"y\": [1, 2]}, \"z\": 1}").unwrap();
+        assert_eq!(first_diff(&a, &a), None);
+        let b = Json::parse("{\"x\": {\"y\": [1, 3]}, \"z\": 1}").unwrap();
+        let (path, va, vb) = first_diff(&a, &b).unwrap();
+        assert_eq!(path, "x.y[1]");
+        assert_eq!((va.as_str(), vb.as_str()), ("2", "3"));
+        // Absent keys are reported on either side.
+        let c = Json::parse("{\"x\": {\"y\": [1, 2]}}").unwrap();
+        let (path, _, vb) = first_diff(&a, &c).unwrap();
+        assert_eq!(path, "z");
+        assert_eq!(vb, "<absent>");
+        let (path, va, _) = first_diff(&c, &a).unwrap();
+        assert_eq!(path, "z");
+        assert_eq!(va, "<absent>");
+        // Array length mismatches past the common prefix.
+        let d = Json::parse("{\"x\": {\"y\": [1, 2, 9]}, \"z\": 1}").unwrap();
+        let (path, va, vb) = first_diff(&a, &d).unwrap();
+        assert_eq!(path, "x.y.length");
+        assert_eq!((va.as_str(), vb.as_str()), ("2", "3"));
+        // Cross-type differences are scalar-level diffs at the path.
+        let e = Json::parse("{\"x\": 5, \"z\": 1}").unwrap();
+        assert_eq!(first_diff(&a, &e).unwrap().0, "x");
+    }
+
+    #[test]
+    fn write_pretty_creates_missing_parent_directories() {
+        let dir = std::env::temp_dir().join(format!("mempool-json-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("a/b/c.json");
+        let mut doc = Json::obj();
+        doc.set("ok", true.into());
+        write_pretty(&path, &doc).expect("write with missing parents");
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, doc);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! CLI contract audit for the perf-gate surfaces: `report --diff`,
+//! `sweep --check`, and the campaign runner must exit nonzero on any
+//! mismatch (CI gates on the exit code, not the log), and every file
+//! writer (`--out`, `--write-baseline`, `--md-summary`) must create
+//! missing parent directories instead of erroring.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use mempool::util::json::Json;
+
+fn run(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_mempool")).args(args).output().expect("spawn mempool")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// A fresh scratch directory per test (kept on failure for debugging).
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mempool-cli-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A minimal schema-valid report with one scenario.
+fn synthetic_report(cycles: u64, throughput: f64) -> Json {
+    let mut s = Json::obj();
+    s.set("kernel", "axpy".into());
+    s.set("clusters", 1u64.into());
+    s.set("cores", 4u64.into());
+    s.set("backend", "serial".into());
+    s.set("cycles", cycles.into());
+    let mut host = Json::obj();
+    host.set("wall_ms", 1.0.into());
+    host.set("sim_cycles_per_sec", throughput.into());
+    s.set("host", host);
+    s.set("campaign", "cluster".into());
+    let mut doc = Json::obj();
+    doc.set("schema", "mempool-report".into());
+    doc.set("version", 1u64.into());
+    doc.set("preset", "minpool".into());
+    doc.set("scenarios", Json::Arr(vec![s]));
+    doc
+}
+
+fn write_doc(path: &Path, doc: &Json) {
+    std::fs::write(path, doc.pretty()).unwrap();
+}
+
+#[test]
+fn report_diff_exit_codes() {
+    let dir = tmpdir("diff");
+    let a = dir.join("a.json");
+    let b = dir.join("b.json");
+    write_doc(&a, &synthetic_report(1000, 1e6));
+    write_doc(&b, &synthetic_report(1000, 2e6));
+    // Identical simulated sections (host differs): exit 0.
+    let out = run(&["report", "--diff", a.to_str().unwrap(), b.to_str().unwrap()]);
+    assert!(out.status.success(), "same-cycles diff must pass: {}", stderr_of(&out));
+    assert!(stdout_of(&out).contains("report diff OK"), "{}", stdout_of(&out));
+    // Any simulated-cycle drift: exit nonzero, naming the field.
+    let c = dir.join("c.json");
+    write_doc(&c, &synthetic_report(1001, 1e6));
+    let out = run(&["report", "--diff", a.to_str().unwrap(), c.to_str().unwrap()]);
+    assert!(!out.status.success(), "cycle drift must fail the diff");
+    assert!(stderr_of(&out).contains("cycles"), "{}", stderr_of(&out));
+    // A missing scenario: exit nonzero.
+    let mut empty = synthetic_report(1000, 1e6);
+    empty.set("scenarios", Json::Arr(Vec::new()));
+    let e = dir.join("empty.json");
+    write_doc(&e, &empty);
+    let out = run(&["report", "--diff", a.to_str().unwrap(), e.to_str().unwrap()]);
+    assert!(!out.status.success(), "missing scenario must fail the diff");
+    assert!(stderr_of(&out).contains("not the new one"), "{}", stderr_of(&out));
+    // Usage error (no NEW operand): exit nonzero without simulating.
+    let out = run(&["report", "--diff", a.to_str().unwrap()]);
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn report_diff_host_tolerance_gate() {
+    let dir = tmpdir("tol");
+    let a = dir.join("a.json");
+    let slow = dir.join("slow.json");
+    write_doc(&a, &synthetic_report(1000, 100.0));
+    write_doc(&slow, &synthetic_report(1000, 50.0));
+    // Without a tolerance, host throughput is informational only.
+    let out = run(&["report", "--diff", a.to_str().unwrap(), slow.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    // With one, a 50% slowdown beyond a 10% tolerance fails.
+    let out = run(&[
+        "report",
+        "--diff",
+        a.to_str().unwrap(),
+        slow.to_str().unwrap(),
+        "--host-tolerance",
+        "0.1",
+    ]);
+    assert!(!out.status.success(), "host regression must fail under a tolerance");
+    assert!(stderr_of(&out).contains("throughput regressed"), "{}", stderr_of(&out));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn sweep_writers_create_parents_and_check_exits_nonzero_on_drift() {
+    let dir = tmpdir("sweep");
+    let baseline = dir.join("nested/a/baseline.json");
+    let results = dir.join("nested/b/results.json");
+    // One tiny scenario; both writers point into directories that do
+    // not exist yet.
+    let out = run(&[
+        "sweep",
+        "--kernels",
+        "axpy",
+        "--cores",
+        "4",
+        "--jobs",
+        "1",
+        "--backend",
+        "serial",
+        "--write-baseline",
+        baseline.to_str().unwrap(),
+        "--out",
+        results.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "tiny sweep must pass: {}", stderr_of(&out));
+    assert!(baseline.exists() && results.exists(), "writers must create parent directories");
+    // Drift the pinned cycles by one: --check must exit nonzero.
+    let mut doc = Json::parse(&std::fs::read_to_string(&baseline).unwrap()).unwrap();
+    let scenarios = doc.get("scenarios").and_then(Json::as_array).unwrap();
+    let cycles = scenarios[0].get("cycles").and_then(Json::as_u64).unwrap();
+    let mut drifted_scenario = scenarios[0].clone();
+    drifted_scenario.set("cycles", (cycles + 1).into());
+    doc.set("scenarios", Json::Arr(vec![drifted_scenario]));
+    let drifted = dir.join("drifted.json");
+    write_doc(&drifted, &doc);
+    let out = run(&[
+        "sweep",
+        "--kernels",
+        "axpy",
+        "--cores",
+        "4",
+        "--jobs",
+        "1",
+        "--backend",
+        "serial",
+        "--check",
+        drifted.to_str().unwrap(),
+    ]);
+    assert!(!out.status.success(), "cycle drift must fail `sweep --check`");
+    assert!(stderr_of(&out).contains("CYCLE BASELINE DRIFT"), "{}", stderr_of(&out));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn report_campaign_degraded_check_writes_artifacts_and_summary() {
+    let dir = tmpdir("campaign");
+    // A bootstrap pinned report: the gate degrades to backend agreement
+    // and must say so in the markdown summary — while still exiting 0.
+    let mut boot = synthetic_report(0, 0.0);
+    boot.set("bootstrap", true.into());
+    boot.set("scenarios", Json::Arr(Vec::new()));
+    let pinned = dir.join("expected_report.json");
+    write_doc(&pinned, &boot);
+    let report = dir.join("deep/report.json");
+    let summary = dir.join("sum/summary.md");
+    let out = run(&[
+        "report",
+        "--campaign",
+        "system",
+        "--out",
+        report.to_str().unwrap(),
+        "--check",
+        pinned.to_str().unwrap(),
+        "--md-summary",
+        summary.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "degraded-mode campaign must pass: {}", stderr_of(&out));
+    assert!(stderr_of(&out).contains("DEGRADED GATE"), "{}", stderr_of(&out));
+    // The artifact parent directories were created, and the document is
+    // schema-valid with both backends per scenario shape.
+    let doc = Json::parse(&std::fs::read_to_string(&report).unwrap()).unwrap();
+    let scenarios = doc.get("scenarios").and_then(Json::as_array).unwrap();
+    assert!(!scenarios.is_empty());
+    assert!(scenarios.iter().all(|s| s.get("campaign").and_then(Json::as_str) == Some("system")));
+    // The markdown summary carries the degraded-gate banner and the
+    // per-scenario table.
+    let md = std::fs::read_to_string(&summary).unwrap();
+    assert!(md.contains("DEGRADED GATE"), "{md}");
+    assert!(md.contains("| campaign | kernel |"), "{md}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

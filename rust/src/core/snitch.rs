@@ -154,6 +154,9 @@ pub struct Snitch {
     pending_ipu_regs: u32,
     /// Outstanding memory transactions, indexed by tag.
     mem_slots: Vec<Option<PendingMem>>,
+    /// Occupancy bitmask over `mem_slots` — the hot `free_tag` scan is one
+    /// `trailing_zeros` instead of a linear walk over the options.
+    occupied: u32,
     outstanding_mem: usize,
     /// Completions delivered by the cluster, drained one per cycle (the
     /// LSU owns one register file write port).
@@ -164,6 +167,7 @@ pub struct Snitch {
 
 impl Snitch {
     pub fn new(id: u32, lane: usize, scoreboard_depth: usize) -> Self {
+        assert!(scoreboard_depth <= 32, "scoreboard occupancy mask is u32");
         Snitch {
             id,
             lane,
@@ -174,6 +178,7 @@ impl Snitch {
             pending_mem_regs: 0,
             pending_ipu_regs: 0,
             mem_slots: vec![None; scoreboard_depth],
+            occupied: 0,
             outstanding_mem: 0,
             inbox: VecDeque::new(),
             ipu: Ipu::new(),
@@ -191,6 +196,7 @@ impl Snitch {
         self.pending_mem_regs = 0;
         self.pending_ipu_regs = 0;
         self.mem_slots.iter_mut().for_each(|s| *s = None);
+        self.occupied = 0;
         self.outstanding_mem = 0;
         self.inbox.clear();
     }
@@ -246,7 +252,33 @@ impl Snitch {
     }
 
     fn free_tag(&self) -> Option<u8> {
-        self.mem_slots.iter().position(|s| s.is_none()).map(|i| i as u8)
+        // Lowest free slot, same order the old linear scan produced.
+        let free = (!self.occupied).trailing_zeros() as usize;
+        (free < self.mem_slots.len()).then_some(free as u8)
+    }
+
+    /// True when stepping this core is a pure counter increment: it is
+    /// halted or asleep, has no completion queued for writeback, and no
+    /// IPU result in flight. Outstanding memory requests do *not* disturb
+    /// quiet — their completions live in the cluster's timed queues and
+    /// arrive through `push_completion` (which ends the quiet window).
+    pub fn quiet(&self) -> bool {
+        (self.status == Status::Halted || self.status == Status::Sleeping)
+            && self.inbox.is_empty()
+            && !self.ipu.busy()
+    }
+
+    /// Age a quiet core across `delta` skipped cycles — exactly the
+    /// accounting `step` would have performed `delta` times (cycle count
+    /// plus the halted/sleep bucket), with no architectural change.
+    pub fn age_quiet(&mut self, delta: u64) {
+        debug_assert!(self.quiet(), "aging a non-quiet core");
+        self.stats.cycles += delta;
+        if self.status == Status::Halted {
+            self.stats.halted_cycles += delta;
+        } else {
+            self.stats.sleep_cycles += delta;
+        }
     }
 
     /// Retire at most one memory completion (LSU write port) and at most
@@ -256,6 +288,7 @@ impl Snitch {
             let slot = self.mem_slots[c.tag as usize]
                 .take()
                 .expect("completion for an empty scoreboard slot");
+            self.occupied &= !(1 << c.tag);
             self.outstanding_mem -= 1;
             if let Some(rd) = slot.rd {
                 let value = if slot.raw_result {
@@ -575,6 +608,7 @@ impl Snitch {
             signed,
             raw_result,
         });
+        self.occupied |= 1 << tag;
         self.outstanding_mem += 1;
         if let Some(rd) = rd {
             self.pending_mem_regs |= 1 << rd.index();

@@ -14,6 +14,14 @@
 //! is when the transfer is architecturally done (what the cores' polling
 //! loop observes). Software must not touch the region before completion,
 //! which the runtimes guarantee with their DMA-wait barriers.
+//!
+//! **Quiescence-skip safety** (see `docs/ARCHITECTURE.md`): the engine
+//! holds no per-cycle state — a transfer is a set of completion
+//! *timestamps* (`inflight`, and the cluster's `dma_done_at` status
+//! register) compared against an absolute `now`. Jumping the cycle
+//! counter over idle cycles therefore cannot change its behavior; the
+//! cluster exposes `dma_done_at` as a wake-up source so a skip never
+//! jumps past the completion a polling core is waiting on.
 
 use crate::axi::AxiSystem;
 use crate::config::ClusterConfig;

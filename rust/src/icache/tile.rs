@@ -205,6 +205,28 @@ impl TileICache {
         None
     }
 
+    /// True when stepping the icache is a pure timer wait: nothing queued
+    /// for the L1 lookup port. In-flight fills do not disturb quiet — each
+    /// completes at its `ready_at` stamp, which [`next_fill_at`] exposes as
+    /// a wake-up source to the quiescence fast path.
+    ///
+    /// [`next_fill_at`]: TileICache::next_fill_at
+    pub fn quiet(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Earliest cycle at which an in-flight fill completes (wake-up source
+    /// for the quiescence fast path). Unresolved AXI refills sit at
+    /// `ready_at == u64::MAX`, but cannot coexist with a quiescent cluster
+    /// — they are resolved in the same cycle they are deferred.
+    pub fn next_fill_at(&self) -> Option<u64> {
+        self.fills
+            .iter()
+            .map(|f| f.ready_at)
+            .filter(|&r| r != u64::MAX)
+            .min()
+    }
+
     /// Set the completion time of the refill deferred by [`step_deferred`].
     pub fn resolve_refill(&mut self, line: u32, ready_at: u64) {
         let fill = self

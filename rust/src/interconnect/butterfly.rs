@@ -255,6 +255,17 @@ impl L1Network for Butterfly {
             + self.resp.iter().map(|n| n.in_flight()).sum::<usize>()
     }
 
+    fn skip_cycles(&mut self, delta: u64) {
+        // `Net::step` rotates `rr_src` unconditionally every cycle, even
+        // with nothing queued — replay that rotation for the skipped span.
+        // Everything else (claims, pop credits, queue ready-stamps) is
+        // keyed on absolute cycle numbers and is untouched by a forward
+        // jump over empty-network cycles.
+        for n in self.req.iter_mut().chain(self.resp.iter_mut()) {
+            n.rr_src = (n.rr_src + (delta % n.tiles as u64) as usize) % n.tiles;
+        }
+    }
+
     fn send_credit(&self, flit: &Flit, resp: bool) -> (u64, usize) {
         // Mirror `try_send_req`/`try_send_resp`: the channel is this lane's
         // butterfly instance, and its queue is private to the source tile.

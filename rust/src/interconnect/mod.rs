@@ -60,6 +60,17 @@ pub trait L1Network: Send + Sync {
     /// Number of flits currently inside the network (debug/invariants).
     fn in_flight(&self) -> usize;
 
+    /// Age the network across `delta` externally-skipped idle cycles.
+    ///
+    /// The quiescence fast path (`Cluster::advance_quiet`) only jumps the
+    /// cycle counter while `in_flight() == 0`, so there is no flit state to
+    /// advance — but any per-cycle arbitration state that rotates even on
+    /// idle cycles (e.g. the butterfly's rotating source offset) must be
+    /// aged here so a skipped run arbitrates identically to one that
+    /// stepped through every quiet cycle. Cycle-stamped claim/credit
+    /// markers compare against an absolute `now` and need no aging.
+    fn skip_cycles(&mut self, delta: u64);
+
     /// Identify the injection channel `flit` would enter via
     /// `try_send_req`/`try_send_resp` and how many more flits that channel
     /// accepts right now: `(key, free_slots)`.

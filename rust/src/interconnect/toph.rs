@@ -164,6 +164,14 @@ impl L1Network for TopHNet {
             + self.pair_resp.iter().flatten().map(|x| x.in_flight()).sum::<usize>()
     }
 
+    fn skip_cycles(&mut self, _delta: u64) {
+        // Nothing to age: a crossbar's per-destination round-robin pointer
+        // only advances when a grant is issued (never on idle cycles), and
+        // all other state (claim markers, pop credits, queue ready-stamps)
+        // is keyed on absolute cycle numbers, which remain valid across a
+        // forward jump over empty-network cycles.
+    }
+
     fn send_credit(&self, flit: &Flit, resp: bool) -> (u64, usize) {
         let (sg, dg) = (self.group_of(flit.src_tile), self.group_of(flit.dst_tile));
         let src_idx = self.index_in_group(flit.src_tile);

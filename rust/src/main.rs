@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! mempool run [--kernel matmul|...|all] [--cores 256] [--breakdown]
-//!             [--backend serial|parallel]
+//!             [--backend serial|parallel] [--no-skip]
 //! mempool netsim [--topology Top1|Top4|TopH|all] [--cycles N]
 //! mempool netsim --hybrid
 //! mempool icache-study
@@ -14,15 +14,15 @@
 //! mempool apps [--cores 16]
 //! mempool sweep [--config minpool|mempool] [--cores 4,8,16]
 //!               [--clusters 1,2] [--kernels matmul,axpy,dotp]
-//!               [--backend serial|parallel]
+//!               [--backend serial|parallel] [--no-skip]
 //!               [--jobs N] [--out results.json]
 //!               [--check ci/expected_cycles.json]
 //!               [--write-baseline ci/expected_cycles.json]
 //! mempool system [--clusters 4] [--cores 16] [--kernel matmul|axpy|reduce|all]
-//!                [--backend serial|parallel] [--per-cluster]
+//!                [--backend serial|parallel] [--per-cluster] [--no-skip]
 //!                [--check-determinism]
 //! mempool report [--campaign cluster|system|all] [--preset minpool|mempool]
-//!                [--jobs N] [--out report.json]
+//!                [--jobs N] [--out report.json] [--no-skip]
 //!                [--check ci/expected_report.json]
 //!                [--host-tolerance 0.5] [--md-summary summary.md]
 //! mempool report --diff old.json new.json [--host-tolerance 0.5]
@@ -109,6 +109,7 @@ fn cmd_run(args: &Args) {
     for k in workloads {
         let mut run = RunConfig::cluster(&cfg);
         run.backend = backend;
+        run.quiesce_skip = !args.has("no-skip");
         let r = run_workload(k.as_ref(), &run);
         let s = &r.stats;
         brow!(
@@ -271,6 +272,7 @@ fn cmd_sweep(args: &Args) {
         backend: SimBackend::parse(args.get_or("backend", "parallel"))
             .expect("--backend serial|parallel"),
         jobs: args.parse_or("jobs", default_jobs()),
+        quiesce_skip: !args.has("no-skip"),
     };
 
     section(&format!(
@@ -374,6 +376,7 @@ fn cmd_system(args: &Args) {
     let which = args.get_or("kernel", "all").to_string();
     let backend = SimBackend::parse(args.get_or("backend", "parallel"))
         .expect("--backend serial|parallel");
+    let quiesce_skip = !args.has("no-skip");
     let system_names = workload_names(Target::System);
     let selected: Vec<&str> =
         system_names.iter().copied().filter(|n| which == "all" || *n == which).collect();
@@ -389,14 +392,12 @@ fn cmd_system(args: &Args) {
         let mut failed = false;
         for name in &selected {
             let kernel = workload_by_name(name, Target::System, cores).unwrap();
-            let a = run_workload(
-                kernel.as_ref(),
-                &RunConfig::system(&cfg).with_backend(SimBackend::Serial),
-            );
-            let b = run_workload(
-                kernel.as_ref(),
-                &RunConfig::system(&cfg).with_backend(SimBackend::Parallel),
-            );
+            let mut run_a = RunConfig::system(&cfg).with_backend(SimBackend::Serial);
+            run_a.quiesce_skip = quiesce_skip;
+            let a = run_workload(kernel.as_ref(), &run_a);
+            let mut run_b = RunConfig::system(&cfg).with_backend(SimBackend::Parallel);
+            run_b.quiesce_skip = quiesce_skip;
+            let b = run_workload(kernel.as_ref(), &run_b);
             if a.cycles != b.cycles || a.system_stats != b.system_stats {
                 eprintln!(
                     "{name}: serial {} vs parallel {} cycles — MISMATCH",
@@ -422,7 +423,9 @@ fn cmd_system(args: &Args) {
     brow!("kernel", "cycles", "IPC", "OP/cycle", "fab KiB", "fab wait", "DMA KiB", "W");
     for name in &selected {
         let kernel = workload_by_name(name, Target::System, cores).unwrap();
-        let mut r = run_workload(kernel.as_ref(), &RunConfig::system(&cfg).with_backend(backend));
+        let mut run = RunConfig::system(&cfg).with_backend(backend);
+        run.quiesce_skip = quiesce_skip;
+        let mut r = run_workload(kernel.as_ref(), &run);
         kernel.verify(&mut r.machine).unwrap_or_else(|e| panic!("{name}: {e}"));
         let s = r.system_stats.as_ref().expect("system run carries system stats");
         brow!(
@@ -584,6 +587,7 @@ fn cmd_report_campaign(args: &Args) {
         spec.preset = p.to_string();
     }
     spec.jobs = args.parse_or("jobs", spec.jobs);
+    spec.quiesce_skip = !args.has("no-skip");
     if let Some(which) = args.get("campaign") {
         spec = spec.campaign(which).unwrap_or_else(|e| {
             eprintln!("{e}");
@@ -619,6 +623,9 @@ fn cmd_report_campaign(args: &Args) {
     // artifact and the markdown summary are on disk.
     let mut status = Vec::new();
     let mut failures = Vec::new();
+    // The pinned report (when given and real) also feeds the markdown
+    // summary's per-scenario host-throughput delta column.
+    let mut pinned_for_summary: Option<Json> = None;
     match check_backend_agreement(&doc) {
         Ok(n) if n > 0 => {
             status.push(format!("✅ serial and parallel agree on all {n} scenario group(s)"));
@@ -653,6 +660,7 @@ fn cmd_report_campaign(args: &Args) {
                     ));
                 }
             }
+            pinned_for_summary = Some(pinned);
         }
     }
     if let Some(path) = args.get("out") {
@@ -660,7 +668,7 @@ fn cmd_report_campaign(args: &Args) {
         println!("report written to {path}");
     }
     if let Some(path) = args.get("md-summary") {
-        append_text(path, &summary_markdown(&doc, &status));
+        append_text(path, &summary_markdown(&doc, &status, pinned_for_summary.as_ref()));
         println!("markdown summary appended to {path}");
     }
     if !failures.is_empty() {

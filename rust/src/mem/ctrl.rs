@@ -1,5 +1,15 @@
 //! Cluster control registers (paper §5.4): wake-up pulses, core count,
 //! and RO-cache control. Mapped at `CTRL_BASE`.
+//!
+//! **Quiescence-skip safety** (see `docs/ARCHITECTURE.md`): the register
+//! file is stateless between accesses — every store resolves to a
+//! [`CtrlEffect`] the cluster applies in the same cycle, and the status
+//! registers the cores poll (`CTRL_DMA_STATUS`, `CTRL_SYSDMA_STATUS`,
+//! `CTRL_GBARRIER`) are pure comparisons of a completion timestamp
+//! against the current cycle. Nothing here ticks per cycle, so skipping
+//! idle cycles cannot change what a load observes — provided the skip
+//! never jumps *past* one of those timestamps, which the cluster's
+//! wake-up computation guarantees.
 
 /// Register offsets (byte offsets within the control region).
 pub const CTRL_WAKE_CORE: u32 = 0x00; // write core id → wake that core

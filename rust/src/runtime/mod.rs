@@ -13,6 +13,12 @@
 //!   once, with per-target constructors — the CLI, sweep, and studies
 //!   all resolve names here.
 //!
+//! [`RunConfig`] carries the host-simulator knobs that must not change
+//! simulated results: the stepping backend and the quiescence fast path
+//! (`quiesce_skip`, the CLI's `--no-skip`). Both are cycle-invisible by
+//! contract (see `docs/ARCHITECTURE.md`), so the exact-cycle gates in
+//! CI hold across every combination.
+//!
 //! The golden-model runtime executes the AOT-compiled Pallas/JAX models
 //! (`artifacts/*.hlo.txt`) through PJRT so the cycle-accurate
 //! simulator's results can be checked bit-for-bit against the L1/L2

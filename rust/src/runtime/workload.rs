@@ -146,11 +146,20 @@ pub struct RunConfig {
     /// Stepping engine; `None` = read `MEMPOOL_BACKEND` once at the
     /// [`run_workload`] entry (the reference serial engine when unset).
     pub backend: Option<SimBackend>,
+    /// Enable the quiescence fast path (`false` = `--no-skip`). Both
+    /// settings produce identical cycle counts and statistics.
+    pub quiesce_skip: bool,
 }
 
 impl RunConfig {
     fn on(target: TargetConfig) -> RunConfig {
-        RunConfig { target, max_cycles: 10_000_000, cold_icache: true, backend: None }
+        RunConfig {
+            target,
+            max_cycles: 10_000_000,
+            cold_icache: true,
+            backend: None,
+            quiesce_skip: true,
+        }
     }
 
     /// Run on a standalone cluster.
@@ -200,6 +209,7 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             let mut low = crate::sim::RunConfig::with_backend(cfg, backend);
             low.max_cycles = run.max_cycles;
             low.cold_icache = run.cold_icache;
+            low.quiesce_skip = run.quiesce_skip;
             let cluster = prepare_cluster(&low, program);
             let mut machine = Machine::Cluster(Box::new(cluster));
             w.setup(&mut machine);
@@ -220,6 +230,7 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             let mut low = SystemRunConfig::with_backend(cfg, backend);
             low.max_cycles = run.max_cycles;
             low.cold_icache = run.cold_icache;
+            low.quiesce_skip = run.quiesce_skip;
             let system = prepare_system(&low, program);
             let mut machine = Machine::System(Box::new(system));
             w.setup(&mut machine);

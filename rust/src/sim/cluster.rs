@@ -12,6 +12,14 @@
 //! 5. instruction caches advance (refills through the AXI tree),
 //! 6. the interconnect arbitrates,
 //! 7. due control-register effects apply (wake pulses, DMA frontend).
+//!
+//! `Cluster::run` additionally drives the **quiescence fast path**: when
+//! the cluster is [quiescent](Cluster::quiescent) — every core halted or
+//! asleep, nothing in flight — it jumps straight to the earliest pending
+//! timed event instead of stepping empty cycles one by one. The jump is
+//! cycle-invisible (same cycle counts, statistics, and energy books as
+//! stepping through; `docs/ARCHITECTURE.md` pins the contract) and can be
+//! disabled with the `--no-skip` CLI flag for differential debugging.
 
 #[path = "cluster_parallel.rs"]
 mod parallel;
@@ -83,13 +91,109 @@ impl SimBackend {
     }
 }
 
+/// Struct-of-arrays bank request queues: one flat ring buffer spanning all
+/// of a tile's banks instead of a `VecDeque` allocation per bank. The hot
+/// per-cycle walk in [`Tile::serve_banks`] reads `head`/`len` pairs out of
+/// two dense arrays, and the quiescence fast path's "any request queued?"
+/// check is a single counter load ([`BankQueues::total`]).
+///
+/// `BANK_QUEUE_DEPTH` only bounds *tile-local injection* (checked by the
+/// core contexts before pushing); network arrivals are pushed
+/// unconditionally, exactly like the old per-bank `VecDeque`s — so the
+/// ring grows (all banks at once, preserving FIFO order) in the rare case
+/// a bank's backlog exceeds the current capacity.
+#[derive(Debug)]
+struct BankQueues {
+    /// `banks * cap` slots, bank-major; ring-indexed per bank.
+    slots: Vec<Flit>,
+    head: Vec<u32>,
+    len: Vec<u32>,
+    cap: usize,
+    /// Queued requests across all banks.
+    total: usize,
+}
+
+/// Filler for unoccupied ring slots (never observed by consumers).
+const IDLE_FLIT: Flit = Flit {
+    src_tile: 0,
+    dst_tile: 0,
+    lane: 0,
+    tag: 0,
+    core: 0,
+    op: MemOp::Read,
+    wdata: 0,
+    bank: 0,
+    row: 0,
+    issued_at: 0,
+    rdata: 0,
+};
+
+impl BankQueues {
+    fn new(banks: usize) -> Self {
+        BankQueues {
+            slots: vec![IDLE_FLIT; banks * BANK_QUEUE_DEPTH],
+            head: vec![0; banks],
+            len: vec![0; banks],
+            cap: BANK_QUEUE_DEPTH,
+            total: 0,
+        }
+    }
+
+    fn banks(&self) -> usize {
+        self.head.len()
+    }
+
+    fn len(&self, bank: usize) -> usize {
+        self.len[bank] as usize
+    }
+
+    fn total(&self) -> usize {
+        self.total
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.cap * 2;
+        let mut slots = vec![IDLE_FLIT; self.banks() * new_cap];
+        for b in 0..self.banks() {
+            for i in 0..self.len[b] as usize {
+                let src = b * self.cap + (self.head[b] as usize + i) % self.cap;
+                slots[b * new_cap + i] = self.slots[src];
+            }
+            self.head[b] = 0;
+        }
+        self.slots = slots;
+        self.cap = new_cap;
+    }
+
+    fn push(&mut self, bank: usize, f: Flit) {
+        if self.len[bank] as usize == self.cap {
+            self.grow();
+        }
+        let i = (self.head[bank] as usize + self.len[bank] as usize) % self.cap;
+        self.slots[bank * self.cap + i] = f;
+        self.len[bank] += 1;
+        self.total += 1;
+    }
+
+    fn pop(&mut self, bank: usize) -> Option<Flit> {
+        if self.len[bank] == 0 {
+            return None;
+        }
+        let f = self.slots[bank * self.cap + self.head[bank] as usize];
+        self.head[bank] = ((self.head[bank] as usize + 1) % self.cap) as u32;
+        self.len[bank] -= 1;
+        self.total -= 1;
+        Some(f)
+    }
+}
+
 /// One tile: cores, icache, SPM banks and their queues.
 pub struct Tile {
     pub cores: Vec<Snitch>,
     pub icache: TileICache,
     pub banks: Vec<SramBank>,
     /// Per-bank input queues (the 5×16 tile crossbar's bank arbiters).
-    bank_q: Vec<VecDeque<Flit>>,
+    bank_q: BankQueues,
     /// Responses awaiting a slot on the response network.
     resp_out: VecDeque<Flit>,
     /// Completions scheduled for delivery: (ready, lane, completion).
@@ -127,11 +231,11 @@ impl Tile {
                     } else {
                         self.banks[b].reads += 1;
                     }
-                    self.sysdma_conflicts += self.bank_q[b].len() as u64;
+                    self.sysdma_conflicts += self.bank_q.len(b) as u64;
                     continue;
                 }
             }
-            if let Some(f) = self.bank_q[b].pop_front() {
+            if let Some(f) = self.bank_q.pop(b) {
                 let resp = serve_bank(&mut self.banks[b], f);
                 if resp.dst_tile == resp.src_tile {
                     self.deliveries.push((
@@ -258,8 +362,20 @@ pub struct Cluster {
     pub energy_params: EnergyParams,
     /// Stepping engine (see [`SimBackend`]); both are cycle-exact.
     pub backend: SimBackend,
+    /// Enable the quiescence fast path in [`Cluster::run`] (and, under a
+    /// `system::System`, in its lockstep run loop). `false` forces the
+    /// cycle-by-cycle slow path — the `--no-skip` debug flag; both paths
+    /// are cycle-exact and the invisibility tests diff them.
+    pub skip_quiescent: bool,
     /// Per-tile buffers reused by the parallel backend across cycles.
     scratch: Vec<parallel::TileScratch>,
+    /// Reused scratch for `complete_due_sys` (due entries / completions
+    /// out), detached with `mem::take` and reattached each cycle so the
+    /// steady state allocates nothing.
+    sys_due_buf: Vec<PendingSys>,
+    sys_out_buf: Vec<(usize, u8, MemCompletion)>,
+    /// Reused per-tile ctrl/L2 issue buffer for the serial engine.
+    serial_new_sys: Vec<(u8, u8, SysKind, u64)>,
 }
 
 impl Cluster {
@@ -276,7 +392,7 @@ impl Cluster {
                     .collect(),
                 icache: TileICache::new(cfg.icache, cfg.cores_per_tile),
                 banks: (0..cfg.banks_per_tile).map(|_| SramBank::new(cfg.bank_words)).collect(),
-                bank_q: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
+                bank_q: BankQueues::new(cfg.banks_per_tile),
                 resp_out: VecDeque::new(),
                 deliveries: Vec::new(),
                 sysdma_beats: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
@@ -328,7 +444,11 @@ impl Cluster {
             // `MEMPOOL_BACKEND` read) happens exactly once per run at
             // the entry point, not here.
             backend: SimBackend::Serial,
+            skip_quiescent: true,
             scratch: Vec::new(),
+            sys_due_buf: Vec::new(),
+            sys_out_buf: Vec::new(),
+            serial_new_sys: Vec::new(),
             cfg,
         }
     }
@@ -472,13 +592,16 @@ impl Cluster {
 
     /// Pop every pending system (ctrl/L2) access due at `now`, apply its
     /// side effects (DMA frontend writes and triggers, wake pulses, RO
-    /// flushes), and return the resulting core completions in processing
-    /// order. Shared by both stepping engines; they differ only in *where*
-    /// the completions are delivered (directly into the cores for the
-    /// serial engine, buffered per tile for the parallel one so the
-    /// per-core inbox order matches the serial schedule exactly).
-    fn complete_due_sys(&mut self, now: u64) -> Vec<(usize, u8, MemCompletion)> {
-        let mut due = Vec::new();
+    /// flushes), and leave the resulting core completions in processing
+    /// order in `sys_out_buf` (reused across cycles; callers detach it
+    /// with `mem::take`, drain it, and reattach). Shared by both stepping
+    /// engines; they differ only in *where* the completions are delivered
+    /// (directly into the cores for the serial engine, buffered per tile
+    /// for the parallel one so the per-core inbox order matches the
+    /// serial schedule exactly).
+    fn complete_due_sys(&mut self, now: u64) {
+        let mut due = std::mem::take(&mut self.sys_due_buf);
+        debug_assert!(due.is_empty());
         let mut i = 0;
         while i < self.pending_sys.len() {
             if self.pending_sys[i].ready <= now {
@@ -487,8 +610,9 @@ impl Cluster {
                 i += 1;
             }
         }
-        let mut out = Vec::with_capacity(due.len());
-        for p in due {
+        let mut out = std::mem::take(&mut self.sys_out_buf);
+        debug_assert!(out.is_empty());
+        for p in due.drain(..) {
             let rdata = match p.kind {
                 SysKind::CtrlLoad(off) => match off {
                     CTRL_DMA_STATUS => (now < self.dma_done_at) as u32,
@@ -532,7 +656,8 @@ impl Cluster {
             };
             out.push((p.tile, p.lane, MemCompletion { tag: p.tag, rdata }));
         }
-        out
+        self.sys_due_buf = due;
+        self.sys_out_buf = out;
     }
 
     /// Advance one cycle with the configured backend.
@@ -560,17 +685,21 @@ impl Cluster {
             }
         }
         // Due system (ctrl/L2) accesses complete here too.
-        for (t, lane, c) in self.complete_due_sys(now) {
+        self.complete_due_sys(now);
+        let mut sys_out = std::mem::take(&mut self.sys_out_buf);
+        for (t, lane, c) in sys_out.drain(..) {
             self.tiles[t].cores[lane as usize].push_completion(c);
         }
+        self.sys_out_buf = sys_out;
 
         // Phase 2: cores issue. Tile fields are split so the context can
         // borrow the icache/banks while the cores run.
         let tpg = self.cfg.tiles_per_group;
+        let mut new_sys = std::mem::take(&mut self.serial_new_sys);
         for t in 0..self.tiles.len() {
             let tile = &mut self.tiles[t];
             let Tile { cores, icache, bank_q, .. } = tile;
-            let mut new_sys: Vec<(u8, u8, SysKind, u64)> = Vec::new();
+            debug_assert!(new_sys.is_empty());
             {
                 let mut ctx = TileCtx {
                     tile: t,
@@ -598,16 +727,17 @@ impl Cluster {
                 self.group_accesses += ctx.group_accesses;
                 self.global_accesses += ctx.global_accesses;
             }
-            for (lane, tag, kind, ready) in new_sys {
+            for (lane, tag, kind, ready) in new_sys.drain(..) {
                 self.pending_sys.push(PendingSys { ready, tile: t, lane, tag, kind });
             }
         }
+        self.serial_new_sys = new_sys;
 
         // Phase 3: network request arrivals into bank queues.
         for t in 0..self.tiles.len() {
             while let Some(f) = self.net.pop_req_arrival(t, now) {
                 debug_assert_eq!(f.dst_tile as usize, t);
-                self.tiles[t].bank_q[f.bank as usize].push_back(f);
+                self.tiles[t].bank_q.push(f.bank as usize, f);
             }
         }
 
@@ -654,15 +784,119 @@ impl Cluster {
 
     /// Run until every core halts *and* the memory system drains (or
     /// `max_cycles` elapse). Returns true on clean completion.
+    ///
+    /// Drives the quiescence fast path: before each step, a quiescent
+    /// cluster jumps to its earliest wake-up event (capped at the cycle
+    /// deadline). The jump is cycle-invisible — the cycle counter, every
+    /// statistic, and the energy books match a run with
+    /// `skip_quiescent = false` exactly.
     pub fn run(&mut self, max_cycles: u64) -> bool {
         let deadline = self.now + max_cycles;
         while self.now < deadline {
+            self.maybe_skip(deadline);
+            if self.now >= deadline {
+                break; // deadlocked-quiescent: the jump landed on the deadline
+            }
             self.step();
             if self.all_halted() && self.drained() {
                 return true;
             }
         }
         false
+    }
+
+    /// If enabled and the cluster is quiescent, jump to the earliest
+    /// wake-up event, capped at `deadline`. A cluster that already
+    /// satisfies the run loop's completion condition must not skip — the
+    /// next step observes completion at the same cycle the slow path
+    /// would. With no pending event at all (a deadlock), the jump lands
+    /// on the deadline, matching the slow path burning quiet cycles until
+    /// the budget runs out.
+    pub(crate) fn maybe_skip(&mut self, deadline: u64) {
+        if !self.skip_quiescent
+            || (self.all_halted() && self.drained())
+            || !self.quiescent()
+        {
+            return;
+        }
+        let target = self.next_wake().unwrap_or(deadline).min(deadline);
+        if target > self.now {
+            self.advance_quiet(target - self.now);
+        }
+    }
+
+    /// True when stepping the cluster is pure waiting: every core is
+    /// halted or asleep with nothing to write back, no flit sits in the
+    /// network, bank queues, or response queues, and no icache lookup is
+    /// queued. Timed events (scheduled deliveries, pending ctrl/L2
+    /// completions, in-flight icache fills, system-DMA beat reservations)
+    /// may still be outstanding — they are *wake sources*, not activity:
+    /// until the earliest of them is due, every step is a no-op apart
+    /// from per-core cycle accounting.
+    pub(crate) fn quiescent(&self) -> bool {
+        self.net.in_flight() == 0
+            && self.tiles.iter().all(|t| {
+                t.resp_out.is_empty()
+                    && t.bank_q.total() == 0
+                    && t.icache.quiet()
+                    && t.cores.iter().all(|c| c.quiet())
+            })
+    }
+
+    /// Earliest future cycle at which a quiescent cluster's state can
+    /// change. `None` means nothing is pending (a deadlock unless the run
+    /// deadline or — under a `System` — another cluster intervenes).
+    /// Waking *early* is always safe: the extra cycles are quiet and step
+    /// as no-ops, identically to the slow path.
+    pub(crate) fn next_wake(&self) -> Option<u64> {
+        let mut wake: Option<u64> = None;
+        let mut upd = |t: u64| {
+            wake = Some(wake.map_or(t, |w: u64| w.min(t)));
+        };
+        for p in &self.pending_sys {
+            upd(p.ready);
+        }
+        for tile in &self.tiles {
+            for &(ready, ..) in &tile.deliveries {
+                upd(ready);
+            }
+            if let Some(r) = tile.icache.next_fill_at() {
+                upd(r);
+            }
+            for q in &tile.sysdma_beats {
+                // Sorted by cycle — the front is the earliest beat.
+                if let Some(&(at, _)) = q.front() {
+                    upd(at);
+                }
+            }
+        }
+        // Status timestamps flip observers (`CTRL_*_STATUS` polls,
+        // `System::done`) when `now` *reaches* them; waking one cycle
+        // early places every observation point exactly where the slow
+        // path has it. `u64::MAX` marks an armed-but-unreleased global
+        // barrier — not a timed event.
+        for ts in [self.dma_done_at, self.sys_dma_done_at, self.gbarrier_release_at] {
+            if ts != u64::MAX && ts > self.now {
+                upd(ts.saturating_sub(1));
+            }
+        }
+        wake
+    }
+
+    /// Jump a quiescent cluster forward by `delta` cycles: age each
+    /// core's cycle accounting (exactly what `delta` quiet steps would
+    /// have booked) and the interconnect's idle-cycle arbitration
+    /// rotation. Everything else is keyed on absolute timestamps and
+    /// unaffected by the jump.
+    pub(crate) fn advance_quiet(&mut self, delta: u64) {
+        debug_assert!(self.quiescent());
+        for tile in &mut self.tiles {
+            for core in &mut tile.cores {
+                core.age_quiet(delta);
+            }
+        }
+        self.net.skip_cycles(delta);
+        self.now += delta;
     }
 
     pub fn all_halted(&self) -> bool {
@@ -676,7 +910,7 @@ impl Cluster {
             && self.tiles.iter().all(|t| {
                 t.resp_out.is_empty()
                     && t.deliveries.is_empty()
-                    && t.bank_q.iter().all(|q| q.is_empty())
+                    && t.bank_q.total() == 0
                     && t.cores.iter().all(|c| c.drained())
             })
     }
@@ -793,7 +1027,7 @@ struct TileCtx<'a> {
     group: usize,
     map: &'a AddressMap,
     icache: &'a mut TileICache,
-    bank_q: &'a mut Vec<VecDeque<Flit>>,
+    bank_q: &'a mut BankQueues,
     net: &'a mut dyn L1Network,
     axi: &'a mut AxiSystem,
     l2: &'a mut L2Memory,
@@ -835,11 +1069,10 @@ impl CoreCtx for TileCtx<'_> {
                 };
                 if loc.tile as usize == self.tile {
                     // Tile-local: straight into the bank arbiter.
-                    let q = &mut self.bank_q[loc.bank as usize];
-                    if q.len() >= BANK_QUEUE_DEPTH {
+                    if self.bank_q.len(loc.bank as usize) >= BANK_QUEUE_DEPTH {
                         return false;
                     }
-                    q.push_back(flit);
+                    self.bank_q.push(loc.bank as usize, flit);
                     self.local_accesses += 1;
                     true
                 } else {

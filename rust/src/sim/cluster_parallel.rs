@@ -32,9 +32,7 @@
 //! of cycle counts, statistics, and architectural results for every
 //! covered kernel.
 
-use std::collections::VecDeque;
-
-use super::{Cluster, PendingSys, SysKind, Tile, BANK_QUEUE_DEPTH, CTRL_LATENCY};
+use super::{BankQueues, Cluster, PendingSys, SysKind, Tile, BANK_QUEUE_DEPTH, CTRL_LATENCY};
 use crate::core::{CoreCtx, MemCompletion, MemRequestOut};
 use crate::icache::{FetchResult, TileICache};
 use crate::interconnect::{Flit, L1Network};
@@ -139,13 +137,44 @@ impl Cluster {
     /// Advance one cycle with the parallel tile-stepping engine.
     /// Cycle-exact with [`Cluster::step_serial`].
     pub fn step_parallel(&mut self) {
+        self.par_intake();
+        // Per-tile local fan-out. The standalone-cluster path forks its
+        // own tiles; a multi-cluster `System` instead collects every
+        // cluster's [`TileJob`]s (via [`Cluster::par_tile_jobs`]) into one
+        // flattened fan-out so per-tile and per-cluster parallelism share
+        // a single rayon pool rather than nesting fork/joins.
+        let consts = self.par_consts();
+        {
+            let tiles = &mut self.tiles;
+            let scratch = &mut self.scratch;
+            let net: &dyn L1Network = &*self.net;
+            let map = &self.map;
+            let program = &self.program;
+            par_for_each_pair(tiles, scratch, |t, tile, scr| {
+                tile_local_phase(t, tile, scr, net, map, program, &consts);
+            });
+        }
+        self.par_exchange();
+    }
+
+    fn par_consts(&self) -> ParConsts {
+        ParConsts {
+            now: self.now,
+            tiles_per_group: self.cfg.tiles_per_group,
+            num_cores: self.cfg.num_cores() as u32,
+            cores_per_tile: self.cfg.cores_per_tile as u32,
+            cores_per_group: (self.cfg.tiles_per_group * self.cfg.cores_per_tile) as u32,
+        }
+    }
+
+    /// Serial intake phase of one parallel-engine cycle.
+    pub(crate) fn par_intake(&mut self) {
         let now = self.now;
         let n_tiles = self.tiles.len();
         if self.scratch.len() != n_tiles {
             self.scratch = (0..n_tiles).map(|_| TileScratch::default()).collect();
         }
 
-        // --- Serial intake phase ---------------------------------------
         // Drain this cycle's request arrivals into per-tile inboxes. The
         // serial engine pops them between core issue and bank service,
         // but core issue only pushes into the (disjoint) injection
@@ -161,30 +190,38 @@ impl Cluster {
         // apply now — before any core steps, as in the serial engine —
         // while the completions are buffered so each core's inbox sees
         // them *after* this cycle's due deliveries (serial phase order).
-        for (t, lane, c) in self.complete_due_sys(now) {
+        self.complete_due_sys(now);
+        let mut sys_out = std::mem::take(&mut self.sys_out_buf);
+        for (t, lane, c) in sys_out.drain(..) {
             self.scratch[t].sys_completions.push((lane, c));
         }
+        self.sys_out_buf = sys_out;
+    }
 
-        // --- Parallel local phase --------------------------------------
-        let consts = ParConsts {
-            now,
-            tiles_per_group: self.cfg.tiles_per_group,
-            num_cores: self.cfg.num_cores() as u32,
-            cores_per_tile: self.cfg.cores_per_tile as u32,
-            cores_per_group: (self.cfg.tiles_per_group * self.cfg.cores_per_tile) as u32,
-        };
-        {
-            let tiles = &mut self.tiles;
-            let scratch = &mut self.scratch;
-            let net: &dyn L1Network = &*self.net;
-            let map = &self.map;
-            let program = &self.program;
-            par_for_each_pair(tiles, scratch, |t, tile, scr| {
-                tile_local_phase(t, tile, scr, net, map, program, &consts);
-            });
-        }
+    /// One borrowed job per tile, for a caller-owned flattened fan-out
+    /// (the multi-cluster `System` collects jobs across clusters and runs
+    /// them on one pool). Call between [`par_intake`] and
+    /// [`par_exchange`]; every job must run exactly once.
+    ///
+    /// [`par_intake`]: Cluster::par_intake
+    /// [`par_exchange`]: Cluster::par_exchange
+    pub(crate) fn par_tile_jobs(&mut self) -> Vec<TileJob<'_>> {
+        let consts = self.par_consts();
+        let net: &dyn L1Network = &*self.net;
+        let map = &self.map;
+        let program = &self.program;
+        self.tiles
+            .iter_mut()
+            .zip(self.scratch.iter_mut())
+            .enumerate()
+            .map(|(t, (tile, scr))| TileJob { t, tile, scr, net, map, program, consts })
+            .collect()
+    }
 
-        // --- Serial exchange phase -------------------------------------
+    /// Serial exchange phase of one parallel-engine cycle; ends the cycle.
+    pub(crate) fn par_exchange(&mut self) {
+        let now = self.now;
+        let n_tiles = self.tiles.len();
         // Replay buffered network traffic in tile order. Each injection
         // channel is fed by exactly one tile, so every reserved send must
         // be accepted.
@@ -285,6 +322,27 @@ impl Cluster {
     }
 }
 
+/// One tile's local phase, packaged with every borrow it needs so a
+/// caller can collect jobs across *clusters* and fan them all out on one
+/// rayon pool (the `System` stepper's flattened parallelism). `Send`
+/// falls out of the field types: the network is only borrowed shared
+/// (`L1Network: Sync`), and each job's `&mut` borrows are disjoint.
+pub(crate) struct TileJob<'a> {
+    t: usize,
+    tile: &'a mut Tile,
+    scr: &'a mut TileScratch,
+    net: &'a dyn L1Network,
+    map: &'a AddressMap,
+    program: &'a Program,
+    consts: ParConsts,
+}
+
+impl TileJob<'_> {
+    pub(crate) fn run(&mut self) {
+        tile_local_phase(self.t, self.tile, self.scr, self.net, self.map, self.program, &self.consts);
+    }
+}
+
 /// Everything one tile does in a cycle that touches only its own state:
 /// the serial engine's phases 1 (delivery), 2 (core issue), 3 (arrival
 /// drain), 4 (bank service), and the local half of 5 (icache), in that
@@ -343,7 +401,7 @@ fn tile_local_phase(
     // Network request arrivals join the bank queues behind this cycle's
     // tile-local requests (serial phase 3 runs after phase 2).
     for f in scr.req_in.drain(..) {
-        tile.bank_q[f.bank as usize].push_back(f);
+        tile.bank_q.push(f.bank as usize, f);
     }
 
     // Banks serve one request each; responses head home. Due system-DMA
@@ -376,7 +434,7 @@ struct ParTileCtx<'a> {
     now: u64,
     map: &'a AddressMap,
     icache: &'a mut TileICache,
-    bank_q: &'a mut Vec<VecDeque<Flit>>,
+    bank_q: &'a mut BankQueues,
     net: &'a dyn L1Network,
     num_cores: u32,
     cores_per_tile: u32,
@@ -409,11 +467,10 @@ impl CoreCtx for ParTileCtx<'_> {
                 };
                 if loc.tile as usize == self.tile {
                     // Tile-local: straight into the bank arbiter.
-                    let q = &mut self.bank_q[loc.bank as usize];
-                    if q.len() >= BANK_QUEUE_DEPTH {
+                    if self.bank_q.len(loc.bank as usize) >= BANK_QUEUE_DEPTH {
                         return false;
                     }
-                    q.push_back(flit);
+                    self.bank_q.push(loc.bank as usize, flit);
                     self.scr.local_accesses += 1;
                     true
                 } else {

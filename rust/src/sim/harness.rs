@@ -17,6 +17,9 @@ pub struct RunConfig {
     /// Stepping engine; both are cycle-exact (defaults to
     /// `MEMPOOL_BACKEND`, or the reference serial engine).
     pub backend: SimBackend,
+    /// Enable the quiescence fast path (`false` = `--no-skip`). Both
+    /// settings produce identical cycle counts and statistics.
+    pub quiesce_skip: bool,
 }
 
 impl RunConfig {
@@ -29,7 +32,7 @@ impl RunConfig {
     }
 
     pub fn with_backend(cluster: ClusterConfig, backend: SimBackend) -> Self {
-        RunConfig { cluster, max_cycles: 10_000_000, cold_icache: true, backend }
+        RunConfig { cluster, max_cycles: 10_000_000, cold_icache: true, backend, quiesce_skip: true }
     }
 }
 
@@ -49,6 +52,7 @@ pub struct KernelResult {
 pub fn prepare_cluster(run: &RunConfig, program: Program) -> Cluster {
     let mut cluster = Cluster::new(run.cluster.clone(), program);
     cluster.backend = run.backend;
+    cluster.skip_quiescent = run.quiesce_skip;
     cluster.reset_cores(0);
     if run.cold_icache {
         for t in &mut cluster.tiles {

@@ -3,6 +3,19 @@
 //! remote interconnect topology, the hierarchical AXI system with RO
 //! caches, the distributed DMA, and the control registers into one
 //! deterministic `Cluster::step()`.
+//!
+//! Two stepping engines share that cycle contract — the reference
+//! serial engine and a two-phase parallel engine (parallel tile-local
+//! phase, serial exchange phase) — and the determinism tests assert
+//! they agree cycle for cycle on every workload. On top of both,
+//! `Cluster::run` carries a *quiescence fast path*: when every core is
+//! halted or sleeping and no request, response, refill, or DMA beat is
+//! in flight, the cluster jumps its cycle counter straight to the next
+//! scheduled wake-up event instead of stepping empty cycles one by one.
+//! The jump is cycle-invisible — counts, statistics, and energy books
+//! are identical with the skip on or off (`--no-skip` forces the slow
+//! path) — and `docs/ARCHITECTURE.md` pins the exact rules a new timed
+//! component must follow to keep it that way.
 
 mod cluster;
 mod harness;

@@ -188,13 +188,15 @@ pub fn run_point(
     clusters: usize,
     cores: usize,
     backend: SimBackend,
+    quiesce_skip: bool,
 ) -> Result<GridPoint, String> {
     let cfg = config_for(preset, cores)?;
     let clock_hz = cfg.clock_hz;
     let t0 = Instant::now();
     let (cycles, stats, system) = if clusters <= 1 {
         let workload = workload_by_name(kernel_name, Target::Cluster, cores)?;
-        let run = RunConfig::cluster(&cfg).with_backend(backend);
+        let mut run = RunConfig::cluster(&cfg).with_backend(backend);
+        run.quiesce_skip = quiesce_skip;
         let mut result = run_workload(workload.as_ref(), &run);
         workload
             .verify(&mut result.machine)
@@ -203,7 +205,8 @@ pub fn run_point(
     } else {
         let workload = workload_by_name(kernel_name, Target::System, cores)?;
         let syscfg = SystemConfig::new(clusters, cfg);
-        let run = RunConfig::system(&syscfg).with_backend(backend);
+        let mut run = RunConfig::system(&syscfg).with_backend(backend);
+        run.quiesce_skip = quiesce_skip;
         let mut result = run_workload(workload.as_ref(), &run);
         workload.verify(&mut result.machine).map_err(|e| {
             format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
@@ -231,6 +234,7 @@ pub fn run_scenarios(
     preset: &str,
     reqs: &[ScenarioReq],
     jobs: usize,
+    quiesce_skip: bool,
 ) -> Result<Vec<GridPoint>, String> {
     if reqs.is_empty() {
         return Err("empty scenario grid (no kernels or no core counts)".to_string());
@@ -247,7 +251,8 @@ pub fn run_scenarios(
                     break;
                 }
                 let r = &reqs[i];
-                let point = run_point(preset, &r.kernel, r.clusters, r.cores, r.backend);
+                let point =
+                    run_point(preset, &r.kernel, r.clusters, r.cores, r.backend, quiesce_skip);
                 *slots[i].lock().unwrap() = Some(point);
             });
         }

@@ -1,6 +1,13 @@
 //! Experiment harnesses — one function per paper table/figure, shared by
 //! the `mempool` CLI, the examples, and the bench targets. Each returns
 //! structured rows so callers can print, assert, or serialize them.
+//!
+//! Scenario execution and serialization live in the shared
+//! [`grid`] core; the [`sweep`] runner and the [`report`] campaign
+//! runner both build on it and emit one JSON scenario schema. The
+//! `mempool-report` v1 document the report runner writes — every field,
+//! and which of them CI's `--diff` gate compares exactly versus under
+//! `--host-tolerance` — is documented in `docs/REPORT_SCHEMA.md`.
 
 pub mod grid;
 pub mod report;

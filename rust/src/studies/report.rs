@@ -51,6 +51,11 @@ pub struct ReportSpec {
     pub backends: Vec<SimBackend>,
     /// Scenario-level worker threads.
     pub jobs: usize,
+    /// Enable the quiescence fast path in every scenario (`false` =
+    /// `--no-skip`); simulated fields are identical either way, so the
+    /// exact-match diff holds across the flag — only host throughput
+    /// moves.
+    pub quiesce_skip: bool,
 }
 
 fn names(ns: &[&str]) -> Vec<String> {
@@ -86,6 +91,7 @@ impl ReportSpec {
             }],
             backends: vec![SimBackend::Serial, SimBackend::Parallel],
             jobs: default_jobs(),
+            quiesce_skip: true,
         }
     }
 
@@ -150,7 +156,7 @@ pub fn run_report(spec: &ReportSpec) -> Result<Report, String> {
     let scen = spec.scenarios();
     let reqs: Vec<ScenarioReq> = scen.iter().map(|(_, r)| r.clone()).collect();
     let t0 = Instant::now();
-    let points = run_scenarios(&spec.preset, &reqs, spec.jobs)?;
+    let points = run_scenarios(&spec.preset, &reqs, spec.jobs, spec.quiesce_skip)?;
     let wall_seconds = t0.elapsed().as_secs_f64();
     Ok(Report {
         preset: spec.preset.clone(),
@@ -398,7 +404,14 @@ pub fn check_backend_agreement(doc: &Json) -> Result<usize, String> {
 
 /// A GitHub-flavored markdown rendering of the report (per-scenario
 /// table plus the given status lines) for `$GITHUB_STEP_SUMMARY`.
-pub fn summary_markdown(doc: &Json, status: &[String]) -> String {
+///
+/// When a `pinned` report is given (the `--check` reference), each row
+/// ends with the per-scenario host-throughput delta against it — the
+/// number `--diff`/`--host-tolerance` gate on but previously never
+/// surfaced in the summary, so simulator-speed wins and losses were
+/// invisible in CI. Scenarios the pinned report lacks (or with no
+/// usable throughput on either side) show `–`.
+pub fn summary_markdown(doc: &Json, status: &[String], pinned: Option<&Json>) -> String {
     use std::fmt::Write as _;
     let mut out = String::new();
     out.push_str("## MemPool performance report\n\n");
@@ -416,9 +429,19 @@ pub fn summary_markdown(doc: &Json, status: &[String]) -> String {
     out.push('\n');
     out.push_str(
         "| campaign | kernel | clusters×cores | backend | cycles | IPC | OP/cycle \
-         | GOPS/W | sync | Msim-cyc/s |\n",
+         | GOPS/W | sync | Msim-cyc/s |",
     );
-    out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+    if pinned.is_some() {
+        out.push_str(" Δhost |");
+    }
+    out.push('\n');
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|");
+    if pinned.is_some() {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    let pinned_scenarios =
+        pinned.and_then(|p| p.get("scenarios")).and_then(Json::as_array).unwrap_or(&[]);
     for s in scenarios {
         let str_of = |k: &str| s.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
         let u64_of = |k: &str| s.get(k).and_then(Json::as_u64).unwrap_or(0);
@@ -428,7 +451,7 @@ pub fn summary_markdown(doc: &Json, status: &[String]) -> String {
             .and_then(|b| b.get("synchronization"))
             .and_then(Json::as_f64)
             .unwrap_or(0.0);
-        let _ = writeln!(
+        let _ = write!(
             out,
             "| {} | {} | {}×{} | {} | {} | {:.2} | {:.1} | {:.0} | {:.0}% | {:.2} |",
             str_of("campaign"),
@@ -443,6 +466,21 @@ pub fn summary_markdown(doc: &Json, status: &[String]) -> String {
             100.0 * sync,
             host_throughput(s) / 1e6
         );
+        if pinned.is_some() {
+            let key = scenario_key(s);
+            let old = pinned_scenarios
+                .iter()
+                .find(|p| scenario_key(p) == key)
+                .map(host_throughput)
+                .unwrap_or(0.0);
+            let new = host_throughput(s);
+            if old > 0.0 && new > 0.0 {
+                let _ = write!(out, " {:+.1}% |", 100.0 * (new / old - 1.0));
+            } else {
+                out.push_str(" – |");
+            }
+        }
+        out.push('\n');
     }
     out
 }
@@ -468,6 +506,7 @@ mod tests {
             }],
             backends,
             jobs: 2,
+            quiesce_skip: true,
         }
     }
 
@@ -627,11 +666,28 @@ mod tests {
     #[test]
     fn summary_markdown_renders_a_row_per_scenario() {
         let doc = synthetic_report("axpy", 1000, 2.5e6);
-        let md = summary_markdown(&doc, &["⚠️ degraded".to_string()]);
+        let md = summary_markdown(&doc, &["⚠️ degraded".to_string()], None);
         assert!(md.contains("## MemPool performance report"), "{md}");
         assert!(md.contains("degraded"), "{md}");
         assert!(md.contains("| cluster | axpy | 1×4 | serial | 1000 |"), "{md}");
         // One header row, one separator, one scenario row.
         assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 3, "{md}");
+        // Without a pinned reference there is no Δhost column.
+        assert!(!md.contains("Δhost"), "{md}");
+    }
+
+    #[test]
+    fn summary_markdown_shows_host_throughput_delta_against_pinned() {
+        // 2.5 Msim-cyc/s now vs 2.0 pinned = a +25% host-speed delta.
+        let doc = synthetic_report("axpy", 1000, 2.5e6);
+        let pinned = synthetic_report("axpy", 1000, 2.0e6);
+        let md = summary_markdown(&doc, &[], Some(&pinned));
+        assert!(md.contains("Δhost"), "{md}");
+        assert!(md.contains("| 2.50 | +25.0% |"), "{md}");
+        // A scenario the pinned report lacks degrades to a dash, not a
+        // bogus number.
+        let other = synthetic_report("dotp", 1000, 2.0e6);
+        let md = summary_markdown(&doc, &[], Some(&other));
+        assert!(md.contains("| 2.50 | – |"), "{md}");
     }
 }

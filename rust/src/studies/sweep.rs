@@ -37,6 +37,9 @@ pub struct SweepSpec {
     pub backend: SimBackend,
     /// Scenario-level worker threads.
     pub jobs: usize,
+    /// Enable the quiescence fast path in every scenario (`false` =
+    /// `--no-skip`); cycle counts are identical either way.
+    pub quiesce_skip: bool,
 }
 
 impl SweepSpec {
@@ -50,6 +53,7 @@ impl SweepSpec {
             kernels: vec!["matmul".to_string(), "axpy".to_string(), "dotp".to_string()],
             backend: SimBackend::Parallel,
             jobs: default_jobs(),
+            quiesce_skip: true,
         }
     }
 
@@ -84,7 +88,7 @@ impl SweepSpec {
 /// Run the whole grid, fanned across `spec.jobs` worker threads. Results
 /// come back in grid order regardless of scheduling.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
-    run_scenarios(&spec.preset, &spec.scenario_reqs(), spec.jobs)
+    run_scenarios(&spec.preset, &spec.scenario_reqs(), spec.jobs, spec.quiesce_skip)
 }
 
 /// Full results document (what `mempool sweep --out` writes). Scenario
@@ -228,6 +232,7 @@ mod tests {
             kernels: vec!["axpy".to_string(), "dotp".to_string()],
             backend: SimBackend::Parallel,
             jobs: 2,
+            quiesce_skip: true,
         };
         let points = run_sweep(&spec).expect("sweep");
         assert_eq!(points.len(), 2);
@@ -269,6 +274,7 @@ mod tests {
             kernels: vec!["axpy".to_string()],
             backend: SimBackend::Parallel,
             jobs: 2,
+            quiesce_skip: true,
         };
         let points = run_sweep(&spec).expect("sweep with cluster axis");
         assert_eq!(points.len(), 2);
@@ -280,7 +286,7 @@ mod tests {
         check_baseline(&points, &baseline).expect("self-baseline must match");
         // Workloads without a system variant fail loudly on the cluster
         // axis, naming the ones that have one.
-        let err = run_point("minpool", "dotp", 2, 4, SimBackend::Serial).unwrap_err();
+        let err = run_point("minpool", "dotp", 2, 4, SimBackend::Serial, true).unwrap_err();
         assert!(err.contains("no system-target variant"), "{err}");
     }
 

@@ -25,6 +25,23 @@
 //!
 //! Determinism therefore holds by construction at both levels, and the
 //! system determinism tests assert serial == parallel end to end.
+//!
+//! Two host-speed refinements sit on top without touching the cycle
+//! contract:
+//!
+//! - **Flattened fan-out** — when every cluster runs the parallel tile
+//!   backend, `System::step` does not nest per-cluster and per-tile
+//!   fork/joins: it runs every cluster's serial intake, collects *all*
+//!   clusters' tile jobs into one list fanned across a single rayon
+//!   pool, then replays each cluster's serial exchange in cluster order
+//!   (exchange touches only own-cluster state, so the order is
+//!   cycle-neutral) before the system exchange above.
+//! - **Quiescence skip** — `System::run` jumps over stretches where every
+//!   cluster is quiescent with empty outboxes, advancing all clusters in
+//!   lockstep to the earliest wake-up event (system-DMA completions, L1
+//!   beat reservations, global-barrier releases, scheduled deliveries).
+//!   Cycle-invisible by construction; `--no-skip` forces the slow path.
+//!   See `docs/ARCHITECTURE.md` for the skip-safety rules.
 
 mod fabric;
 mod kernels;
@@ -65,6 +82,9 @@ pub struct System {
     /// cluster's private `l2` (program text + cluster-local data).
     pub l2: L2Memory,
     frontends: Vec<SysDmaFrontend>,
+    /// Enable the lockstep quiescence fast path in [`System::run`]
+    /// (`false` = the `--no-skip` slow path; both are cycle-exact).
+    pub skip_quiescent: bool,
     now: u64,
 }
 
@@ -83,6 +103,7 @@ impl System {
             fabric: SystemFabric::new(cfg.fabric, cfg.num_clusters),
             l2: L2Memory::new(cfg.l2_bytes),
             frontends: vec![SysDmaFrontend::default(); cfg.num_clusters],
+            skip_quiescent: true,
             now: 0,
             cfg,
         }
@@ -110,7 +131,28 @@ impl System {
     /// system exchange phase (see the module docs).
     pub fn step(&mut self) {
         let now = self.now;
-        par_for_each(&mut self.clusters, |_, c| c.step());
+        // Flattened fan-out: with several clusters all on the parallel
+        // tile backend, fork one job per tile across *all* clusters on a
+        // single rayon pool instead of nesting a per-cluster fork around
+        // a per-tile fork. The per-cluster serial intake and exchange
+        // phases touch only their own cluster's state, so running them
+        // in cluster order is exactly what the nested schedule did.
+        let flatten = self.clusters.len() > 1
+            && self.clusters.iter().all(|c| c.backend == SimBackend::Parallel);
+        if flatten {
+            for c in &mut self.clusters {
+                c.par_intake();
+            }
+            let mut jobs: Vec<_> =
+                self.clusters.iter_mut().flat_map(|c| c.par_tile_jobs()).collect();
+            par_for_each(&mut jobs, |_, j| j.run());
+            drop(jobs);
+            for c in &mut self.clusters {
+                c.par_exchange();
+            }
+        } else {
+            par_for_each(&mut self.clusters, |_, c| c.step());
+        }
         // Drain the outboxes in rotating round-robin order, the start
         // index seeded from the cycle count: under sustained contention
         // every cluster gets the first claim on the fabric equally often,
@@ -147,12 +189,43 @@ impl System {
     pub fn run(&mut self, max_cycles: u64) -> bool {
         let deadline = self.now + max_cycles;
         while self.now < deadline {
+            self.maybe_skip(deadline);
+            if self.now >= deadline {
+                break;
+            }
             self.step();
             if self.done() {
                 return true;
             }
         }
         false
+    }
+
+    /// Quiescence fast path (lockstep): when every cluster is quiescent
+    /// with empty system outboxes, jump all clusters *and* the system
+    /// clock to the earliest wake-up event (or the deadline when none is
+    /// scheduled — identical to the slow path burning quiet cycles until
+    /// the budget runs out). Timestamp-based wake sources are reported by
+    /// [`Cluster::next_wake`] as `ts - 1` so the first post-skip `step()`
+    /// observes the completion on exactly the cycle the slow path would.
+    fn maybe_skip(&mut self, deadline: u64) {
+        if !self.skip_quiescent || self.done() {
+            return;
+        }
+        if !self.clusters.iter().all(|c| {
+            c.quiescent() && c.sys_dma_outbox.is_empty() && c.gbarrier_outbox.is_empty()
+        }) {
+            return;
+        }
+        let wake = self.clusters.iter().filter_map(|c| c.next_wake()).min();
+        let target = wake.unwrap_or(deadline).min(deadline);
+        if target > self.now {
+            let delta = target - self.now;
+            for c in &mut self.clusters {
+                c.advance_quiet(delta);
+            }
+            self.now += delta;
+        }
     }
 
     fn done(&self) -> bool {
@@ -364,6 +437,9 @@ pub struct SystemRunConfig {
     pub cold_icache: bool,
     /// Stepping engine for every cluster; both are cycle-exact.
     pub backend: SimBackend,
+    /// Enable the quiescence fast path (`false` = `--no-skip`). Both
+    /// settings produce identical cycle counts and statistics.
+    pub quiesce_skip: bool,
 }
 
 impl SystemRunConfig {
@@ -376,7 +452,13 @@ impl SystemRunConfig {
     }
 
     pub fn with_backend(system: SystemConfig, backend: SimBackend) -> Self {
-        SystemRunConfig { system, max_cycles: 10_000_000, cold_icache: true, backend }
+        SystemRunConfig {
+            system,
+            max_cycles: 10_000_000,
+            cold_icache: true,
+            backend,
+            quiesce_skip: true,
+        }
     }
 }
 
@@ -396,6 +478,10 @@ pub struct SystemKernelResult {
 pub fn prepare_system(run: &SystemRunConfig, program: Program) -> System {
     let mut system = System::new(run.system.clone(), program);
     system.set_backend(run.backend);
+    system.skip_quiescent = run.quiesce_skip;
+    for c in &mut system.clusters {
+        c.skip_quiescent = run.quiesce_skip;
+    }
     system.reset_cores(0);
     if run.cold_icache {
         for c in &mut system.clusters {

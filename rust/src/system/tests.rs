@@ -455,6 +455,49 @@ fn reduce_depends_on_the_global_barrier_and_verifies() {
     assert!(stats.totals.ops >= kernel.total_ops(&tcfg));
 }
 
+// --- Quiescence-skip invisibility (system level) --------------------------
+//
+// The lockstep system skip (all clusters quiescent, empty outboxes, one
+// shared delta) must be cycle-invisible across the whole system kernel
+// set: `matmul`/`axpy` are the system-DMA stressors (every round waits
+// on a fabric transfer in WFI), `reduce` is the global-barrier stressor
+// (its release epoch is a pure timestamp wake source). Each runs with
+// the skip on and off, on both backends, and must book identical cycles
+// and an identical full statistics book — energy included.
+
+#[test]
+fn quiesce_skip_is_cycle_invisible_on_system_workloads() {
+    let cfg = two_by_four();
+    let kernels: Vec<Box<dyn Workload>> = vec![
+        Box::new(SysMatmul::new(8, 8, 8, 2)),
+        Box::new(SysAxpy::new(8, 2)),
+        Box::new(SysReduce::new(16)),
+    ];
+    for k in kernels {
+        for backend in [SimBackend::Serial, SimBackend::Parallel] {
+            let fast_cfg = RunConfig::system(&cfg).with_backend(backend);
+            let mut slow_cfg = fast_cfg.clone();
+            slow_cfg.quiesce_skip = false;
+            let fast = run_workload(k.as_ref(), &fast_cfg);
+            let slow = run_workload(k.as_ref(), &slow_cfg);
+            assert_eq!(
+                fast.cycles,
+                slow.cycles,
+                "{} ({backend:?}): quiescence skip changed the cycle count",
+                k.name()
+            );
+            assert_eq!(
+                fast.system_stats,
+                slow.system_stats,
+                "{} ({backend:?}): quiescence skip changed the statistics",
+                k.name()
+            );
+            let mut m = fast.machine;
+            k.verify(&mut m).unwrap_or_else(|e| panic!("{} with skip: {e}", k.name()));
+        }
+    }
+}
+
 #[test]
 fn sys_kernels_rendezvous_on_the_fabric_before_halting() {
     // The ported matmul/axpy carry a trailing global_barrier: every

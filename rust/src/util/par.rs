@@ -6,6 +6,15 @@
 //! thread. Both paths visit every element exactly once with exclusive
 //! access, so results are identical — parallelism here only changes
 //! wall-clock time, never simulated state.
+//!
+//! All fan-out — per-tile inside a cluster, and per-tile across every
+//! cluster of a multi-cluster system — shares rayon's one global pool.
+//! The system stepper *flattens* rather than nests: when every cluster
+//! runs the parallel backend it collects one job per tile across all
+//! clusters into a single [`par_for_each`] call (see
+//! `System::step`), so a 4-cluster × 16-tile system schedules 64
+//! uniform jobs instead of 4 nested fork/joins of 16 — no pool-inside-
+//! pool blocking, better load balance, identical simulated state.
 
 /// Apply `f` to every `(a[i], b[i])` pair, potentially in parallel.
 ///

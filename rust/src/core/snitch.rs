@@ -19,6 +19,7 @@ use super::ipu::{Ipu, IpuOp};
 use crate::icache::FetchResult;
 use crate::isa::{Csr, Instr, OpKind, Program, Reg};
 use crate::mem::MemOp;
+use crate::trace::{Bucket, CoreTracer, InstrRecord};
 
 /// Memory access width (re-exported shape of `isa::instr::Width` kept
 /// private there; the LSU needs it for lane handling).
@@ -163,6 +164,11 @@ pub struct Snitch {
     inbox: VecDeque<MemCompletion>,
     pub ipu: Ipu,
     pub stats: CoreStats,
+    /// Optional trace sink (see the `trace` module). `None` in normal
+    /// runs — the only cost on the hot path is one pointer test — and
+    /// pure observation when installed: recording never feeds back into
+    /// execution, so cycles and statistics are identical either way.
+    pub tracer: Option<Box<CoreTracer>>,
 }
 
 impl Snitch {
@@ -183,6 +189,7 @@ impl Snitch {
             inbox: VecDeque::new(),
             ipu: Ipu::new(),
             stats: CoreStats::default(),
+            tracer: None,
         }
     }
 
@@ -274,10 +281,14 @@ impl Snitch {
     pub fn age_quiet(&mut self, delta: u64) {
         debug_assert!(self.quiet(), "aging a non-quiet core");
         self.stats.cycles += delta;
-        if self.status == Status::Halted {
+        let halted = self.status == Status::Halted;
+        if halted {
             self.stats.halted_cycles += delta;
         } else {
             self.stats.sleep_cycles += delta;
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.age_quiet(delta, halted);
         }
     }
 
@@ -313,8 +324,62 @@ impl Snitch {
         }
     }
 
-    /// Advance one cycle.
+    /// Advance one cycle. When a tracer is installed the outcome is
+    /// also booked into the current region window (and, with the
+    /// instruction stream on, issued instructions are recorded) —
+    /// strictly after `step_inner` runs, so tracing cannot perturb it.
     pub fn step(&mut self, now: u64, program: &Program, ctx: &mut dyn CoreCtx) -> StepOutcome {
+        if self.tracer.is_none() {
+            return self.step_inner(now, program, ctx);
+        }
+        let pc0 = self.pc;
+        let out = self.step_inner(now, program, ctx);
+        let mut tr = self.tracer.take().expect("tracer checked above");
+        self.record_step(&mut tr, now, pc0, out, program);
+        self.tracer = Some(tr);
+        out
+    }
+
+    /// Classify one stepped cycle into the tracer's buckets — the same
+    /// split `step_inner` applied to `CoreStats`, re-derived from the
+    /// outcome so the two books cannot drift apart.
+    fn record_step(
+        &self,
+        tr: &mut CoreTracer,
+        now: u64,
+        pc0: u32,
+        out: StepOutcome,
+        program: &Program,
+    ) {
+        let bucket = match out {
+            StepOutcome::Issued => {
+                let instr = *program.get(pc0).expect("traced issue within program");
+                if tr.record_instrs() {
+                    // The writeback is only architecturally visible at
+                    // issue for same-cycle ALU results; loads and IPU
+                    // results retire later through the scoreboard.
+                    let wb = instr
+                        .rd()
+                        .filter(|r| *r != Reg::ZERO && !self.reg_pending(*r))
+                        .map(|r| (r.name(), self.reg(r)));
+                    tr.push_instr(InstrRecord { cycle: now, pc: pc0, text: instr.to_string(), wb });
+                }
+                if instr.is_compute() {
+                    Bucket::Compute
+                } else {
+                    Bucket::Control
+                }
+            }
+            StepOutcome::Stall(StallReason::IFetch) => Bucket::IFetch,
+            StepOutcome::Stall(StallReason::Raw) => Bucket::Raw,
+            StepOutcome::Stall(StallReason::Lsu) => Bucket::Lsu,
+            StepOutcome::Sleeping => Bucket::Sleep,
+            StepOutcome::Halted => Bucket::Halted,
+        };
+        tr.bump(bucket);
+    }
+
+    fn step_inner(&mut self, now: u64, program: &Program, ctx: &mut dyn CoreCtx) -> StepOutcome {
         self.stats.cycles += 1;
         self.writeback(now);
 

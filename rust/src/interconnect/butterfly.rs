@@ -273,4 +273,9 @@ impl L1Network for Butterfly {
         let nets = if resp { &self.resp } else { &self.req };
         (((resp as u64) << 63) | n as u64, nets[n].free_space(flit.src_tile as usize))
     }
+
+    fn conflict_counts(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("butterfly_req".into(), self.req.iter().map(|n| n.conflicts).sum()));
+        out.push(("butterfly_resp".into(), self.resp.iter().map(|n| n.conflicts).sum()));
+    }
 }

@@ -82,6 +82,13 @@ pub trait L1Network: Send + Sync {
     /// accept/backpressure decisions exactly: nothing else drains or fills
     /// the channel until the buffered flits are replayed.
     fn send_credit(&self, flit: &Flit, resp: bool) -> (u64, usize);
+
+    /// Append this network's cumulative per-hop contention counters as
+    /// `(label, count)` pairs — the trace layer's hop heatmap. Labels are
+    /// stable across a run and identical on both stepping engines (the
+    /// counters are bumped in the serial arbitration phase). The default
+    /// reports nothing, for topologies without contention counters.
+    fn conflict_counts(&self, _out: &mut Vec<(String, u64)>) {}
 }
 
 /// Instantiate the configured topology.

@@ -191,4 +191,23 @@ impl L1Network for TopHNet {
         // destination group and direction.
         (((resp as u64) << 63) | dg as u64, xbar.free_space(src_idx))
     }
+
+    fn conflict_counts(&self, out: &mut Vec<(String, u64)>) {
+        for (g, x) in self.local_req.iter().enumerate() {
+            out.push((format!("local_g{g}_req"), x.conflicts));
+        }
+        for (g, x) in self.local_resp.iter().enumerate() {
+            out.push((format!("local_g{g}_resp"), x.conflicts));
+        }
+        for g in 0..self.groups {
+            for h in 0..self.groups {
+                if let Some(x) = self.pair_req[g * self.groups + h].as_ref() {
+                    out.push((format!("pair_g{g}_g{h}_req"), x.conflicts));
+                }
+                if let Some(x) = self.pair_resp[g * self.groups + h].as_ref() {
+                    out.push((format!("pair_g{g}_g{h}_resp"), x.conflicts));
+                }
+            }
+        }
+    }
 }

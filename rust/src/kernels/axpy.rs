@@ -80,6 +80,7 @@ impl Workload for Axpy {
         b.li("a2", "ALPHA");
         b.li("a3", "BLOCKS");
         b.li("a4", "BLOCK_STRIDE");
+        b.trace_marker(crate::trace::REGION_COMPUTE);
         b.align(8);
         b.label("blk");
         b.lw("t0", 0, "a0");
@@ -102,6 +103,7 @@ impl Workload for Axpy {
         b.add("a1", "a1", "a4");
         b.addi("a3", "a3", -1);
         b.bnez("a3", "blk");
+        b.trace_marker(crate::trace::REGION_BARRIER);
         b.barrier(0);
         b.halt();
     }

@@ -241,8 +241,10 @@ pub(crate) fn emit_streamed_axpy(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u32
     b.add("s8", "t3", "t4");
     b.label(format!("{pre}_round"));
     b.bge("s10", "s11", format!("{pre}_done"));
+    b.trace_marker(crate::trace::REGION_LOAD);
     p.round_prologue(b);
     b.barrier(80);
+    b.trace_marker(crate::trace::REGION_COMPUTE);
     b.andi("t0", "s10", 1);
     b.bnez("t0", format!("{pre}_odd"));
     let body = |b: &mut AsmBuilder, inb: u32, outb: u32, tag: &str| {
@@ -277,10 +279,12 @@ pub(crate) fn emit_streamed_axpy(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u32
     b.label(format!("{pre}_odd"));
     body(b, p.in_bufs[1], p.out_bufs[1], "odd");
     b.label(format!("{pre}_compute_done"));
+    b.trace_marker(crate::trace::REGION_BARRIER);
     b.barrier(81);
     b.addi("s10", "s10", 1);
     b.j(format!("{pre}_round"));
     b.label(format!("{pre}_done"));
+    b.trace_marker(crate::trace::REGION_STORE);
     p.epilogue(b, rounds);
     b.barrier(82);
     if p.is_sys() {
@@ -329,8 +333,10 @@ pub(crate) fn emit_streamed_matmul(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u
     ];
     b.label(format!("{pre}_round"));
     b.bge("s10", "s11", format!("{pre}_done"));
+    b.trace_marker(crate::trace::REGION_LOAD);
     p.round_prologue(b);
     b.barrier(80);
+    b.trace_marker(crate::trace::REGION_COMPUTE);
     b.comment("select this round's A and C buffers (kept on the stack)");
     b.andi("t0", "s10", 1);
     b.bnez("t0", format!("{pre}_buf_odd"));
@@ -406,10 +412,12 @@ pub(crate) fn emit_streamed_matmul(b: &mut AsmBuilder, p: &DbPlumbing, rounds: u
     }
     b.j("tile_loop");
     b.label("tiles_done");
+    b.trace_marker(crate::trace::REGION_BARRIER);
     b.barrier(81);
     b.addi("s10", "s10", 1);
     b.j(format!("{pre}_round"));
     b.label(format!("{pre}_done"));
+    b.trace_marker(crate::trace::REGION_STORE);
     p.epilogue(b, rounds);
     b.barrier(82);
     if p.is_sys() {

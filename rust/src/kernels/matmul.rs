@@ -103,6 +103,7 @@ impl Workload for Matmul {
         b.addi("sp", "sp", -16);
         b.core_id("t0");
         b.sw("t0", 0, "sp");
+        b.trace_marker(crate::trace::REGION_COMPUTE);
         b.label("tile_loop");
         b.lw("t0", 0, "sp");
         b.li("t1", "TOTAL_TILES");
@@ -170,6 +171,7 @@ impl Workload for Matmul {
         }
         b.j("tile_loop");
         b.label("tiles_done");
+        b.trace_marker(crate::trace::REGION_BARRIER);
         b.barrier(0);
         b.halt();
     }

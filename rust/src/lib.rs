@@ -31,5 +31,6 @@ pub mod runtime;
 pub mod sim;
 pub mod studies;
 pub mod system;
+pub mod trace;
 pub mod trafficgen;
 pub mod util;

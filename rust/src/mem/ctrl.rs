@@ -40,6 +40,15 @@ pub const CTRL_SYSDMA_STATUS: u32 = 0x58; // read: 1 while a transfer runs
 // arrival to the fabric-side counter; a load reads 1 while the cluster
 // is waiting for the release broadcast (0 when idle or released).
 pub const CTRL_GBARRIER: u32 = 0x5C;
+// Trace region marker: a store tags the issuing core (and the cluster
+// phase roll-up) with a region id — see `trace` module. Skip-safe by
+// construction: the register is write-only and stateless, the effect is
+// applied in the same cycle the store completes, and the store itself
+// keeps the cluster non-quiescent until it drains — so a marker can
+// never be jumped over. When tracing is off the effect is dropped and
+// the store costs exactly the same cycles, keeping traces
+// cycle-invisible.
+pub const CTRL_TRACE_MARKER: u32 = 0x60;
 
 /// Side effect of a control-register store, interpreted by the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,6 +69,9 @@ pub enum CtrlEffect {
     SysDmaTrigger(u32),
     /// Arrive at the fabric global barrier (handled by the cluster).
     GBarrierArrive,
+    /// Tag the issuing core with a trace region id (handled by the
+    /// cluster; a no-op unless tracing is enabled).
+    TraceMarker(u32),
 }
 
 /// Control register file.
@@ -89,6 +101,7 @@ impl CtrlRegs {
             | CTRL_SYSDMA_RADDR => CtrlEffect::SysDmaReg(offset, value),
             CTRL_SYSDMA_TRIGGER => CtrlEffect::SysDmaTrigger(value),
             CTRL_GBARRIER => CtrlEffect::GBarrierArrive,
+            CTRL_TRACE_MARKER => CtrlEffect::TraceMarker(value),
             _ => CtrlEffect::None,
         }
     }

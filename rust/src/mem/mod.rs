@@ -13,8 +13,8 @@ pub use ctrl::{
     CtrlEffect, CtrlRegs, CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM,
     CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_GBARRIER, CTRL_NUM_CORES, CTRL_RO_FLUSH,
     CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
-    CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER, CTRL_WAKE_ALL, CTRL_WAKE_CORE, CTRL_WAKE_GROUP,
-    CTRL_WAKE_TILE,
+    CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER, CTRL_TRACE_MARKER, CTRL_WAKE_ALL, CTRL_WAKE_CORE,
+    CTRL_WAKE_GROUP, CTRL_WAKE_TILE,
 };
 pub use l2::L2Memory;
 

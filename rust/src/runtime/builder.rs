@@ -255,6 +255,20 @@ impl AsmBuilder {
         self.lw(rd, 0, tmp);
     }
 
+    /// Tag the phase the issuing core is entering with trace region
+    /// `id` (see `trace::REGION_*`): one store to the `CTRL_TRACE_MARKER`
+    /// control register. Emitted unconditionally — the marker is part of
+    /// the program whether or not the host records a trace, which is
+    /// what keeps tracing cycle-invisible (the recording side is pure
+    /// observation). Costs one ctrl store like any other control access.
+    /// Clobbers t0/t1. Needs the `TRACE_MARKER_ADDR` harness symbol
+    /// (installed by `base_symbols`).
+    pub fn trace_marker(&mut self, id: u32) {
+        self.la("t0", "TRACE_MARKER_ADDR");
+        self.li("t1", id);
+        self.sw("t1", 0, "t0");
+    }
+
     /// A full-cluster sense-reversal barrier (paper §7.3.1). Clobbers
     /// t0–t6; `id` keeps the labels unique across several barriers.
     pub fn barrier(&mut self, id: usize) {

@@ -56,6 +56,12 @@ fn assert_instruction_identical(kernel: &str, built: &Program, legacy: &Program)
     }
 }
 
+/// The `trace_marker` intrinsic's expected expansion, verbatim: one
+/// store of the region id to `CTRL_TRACE_MARKER`.
+fn legacy_trace_marker(id: u32) -> String {
+    format!("la t0, TRACE_MARKER_ADDR\nli t1, {id}\nsw t1, 0(t0)\n")
+}
+
 /// The pre-redesign axpy source, verbatim.
 fn legacy_axpy(k: &Axpy, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) {
     let rt = RtLayout::new(cfg);
@@ -84,6 +90,7 @@ fn legacy_axpy(k: &Axpy, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) 
         li a2, ALPHA\n\
         li a3, BLOCKS\n\
         li a4, BLOCK_STRIDE\n\
+        {m_compute}\
         .align 8\n\
         blk:\n\
         lw t0, 0(a0)\n\
@@ -106,8 +113,11 @@ fn legacy_axpy(k: &Axpy, cfg: &ClusterConfig) -> (String, HashMap<String, u32>) 
         add a1, a1, a4\n\
         addi a3, a3, -1\n\
         bnez a3, blk\n\
+        {m_barrier}\
         {barrier}\
         halt\n",
+        m_compute = legacy_trace_marker(crate::trace::REGION_COMPUTE),
+        m_barrier = legacy_trace_marker(crate::trace::REGION_BARRIER),
         barrier = barrier_asm(0)
     );
     (src, sym)
@@ -196,11 +206,10 @@ fn legacy_matmul(k: &Matmul, cfg: &ClusterConfig) -> (String, HashMap<String, u3
         "a4", "a5",
     ];
     let mut src = String::new();
+    src.push_str("addi sp, sp, -16\ncsrr t0, mhartid\nsw t0, 0(sp)\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_COMPUTE));
     src.push_str(
         "\
-        addi sp, sp, -16\n\
-        csrr t0, mhartid\n\
-        sw t0, 0(sp)\n\
         tile_loop:\n\
         lw t0, 0(sp)\n\
         li t1, TOTAL_TILES\n\
@@ -274,6 +283,7 @@ fn legacy_matmul(k: &Matmul, cfg: &ClusterConfig) -> (String, HashMap<String, u3
         }
     }
     src.push_str("j tile_loop\ntiles_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_BARRIER));
     src.push_str(&barrier_asm(0));
     src.push_str("halt\n");
     (src, sym)
@@ -845,15 +855,19 @@ fn legacy_db_axpy(k: &DbAxpy, cfg: &ClusterConfig) -> (String, HashMap<String, u
         bge s10, s11, db_done\n",
         rounds = k.rounds
     );
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_LOAD));
     src.push_str(&p.round_prologue());
     src.push_str(&barrier_asm(80));
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_COMPUTE));
     src.push_str("andi t0, s10, 1\nbnez t0, db_odd\n");
     src.push_str(&legacy_axpy_body(p.in_bufs[0], p.out_bufs[0], "blk", "even", "db_compute_done"));
     src.push_str("db_odd:\n");
     src.push_str(&legacy_axpy_body(p.in_bufs[1], p.out_bufs[1], "blk", "odd", "db_compute_done"));
     src.push_str("db_compute_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_BARRIER));
     src.push_str(&barrier_asm(81));
     src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_STORE));
     src.push_str(&p.epilogue(k.rounds as u32));
     src.push_str(&barrier_asm(82));
     src.push_str("halt\n");
@@ -911,8 +925,10 @@ fn legacy_db_matmul(k: &DbMatmul, cfg: &ClusterConfig) -> (String, HashMap<Strin
         bge s10, s11, db_done\n",
         rounds = k.rounds
     );
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_LOAD));
     src.push_str(&p.round_prologue());
     src.push_str(&barrier_asm(80));
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_COMPUTE));
     src.push_str(&format!(
         "\
         andi t0, s10, 1\n\
@@ -930,8 +946,10 @@ fn legacy_db_matmul(k: &DbMatmul, cfg: &ClusterConfig) -> (String, HashMap<Strin
         c1 = p.out_bufs[1],
     ));
     legacy_matmul_tile_loop(&mut src);
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_BARRIER));
     src.push_str(&barrier_asm(81));
     src.push_str("addi s10, s10, 1\nj db_round\ndb_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_STORE));
     src.push_str(&p.epilogue(k.rounds as u32));
     src.push_str(&barrier_asm(82));
     src.push_str("halt\n");
@@ -972,8 +990,10 @@ fn legacy_sys_axpy(k: &SysAxpy, cfg: &SystemConfig) -> (String, HashMap<String, 
         sdb_round:\n\
         bge s10, s11, sdb_done\n",
     );
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_LOAD));
     src.push_str(&p.round_prologue());
     src.push_str(&barrier_asm(80));
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_COMPUTE));
     src.push_str("andi t0, s10, 1\nbnez t0, sdb_odd\n");
     src.push_str(&legacy_axpy_body(
         p.in_bufs[0],
@@ -991,8 +1011,10 @@ fn legacy_sys_axpy(k: &SysAxpy, cfg: &SystemConfig) -> (String, HashMap<String, 
         "sdb_compute_done",
     ));
     src.push_str("sdb_compute_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_BARRIER));
     src.push_str(&barrier_asm(81));
     src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_STORE));
     src.push_str(&p.epilogue(k.rounds as u32));
     src.push_str(&barrier_asm(82));
     // The trailing fabric rendezvous every system kernel now carries.
@@ -1026,8 +1048,10 @@ fn legacy_sys_matmul(k: &SysMatmul, cfg: &SystemConfig) -> (String, HashMap<Stri
     legacy_matmul_symbols(&mut sym, p.in_bufs[0], k.slab_rows, k.n, k.k);
     let mut src = p.program_prologue(k.rounds as u32);
     src.push_str("sdb_round:\nbge s10, s11, sdb_done\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_LOAD));
     src.push_str(&p.round_prologue());
     src.push_str(&barrier_asm(80));
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_COMPUTE));
     src.push_str(&format!(
         "\
         andi t0, s10, 1\n\
@@ -1045,8 +1069,10 @@ fn legacy_sys_matmul(k: &SysMatmul, cfg: &SystemConfig) -> (String, HashMap<Stri
         c1 = p.out_bufs[1],
     ));
     legacy_matmul_tile_loop(&mut src);
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_BARRIER));
     src.push_str(&barrier_asm(81));
     src.push_str("addi s10, s10, 1\nj sdb_round\nsdb_done:\n");
+    src.push_str(&legacy_trace_marker(crate::trace::REGION_STORE));
     src.push_str(&p.epilogue(k.rounds as u32));
     src.push_str(&barrier_asm(82));
     // The trailing fabric rendezvous every system kernel now carries.
@@ -1093,6 +1119,22 @@ fn builder_golden_sys_matmul_matches_legacy_string() {
     let (src, sym) = legacy_sys_matmul(&k, &cfg);
     let legacy = assemble_legacy_system(&src, sym, &cfg);
     assert_instruction_identical("sys_matmul", &built, &legacy);
+}
+
+#[test]
+fn builder_golden_trace_marker_text_is_pinned() {
+    // The intrinsic's emitted source, pinned verbatim: one region-id
+    // store to CTRL_TRACE_MARKER (clobbers t0/t1).
+    let mut b = AsmBuilder::new();
+    b.trace_marker(crate::trace::REGION_COMPUTE);
+    let (src, _) = b.finish();
+    assert_eq!(src, legacy_trace_marker(crate::trace::REGION_COMPUTE));
+    // And it assembles against the cluster harness symbols.
+    let cfg = ClusterConfig::minpool();
+    let sym = base_symbols(&cfg);
+    let mut full = src;
+    full.push_str("halt\n");
+    Program::assemble(&full, &sym).expect("trace marker must assemble");
 }
 
 #[test]

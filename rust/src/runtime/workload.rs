@@ -20,6 +20,7 @@ use crate::isa::Program;
 use crate::runtime::AsmBuilder;
 use crate::sim::{base_symbols, prepare_cluster, Cluster, ClusterStats, SimBackend};
 use crate::system::{prepare_system, system_symbols, System, SystemRunConfig, SystemStats};
+use crate::trace::{TraceBook, TraceConfig};
 
 /// Which machine a workload runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -149,6 +150,11 @@ pub struct RunConfig {
     /// Enable the quiescence fast path (`false` = `--no-skip`). Both
     /// settings produce identical cycle counts and statistics.
     pub quiesce_skip: bool,
+    /// Record an execution trace (`None` = off). Cycle-invisible: a
+    /// traced run produces identical cycles and statistics, because the
+    /// region markers are part of the program either way and the
+    /// recording side is pure observation.
+    pub trace: Option<TraceConfig>,
 }
 
 impl RunConfig {
@@ -159,6 +165,7 @@ impl RunConfig {
             cold_icache: true,
             backend: None,
             quiesce_skip: true,
+            trace: None,
         }
     }
 
@@ -177,6 +184,12 @@ impl RunConfig {
         self.backend = Some(backend);
         self
     }
+
+    /// Record an execution trace during the run.
+    pub fn with_trace(mut self, trace: TraceConfig) -> RunConfig {
+        self.trace = Some(trace);
+        self
+    }
 }
 
 /// Result of a workload run.
@@ -190,6 +203,9 @@ pub struct RunResult {
     /// system-DMA activity (system target only).
     pub system_stats: Option<SystemStats>,
     pub cycles: u64,
+    /// The harvested trace books, one per cluster, when the run was
+    /// traced (`RunConfig.trace`).
+    pub trace: Option<Vec<TraceBook>>,
 }
 
 /// Run a workload end-to-end on its target: build the program, construct
@@ -210,16 +226,17 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             low.max_cycles = run.max_cycles;
             low.cold_icache = run.cold_icache;
             low.quiesce_skip = run.quiesce_skip;
+            low.trace = run.trace;
             let cluster = prepare_cluster(&low, program);
             let mut machine = Machine::Cluster(Box::new(cluster));
             w.setup(&mut machine);
             let completed = machine.cluster().run(run.max_cycles);
             assert!(completed, "workload {} did not complete within the cycle budget", w.name());
-            let (cycles, stats) = {
+            let (cycles, stats, trace) = {
                 let c = machine.cluster();
-                (c.now(), c.stats())
+                (c.now(), c.stats(), c.take_trace().map(|b| vec![b]))
             };
-            RunResult { machine, stats, system_stats: None, cycles }
+            RunResult { machine, stats, system_stats: None, cycles, trace }
         }
         TargetConfig::System(system_cfg) => {
             let mut cfg = system_cfg.clone();
@@ -231,17 +248,18 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             low.max_cycles = run.max_cycles;
             low.cold_icache = run.cold_icache;
             low.quiesce_skip = run.quiesce_skip;
+            low.trace = run.trace;
             let system = prepare_system(&low, program);
             let mut machine = Machine::System(Box::new(system));
             w.setup(&mut machine);
             let completed = machine.system().run(run.max_cycles);
             assert!(completed, "workload {} did not complete within the cycle budget", w.name());
-            let (cycles, sys_stats) = {
+            let (cycles, sys_stats, trace) = {
                 let s = machine.system();
-                (s.now(), s.stats())
+                (s.now(), s.stats(), s.take_trace())
             };
             let stats = sys_stats.totals.clone();
-            RunResult { machine, stats, system_stats: Some(sys_stats), cycles }
+            RunResult { machine, stats, system_stats: Some(sys_stats), cycles, trace }
         }
     }
 }

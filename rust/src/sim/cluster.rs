@@ -41,6 +41,7 @@ use crate::mem::{
     CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS,
 };
 use crate::sim::stats::ClusterStats;
+use crate::trace::{CoreTracer, HeatSnapshot, MarkerEvent, TileHeat, TraceBook, TraceConfig};
 
 /// Depth of the per-bank request queue inside the tile crossbar.
 const BANK_QUEUE_DEPTH: usize = 4;
@@ -208,6 +209,10 @@ pub struct Tile {
     /// behind a system-DMA beat holding the bank port — the DMA-vs-core
     /// L1 contention the timed system-DMA data path makes visible.
     sysdma_conflicts: u64,
+    /// Per-bank conflict-heatmap counters; `None` unless tracing is on
+    /// (pure observation — see the `trace` module's invisibility
+    /// contract).
+    heat: Option<Box<TileHeat>>,
 }
 
 impl Tile {
@@ -232,10 +237,18 @@ impl Tile {
                         self.banks[b].reads += 1;
                     }
                     self.sysdma_conflicts += self.bank_q.len(b) as u64;
+                    if let Some(h) = self.heat.as_deref_mut() {
+                        h.dma_beats[b] += 1;
+                        h.stalls[b] += self.bank_q.len(b) as u64;
+                    }
                     continue;
                 }
             }
             if let Some(f) = self.bank_q.pop(b) {
+                if let Some(h) = self.heat.as_deref_mut() {
+                    h.wins[b] += 1;
+                    h.stalls[b] += self.bank_q.len(b) as u64;
+                }
                 let resp = serve_bank(&mut self.banks[b], f);
                 if resp.dst_tile == resp.src_tile {
                     self.deliveries.push((
@@ -376,6 +389,11 @@ pub struct Cluster {
     sys_out_buf: Vec<(usize, u8, MemCompletion)>,
     /// Reused per-tile ctrl/L2 issue buffer for the serial engine.
     serial_new_sys: Vec<(u8, u8, SysKind, u64)>,
+    /// Trace book when tracing is on (see [`Cluster::enable_trace`]).
+    /// Mutated only from serial contexts — control-register effects,
+    /// the quiescence skip, DMA triggers, the system exchange phase —
+    /// so both stepping engines fill it identically.
+    trace: Option<Box<TraceBook>>,
 }
 
 impl Cluster {
@@ -397,6 +415,7 @@ impl Cluster {
                 deliveries: Vec::new(),
                 sysdma_beats: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
                 sysdma_conflicts: 0,
+                heat: None,
             })
             .collect();
         let axi = AxiSystem::new(
@@ -449,6 +468,7 @@ impl Cluster {
             sys_due_buf: Vec::new(),
             sys_out_buf: Vec::new(),
             serial_new_sys: Vec::new(),
+            trace: None,
             cfg,
         }
     }
@@ -530,6 +550,9 @@ impl Cluster {
         let done =
             self.dma.submit(&t, now, &self.map, &mut self.l2, &mut flat, bpt, &mut self.axi);
         self.dma_done_at = self.dma_done_at.max(done);
+        if let Some(book) = self.trace.as_mut() {
+            book.dma.push((now, done));
+        }
     }
 
     /// Queue the system-DMA transfer currently programmed in the frontend.
@@ -645,6 +668,14 @@ impl Cluster {
                             // arrival pulse for the system exchange phase.
                             self.gbarrier_release_at = u64::MAX;
                             self.gbarrier_outbox.push(now);
+                            if let Some(book) = self.trace.as_mut() {
+                                // Open a wait span; the release broadcast
+                                // closes it (`trace_gbarrier_release`).
+                                book.gbarrier.push((now, u64::MAX));
+                            }
+                        }
+                        CtrlEffect::TraceMarker(id) => {
+                            self.trace_marker_event(p.tile, p.lane as usize, id, now);
                         }
                         CtrlEffect::DmaReg(..) | CtrlEffect::SysDmaReg(..) | CtrlEffect::None => {}
                         wake => self.apply_wake(wake),
@@ -896,6 +927,11 @@ impl Cluster {
             }
         }
         self.net.skip_cycles(delta);
+        if let Some(book) = self.trace.as_mut() {
+            // Skipped stretches must appear as one explicit span, never
+            // silently vanish (the skip-safety rule for tracing).
+            book.quiescent.push((self.now, self.now + delta));
+        }
         self.now += delta;
     }
 
@@ -969,6 +1005,102 @@ impl Cluster {
         e.leakage = p.leakage_per_core_cycle * (self.now * self.cfg.num_cores() as u64) as f64;
         s.energy = e;
         s
+    }
+
+    /// Install trace sinks in every core and tile and open this
+    /// cluster's [`TraceBook`]. Pure observation: a traced run is
+    /// cycle-for-cycle identical to an untraced one (the invisibility
+    /// tests pin it on both engines, with and without the skip).
+    pub fn enable_trace(&mut self, cfg: TraceConfig) {
+        let banks = self.cfg.banks_per_tile;
+        for tile in &mut self.tiles {
+            tile.heat = Some(Box::new(TileHeat::new(banks)));
+            for core in &mut tile.cores {
+                core.tracer = Some(Box::new(CoreTracer::new(core.id, cfg)));
+            }
+        }
+        self.trace =
+            Some(Box::new(TraceBook::new(self.cluster_id as usize, self.cfg.num_cores())));
+    }
+
+    /// Cumulative heat counters (flattened `tile × bank`, plus the
+    /// interconnect hop counters) for phase-window deltas.
+    fn heat_snapshot(&self) -> HeatSnapshot {
+        let mut snap = HeatSnapshot::default();
+        for tile in &self.tiles {
+            if let Some(h) = tile.heat.as_deref() {
+                snap.wins.extend_from_slice(&h.wins);
+                snap.stalls.extend_from_slice(&h.stalls);
+                snap.dma_beats.extend_from_slice(&h.dma_beats);
+            }
+        }
+        self.net.conflict_counts(&mut snap.hops);
+        snap
+    }
+
+    /// A `CTRL_TRACE_MARKER` store completed: tag the issuing core's
+    /// tracer, record the marker, and — on a cluster-level region
+    /// change — close the running heat phase window. Reached only from
+    /// `complete_due_sys`, which both engines run serially.
+    fn trace_marker_event(&mut self, tile: usize, lane: usize, id: u32, now: u64) {
+        let Some(mut book) = self.trace.take() else { return };
+        let core = (tile * self.cfg.cores_per_tile + lane) as u32;
+        if let Some(tr) = self.tiles[tile].cores[lane].tracer.as_mut() {
+            tr.set_region(now, id);
+        }
+        book.markers.push(MarkerEvent { at: now, core, region: id });
+        if book.cluster_region() != id {
+            let snap = self.heat_snapshot();
+            book.phase_boundary(now, id, snap);
+        }
+        self.trace = Some(book);
+    }
+
+    /// Record a serviced system-DMA transfer span `[start, done)` (called
+    /// by the system exchange phase).
+    pub fn trace_sysdma_span(&mut self, start: u64, done: u64) {
+        if let Some(book) = self.trace.as_mut() {
+            book.sysdma.push((start, done));
+        }
+    }
+
+    /// Close open global-barrier trace spans at the fabric's release
+    /// broadcast cycle.
+    pub fn trace_gbarrier_release(&mut self, release: u64) {
+        if let Some(book) = self.trace.as_mut() {
+            for g in book.gbarrier.iter_mut().rev() {
+                if g.1 == u64::MAX {
+                    g.1 = release;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Harvest the trace book at the end of a run: close the final
+    /// phase window and every per-core region window at `now`, collect
+    /// the core tracers, and disable further recording.
+    pub fn take_trace(&mut self) -> Option<TraceBook> {
+        let mut book = self.trace.take()?;
+        let snap = self.heat_snapshot();
+        let region = book.cluster_region();
+        book.phase_boundary(self.now, region, snap);
+        for tile in &mut self.tiles {
+            for core in &mut tile.cores {
+                if let Some(mut tr) = core.tracer.take() {
+                    tr.finalize(self.now);
+                    book.cores.push(*tr);
+                }
+            }
+            tile.heat = None;
+        }
+        for g in &mut book.gbarrier {
+            if g.1 == u64::MAX {
+                g.1 = self.now;
+            }
+        }
+        Some(book)
     }
 
     /// Functional (zero-time) SPM access for harnesses.

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 use crate::config::ClusterConfig;
 use crate::isa::Program;
 use crate::sim::{Cluster, ClusterStats, SimBackend};
+use crate::trace::TraceConfig;
 
 /// How to run a kernel.
 pub struct RunConfig {
@@ -20,6 +21,9 @@ pub struct RunConfig {
     /// Enable the quiescence fast path (`false` = `--no-skip`). Both
     /// settings produce identical cycle counts and statistics.
     pub quiesce_skip: bool,
+    /// Record an execution trace (`None` = off). Cycle-invisible: a
+    /// traced run produces identical cycles and statistics.
+    pub trace: Option<TraceConfig>,
 }
 
 impl RunConfig {
@@ -32,7 +36,14 @@ impl RunConfig {
     }
 
     pub fn with_backend(cluster: ClusterConfig, backend: SimBackend) -> Self {
-        RunConfig { cluster, max_cycles: 10_000_000, cold_icache: true, backend, quiesce_skip: true }
+        RunConfig {
+            cluster,
+            max_cycles: 10_000_000,
+            cold_icache: true,
+            backend,
+            quiesce_skip: true,
+            trace: None,
+        }
     }
 }
 
@@ -58,6 +69,9 @@ pub fn prepare_cluster(run: &RunConfig, program: Program) -> Cluster {
         for t in &mut cluster.tiles {
             t.icache.invalidate_all();
         }
+    }
+    if let Some(tc) = run.trace {
+        cluster.enable_trace(tc);
     }
     cluster
 }
@@ -99,6 +113,7 @@ pub fn base_symbols(cfg: &ClusterConfig) -> HashMap<String, u32> {
     sym.insert("DMA_BYTES_ADDR".into(), CTRL_BASE + CTRL_DMA_BYTES);
     sym.insert("DMA_TRIGGER_ADDR".into(), CTRL_BASE + CTRL_DMA_TRIGGER);
     sym.insert("DMA_STATUS_ADDR".into(), CTRL_BASE + CTRL_DMA_STATUS);
+    sym.insert("TRACE_MARKER_ADDR".into(), CTRL_BASE + crate::mem::CTRL_TRACE_MARKER);
     sym.insert("L2_BASE".into(), crate::mem::L2_BASE);
     sym
 }

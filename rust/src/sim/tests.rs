@@ -521,6 +521,134 @@ fn quiesce_skip_actually_engages_on_wfi_waits() {
     assert_eq!(r.cycles, run.max_cycles, "the skip must land exactly on the deadline");
 }
 
+// --- Trace invisibility ---------------------------------------------------
+//
+// The tracing layer must be pure observation: the region markers are
+// part of every program whether or not a tracer records them, so a
+// traced run books identical cycles and an identical full statistics
+// book — on both backends, with the quiescence skip on and off. `axpy`
+// covers the plain marker shape; `db_axpy` adds DMA spans and the
+// quiescent stretches the skip collapses.
+
+#[test]
+fn tracing_is_cycle_invisible_on_cluster_workloads() {
+    use crate::kernels::doublebuf::DbAxpy;
+    use crate::kernels::Axpy;
+    use crate::runtime::{run_workload, RunConfig, Workload};
+    use crate::trace::TraceConfig;
+    let cfg = ClusterConfig::minpool();
+    let kernels: Vec<Box<dyn Workload>> = vec![
+        Box::new(Axpy::weak_scaled(cfg.num_cores())),
+        Box::new(DbAxpy::new(32, 3)),
+    ];
+    for k in kernels {
+        for backend in [SimBackend::Serial, SimBackend::Parallel] {
+            for quiesce_skip in [true, false] {
+                let mut plain_cfg = RunConfig::cluster(&cfg).with_backend(backend);
+                plain_cfg.quiesce_skip = quiesce_skip;
+                let traced_cfg = plain_cfg.clone().with_trace(TraceConfig { instr: true });
+                let plain = run_workload(k.as_ref(), &plain_cfg);
+                let traced = run_workload(k.as_ref(), &traced_cfg);
+                assert_eq!(
+                    plain.cycles,
+                    traced.cycles,
+                    "{} ({backend:?}, skip={quiesce_skip}): tracing changed the cycle count",
+                    k.name()
+                );
+                assert_eq!(
+                    plain.stats,
+                    traced.stats,
+                    "{} ({backend:?}, skip={quiesce_skip}): tracing changed the statistics",
+                    k.name()
+                );
+                assert!(plain.trace.is_none(), "untraced run must carry no books");
+                let books = traced.trace.expect("traced run must return books");
+                assert_eq!(books.len(), 1, "one book per cluster");
+                let mut m = traced.machine;
+                k.verify(&mut m).unwrap_or_else(|e| panic!("{} traced: {e}", k.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn trace_regions_reproduce_the_whole_run_counters() {
+    // The cross-check invariant behind `mempool trace`: the per-region
+    // windows partition every core-cycle, so summed over all windows of
+    // all cores they must land exactly on the whole-run `ClusterStats`
+    // counters — same numbers, attributed by region.
+    use crate::kernels::Matmul;
+    use crate::runtime::{run_workload, RunConfig};
+    use crate::trace::{RegionCounters, TraceConfig, REGION_BARRIER, REGION_COMPUTE};
+    let cfg = ClusterConfig::with_cores(16);
+    let k = Matmul::weak_scaled(cfg.num_cores());
+    let run = RunConfig::cluster(&cfg)
+        .with_backend(SimBackend::Serial)
+        .with_trace(TraceConfig::default());
+    let r = run_workload(&k, &run);
+    let book = &r.trace.as_ref().expect("books")[0];
+    let mut sum = RegionCounters::default();
+    let mut regions_seen = Vec::new();
+    for core in &book.cores {
+        for w in &core.windows {
+            sum.add(&w.counters);
+            if !regions_seen.contains(&w.region) {
+                regions_seen.push(w.region);
+            }
+        }
+    }
+    assert!(
+        regions_seen.contains(&REGION_COMPUTE) && regions_seen.contains(&REGION_BARRIER),
+        "matmul marks compute and barrier regions, saw {regions_seen:?}"
+    );
+    let s = &r.stats;
+    assert_eq!(sum.cycles, s.cycles * s.num_cores as u64, "windows must partition the run");
+    assert_eq!(sum.issued_compute, s.issued_compute);
+    assert_eq!(sum.issued_control, s.issued_control);
+    assert_eq!(sum.stall_ifetch, s.stall_ifetch);
+    assert_eq!(sum.stall_raw, s.stall_raw);
+    assert_eq!(sum.stall_lsu, s.stall_lsu);
+    assert_eq!(sum.sleep_cycles, s.sleep_cycles);
+    assert_eq!(sum.halted_cycles, s.halted_cycles);
+}
+
+#[test]
+fn chrome_export_validates_and_keeps_skipped_spans_visible() {
+    // End-to-end export on the DMA stressor: the document validates
+    // structurally, and with the quiescence skip on, the jumped
+    // stretches appear as explicit `quiescent` spans — a skipped cycle
+    // is never silently absent from the trace.
+    use crate::kernels::doublebuf::DbAxpy;
+    use crate::runtime::{run_workload, RunConfig, Workload};
+    use crate::trace::{chrome_trace_json, validate_chrome_trace, TraceConfig};
+    use crate::util::json::Json;
+    let cfg = ClusterConfig::minpool();
+    let k = DbAxpy::new(32, 3);
+    let run = RunConfig::cluster(&cfg)
+        .with_backend(SimBackend::Parallel)
+        .with_trace(TraceConfig { instr: true });
+    let r = run_workload(&k, &run);
+    let mut m = r.machine;
+    k.verify(&mut m).expect("db_axpy result");
+    let books = r.trace.expect("books");
+    assert!(!books[0].quiescent.is_empty(), "db_axpy's DMA waits must produce skipped spans");
+    let doc = chrome_trace_json(&books);
+    validate_chrome_trace(&doc).expect("structurally valid chrome trace");
+    let events = doc.get("traceEvents").and_then(Json::as_array).expect("events");
+    let count = |name: &str| {
+        events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some(name))
+            .count()
+    };
+    assert_eq!(count("quiescent"), books[0].quiescent.len());
+    assert!(count("dma") > 0, "db_axpy's cluster-DMA rounds appear on the dma track");
+    assert!(
+        events.iter().any(|e| e.get("ph").and_then(Json::as_str) == Some("i")),
+        "region markers appear as instant events"
+    );
+}
+
 #[test]
 fn backends_agree_on_butterfly_topology() {
     // Top1: all four cores of a tile share one butterfly port — heavy

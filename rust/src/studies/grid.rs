@@ -19,6 +19,7 @@ use crate::config::{ClusterConfig, SystemConfig};
 use crate::runtime::{run_workload, workload_by_name, RunConfig, Target, Workload};
 use crate::sim::{ClusterStats, SimBackend};
 use crate::system::SystemStats;
+use crate::trace::{regions_json, TraceConfig};
 use crate::util::json::Json;
 
 /// Cluster shape for a preset at a given core count.
@@ -85,6 +86,10 @@ pub struct GridPoint {
     pub system: Option<SystemStats>,
     /// Host-side wall clock for this scenario.
     pub wall_ms: f64,
+    /// Per-region cycle roll-up (present only when the grid ran with
+    /// region tracing on). Tracing is cycle-invisible, so scenarios
+    /// with and without this block carry identical numbers elsewhere.
+    pub regions: Option<Json>,
 }
 
 impl GridPoint {
@@ -154,6 +159,9 @@ impl GridPoint {
         if let Some(sys) = &self.system {
             o.set("system", sys.to_json());
         }
+        if let Some(regions) = &self.regions {
+            o.set("regions", regions.clone());
+        }
         let mut host = Json::obj();
         host.set("wall_ms", self.wall_ms.into());
         host.set("sim_cycles_per_sec", self.sim_cycles_per_sec().into());
@@ -175,6 +183,7 @@ impl GridPoint {
             stats: ClusterStats { cycles, num_cores: cores, ..ClusterStats::default() },
             system: None,
             wall_ms: 0.0,
+            regions: None,
         }
     }
 }
@@ -189,29 +198,38 @@ pub fn run_point(
     cores: usize,
     backend: SimBackend,
     quiesce_skip: bool,
+    trace_regions: bool,
 ) -> Result<GridPoint, String> {
     let cfg = config_for(preset, cores)?;
     let clock_hz = cfg.clock_hz;
     let t0 = Instant::now();
-    let (cycles, stats, system) = if clusters <= 1 {
+    let (cycles, stats, system, regions) = if clusters <= 1 {
         let workload = workload_by_name(kernel_name, Target::Cluster, cores)?;
         let mut run = RunConfig::cluster(&cfg).with_backend(backend);
         run.quiesce_skip = quiesce_skip;
+        if trace_regions {
+            run = run.with_trace(TraceConfig::default());
+        }
         let mut result = run_workload(workload.as_ref(), &run);
         workload
             .verify(&mut result.machine)
             .map_err(|e| format!("{kernel_name} @ {cores} cores: result mismatch: {e}"))?;
-        (result.cycles, result.stats, None)
+        let regions = result.trace.as_deref().map(regions_json);
+        (result.cycles, result.stats, None, regions)
     } else {
         let workload = workload_by_name(kernel_name, Target::System, cores)?;
         let syscfg = SystemConfig::new(clusters, cfg);
         let mut run = RunConfig::system(&syscfg).with_backend(backend);
         run.quiesce_skip = quiesce_skip;
+        if trace_regions {
+            run = run.with_trace(TraceConfig::default());
+        }
         let mut result = run_workload(workload.as_ref(), &run);
         workload.verify(&mut result.machine).map_err(|e| {
             format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
         })?;
-        (result.cycles, result.stats, result.system_stats)
+        let regions = result.trace.as_deref().map(regions_json);
+        (result.cycles, result.stats, result.system_stats, regions)
     };
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     Ok(GridPoint {
@@ -224,6 +242,7 @@ pub fn run_point(
         stats,
         system,
         wall_ms,
+        regions,
     })
 }
 
@@ -235,6 +254,7 @@ pub fn run_scenarios(
     reqs: &[ScenarioReq],
     jobs: usize,
     quiesce_skip: bool,
+    trace_regions: bool,
 ) -> Result<Vec<GridPoint>, String> {
     if reqs.is_empty() {
         return Err("empty scenario grid (no kernels or no core counts)".to_string());
@@ -251,8 +271,15 @@ pub fn run_scenarios(
                     break;
                 }
                 let r = &reqs[i];
-                let point =
-                    run_point(preset, &r.kernel, r.clusters, r.cores, r.backend, quiesce_skip);
+                let point = run_point(
+                    preset,
+                    &r.kernel,
+                    r.clusters,
+                    r.cores,
+                    r.backend,
+                    quiesce_skip,
+                    trace_regions,
+                );
                 *slots[i].lock().unwrap() = Some(point);
             });
         }

@@ -27,7 +27,12 @@ use crate::util::par::default_jobs;
 /// The report document's `schema` tag.
 pub const REPORT_SCHEMA: &str = "mempool-report";
 /// The report document's `version`; bump on any incompatible change.
-pub const REPORT_SCHEMA_VERSION: u64 = 1;
+/// v2 adds the optional per-scenario `regions` block (cycle-attributed
+/// kernel-region roll-ups from the tracing layer); v1 documents remain
+/// readable because the block is optional.
+pub const REPORT_SCHEMA_VERSION: u64 = 2;
+/// The oldest report schema version this build still reads.
+pub const REPORT_SCHEMA_MIN_VERSION: u64 = 1;
 
 /// One rectangular block of the campaign grid.
 #[derive(Debug, Clone)]
@@ -56,6 +61,11 @@ pub struct ReportSpec {
     /// exact-match diff holds across the flag — only host throughput
     /// moves.
     pub quiesce_skip: bool,
+    /// Run every scenario with region tracing on and attach the
+    /// per-region `regions` block to each scenario (schema v2).
+    /// Tracing is cycle-invisible, so every other field is identical
+    /// with the flag on or off.
+    pub trace_regions: bool,
 }
 
 fn names(ns: &[&str]) -> Vec<String> {
@@ -92,6 +102,7 @@ impl ReportSpec {
             backends: vec![SimBackend::Serial, SimBackend::Parallel],
             jobs: default_jobs(),
             quiesce_skip: true,
+            trace_regions: false,
         }
     }
 
@@ -156,7 +167,8 @@ pub fn run_report(spec: &ReportSpec) -> Result<Report, String> {
     let scen = spec.scenarios();
     let reqs: Vec<ScenarioReq> = scen.iter().map(|(_, r)| r.clone()).collect();
     let t0 = Instant::now();
-    let points = run_scenarios(&spec.preset, &reqs, spec.jobs, spec.quiesce_skip)?;
+    let points =
+        run_scenarios(&spec.preset, &reqs, spec.jobs, spec.quiesce_skip, spec.trace_regions)?;
     let wall_seconds = t0.elapsed().as_secs_f64();
     Ok(Report {
         preset: spec.preset.clone(),
@@ -212,15 +224,26 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
         return Err(format!("not a mempool report (schema `{schema}`, want `{REPORT_SCHEMA}`)"));
     }
     let version = doc.req_u64("version")?;
-    if version != REPORT_SCHEMA_VERSION {
+    if !(REPORT_SCHEMA_MIN_VERSION..=REPORT_SCHEMA_VERSION).contains(&version) {
         return Err(format!(
-            "report schema version {version} unsupported \
-             (this build reads v{REPORT_SCHEMA_VERSION})"
+            "report schema version {version} unsupported (this build reads \
+             v{REPORT_SCHEMA_MIN_VERSION}..v{REPORT_SCHEMA_VERSION})"
         ));
     }
     let scenarios = doc.req_array("scenarios")?;
     for (i, s) in scenarios.iter().enumerate() {
         identity_fields(s).map_err(|e| format!("scenario[{i}]: {e}"))?;
+        // The v2 `regions` block is optional, but when present it must
+        // at least be an array of objects carrying a region id.
+        if let Some(regions) = s.get("regions") {
+            let arr = regions
+                .as_array()
+                .ok_or_else(|| format!("scenario[{i}]: `regions` is not an array"))?;
+            for (j, r) in arr.iter().enumerate() {
+                r.req_u64("region")
+                    .map_err(|e| format!("scenario[{i}].regions[{j}]: {e}"))?;
+            }
+        }
     }
     Ok(())
 }
@@ -507,6 +530,7 @@ mod tests {
             backends,
             jobs: 2,
             quiesce_skip: true,
+            trace_regions: false,
         }
     }
 
@@ -552,6 +576,102 @@ mod tests {
         assert_eq!(back, doc);
         // And a self-diff passes with byte-identical simulated sections.
         diff_reports(&doc, &doc, &DiffTolerance::default()).expect("self-diff");
+    }
+
+    #[test]
+    fn traced_report_carries_regions_and_stays_backend_exact() {
+        // Region tracing on: every scenario gains the v2 `regions`
+        // block, the document still validates and round-trips, and —
+        // because tracing is cycle-invisible and deterministic — the
+        // backend-agreement gate still passes with the regions included
+        // in the exact comparison.
+        let mut spec = tiny_spec(vec![SimBackend::Serial, SimBackend::Parallel]);
+        spec.trace_regions = true;
+        let doc = run_report(&spec).expect("traced campaign").to_json();
+        validate_report(&doc).expect("schema-valid traced report");
+        let scenarios = doc.req_array("scenarios").unwrap();
+        for s in scenarios {
+            let regions = s.get("regions").and_then(Json::as_array).expect("regions block");
+            assert!(!regions.is_empty(), "at least the startup region is attributed");
+            // Regions partition the run: per-region core-cycles sum to
+            // cores × cycles of the whole scenario.
+            let cores = s.req_u64("cores").unwrap();
+            let clusters = s.req_u64("clusters").unwrap();
+            let cycles = s.req_u64("cycles").unwrap();
+            let total: u64 = regions
+                .iter()
+                .map(|r| {
+                    r.get("counters")
+                        .and_then(|c| c.get("cycles"))
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0)
+                })
+                .sum();
+            assert_eq!(total, clusters * cores * cycles, "regions must partition the run");
+        }
+        assert_eq!(check_backend_agreement(&doc), Ok(2));
+        assert_eq!(Json::parse(&doc.pretty()).unwrap(), doc);
+        // An untraced campaign of the same grid matches in every field
+        // except the regions block itself (trace invisibility at the
+        // report level).
+        let mut plain =
+            run_report(&tiny_spec(vec![SimBackend::Serial])).expect("plain campaign").to_json();
+        let mut traced_serial = doc.clone();
+        for d in [&mut plain, &mut traced_serial] {
+            mask_host_fields(d);
+            d.set("backends", Json::Null);
+            if let Json::Obj(fields) = d {
+                for (key, value) in fields.iter_mut() {
+                    if key != "scenarios" {
+                        continue;
+                    }
+                    if let Json::Arr(scenarios) = value {
+                        scenarios.retain(|s| {
+                            s.get("backend").and_then(Json::as_str) != Some("parallel")
+                        });
+                        for s in scenarios {
+                            if let Json::Obj(pairs) = s {
+                                pairs.retain(|(k, _)| k != "regions");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            plain.pretty(),
+            traced_serial.pretty(),
+            "tracing must not move any non-regions field"
+        );
+    }
+
+    #[test]
+    fn v1_reports_without_regions_still_validate() {
+        // Reports pinned before the regions block existed carry
+        // version 1 and no `regions` key: still readable.
+        let mut doc = synthetic_report("axpy", 1000, 1e6);
+        doc.set("version", 1u64.into());
+        validate_report(&doc).expect("v1 accepted");
+        // Future versions are refused, naming the supported range.
+        doc.set("version", (REPORT_SCHEMA_VERSION + 1).into());
+        let err = validate_report(&doc).unwrap_err();
+        assert!(err.contains("unsupported"), "{err}");
+        // A malformed regions block is named precisely.
+        let mut bad = synthetic_report("axpy", 1000, 1e6);
+        if let Json::Obj(fields) = &mut bad {
+            for (key, value) in fields.iter_mut() {
+                if key != "scenarios" {
+                    continue;
+                }
+                if let Json::Arr(scenarios) = value {
+                    for s in scenarios {
+                        s.set("regions", Json::Arr(vec![Json::obj()]));
+                    }
+                }
+            }
+        }
+        let err = validate_report(&bad).unwrap_err();
+        assert!(err.contains("regions[0]"), "{err}");
     }
 
     #[test]

@@ -88,7 +88,7 @@ impl SweepSpec {
 /// Run the whole grid, fanned across `spec.jobs` worker threads. Results
 /// come back in grid order regardless of scheduling.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
-    run_scenarios(&spec.preset, &spec.scenario_reqs(), spec.jobs, spec.quiesce_skip)
+    run_scenarios(&spec.preset, &spec.scenario_reqs(), spec.jobs, spec.quiesce_skip, false)
 }
 
 /// Full results document (what `mempool sweep --out` writes). Scenario
@@ -286,7 +286,8 @@ mod tests {
         check_baseline(&points, &baseline).expect("self-baseline must match");
         // Workloads without a system variant fail loudly on the cluster
         // axis, naming the ones that have one.
-        let err = run_point("minpool", "dotp", 2, 4, SimBackend::Serial, true).unwrap_err();
+        let err =
+            run_point("minpool", "dotp", 2, 4, SimBackend::Serial, true, false).unwrap_err();
         assert!(err.contains("no system-target variant"), "{err}");
     }
 

@@ -393,6 +393,7 @@ impl Workload for SysReduce {
         b.comment("cluster-sharded sum reduction over a shared-L2 vector");
         b.core_id("s9");
         b.cluster_id("s8", "t0");
+        b.trace_marker(crate::trace::REGION_LOAD);
         b.comment("hart 0 streams this cluster's shard in from shared L2");
         b.bnez("s9", "r_in_staged");
         b.li("t1", "CHUNK_BYTES");
@@ -402,6 +403,7 @@ impl Workload for SysReduce {
         b.sysdma_transfer("IN_BUF", "CHUNK_BYTES", 1, "r_poll_in");
         b.label("r_in_staged");
         b.barrier(70);
+        b.trace_marker(crate::trace::REGION_COMPUTE);
         b.comment("each core sums its interleaved islands");
         b.srli("t1", "s9", 2);
         b.andi("t2", "s9", 3);
@@ -429,6 +431,7 @@ impl Workload for SysReduce {
         b.la("t0", "red_acc");
         b.amoadd("t1", "a2", "t0");
         b.barrier(71);
+        b.trace_marker(crate::trace::REGION_STORE);
         b.comment("hart 0 publishes this cluster's partial sum");
         b.bnez("s9", "r_part_done");
         b.la("t0", "red_acc");
@@ -441,6 +444,7 @@ impl Workload for SysReduce {
         b.add("a0", "a0", "t3");
         b.sysdma_transfer("PART_SRC", 4, 0, "r_poll_part");
         b.label("r_part_done");
+        b.trace_marker(crate::trace::REGION_BARRIER);
         b.comment("fabric-wide rendezvous: every partial is in shared L2");
         b.global_barrier(0);
         b.comment("cluster 0's hart 0 gathers and reduces the partials");

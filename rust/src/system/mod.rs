@@ -57,6 +57,7 @@ use crate::config::SystemConfig;
 use crate::isa::Program;
 use crate::mem::L2Memory;
 use crate::sim::{base_symbols, Cluster, ClusterStats, SimBackend, SysDmaOp, SysDmaRequest};
+use crate::trace::{TraceBook, TraceConfig};
 use crate::util::par::par_for_each;
 
 /// Outstanding fabric bursts per system-DMA frontend (latency hiding).
@@ -176,6 +177,7 @@ impl System {
                 if let Some(release) = self.fabric.gbarrier_arrive(c, at) {
                     for cl in &mut self.clusters {
                         cl.gbarrier_release_at = release;
+                        cl.trace_gbarrier_release(release);
                     }
                 }
             }
@@ -398,6 +400,20 @@ impl System {
             off += chunk;
         }
         self.clusters[c].sys_dma_done_at = self.clusters[c].sys_dma_done_at.max(done);
+        self.clusters[c].trace_sysdma_span(start, done);
+    }
+
+    /// Harvest the per-cluster trace books at the end of a traced run
+    /// (`None` when no cluster was tracing). Harvesting finalizes and
+    /// disarms the recorders; further stepping is untraced.
+    pub fn take_trace(&mut self) -> Option<Vec<TraceBook>> {
+        let books: Vec<TraceBook> =
+            self.clusters.iter_mut().filter_map(|c| c.take_trace()).collect();
+        if books.is_empty() {
+            None
+        } else {
+            Some(books)
+        }
     }
 
     /// Collect run statistics: per-cluster books plus the shared-fabric
@@ -440,6 +456,10 @@ pub struct SystemRunConfig {
     /// Enable the quiescence fast path (`false` = `--no-skip`). Both
     /// settings produce identical cycle counts and statistics.
     pub quiesce_skip: bool,
+    /// Record an execution trace on every cluster (`None` = off).
+    /// Cycle-invisible: a traced run produces identical cycles and
+    /// statistics.
+    pub trace: Option<TraceConfig>,
 }
 
 impl SystemRunConfig {
@@ -458,6 +478,7 @@ impl SystemRunConfig {
             cold_icache: true,
             backend,
             quiesce_skip: true,
+            trace: None,
         }
     }
 }
@@ -488,6 +509,11 @@ pub fn prepare_system(run: &SystemRunConfig, program: Program) -> System {
             for t in &mut c.tiles {
                 t.icache.invalidate_all();
             }
+        }
+    }
+    if let Some(tc) = run.trace {
+        for c in &mut system.clusters {
+            c.enable_trace(tc);
         }
     }
     system

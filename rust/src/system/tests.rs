@@ -498,6 +498,74 @@ fn quiesce_skip_is_cycle_invisible_on_system_workloads() {
     }
 }
 
+// --- Trace invisibility (system level) ------------------------------------
+//
+// Same contract as the cluster-level test, across the system harness:
+// the markers are in the program unconditionally, recording is pure
+// observation, so a traced run books identical cycles and an identical
+// full system statistics book — both backends, skip on and off.
+// `matmul` exercises the system-DMA spans, `reduce` the global-barrier
+// span (opened at arrival, closed by the fabric release).
+
+#[test]
+fn tracing_is_cycle_invisible_on_system_workloads() {
+    use crate::trace::TraceConfig;
+    let cfg = two_by_four();
+    let kernels: Vec<Box<dyn Workload>> = vec![
+        Box::new(SysMatmul::new(8, 8, 8, 2)),
+        Box::new(SysReduce::new(16)),
+    ];
+    for k in kernels {
+        for backend in [SimBackend::Serial, SimBackend::Parallel] {
+            for quiesce_skip in [true, false] {
+                let mut plain_cfg = RunConfig::system(&cfg).with_backend(backend);
+                plain_cfg.quiesce_skip = quiesce_skip;
+                let traced_cfg = plain_cfg.clone().with_trace(TraceConfig { instr: true });
+                let plain = run_workload(k.as_ref(), &plain_cfg);
+                let traced = run_workload(k.as_ref(), &traced_cfg);
+                assert_eq!(
+                    plain.cycles,
+                    traced.cycles,
+                    "{} ({backend:?}, skip={quiesce_skip}): tracing changed the cycle count",
+                    k.name()
+                );
+                assert_eq!(
+                    plain.system_stats,
+                    traced.system_stats,
+                    "{} ({backend:?}, skip={quiesce_skip}): tracing changed the statistics",
+                    k.name()
+                );
+                assert!(plain.trace.is_none(), "untraced run must carry no books");
+                let books = traced.trace.expect("traced system run must return books");
+                assert_eq!(books.len(), 2, "one book per cluster");
+                let mut m = traced.machine;
+                k.verify(&mut m).unwrap_or_else(|e| panic!("{} traced: {e}", k.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn system_trace_books_carry_sysdma_and_gbarrier_spans() {
+    use crate::trace::TraceConfig;
+    let cfg = two_by_four();
+    let kernel = SysReduce::new(16);
+    let run = RunConfig::system(&cfg)
+        .with_backend(SimBackend::Parallel)
+        .with_trace(TraceConfig::default());
+    let r = run_workload(&kernel, &run);
+    let books = r.trace.expect("books");
+    // Every cluster streamed at least one shard over the fabric, and
+    // every cluster crossed the one global barrier reduce performs.
+    for (ci, b) in books.iter().enumerate() {
+        assert!(!b.sysdma.is_empty(), "cluster {ci}: no system-DMA spans recorded");
+        assert!(!b.gbarrier.is_empty(), "cluster {ci}: no global-barrier span recorded");
+        for &(start, end) in b.gbarrier.iter().chain(&b.sysdma) {
+            assert!(start <= end && end <= r.cycles, "span ({start}, {end}) out of range");
+        }
+    }
+}
+
 #[test]
 fn sys_kernels_rendezvous_on_the_fabric_before_halting() {
     // The ported matmul/axpy carry a trailing global_barrier: every

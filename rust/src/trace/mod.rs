@@ -1,0 +1,662 @@
+//! Opt-in execution tracing and region profiling.
+//!
+//! The paper's headline claims ("<2% of execution stalls", the Fig 14
+//! per-kernel breakdowns) are *attribution* claims, and whole-run
+//! aggregate counters cannot attribute a stall to an instruction, a
+//! kernel phase, or a bank. This module adds the attribution layer the
+//! real MemPool flow gets from its RTL instruction tracer and
+//! Chrome-trace visualizer:
+//!
+//! - [`CoreTracer`]: a per-core sink fed by `Snitch::step` with the
+//!   outcome of every cycle — retired-instruction records (pc,
+//!   disassembly, visible writeback) plus stall cycles bucketed by
+//!   cause, rolled up per *region*.
+//! - Region markers: workloads store a region id to the
+//!   `CTRL_TRACE_MARKER` control register (`AsmBuilder::trace_marker`);
+//!   the cluster tags the issuing core and the cluster-level phase
+//!   roll-up. The well-known ids below map to the canonical kernel
+//!   phases.
+//! - Conflict heatmaps: per-bank port wins/stalls (including cycles a
+//!   core request waited behind a timed system-DMA beat) and
+//!   per-interconnect-hop contention, snapshotted at every phase
+//!   boundary so conflicts are attributed per region.
+//! - Exporters: [`chrome_trace_json`] (the `chrome://tracing` /
+//!   Perfetto event-array format; one track per core plus DMA, sync,
+//!   and quiescence tracks) and [`regions_json`] (the compact
+//!   per-region table the report schema embeds as its optional
+//!   `regions` block).
+//!
+//! **Cycle invisibility is a hard contract**: enabling tracing must not
+//! change a single simulated cycle or statistic, on either stepping
+//! engine, with or without the quiescence fast path. Everything here is
+//! pure observation — the markers are ordinary control-register stores
+//! that are emitted *unconditionally* by workloads (so the program, and
+//! therefore the timing, is identical whether or not a trace is
+//! recorded), and the quiescence skip records every jumped stretch as
+//! one explicit "quiescent" span instead of letting it vanish (see
+//! `docs/ARCHITECTURE.md`).
+
+use crate::util::json::Json;
+
+/// Well-known region ids (workloads may use any `u32`; these are the
+/// canonical phase names the kernels use).
+pub const REGION_STARTUP: u32 = 0;
+pub const REGION_INIT: u32 = 1;
+pub const REGION_LOAD: u32 = 2;
+pub const REGION_COMPUTE: u32 = 3;
+pub const REGION_STORE: u32 = 4;
+pub const REGION_BARRIER: u32 = 5;
+
+/// Human-readable name for a region id.
+pub fn region_name(id: u32) -> String {
+    match id {
+        REGION_STARTUP => "startup".into(),
+        REGION_INIT => "init".into(),
+        REGION_LOAD => "load".into(),
+        REGION_COMPUTE => "compute".into(),
+        REGION_STORE => "store".into(),
+        REGION_BARRIER => "barrier".into(),
+        other => format!("region{other}"),
+    }
+}
+
+/// What to record. Region roll-ups, heatmaps, and spans are always on
+/// once tracing is enabled; the per-instruction stream is opt-in on top
+/// (it is by far the largest part of a trace).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceConfig {
+    /// Record one [`InstrRecord`] per issued instruction.
+    pub instr: bool,
+}
+
+/// Per-region cycle accounting: the same buckets `CoreStats` books,
+/// windowed between two markers. Summed over all windows of all cores
+/// these must reproduce the whole-run counters exactly — the
+/// cross-check the trace tests pin.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegionCounters {
+    pub cycles: u64,
+    pub issued_compute: u64,
+    pub issued_control: u64,
+    pub stall_ifetch: u64,
+    pub stall_raw: u64,
+    pub stall_lsu: u64,
+    pub sleep_cycles: u64,
+    pub halted_cycles: u64,
+}
+
+impl RegionCounters {
+    pub fn add(&mut self, o: &RegionCounters) {
+        self.cycles += o.cycles;
+        self.issued_compute += o.issued_compute;
+        self.issued_control += o.issued_control;
+        self.stall_ifetch += o.stall_ifetch;
+        self.stall_raw += o.stall_raw;
+        self.stall_lsu += o.stall_lsu;
+        self.sleep_cycles += o.sleep_cycles;
+        self.halted_cycles += o.halted_cycles;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("cycles", self.cycles.into());
+        o.set("issued_compute", self.issued_compute.into());
+        o.set("issued_control", self.issued_control.into());
+        o.set("stall_ifetch", self.stall_ifetch.into());
+        o.set("stall_raw", self.stall_raw.into());
+        o.set("stall_lsu", self.stall_lsu.into());
+        o.set("sleep_cycles", self.sleep_cycles.into());
+        o.set("halted_cycles", self.halted_cycles.into());
+        o
+    }
+}
+
+/// One core's residence in one region: `[start, end)` in cycles.
+#[derive(Debug, Clone)]
+pub struct RegionWindow {
+    pub region: u32,
+    pub start: u64,
+    pub end: u64,
+    pub counters: RegionCounters,
+}
+
+/// One issued instruction (the risclet-style `Effects` record): where,
+/// what, and the register writeback if it is architecturally visible in
+/// the issue cycle (loads and IPU results retire later through the
+/// scoreboard and are recorded without a writeback value).
+#[derive(Debug, Clone)]
+pub struct InstrRecord {
+    pub cycle: u64,
+    /// Program counter as an instruction index.
+    pub pc: u32,
+    /// Disassembly text.
+    pub text: String,
+    /// `(abi register name, value)` when visible at issue.
+    pub wb: Option<(&'static str, u32)>,
+}
+
+/// Per-core trace sink. Owned by the core (behind an `Option<Box<..>>`
+/// so the disabled path is a single pointer test) and harvested into
+/// the cluster's [`TraceBook`] when the run ends.
+#[derive(Debug, Clone, Default)]
+pub struct CoreTracer {
+    /// Global core id.
+    pub core: u32,
+    record_instrs: bool,
+    region: u32,
+    window_start: u64,
+    cur: RegionCounters,
+    pub windows: Vec<RegionWindow>,
+    pub instrs: Vec<InstrRecord>,
+}
+
+impl CoreTracer {
+    pub fn new(core: u32, cfg: TraceConfig) -> Self {
+        CoreTracer { core, record_instrs: cfg.instr, ..Default::default() }
+    }
+
+    pub fn record_instrs(&self) -> bool {
+        self.record_instrs
+    }
+
+    /// Current region id.
+    pub fn region(&self) -> u32 {
+        self.region
+    }
+
+    /// Book one stepped cycle into the current window's bucket. The
+    /// caller (the core) has already classified the outcome.
+    pub fn bump(&mut self, bucket: Bucket) {
+        self.cur.cycles += 1;
+        match bucket {
+            Bucket::Compute => self.cur.issued_compute += 1,
+            Bucket::Control => self.cur.issued_control += 1,
+            Bucket::IFetch => self.cur.stall_ifetch += 1,
+            Bucket::Raw => self.cur.stall_raw += 1,
+            Bucket::Lsu => self.cur.stall_lsu += 1,
+            Bucket::Sleep => self.cur.sleep_cycles += 1,
+            Bucket::Halted => self.cur.halted_cycles += 1,
+        }
+    }
+
+    pub fn push_instr(&mut self, rec: InstrRecord) {
+        self.instrs.push(rec);
+    }
+
+    /// Mirror of `Snitch::age_quiet`: `delta` skipped cycles, all in
+    /// the halted or sleep bucket.
+    pub fn age_quiet(&mut self, delta: u64, halted: bool) {
+        self.cur.cycles += delta;
+        if halted {
+            self.cur.halted_cycles += delta;
+        } else {
+            self.cur.sleep_cycles += delta;
+        }
+    }
+
+    /// A region marker reached this core at cycle `now`: close the
+    /// current window and open the next (cycle `now` itself is counted
+    /// in the *new* region — marker effects apply before cores step, in
+    /// both engines).
+    pub fn set_region(&mut self, now: u64, region: u32) {
+        self.close_window(now);
+        self.region = region;
+    }
+
+    /// Close the last open window at `end` (end of run).
+    pub fn finalize(&mut self, end: u64) {
+        self.close_window(end);
+    }
+
+    fn close_window(&mut self, end: u64) {
+        if self.cur != RegionCounters::default() || end > self.window_start {
+            self.windows.push(RegionWindow {
+                region: self.region,
+                start: self.window_start,
+                end,
+                counters: self.cur,
+            });
+        }
+        self.cur = RegionCounters::default();
+        self.window_start = end;
+    }
+}
+
+/// How one stepped cycle should be booked (mirrors the `StepOutcome` ×
+/// instruction-class split `CoreStats` uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bucket {
+    Compute,
+    Control,
+    IFetch,
+    Raw,
+    Lsu,
+    Sleep,
+    Halted,
+}
+
+/// Per-tile bank-port heat counters, bumped by `Tile::serve_banks`.
+#[derive(Debug, Clone, Default)]
+pub struct TileHeat {
+    /// Requests served per bank (the port "wins").
+    pub wins: Vec<u64>,
+    /// Queue-wait attributed per bank: each served cycle adds the
+    /// number of requests left waiting on that bank's queue (plus the
+    /// whole queue depth when a system-DMA beat holds the port).
+    pub stalls: Vec<u64>,
+    /// Timed system-DMA beats that occupied each bank's port.
+    pub dma_beats: Vec<u64>,
+}
+
+impl TileHeat {
+    pub fn new(banks: usize) -> Self {
+        TileHeat { wins: vec![0; banks], stalls: vec![0; banks], dma_beats: vec![0; banks] }
+    }
+}
+
+/// A cumulative-counter snapshot (flattened over `tile × bank`, plus
+/// the interconnect hop counters); phase windows are deltas between
+/// consecutive snapshots.
+#[derive(Debug, Clone, Default)]
+pub struct HeatSnapshot {
+    pub wins: Vec<u64>,
+    pub stalls: Vec<u64>,
+    pub dma_beats: Vec<u64>,
+    pub hops: Vec<(String, u64)>,
+}
+
+/// Cluster-level phase window: the heat accumulated while the cluster
+/// was in `region` (the id of the most recent marker from any core).
+#[derive(Debug, Clone)]
+pub struct PhaseWindow {
+    pub region: u32,
+    pub start: u64,
+    pub end: u64,
+    /// Per-bank deltas, flattened `tile × bank`.
+    pub wins: Vec<u64>,
+    pub stalls: Vec<u64>,
+    pub dma_beats: Vec<u64>,
+    /// Per-hop contention deltas (label → conflict count).
+    pub hops: Vec<(String, u64)>,
+}
+
+/// A region marker observed by the cluster.
+#[derive(Debug, Clone, Copy)]
+pub struct MarkerEvent {
+    pub at: u64,
+    pub core: u32,
+    pub region: u32,
+}
+
+/// Everything one cluster recorded during a traced run. Mutated only
+/// from serial contexts (control-register effects, the quiescence
+/// skip, DMA triggers), so both stepping engines fill it identically.
+#[derive(Debug, Clone, Default)]
+pub struct TraceBook {
+    pub cluster_id: usize,
+    pub num_cores: usize,
+    pub markers: Vec<MarkerEvent>,
+    /// Harvested per-core tracers (windows + instruction records).
+    pub cores: Vec<CoreTracer>,
+    /// Cluster-level per-region heat windows.
+    pub phases: Vec<PhaseWindow>,
+    /// Quiescence-skipped stretches `[from, to)` — every fast-path jump
+    /// appears here as one explicit span.
+    pub quiescent: Vec<(u64, u64)>,
+    /// Cluster-local DMA transfers `[trigger, done)`.
+    pub dma: Vec<(u64, u64)>,
+    /// System-DMA transfers `[start, done)` serviced for this cluster.
+    pub sysdma: Vec<(u64, u64)>,
+    /// Global-barrier waits `[arrive, release)`.
+    pub gbarrier: Vec<(u64, u64)>,
+    // Live phase state, maintained by the cluster.
+    cluster_region: u32,
+    phase_start: u64,
+    last_snap: HeatSnapshot,
+}
+
+impl TraceBook {
+    pub fn new(cluster_id: usize, num_cores: usize) -> Self {
+        TraceBook { cluster_id, num_cores, ..Default::default() }
+    }
+
+    pub fn cluster_region(&self) -> u32 {
+        self.cluster_region
+    }
+
+    /// Close the running phase window at `now` against a fresh counter
+    /// snapshot and enter `region`.
+    pub fn phase_boundary(&mut self, now: u64, region: u32, snap: HeatSnapshot) {
+        let sub = |cur: &[u64], old: &[u64]| -> Vec<u64> {
+            cur.iter()
+                .enumerate()
+                .map(|(i, v)| v - old.get(i).copied().unwrap_or(0))
+                .collect()
+        };
+        let hops = snap
+            .hops
+            .iter()
+            .map(|(label, v)| {
+                let old = self
+                    .last_snap
+                    .hops
+                    .iter()
+                    .find(|(l, _)| l == label)
+                    .map(|(_, o)| *o)
+                    .unwrap_or(0);
+                (label.clone(), v - old)
+            })
+            .collect();
+        if now > self.phase_start {
+            self.phases.push(PhaseWindow {
+                region: self.cluster_region,
+                start: self.phase_start,
+                end: now,
+                wins: sub(&snap.wins, &self.last_snap.wins),
+                stalls: sub(&snap.stalls, &self.last_snap.stalls),
+                dma_beats: sub(&snap.dma_beats, &self.last_snap.dma_beats),
+                hops,
+            });
+        }
+        self.cluster_region = region;
+        self.phase_start = now;
+        self.last_snap = snap;
+    }
+}
+
+/// Aggregate a set of books into the per-region table: one row per
+/// region id, counters summed over every window of every core of every
+/// cluster, heat summed over every phase window. This is the `regions`
+/// block of the v2 report schema.
+pub fn regions_json(books: &[TraceBook]) -> Json {
+    let mut ids: Vec<u32> = Vec::new();
+    for b in books {
+        for c in &b.cores {
+            for w in &c.windows {
+                if !ids.contains(&w.region) {
+                    ids.push(w.region);
+                }
+            }
+        }
+        for p in &b.phases {
+            if !ids.contains(&p.region) {
+                ids.push(p.region);
+            }
+        }
+    }
+    ids.sort_unstable();
+    let mut rows = Vec::new();
+    for id in ids {
+        let mut counters = RegionCounters::default();
+        let mut windows = 0u64;
+        for b in books {
+            for c in &b.cores {
+                for w in &c.windows {
+                    if w.region == id {
+                        counters.add(&w.counters);
+                        windows += 1;
+                    }
+                }
+            }
+        }
+        let (mut wins, mut stalls, mut beats) = (0u64, 0u64, 0u64);
+        let mut hops: Vec<(String, u64)> = Vec::new();
+        for b in books {
+            for p in &b.phases {
+                if p.region != id {
+                    continue;
+                }
+                wins += p.wins.iter().sum::<u64>();
+                stalls += p.stalls.iter().sum::<u64>();
+                beats += p.dma_beats.iter().sum::<u64>();
+                for (label, v) in &p.hops {
+                    match hops.iter_mut().find(|(l, _)| l == label) {
+                        Some((_, t)) => *t += v,
+                        None => hops.push((label.clone(), *v)),
+                    }
+                }
+            }
+        }
+        let mut row = Json::obj();
+        row.set("region", u64::from(id).into());
+        row.set("name", region_name(id).into());
+        row.set("windows", windows.into());
+        row.set("counters", counters.to_json());
+        let mut heat = Json::obj();
+        heat.set("bank_wins", wins.into());
+        heat.set("bank_stall_cycles", stalls.into());
+        heat.set("sysdma_beats", beats.into());
+        let mut hj = Json::obj();
+        for (label, v) in hops {
+            hj.set(&label, v.into());
+        }
+        heat.set("hop_conflicts", hj);
+        row.set("heat", heat);
+        rows.push(row);
+    }
+    Json::Arr(rows)
+}
+
+/// Export books as a Chrome trace-event document (the
+/// `chrome://tracing` / Perfetto JSON array format). One process per
+/// cluster; one thread per core carrying its region spans (plus the
+/// instruction stream when recorded), then a `dma` track, a `sync`
+/// track (global-barrier waits), and a `quiescent` track where every
+/// fast-path jump is one explicit span. `ts`/`dur` are in simulated
+/// cycles (`displayTimeUnit` maps one cycle to one nanosecond).
+pub fn chrome_trace_json(books: &[TraceBook]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let meta = |name: &str, pid: usize, tid: usize, value: &str| -> Json {
+        let mut e = Json::obj();
+        e.set("name", name.into());
+        e.set("ph", "M".into());
+        e.set("ts", 0u64.into());
+        e.set("pid", pid.into());
+        e.set("tid", tid.into());
+        let mut args = Json::obj();
+        args.set("name", value.into());
+        e.set("args", args);
+        e
+    };
+    let span = |name: String, pid: usize, tid: usize, start: u64, end: u64, args: Option<Json>| {
+        let mut e = Json::obj();
+        e.set("name", name.into());
+        e.set("ph", "X".into());
+        e.set("ts", start.into());
+        e.set("dur", (end.saturating_sub(start)).into());
+        e.set("pid", pid.into());
+        e.set("tid", tid.into());
+        if let Some(a) = args {
+            e.set("args", a);
+        }
+        e
+    };
+    for book in books {
+        let pid = book.cluster_id;
+        events.push(meta("process_name", pid, 0, &format!("cluster{pid}")));
+        let dma_tid = book.num_cores;
+        let sync_tid = book.num_cores + 1;
+        let quiet_tid = book.num_cores + 2;
+        for (tid, core) in book.cores.iter().enumerate() {
+            events.push(meta("thread_name", pid, tid, &format!("core{}", core.core)));
+            for w in &core.windows {
+                events.push(span(
+                    region_name(w.region),
+                    pid,
+                    tid,
+                    w.start,
+                    w.end,
+                    Some(w.counters.to_json()),
+                ));
+            }
+            for rec in &core.instrs {
+                let mut args = Json::obj();
+                args.set("pc", u64::from(rec.pc).into());
+                if let Some((rd, v)) = rec.wb {
+                    args.set("wb", format!("{rd}={v:#x}").into());
+                }
+                events.push(span(rec.text.clone(), pid, tid, rec.cycle, rec.cycle + 1, Some(args)));
+            }
+        }
+        for m in &book.markers {
+            let mut e = Json::obj();
+            e.set("name", format!("marker:{}", region_name(m.region)).into());
+            e.set("ph", "i".into());
+            e.set("ts", m.at.into());
+            e.set("pid", pid.into());
+            e.set("tid", (m.core as usize % book.num_cores.max(1)).into());
+            e.set("s", "t".into());
+            events.push(e);
+        }
+        events.push(meta("thread_name", pid, dma_tid, "dma"));
+        events.push(meta("thread_name", pid, sync_tid, "sync"));
+        events.push(meta("thread_name", pid, quiet_tid, "quiescent"));
+        for &(a, b) in &book.dma {
+            events.push(span("dma".into(), pid, dma_tid, a, b, None));
+        }
+        for &(a, b) in &book.sysdma {
+            events.push(span("sysdma".into(), pid, dma_tid, a, b, None));
+        }
+        for &(a, b) in &book.gbarrier {
+            events.push(span("gbarrier".into(), pid, sync_tid, a, b, None));
+        }
+        for &(a, b) in &book.quiescent {
+            events.push(span("quiescent".into(), pid, quiet_tid, a, b, None));
+        }
+    }
+    // The validator (and trace viewers' streaming parsers) want
+    // monotonic timestamps.
+    events.sort_by_key(|e| e.get("ts").and_then(|t| t.as_u64()).unwrap_or(0));
+    let mut doc = Json::obj();
+    doc.set("schema", "mempool-trace".into());
+    doc.set("version", 1u64.into());
+    doc.set("displayTimeUnit", "ns".into());
+    doc.set("traceEvents", Json::Arr(events));
+    doc
+}
+
+/// Structural validation of a Chrome-trace document: `traceEvents` is
+/// present, every event carries `name`/`ph`/`ts`/`pid`/`tid`, complete
+/// (`X`) events carry `dur`, and timestamps are monotonically
+/// non-decreasing. This is what `mempool trace` runs before writing
+/// and what the CI trace-smoke job gates on.
+pub fn validate_chrome_trace(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .ok_or("missing traceEvents")?
+        .as_array()
+        .ok_or("traceEvents is not an array")?;
+    let mut last_ts = 0u64;
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?
+            .to_string();
+        for field in ["name", "ts", "pid", "tid"] {
+            if e.get(field).is_none() {
+                return Err(format!("event {i}: missing {field}"));
+            }
+        }
+        let ts = e
+            .get("ts")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| format!("event {i}: ts is not a non-negative integer"))?;
+        if ts < last_ts {
+            return Err(format!("event {i}: ts {ts} < previous {last_ts} (not monotonic)"));
+        }
+        last_ts = ts;
+        if ph == "X" && e.get("dur").and_then(|v| v.as_u64()).is_none() {
+            return Err(format!("event {i}: complete event without integer dur"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn book_with_one_core() -> TraceBook {
+        let mut tr = CoreTracer::new(0, TraceConfig { instr: true });
+        tr.bump(Bucket::Control);
+        tr.bump(Bucket::Compute);
+        tr.set_region(2, REGION_COMPUTE);
+        tr.bump(Bucket::Compute);
+        tr.bump(Bucket::Raw);
+        tr.push_instr(InstrRecord { cycle: 2, pc: 7, text: "mac t0, t1, t2".into(), wb: None });
+        tr.finalize(4);
+        let mut book = TraceBook::new(0, 1);
+        book.markers.push(MarkerEvent { at: 2, core: 0, region: REGION_COMPUTE });
+        book.quiescent.push((4, 9));
+        book.phase_boundary(
+            2,
+            REGION_COMPUTE,
+            HeatSnapshot { wins: vec![3], stalls: vec![1], dma_beats: vec![0], hops: vec![] },
+        );
+        book.phase_boundary(
+            9,
+            REGION_COMPUTE,
+            HeatSnapshot { wins: vec![5], stalls: vec![1], dma_beats: vec![0], hops: vec![] },
+        );
+        book.cores.push(tr);
+        book
+    }
+
+    #[test]
+    fn windows_partition_cycles_exactly() {
+        let book = book_with_one_core();
+        let total: u64 = book.cores[0].windows.iter().map(|w| w.counters.cycles).sum();
+        assert_eq!(total, 4);
+        assert_eq!(book.cores[0].windows.len(), 2);
+        assert_eq!(book.cores[0].windows[0].region, REGION_STARTUP);
+        assert_eq!(book.cores[0].windows[1].region, REGION_COMPUTE);
+        assert_eq!(book.cores[0].windows[1].counters.stall_raw, 1);
+    }
+
+    #[test]
+    fn phase_windows_are_deltas() {
+        let book = book_with_one_core();
+        assert_eq!(book.phases.len(), 2);
+        assert_eq!(book.phases[0].wins, vec![3]);
+        assert_eq!(book.phases[1].wins, vec![2]);
+        assert_eq!(book.phases[1].stalls, vec![0]);
+    }
+
+    #[test]
+    fn chrome_export_validates_and_contains_quiescent_span() {
+        let doc = chrome_trace_json(&[book_with_one_core()]);
+        validate_chrome_trace(&doc).expect("structurally valid");
+        let events = doc.get("traceEvents").unwrap().as_array().unwrap();
+        let quiet = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("quiescent"))
+            .expect("the skipped stretch must appear as one explicit span");
+        assert_eq!(quiet.get("ts").unwrap().as_u64(), Some(4));
+        assert_eq!(quiet.get("dur").unwrap().as_u64(), Some(5));
+    }
+
+    #[test]
+    fn validator_rejects_non_monotonic_timestamps() {
+        let good = chrome_trace_json(&[book_with_one_core()]);
+        let mut events = good.get("traceEvents").unwrap().as_array().unwrap().to_vec();
+        events.reverse();
+        let mut doc = Json::obj();
+        doc.set("traceEvents", Json::Arr(events));
+        assert!(validate_chrome_trace(&doc).is_err());
+    }
+
+    #[test]
+    fn regions_table_aggregates_counters_and_heat() {
+        let book = book_with_one_core();
+        let table = regions_json(&[book]);
+        let rows = table.as_array().unwrap();
+        assert_eq!(rows.len(), 2);
+        let compute = &rows[1];
+        assert_eq!(compute.get("name").unwrap().as_str(), Some("compute"));
+        let counters = compute.get("counters").unwrap();
+        assert_eq!(counters.get("cycles").unwrap().as_u64(), Some(2));
+        let heat = compute.get("heat").unwrap();
+        assert_eq!(heat.get("bank_wins").unwrap().as_u64(), Some(2));
+    }
+}

@@ -1,0 +1,623 @@
+//! Per-core abstract interpretation over an assembled program.
+//!
+//! Every core runs the same instruction stream, so one abstract pass
+//! describes all of them at once: the domain tracks, for each register,
+//! a constant value when the program computes one (symbols are resolved
+//! at assembly time, so `la`/`li` produce constants), whether the value
+//! is *derived from* `mhartid` (core taint) or the cluster id (cluster
+//! taint), and whether it may be read before any definition. Constant
+//! arithmetic mirrors the concrete core ([`eval_op`] reproduces the
+//! Snitch ALU and IPU semantics exactly), which is what lets the
+//! verifier resolve control-register addresses, DMA descriptors, and
+//! shared-array indices without running a single simulator cycle.
+//!
+//! The pass is a standard forward worklist fixpoint over the [`Cfg`];
+//! its output is one [`InstrFacts`] per instruction — the abstract
+//! address/value of memory operations, the control-register descriptor
+//! snapshot at DMA triggers, branch operand taints, and the
+//! def-before-use / intrinsic-clobber read sets the rules report on.
+
+use std::collections::VecDeque;
+
+use crate::isa::{Csr, Instr, OpKind, Reg};
+use crate::mem::{
+    CTRL_BASE, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_SIZE, CTRL_SYSDMA_BYTES,
+    CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
+};
+use crate::runtime::IntrinsicSpan;
+
+use super::cfg::Cfg;
+
+/// What the analysis knows about a 32-bit value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValKind {
+    /// Unreached (lattice bottom).
+    Bot,
+    /// Exactly this value, on every core.
+    Const(u32),
+    /// Exactly `mhartid` — the raw, unmodified core id. Distinguished
+    /// from mere core taint so the rules can recognize the idiomatic
+    /// hart-0 guard (`bnez`/`beqz` on a fresh `csrr mhartid`).
+    CoreId,
+    /// Anything.
+    Any,
+}
+
+/// Abstract value: a [`ValKind`] plus taint/definedness flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Val {
+    pub kind: ValKind,
+    /// May differ across cores within a cluster (derived from `mhartid`).
+    pub core: bool,
+    /// May differ across clusters (derived from the cluster id).
+    pub cluster: bool,
+    /// May be read before any definition on some path.
+    pub undef: bool,
+}
+
+impl Val {
+    pub const BOT: Val = Val { kind: ValKind::Bot, core: false, cluster: false, undef: false };
+
+    pub fn konst(v: u32) -> Val {
+        Val { kind: ValKind::Const(v), core: false, cluster: false, undef: false }
+    }
+
+    pub fn core_id() -> Val {
+        Val { kind: ValKind::CoreId, core: true, cluster: false, undef: false }
+    }
+
+    pub fn any(core: bool, cluster: bool) -> Val {
+        Val { kind: ValKind::Any, core, cluster, undef: false }
+    }
+
+    pub fn undef() -> Val {
+        Val { kind: ValKind::Any, core: true, cluster: true, undef: true }
+    }
+
+    pub fn as_const(&self) -> Option<u32> {
+        match self.kind {
+            ValKind::Const(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Same value on every core of a cluster, and definitely defined.
+    pub fn is_uniform(&self) -> bool {
+        !self.core && !self.undef
+    }
+
+    pub fn join(self, other: Val) -> Val {
+        if self.kind == ValKind::Bot {
+            return other;
+        }
+        if other.kind == ValKind::Bot {
+            return self;
+        }
+        let kind = if self.kind == other.kind { self.kind } else { ValKind::Any };
+        Val {
+            kind,
+            core: self.core || other.core,
+            cluster: self.cluster || other.cluster,
+            undef: self.undef || other.undef,
+        }
+    }
+}
+
+/// Concrete ALU/IPU semantics, mirrored from the core model (`sim`'s
+/// Snitch ALU and the IPU's divide/remainder edge cases) so constant
+/// folding here computes exactly what the simulated core would.
+pub fn eval_op(op: OpKind, a: u32, b: u32) -> u32 {
+    match op {
+        OpKind::Add => a.wrapping_add(b),
+        OpKind::Sub => a.wrapping_sub(b),
+        OpKind::Sll => a.wrapping_shl(b & 31),
+        OpKind::Slt => (((a as i32) < (b as i32)) as u32),
+        OpKind::Sltu => ((a < b) as u32),
+        OpKind::Xor => a ^ b,
+        OpKind::Srl => a.wrapping_shr(b & 31),
+        OpKind::Sra => ((a as i32).wrapping_shr(b & 31)) as u32,
+        OpKind::Or => a | b,
+        OpKind::And => a & b,
+        OpKind::Mul => a.wrapping_mul(b),
+        OpKind::Mulh => (((a as i32 as i64).wrapping_mul(b as i32 as i64)) >> 32) as u32,
+        OpKind::Mulhu => (((a as u64) * (b as u64)) >> 32) as u32,
+        OpKind::Mulhsu => (((a as i32 as i64).wrapping_mul(b as u64 as i64)) >> 32) as u32,
+        OpKind::Div => {
+            if b == 0 {
+                u32::MAX
+            } else if a as i32 == i32::MIN && b as i32 == -1 {
+                a
+            } else {
+                ((a as i32) / (b as i32)) as u32
+            }
+        }
+        OpKind::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        OpKind::Rem => {
+            if b == 0 {
+                a
+            } else if a as i32 == i32::MIN && b as i32 == -1 {
+                0
+            } else {
+                ((a as i32) % (b as i32)) as u32
+            }
+        }
+        OpKind::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+        OpKind::PMin => (a as i32).min(b as i32) as u32,
+        OpKind::PMax => (a as i32).max(b as i32) as u32,
+        OpKind::PMinu => a.min(b),
+        OpKind::PMaxu => a.max(b),
+    }
+}
+
+/// Abstract binary op: fold constants through [`eval_op`], otherwise
+/// union the taints. Additive identities are preserved exactly — `mv`
+/// lowers to `addi rd, rs, 0`, and degrading it would turn the raw
+/// `mhartid` kind into `Any` and break hart-0 guard recognition.
+pub fn binop(op: OpKind, a: Val, b: Val) -> Val {
+    if a.kind == ValKind::Bot || b.kind == ValKind::Bot {
+        return Val::BOT;
+    }
+    match op {
+        OpKind::Add => {
+            if a.as_const() == Some(0) {
+                return b;
+            }
+            if b.as_const() == Some(0) {
+                return a;
+            }
+        }
+        OpKind::Sub => {
+            if b.as_const() == Some(0) {
+                return a;
+            }
+        }
+        _ => {}
+    }
+    if let (Some(x), Some(y)) = (a.as_const(), b.as_const()) {
+        return Val::konst(eval_op(op, x, y));
+    }
+    Val {
+        kind: ValKind::Any,
+        core: a.core || b.core,
+        cluster: a.cluster || b.cluster,
+        undef: a.undef || b.undef,
+    }
+}
+
+/// Tracked control-register descriptor slots: the DMA source /
+/// destination / length registers whose written values the DMA rules
+/// need (trigger, status, and wake registers are recognized by address
+/// alone and need no tracked value).
+pub const CTRL_SLOT_OFFSETS: [u32; 8] = [
+    CTRL_DMA_L2,
+    CTRL_DMA_SPM,
+    CTRL_DMA_BYTES,
+    CTRL_SYSDMA_L2,
+    CTRL_SYSDMA_LOCAL,
+    CTRL_SYSDMA_BYTES,
+    CTRL_SYSDMA_RCLUSTER,
+    CTRL_SYSDMA_RADDR,
+];
+
+pub const NUM_CTRL_SLOTS: usize = CTRL_SLOT_OFFSETS.len();
+
+pub fn slot_for(offset: u32) -> Option<usize> {
+    CTRL_SLOT_OFFSETS.iter().position(|&o| o == offset)
+}
+
+pub fn slot_name(slot: usize) -> &'static str {
+    match slot {
+        0 => "DMA_L2",
+        1 => "DMA_SPM",
+        2 => "DMA_BYTES",
+        3 => "SYSDMA_L2",
+        4 => "SYSDMA_LOCAL",
+        5 => "SYSDMA_BYTES",
+        6 => "SYSDMA_RCLUSTER",
+        7 => "SYSDMA_RADDR",
+        _ => "?",
+    }
+}
+
+/// Classification of a *constant* memory address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrClass {
+    /// Cluster control register, with its offset from `CTRL_BASE`.
+    Ctrl(u32),
+    /// One of the runtime's synchronization words (barrier count/epoch,
+    /// work counter) — always touched concurrently, by design.
+    Sync,
+    /// Ordinary data (SPM or L2).
+    Data,
+}
+
+pub fn classify(addr: u32, sync_addrs: &[(u32, u32)]) -> AddrClass {
+    if (CTRL_BASE..CTRL_BASE + CTRL_SIZE).contains(&addr) {
+        return AddrClass::Ctrl(addr - CTRL_BASE);
+    }
+    for &(lo, hi) in sync_addrs {
+        if (lo..hi).contains(&addr) {
+            return AddrClass::Sync;
+        }
+    }
+    AddrClass::Data
+}
+
+/// Abstract machine state at an instruction boundary: register values,
+/// the intrinsic span (if any) whose scratch clobber produced each
+/// register's reaching definition, and the tracked control-register
+/// descriptor slots.
+#[derive(Clone, PartialEq)]
+pub struct AbsState {
+    pub regs: [Val; 32],
+    pub clob: [Option<usize>; 32],
+    pub ctrl: [Val; NUM_CTRL_SLOTS],
+}
+
+impl AbsState {
+    /// State at program entry: everything undefined except `x0` (zero)
+    /// and `sp` (the harness points each core at its own stack, so the
+    /// stack pointer is defined but core-varying).
+    pub fn entry() -> AbsState {
+        let mut regs = [Val::undef(); 32];
+        regs[0] = Val::konst(0);
+        regs[Reg::SP.index()] = Val::any(true, false);
+        AbsState { regs, clob: [None; 32], ctrl: [Val::undef(); NUM_CTRL_SLOTS] }
+    }
+
+    pub fn get(&self, r: Reg) -> Val {
+        if r == Reg::ZERO {
+            Val::konst(0)
+        } else {
+            self.regs[r.index()]
+        }
+    }
+
+    fn set(&mut self, r: Reg, v: Val, clob: Option<usize>) {
+        if r != Reg::ZERO {
+            self.regs[r.index()] = v;
+            self.clob[r.index()] = clob;
+        }
+    }
+
+    /// Join `other` into `self`; true if anything changed.
+    fn join_from(&mut self, other: &AbsState) -> bool {
+        let mut changed = false;
+        for i in 0..32 {
+            let j = self.regs[i].join(other.regs[i]);
+            if j != self.regs[i] {
+                self.regs[i] = j;
+                changed = true;
+            }
+            let c = match (self.clob[i], other.clob[i]) {
+                (None, None) => None,
+                (Some(a), None) | (None, Some(a)) => Some(a),
+                (Some(a), Some(b)) => Some(a.min(b)),
+            };
+            if c != self.clob[i] {
+                self.clob[i] = c;
+                changed = true;
+            }
+        }
+        for i in 0..NUM_CTRL_SLOTS {
+            let j = self.ctrl[i].join(other.ctrl[i]);
+            if j != self.ctrl[i] {
+                self.ctrl[i] = j;
+                changed = true;
+            }
+        }
+        changed
+    }
+}
+
+/// Per-instruction facts, harvested from the fixpoint's in-states for
+/// the rules layer.
+#[derive(Clone)]
+pub struct InstrFacts {
+    /// False if the fixpoint never reached this instruction.
+    pub reachable: bool,
+    /// Abstract address of a memory operation (`Val::BOT` otherwise).
+    pub addr: Val,
+    /// Abstract stored value (stores only; `Val::BOT` otherwise).
+    pub value: Val,
+    /// Control-register descriptor snapshot *before* this instruction.
+    pub ctrl: [Val; NUM_CTRL_SLOTS],
+    /// Source registers whose value may be read before any definition.
+    pub undef_uses: Vec<Reg>,
+    /// Source registers (outside any intrinsic span) whose reaching
+    /// definition is intrinsic scratch: `(register, span index)`.
+    pub clobber_uses: Vec<(Reg, usize)>,
+    /// Branch operand values (branches only).
+    pub branch_ops: Option<(Val, Val)>,
+}
+
+impl InstrFacts {
+    fn unreachable() -> InstrFacts {
+        InstrFacts {
+            reachable: false,
+            addr: Val::BOT,
+            value: Val::BOT,
+            ctrl: [Val::BOT; NUM_CTRL_SLOTS],
+            undef_uses: Vec::new(),
+            clobber_uses: Vec::new(),
+            branch_ops: None,
+        }
+    }
+}
+
+/// The abstract interpreter: program, intrinsic-span metadata, and the
+/// runtime's synchronization-word ranges.
+pub struct Absint<'a> {
+    pub instrs: &'a [Instr],
+    pub spans: &'a [IntrinsicSpan],
+    /// Innermost intrinsic span containing each instruction, if any.
+    pub span_of: &'a [Option<usize>],
+    /// `[lo, hi)` byte ranges of the runtime's sync words.
+    pub sync_addrs: &'a [(u32, u32)],
+}
+
+impl<'a> Absint<'a> {
+    /// Run the forward fixpoint and harvest per-instruction facts.
+    pub fn run(&self, cfg: &Cfg) -> Vec<InstrFacts> {
+        let n = self.instrs.len();
+        let mut ins: Vec<Option<AbsState>> = vec![None; n];
+        if n == 0 {
+            return Vec::new();
+        }
+        ins[0] = Some(AbsState::entry());
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut queued = vec![false; n];
+        queue.push_back(0);
+        queued[0] = true;
+        while let Some(i) = queue.pop_front() {
+            queued[i] = false;
+            let state = ins[i].clone().expect("queued instruction has a state");
+            let out = self.transfer(i, state);
+            for &s in &cfg.succs[i] {
+                if s >= n {
+                    continue;
+                }
+                let changed = match &mut ins[s] {
+                    Some(st) => st.join_from(&out),
+                    slot @ None => {
+                        *slot = Some(out.clone());
+                        true
+                    }
+                };
+                if changed && !queued[s] {
+                    queued[s] = true;
+                    queue.push_back(s);
+                }
+            }
+        }
+
+        (0..n)
+            .map(|i| {
+                let state = match &ins[i] {
+                    Some(s) => s,
+                    None => return InstrFacts::unreachable(),
+                };
+                self.facts_at(i, state)
+            })
+            .collect()
+    }
+
+    /// The span index to record as the clobber source for a definition
+    /// of `rd` at instruction `i` — the containing span, when it
+    /// declares `rd` scratch.
+    fn clob_for(&self, i: usize, rd: Reg) -> Option<usize> {
+        let s = self.span_of[i]?;
+        if self.spans[s].clobbers.contains(&rd) {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Abstract result of a load from `addr`. Constant addresses go
+    /// through [`classify`]; a *uniform* non-constant address is assumed
+    /// to yield a uniform value (all cores compute the same pointer, and
+    /// the race rules separately police concurrent writers), while a
+    /// core-tainted or possibly-undefined pointer yields full `Any`.
+    fn load_result(&self, addr: Val) -> Val {
+        if let Some(a) = addr.as_const() {
+            return match classify(a, self.sync_addrs) {
+                AddrClass::Ctrl(off) if off == crate::mem::CTRL_CLUSTER_ID => {
+                    Val::any(false, true)
+                }
+                AddrClass::Ctrl(off) if off == crate::mem::CTRL_NUM_CORES => {
+                    Val::any(false, false)
+                }
+                AddrClass::Ctrl(_) => Val::any(true, true),
+                AddrClass::Sync => Val::any(true, true),
+                AddrClass::Data => Val::any(false, true),
+            };
+        }
+        if addr.kind != ValKind::Bot && addr.is_uniform() {
+            Val::any(false, true)
+        } else {
+            Val::any(true, true)
+        }
+    }
+
+    /// Effect of a store of `value` at abstract address `addr` on the
+    /// tracked control-register slots.
+    fn store_effect(&self, state: &mut AbsState, addr: Val, value: Val) {
+        if let Some(a) = addr.as_const() {
+            if let AddrClass::Ctrl(off) = classify(a, self.sync_addrs) {
+                if let Some(slot) = slot_for(off) {
+                    state.ctrl[slot] = value;
+                }
+            }
+            return;
+        }
+        if addr.kind == ValKind::Bot {
+            return;
+        }
+        // A store through an unknown pointer could alias any descriptor
+        // register: smash the slots to defined-but-unknown.
+        for slot in state.ctrl.iter_mut() {
+            *slot = Val::any(true, true);
+        }
+    }
+
+    /// One instruction's transfer function.
+    fn transfer(&self, i: usize, mut state: AbsState) -> AbsState {
+        let ins = self.instrs[i];
+        match ins {
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let v = binop(op, state.get(rs1), state.get(rs2));
+                state.set(rd, v, self.clob_for(i, rd));
+            }
+            Instr::OpImm { op, rd, rs1, imm } => {
+                let v = binop(op, state.get(rs1), Val::konst(imm as u32));
+                state.set(rd, v, self.clob_for(i, rd));
+            }
+            Instr::Lui { rd, imm } => {
+                state.set(rd, Val::konst((imm as u32) << 12), self.clob_for(i, rd));
+            }
+            Instr::Auipc { rd, .. } => {
+                // PC-relative: uniform but not tracked as a constant.
+                state.set(rd, Val::any(false, false), self.clob_for(i, rd));
+            }
+            Instr::Load { rd, rs1, imm, .. } => {
+                let addr = binop(OpKind::Add, state.get(rs1), Val::konst(imm as u32));
+                let v = self.load_result(addr);
+                state.set(rd, v, self.clob_for(i, rd));
+            }
+            Instr::LoadReg { rd, rs1, rs2, .. } => {
+                let addr = binop(OpKind::Add, state.get(rs1), state.get(rs2));
+                let v = self.load_result(addr);
+                state.set(rd, v, self.clob_for(i, rd));
+            }
+            Instr::LoadPost { rd, rs1, imm, .. } => {
+                let base = state.get(rs1);
+                let v = self.load_result(base);
+                state.set(rd, v, self.clob_for(i, rd));
+                // Post-increment writeback; on rd == rs1 the concrete
+                // core's writeback lands last, so it wins here too.
+                let inc = binop(OpKind::Add, base, Val::konst(imm as u32));
+                state.set(rs1, inc, self.clob_for(i, rs1));
+            }
+            Instr::Store { rs2, rs1, imm, .. } => {
+                let addr = binop(OpKind::Add, state.get(rs1), Val::konst(imm as u32));
+                let value = state.get(rs2);
+                self.store_effect(&mut state, addr, value);
+            }
+            Instr::StorePost { rs2, rs1, imm, .. } => {
+                let base = state.get(rs1);
+                let value = state.get(rs2);
+                self.store_effect(&mut state, base, value);
+                let inc = binop(OpKind::Add, base, Val::konst(imm as u32));
+                state.set(rs1, inc, self.clob_for(i, rs1));
+            }
+            Instr::Mac { rd, rs1, rs2 } | Instr::Msu { rd, rs1, rs2 } => {
+                let acc = state.get(rd);
+                let prod = binop(OpKind::Mul, state.get(rs1), state.get(rs2));
+                let op = if matches!(ins, Instr::Mac { .. }) { OpKind::Add } else { OpKind::Sub };
+                let v = binop(op, acc, prod);
+                state.set(rd, v, self.clob_for(i, rd));
+            }
+            Instr::Branch { .. } => {}
+            Instr::Jal { rd, .. } => {
+                state.set(rd, Val::any(false, false), self.clob_for(i, rd));
+            }
+            Instr::Jalr { rd, .. } => {
+                state.set(rd, Val::any(false, false), self.clob_for(i, rd));
+            }
+            Instr::Amo { rd, rs1, .. } => {
+                let addr = state.get(rs1);
+                // The stored value is op(old, rs2) — unknown; treat as a
+                // store of Any for descriptor aliasing.
+                self.store_effect(&mut state, addr, Val::any(true, true));
+                state.set(rd, Val::any(true, true), self.clob_for(i, rd));
+            }
+            Instr::Lr { rd, .. } => {
+                state.set(rd, Val::any(true, true), self.clob_for(i, rd));
+            }
+            Instr::Sc { rd, rs1, rs2 } => {
+                let addr = state.get(rs1);
+                let value = state.get(rs2);
+                self.store_effect(&mut state, addr, value);
+                state.set(rd, Val::any(true, true), self.clob_for(i, rd));
+            }
+            Instr::Csrr { rd, csr } => {
+                let v = match csr {
+                    Csr::Mhartid => Val::core_id(),
+                    Csr::Mcycle => Val::any(true, true),
+                    Csr::NumCores | Csr::CoresPerTile | Csr::CoresPerGroup => {
+                        Val::any(false, false)
+                    }
+                };
+                state.set(rd, v, self.clob_for(i, rd));
+            }
+            Instr::Wfi | Instr::Fence | Instr::Halt | Instr::Nop => {}
+        }
+        state
+    }
+
+    /// Harvest the rule-relevant facts from an instruction's in-state.
+    fn facts_at(&self, i: usize, state: &AbsState) -> InstrFacts {
+        let ins = self.instrs[i];
+        let mut undef_uses = Vec::new();
+        let mut clobber_uses = Vec::new();
+        for src in ins.sources().into_iter().flatten() {
+            if src == Reg::ZERO {
+                continue;
+            }
+            if state.get(src).undef && !undef_uses.contains(&src) {
+                undef_uses.push(src);
+            }
+            if self.span_of[i].is_none() {
+                if let Some(s) = state.clob[src.index()] {
+                    if !clobber_uses.iter().any(|&(r, _)| r == src) {
+                        clobber_uses.push((src, s));
+                    }
+                }
+            }
+        }
+        let (addr, value) = match ins {
+            Instr::Load { rs1, imm, .. } | Instr::Store { rs1, imm, .. } => {
+                let a = binop(OpKind::Add, state.get(rs1), Val::konst(imm as u32));
+                let v = match ins {
+                    Instr::Store { rs2, .. } => state.get(rs2),
+                    _ => Val::BOT,
+                };
+                (a, v)
+            }
+            Instr::LoadPost { rs1, .. } => (state.get(rs1), Val::BOT),
+            Instr::StorePost { rs2, rs1, .. } => (state.get(rs1), state.get(rs2)),
+            Instr::LoadReg { rs1, rs2, .. } => {
+                (binop(OpKind::Add, state.get(rs1), state.get(rs2)), Val::BOT)
+            }
+            Instr::Amo { rs1, .. } | Instr::Lr { rs1, .. } => (state.get(rs1), Val::BOT),
+            Instr::Sc { rs1, rs2, .. } => (state.get(rs1), state.get(rs2)),
+            _ => (Val::BOT, Val::BOT),
+        };
+        let branch_ops = match ins {
+            Instr::Branch { rs1, rs2, .. } => Some((state.get(rs1), state.get(rs2))),
+            _ => None,
+        };
+        InstrFacts {
+            reachable: true,
+            addr,
+            value,
+            ctrl: state.ctrl,
+            undef_uses,
+            clobber_uses,
+            branch_ops,
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Control-flow graph over an assembled instruction sequence, plus the
+//! dominance machinery the verifier's rules are built on: reverse
+//! postorder, immediate (post)dominators (Cooper–Harvey–Kennedy), and
+//! Ferrante-style control dependences.
+//!
+//! Nodes are instruction indexes; one virtual *exit* node (index `n`)
+//! collects `halt`, `jalr`, and the final fall-through. `jalr` targets
+//! are not modeled (no workload computes jump targets), so an indirect
+//! jump conservatively ends the path — a documented soundness caveat
+//! (see `docs/ANALYSIS.md`).
+
+use crate::isa::Instr;
+
+/// The program's control-flow graph. `succs`/`preds` have `n + 1`
+/// entries; index `n` is the virtual exit node.
+pub struct Cfg {
+    pub n: usize,
+    pub succs: Vec<Vec<usize>>,
+    pub preds: Vec<Vec<usize>>,
+}
+
+impl Cfg {
+    pub fn build(instrs: &[Instr]) -> Cfg {
+        let n = instrs.len();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+        for (i, ins) in instrs.iter().enumerate() {
+            let fall = if i + 1 < n { i + 1 } else { n };
+            match ins {
+                Instr::Branch { target, .. } => {
+                    // Fall-through first, taken edge second (rules rely
+                    // on this order to tell the two sides apart).
+                    succs[i].push(fall);
+                    let t = (*target as usize).min(n);
+                    if t != fall {
+                        succs[i].push(t);
+                    }
+                }
+                Instr::Jal { target, .. } => succs[i].push((*target as usize).min(n)),
+                Instr::Jalr { .. } | Instr::Halt => succs[i].push(n),
+                _ => succs[i].push(fall),
+            }
+        }
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+        for (i, ss) in succs.iter().enumerate() {
+            for &s in ss {
+                preds[s].push(i);
+            }
+        }
+        Cfg { n, succs, preds }
+    }
+}
+
+/// Reverse postorder of the nodes reachable from `root` (iterative DFS).
+pub fn reverse_postorder(root: usize, succs: &[Vec<usize>]) -> Vec<usize> {
+    let mut visited = vec![false; succs.len()];
+    let mut post = Vec::new();
+    let mut stack: Vec<(usize, usize)> = vec![(root, 0)];
+    visited[root] = true;
+    while let Some(top) = stack.last_mut() {
+        let (node, i) = *top;
+        if i < succs[node].len() {
+            top.1 += 1;
+            let s = succs[node][i];
+            if !visited[s] {
+                visited[s] = true;
+                stack.push((s, 0));
+            }
+        } else {
+            post.push(node);
+            stack.pop();
+        }
+    }
+    post.reverse();
+    post
+}
+
+/// Immediate dominators of every node reachable from `root`
+/// (Cooper–Harvey–Kennedy). Unreachable nodes get `None`; the root's
+/// entry is `Some(root)` (itself), which [`dominates`] handles.
+///
+/// Post-dominators are the same computation on the reverse graph: call
+/// with `root` = the exit node and `succs`/`preds` swapped.
+pub fn idoms(root: usize, succs: &[Vec<usize>], preds: &[Vec<usize>]) -> Vec<Option<usize>> {
+    let rpo = reverse_postorder(root, succs);
+    let mut order = vec![usize::MAX; succs.len()];
+    for (i, &v) in rpo.iter().enumerate() {
+        order[v] = i;
+    }
+    let mut idom: Vec<Option<usize>> = vec![None; succs.len()];
+    idom[root] = Some(root);
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &v in rpo.iter().skip(1) {
+            let mut new = None;
+            for &p in &preds[v] {
+                if idom[p].is_none() {
+                    continue;
+                }
+                new = Some(match new {
+                    None => p,
+                    Some(cur) => intersect(p, cur, &idom, &order),
+                });
+            }
+            if new.is_some() && idom[v] != new {
+                idom[v] = new;
+                changed = true;
+            }
+        }
+    }
+    idom
+}
+
+fn intersect(mut a: usize, mut b: usize, idom: &[Option<usize>], order: &[usize]) -> usize {
+    while a != b {
+        while order[a] > order[b] {
+            a = idom[a].expect("intersect walks processed nodes");
+        }
+        while order[b] > order[a] {
+            b = idom[b].expect("intersect walks processed nodes");
+        }
+    }
+    a
+}
+
+/// Whether node `a` dominates node `b` under the `idom` tree (reflexive).
+pub fn dominates(a: usize, b: usize, idom: &[Option<usize>]) -> bool {
+    let mut x = b;
+    loop {
+        if x == a {
+            return true;
+        }
+        match idom[x] {
+            Some(p) if p != x => x = p,
+            _ => return false,
+        }
+    }
+}
+
+/// Control dependences from the post-dominator tree: `cd[x]` lists the
+/// `(branch, taken successor)` pairs `x` is control-dependent on —
+/// i.e. executing `x` is contingent on `branch` choosing that successor.
+/// A branch's immediate post-dominator (the join point) depends on
+/// nothing; that is what lets a barrier *after* a divergent region pass.
+pub fn control_deps(cfg: &Cfg, ipdom: &[Option<usize>]) -> Vec<Vec<(usize, usize)>> {
+    let mut cd: Vec<Vec<(usize, usize)>> = vec![Vec::new(); cfg.n + 1];
+    for b in 0..cfg.n {
+        if cfg.succs[b].len() < 2 {
+            continue;
+        }
+        let stop = ipdom[b];
+        for &s in &cfg.succs[b] {
+            let mut x = Some(s);
+            let mut steps = 0;
+            while let Some(v) = x {
+                if Some(v) == stop || steps > cfg.n {
+                    break;
+                }
+                cd[v].push((b, s));
+                steps += 1;
+                x = match ipdom[v] {
+                    Some(p) if p != v => Some(p),
+                    _ => None,
+                };
+            }
+        }
+    }
+    cd
+}

@@ -1,0 +1,256 @@
+//! `mempool lint` — a static SPMD race-and-hazard verifier for workload
+//! programs.
+//!
+//! The verifier runs over an assembled [`Program`](crate::isa::Program)
+//! without executing a single simulator cycle. All cores run the same
+//! instruction stream (SPMD), so one abstract pass describes every
+//! core's behavior at once:
+//!
+//! 1. a control-flow graph with dominance / post-dominance / control
+//!    dependences ([`cfg`]),
+//! 2. a per-core abstract interpretation tracking constants, core-id
+//!    and cluster-id taint, and def-before-use ([`absint`]),
+//! 3. the rules ([`rules`]): barrier divergence, shared-L1 races within
+//!    barrier-delimited phases, and the runtime's DMA / wake / clobber
+//!    protocol contracts.
+//!
+//! Builder intrinsic spans ([`IntrinsicSpan`](crate::runtime::IntrinsicSpan))
+//! tell the verifier which instructions are trusted runtime plumbing
+//! (barrier internals, DMA pokes) and which registers those intrinsics
+//! clobber; the rules police the kernel code *around* the spans plus
+//! the contracts the spans declare.
+//!
+//! Soundness caveats — where the verifier chooses "no false alarms on
+//! sound kernels" over completeness — are cataloged in
+//! `docs/ANALYSIS.md`.
+
+pub mod absint;
+pub mod cfg;
+pub mod rules;
+
+#[cfg(test)]
+mod tests;
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::isa::{assemble_debug, AsmError};
+use crate::runtime::{workload_source, IntrinsicSpan, TargetConfig, Workload};
+
+use absint::Absint;
+use cfg::{control_deps, idoms, Cfg};
+use rules::{run_rules, RuleCtx};
+
+/// The rule catalog. Every finding carries one of these ids; see
+/// `docs/ANALYSIS.md` for the full catalog with triggering examples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    /// A barrier some cores can skip (or that only hart 0 reaches).
+    DivergentBarrier,
+    /// All cores store to one shared address with no arbitration.
+    RaceStore,
+    /// All cores load a hart-0-written address in the same barrier phase.
+    RaceLoad,
+    /// DMA destination read on a path with no status poll after the trigger.
+    DmaNoWait,
+    /// DMA triggered with descriptor registers never written.
+    DmaConfig,
+    /// Read of a register clobbered by an intrinsic's scratch set.
+    IntrinsicClobber,
+    /// Read of a register never defined on some path.
+    UndefRead,
+    /// `wfi` with no wake-register store anywhere in the program.
+    WfiNoWake,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 8] = [
+        Rule::DivergentBarrier,
+        Rule::RaceStore,
+        Rule::RaceLoad,
+        Rule::DmaNoWait,
+        Rule::DmaConfig,
+        Rule::IntrinsicClobber,
+        Rule::UndefRead,
+        Rule::WfiNoWake,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::DivergentBarrier => "divergent-barrier",
+            Rule::RaceStore => "race-store",
+            Rule::RaceLoad => "race-load",
+            Rule::DmaNoWait => "dma-no-wait",
+            Rule::DmaConfig => "dma-config",
+            Rule::IntrinsicClobber => "intrinsic-clobber",
+            Rule::UndefRead => "undef-read",
+            Rule::WfiNoWake => "wfi-no-wake",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Rule> {
+        Rule::ALL.iter().copied().find(|r| r.id() == s)
+    }
+}
+
+/// One verifier finding, anchored to an instruction with source-level
+/// provenance (the builder line it expanded from, and the nearest
+/// preceding label).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Instruction index in the assembled program.
+    pub index: usize,
+    /// 1-based source line of the builder-emitted assembly.
+    pub line: u32,
+    /// Nearest label at or before the instruction, as `name` or
+    /// `name+offset`.
+    pub label: Option<String>,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let loc = self.label.as_deref().unwrap_or("entry");
+        write!(f, "[{}] I{:04} ({}, line {}): {}", self.rule.id(), self.index, loc, self.line, self.msg)
+    }
+}
+
+/// A workload's lint result: hard findings, plus findings suppressed by
+/// the workload's documented allowances ([`Workload::lint_allows`]),
+/// each with its justification.
+pub struct LintOutcome {
+    pub findings: Vec<Finding>,
+    pub allowed: Vec<(Finding, &'static str)>,
+}
+
+impl LintOutcome {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// The runtime's synchronization words: addresses the barrier and
+/// work-queue protocols touch concurrently by design, exempt from the
+/// data-race rules.
+const SYNC_SYMBOLS: [&str; 3] = ["rt_barrier_count", "rt_barrier_epoch", "rt_work_counter"];
+
+/// Lint one program: builder-emitted assembly source, its full symbol
+/// table, the builder's intrinsic spans, and the target shape. This is
+/// the core entry point — `lint_workload` and the seeded-bug tests both
+/// funnel through it.
+pub fn lint_source(
+    src: &str,
+    symbols: &HashMap<String, u32>,
+    spans: &[IntrinsicSpan],
+    num_cores: usize,
+    num_clusters: usize,
+) -> Result<Vec<Finding>, AsmError> {
+    let (instrs, debug) = assemble_debug(src, symbols)?;
+    let n = instrs.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+
+    // Innermost intrinsic span per instruction (nested spans — the
+    // local barriers inside a global_barrier — are shorter, so the
+    // minimum line range picks them).
+    let span_of: Vec<Option<usize>> = debug
+        .lines
+        .iter()
+        .map(|&line| {
+            (0..spans.len())
+                .filter(|&s| spans[s].contains_line(line))
+                .min_by_key(|&s| spans[s].last_line - spans[s].first_line)
+        })
+        .collect();
+
+    let sync_addrs: Vec<(u32, u32)> = SYNC_SYMBOLS
+        .iter()
+        .filter_map(|name| symbols.get(*name).map(|&a| (a, a + 4)))
+        .collect();
+
+    let cfg = Cfg::build(&instrs);
+    let idom = idoms(0, &cfg.succs, &cfg.preds);
+    let ipdom = idoms(cfg.n, &cfg.preds, &cfg.succs);
+    let cd = control_deps(&cfg, &ipdom);
+
+    let facts = Absint {
+        instrs: &instrs,
+        spans,
+        span_of: &span_of,
+        sync_addrs: &sync_addrs,
+    }
+    .run(&cfg);
+
+    let ctx = RuleCtx {
+        instrs: &instrs,
+        lines: &debug.lines,
+        spans,
+        span_of: &span_of,
+        facts: &facts,
+        cfg: &cfg,
+        idom: &idom,
+        cd: &cd,
+        num_cores,
+        num_clusters,
+        sync_addrs: &sync_addrs,
+    };
+    let mut raw = run_rules(&ctx);
+    raw.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+    raw.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1 && a.2 == b.2);
+
+    Ok(raw
+        .into_iter()
+        .map(|(rule, index, msg)| Finding {
+            rule,
+            index,
+            line: debug.lines[index],
+            label: nearest_label(&debug.labels, index),
+            msg,
+        })
+        .collect())
+}
+
+/// `name` or `name+offset` for the closest label at or before `index`.
+fn nearest_label(labels: &HashMap<String, u32>, index: usize) -> Option<String> {
+    let best = labels
+        .iter()
+        .filter(|&(_, &v)| (v as usize) <= index)
+        .max_by(|(an, &av), (bn, &bv)| av.cmp(&bv).then_with(|| bn.cmp(an)))?;
+    let off = index - *best.1 as usize;
+    Some(if off == 0 { best.0.clone() } else { format!("{}+{}", best.0, off) })
+}
+
+/// Lint a workload on a target shape: builds the exact program
+/// [`run_workload`](crate::runtime::run_workload) would assemble
+/// (including `prepare_config` adjustments and harness symbols) and
+/// partitions the findings by the workload's documented allowances.
+pub fn lint_workload(w: &dyn Workload, tcfg: &TargetConfig) -> LintOutcome {
+    // Mirror run_workload's config preparation exactly.
+    let tcfg = match tcfg {
+        TargetConfig::Cluster(c) => {
+            let mut c = c.clone();
+            w.prepare_config(&mut c);
+            TargetConfig::Cluster(c)
+        }
+        TargetConfig::System(s) => {
+            let mut s = s.clone();
+            w.prepare_config(&mut s.cluster);
+            TargetConfig::System(s)
+        }
+    };
+    let (src, sym, spans) = workload_source(w, &tcfg);
+    let all = lint_source(&src, &sym, &spans, tcfg.cluster().num_cores(), tcfg.num_clusters())
+        .unwrap_or_else(|e| panic!("workload {}: assembly failed: {e}", w.name()));
+    let allows = w.lint_allows();
+    let mut findings = Vec::new();
+    let mut allowed = Vec::new();
+    for f in all {
+        match allows.iter().find(|(id, _)| *id == f.rule.id()) {
+            Some(&(_, why)) => allowed.push((f, why)),
+            None => findings.push(f),
+        }
+    }
+    LintOutcome { findings, allowed }
+}

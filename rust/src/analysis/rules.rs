@@ -1,0 +1,589 @@
+//! The verifier's rules: executor analysis (who reaches each
+//! instruction), barrier phases, and the eight race/hazard checks.
+//!
+//! Everything here consumes the [`Cfg`]/dominance machinery and the
+//! abstract-interpretation facts; nothing executes. Instructions inside
+//! a builder intrinsic span are trusted runtime plumbing — the rules
+//! police the kernel code around them, plus the contracts the spans
+//! declare (clobber sets, DMA descriptor protocol).
+
+use crate::isa::{CondOp, Instr, Width};
+use crate::mem::{
+    CTRL_BASE, CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_GBARRIER, CTRL_SYSDMA_STATUS,
+    CTRL_SYSDMA_TRIGGER, CTRL_WAKE_CORE, CTRL_WAKE_GROUP,
+};
+use crate::runtime::{IntrinsicKind, IntrinsicSpan};
+
+use super::absint::{classify, slot_name, AddrClass, InstrFacts, ValKind};
+use super::cfg::{dominates, Cfg};
+use super::Rule;
+
+/// Which cores reach an instruction, per cluster. Ordered from benign
+/// to worst; joins take the max.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Exec {
+    /// Every core of the cluster (no core-varying branch gates it).
+    All,
+    /// Exactly hart 0 (the idiomatic `csrr mhartid` zero-guard).
+    Core0,
+    /// Some data- or core-dependent subset — divergent.
+    Divergent,
+}
+
+/// Everything the rules need, borrowed from the driver in `mod.rs`.
+pub struct RuleCtx<'a> {
+    pub instrs: &'a [Instr],
+    /// 1-based source line of each instruction.
+    pub lines: &'a [u32],
+    pub spans: &'a [IntrinsicSpan],
+    /// Innermost span containing each instruction.
+    pub span_of: &'a [Option<usize>],
+    pub facts: &'a [InstrFacts],
+    pub cfg: &'a Cfg,
+    /// Forward immediate dominators.
+    pub idom: &'a [Option<usize>],
+    /// Control dependences: `(branch, taken successor)` per node.
+    pub cd: &'a [Vec<(usize, usize)>],
+    pub num_cores: usize,
+    pub num_clusters: usize,
+    /// `[lo, hi)` ranges of the runtime's sync words.
+    pub sync_addrs: &'a [(u32, u32)],
+}
+
+/// A raw finding: rule, anchoring instruction index, message. The
+/// driver decorates it with source-line / label provenance.
+pub type RawFinding = (Rule, usize, String);
+
+pub fn run_rules(ctx: &RuleCtx) -> Vec<RawFinding> {
+    let (exec, gdiv) = executor_analysis(ctx);
+    let events = barrier_events(ctx);
+    let phase = phase_masks(ctx, &events);
+    let mut out = Vec::new();
+    rule_divergent_barrier(ctx, &exec, &gdiv, &events, &mut out);
+    rule_race_store(ctx, &exec, &mut out);
+    rule_race_load(ctx, &exec, &phase, &mut out);
+    rule_dma_no_wait(ctx, &mut out);
+    rule_dma_config(ctx, &mut out);
+    rule_intrinsic_clobber(ctx, &mut out);
+    rule_undef_read(ctx, &mut out);
+    rule_wfi_no_wake(ctx, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------
+// Executor analysis.
+
+/// If branch `b` is the idiomatic hart-0 guard — one operand is the
+/// raw `mhartid` value, the other is the constant 0 — return the CFG
+/// successor hart 0 takes. `bnez id` falls through on hart 0; `beqz id`
+/// takes the branch.
+fn hart0_side(ctx: &RuleCtx, b: usize) -> Option<usize> {
+    let Instr::Branch { cond, target, .. } = ctx.instrs[b] else { return None };
+    let (r1, r2) = ctx.facts[b].branch_ops?;
+    let guard = (r1.kind == ValKind::CoreId && r2.as_const() == Some(0))
+        || (r2.kind == ValKind::CoreId && r1.as_const() == Some(0));
+    if !guard {
+        return None;
+    }
+    let fall = if b + 1 < ctx.cfg.n { b + 1 } else { ctx.cfg.n };
+    match cond {
+        CondOp::Ne => Some(fall),
+        CondOp::Eq => Some((target as usize).min(ctx.cfg.n)),
+        _ => None,
+    }
+}
+
+/// Fixpoint over control dependences: for every instruction, who
+/// reaches it within a cluster ([`Exec`]) and whether *clusters* may
+/// disagree about reaching it (`gdiv`, for the global-barrier rule).
+pub fn executor_analysis(ctx: &RuleCtx) -> (Vec<Exec>, Vec<bool>) {
+    let n = ctx.instrs.len();
+    let mut exec = vec![Exec::All; n + 1];
+    let mut gdiv = vec![false; n + 1];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..=n {
+            let mut e = Exec::All;
+            let mut g = false;
+            for &(b, s) in &ctx.cd[i] {
+                if b >= n || !ctx.facts[b].reachable {
+                    continue;
+                }
+                let Some((r1, r2)) = ctx.facts[b].branch_ops else { continue };
+                let tainted = r1.core || r1.undef || r2.core || r2.undef;
+                let contrib = if tainted {
+                    if hart0_side(ctx, b) == Some(s) {
+                        exec[b].max(Exec::Core0)
+                    } else {
+                        Exec::Divergent
+                    }
+                } else {
+                    exec[b]
+                };
+                e = e.max(contrib);
+                g = g
+                    || gdiv[b]
+                    || r1.core
+                    || r1.cluster
+                    || r1.undef
+                    || r2.core
+                    || r2.cluster
+                    || r2.undef;
+            }
+            if e != exec[i] || g != gdiv[i] {
+                exec[i] = e;
+                gdiv[i] = g;
+                changed = true;
+            }
+        }
+    }
+    (exec, gdiv)
+}
+
+// ---------------------------------------------------------------------
+// Barrier events and phases.
+
+/// Indexes of the *outer* barrier spans — the synchronization events
+/// that delimit phases. The local barriers nested inside a
+/// `global_barrier` fold into their encloser.
+fn barrier_events(ctx: &RuleCtx) -> Vec<usize> {
+    (0..ctx.spans.len())
+        .filter(|&e| {
+            let sp = &ctx.spans[e];
+            if !matches!(sp.kind, IntrinsicKind::Barrier | IntrinsicKind::GlobalBarrier) {
+                return false;
+            }
+            !ctx.spans.iter().enumerate().any(|(o, osp)| {
+                o != e
+                    && osp.encloses(sp)
+                    && (osp.first_line < sp.first_line || osp.last_line > sp.last_line)
+            })
+        })
+        .collect()
+}
+
+/// First instruction inside span `e`, if any.
+fn span_first_instr(ctx: &RuleCtx, e: usize) -> Option<usize> {
+    (0..ctx.instrs.len()).find(|&i| ctx.spans[e].contains_line(ctx.lines[i]))
+}
+
+/// The join instruction after span `e`: the first instruction past its
+/// last line. Every path through a barrier converges there, so "this
+/// barrier completed" is exactly "the join dominates you".
+fn span_join_instr(ctx: &RuleCtx, e: usize) -> Option<usize> {
+    (0..ctx.instrs.len()).find(|&i| ctx.lines[i] > ctx.spans[e].last_line)
+}
+
+/// Per-instruction phase signature: bit `k` is set when barrier event
+/// `k`'s join point dominates the instruction — i.e. that barrier has
+/// definitely completed on every path here. Two accesses with equal
+/// signatures have no barrier *known* to separate them. Capped at 128
+/// events (documented in `docs/ANALYSIS.md`).
+fn phase_masks(ctx: &RuleCtx, events: &[usize]) -> Vec<u128> {
+    let n = ctx.instrs.len();
+    let mut phase = vec![0u128; n];
+    for (k, &e) in events.iter().take(128).enumerate() {
+        let Some(join) = span_join_instr(ctx, e) else { continue };
+        for (i, p) in phase.iter_mut().enumerate() {
+            if dominates(join, i, ctx.idom) {
+                *p |= 1 << k;
+            }
+        }
+    }
+    phase
+}
+
+// ---------------------------------------------------------------------
+// Rules.
+
+fn rule_divergent_barrier(
+    ctx: &RuleCtx,
+    exec: &[Exec],
+    gdiv: &[bool],
+    events: &[usize],
+    out: &mut Vec<RawFinding>,
+) {
+    for &e in events {
+        let Some(anchor) = span_first_instr(ctx, e) else { continue };
+        if !ctx.facts[anchor].reachable {
+            continue;
+        }
+        let kind = ctx.spans[e].kind;
+        if ctx.num_cores >= 2 {
+            match exec[anchor] {
+                Exec::Core0 => out.push((
+                    Rule::DivergentBarrier,
+                    anchor,
+                    format!(
+                        "{} is reached only by hart 0 (it sits under a core_id guard); \
+                         every core must participate in a barrier, or none — the guarded \
+                         core would wait forever for arrivals that never come",
+                        kind_name(kind)
+                    ),
+                )),
+                Exec::Divergent => out.push((
+                    Rule::DivergentBarrier,
+                    anchor,
+                    format!(
+                        "{} is under core_id-divergent control flow; cores that skip it \
+                         leave the participants deadlocked at the barrier",
+                        kind_name(kind)
+                    ),
+                )),
+                Exec::All => {}
+            }
+        }
+        if kind == IntrinsicKind::GlobalBarrier
+            && ctx.num_clusters >= 2
+            && exec[anchor] == Exec::All
+            && gdiv[anchor]
+        {
+            out.push((
+                Rule::DivergentBarrier,
+                anchor,
+                "global_barrier is under cluster-divergent control flow; clusters that \
+                 skip it leave the fabric-wide barrier waiting forever"
+                    .to_string(),
+            ));
+        }
+    }
+    // Raw (non-intrinsic) stores to the global-barrier register: the
+    // protocol is one arrival pulse per cluster, from hart 0.
+    if ctx.num_cores >= 2 {
+        for (i, ins) in ctx.instrs.iter().enumerate() {
+            if !matches!(ins, Instr::Store { .. } | Instr::StorePost { .. }) {
+                continue;
+            }
+            if !ctx.facts[i].reachable || ctx.span_of[i].is_some() {
+                continue;
+            }
+            if ctx.facts[i].addr.as_const() == Some(CTRL_BASE + CTRL_GBARRIER)
+                && exec[i] != Exec::Core0
+            {
+                out.push((
+                    Rule::DivergentBarrier,
+                    i,
+                    "raw store to the GBARRIER control register must be issued by exactly \
+                     one core per cluster — guard it with a hart-0 branch (or use the \
+                     global_barrier intrinsic)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+fn rule_race_store(ctx: &RuleCtx, exec: &[Exec], out: &mut Vec<RawFinding>) {
+    if ctx.num_cores < 2 {
+        return;
+    }
+    for (i, ins) in ctx.instrs.iter().enumerate() {
+        if !matches!(ins, Instr::Store { .. } | Instr::StorePost { .. }) {
+            continue;
+        }
+        if !ctx.facts[i].reachable || ctx.span_of[i].is_some() || exec[i] != Exec::All {
+            continue;
+        }
+        let addr = ctx.facts[i].addr;
+        if addr.kind == ValKind::Bot || addr.core || addr.undef {
+            continue;
+        }
+        if let Some(a) = addr.as_const() {
+            if classify(a, ctx.sync_addrs) != AddrClass::Data {
+                continue;
+            }
+            out.push((
+                Rule::RaceStore,
+                i,
+                format!(
+                    "every core stores to the same address {a:#010x}; concurrent \
+                     same-address stores race — derive the pointer from core_id or \
+                     guard the store with a hart-0 branch"
+                ),
+            ));
+        } else {
+            out.push((
+                Rule::RaceStore,
+                i,
+                "every core stores through the same (uniform) pointer; concurrent \
+                 same-address stores race — derive the pointer from core_id or guard \
+                 the store with a hart-0 branch"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn width_bytes(w: Width) -> u32 {
+    match w {
+        Width::Byte => 1,
+        Width::Half => 2,
+        Width::Word => 4,
+    }
+}
+
+fn store_width(ins: &Instr) -> Option<Width> {
+    match ins {
+        Instr::Store { width, .. } | Instr::StorePost { width, .. } => Some(*width),
+        _ => None,
+    }
+}
+
+fn load_width(ins: &Instr) -> Option<Width> {
+    match ins {
+        Instr::Load { width, .. }
+        | Instr::LoadPost { width, .. }
+        | Instr::LoadReg { width, .. } => Some(*width),
+        _ => None,
+    }
+}
+
+fn rule_race_load(ctx: &RuleCtx, exec: &[Exec], phase: &[u128], out: &mut Vec<RawFinding>) {
+    if ctx.num_cores < 2 {
+        return;
+    }
+    // Hart-0 stores to constant shared-data addresses…
+    let stores: Vec<(usize, u32, u32)> = ctx
+        .instrs
+        .iter()
+        .enumerate()
+        .filter_map(|(i, ins)| {
+            let w = store_width(ins)?;
+            if !ctx.facts[i].reachable || ctx.span_of[i].is_some() || exec[i] != Exec::Core0 {
+                return None;
+            }
+            let a = ctx.facts[i].addr.as_const()?;
+            if classify(a, ctx.sync_addrs) != AddrClass::Data {
+                return None;
+            }
+            Some((i, a, width_bytes(w)))
+        })
+        .collect();
+    if stores.is_empty() {
+        return;
+    }
+    // …read by every core in the same barrier phase.
+    for (i, ins) in ctx.instrs.iter().enumerate() {
+        let Some(w) = load_width(ins) else { continue };
+        if !ctx.facts[i].reachable || ctx.span_of[i].is_some() || exec[i] != Exec::All {
+            continue;
+        }
+        let Some(a) = ctx.facts[i].addr.as_const() else { continue };
+        if classify(a, ctx.sync_addrs) != AddrClass::Data {
+            continue;
+        }
+        let wl = width_bytes(w);
+        if let Some(&(s, sa, _)) =
+            stores.iter().find(|&&(s, sa, sw)| {
+                sa < a + wl && a < sa + sw && phase[s] == phase[i]
+            })
+        {
+            out.push((
+                Rule::RaceLoad,
+                i,
+                format!(
+                    "load of {a:#010x} races with the hart-0 store at I{s:04} \
+                     ({sa:#010x}) — no barrier separates the serial write from the \
+                     all-cores read; insert a barrier between them"
+                ),
+            ));
+        }
+    }
+}
+
+fn rule_dma_no_wait(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
+    for (i, ins) in ctx.instrs.iter().enumerate() {
+        if !matches!(ins, Instr::Store { .. } | Instr::StorePost { .. }) {
+            continue;
+        }
+        if !ctx.facts[i].reachable {
+            continue;
+        }
+        let Some(a) = ctx.facts[i].addr.as_const() else { continue };
+        let AddrClass::Ctrl(off) = classify(a, ctx.sync_addrs) else { continue };
+        // Only transfers whose *destination* is core-visible SPM are
+        // checked: descriptor L2 fields are L2 offsets, not the
+        // absolute addresses cores load from (see docs/ANALYSIS.md).
+        let (status_off, dest_slot, bytes_slot, which) = match off {
+            o if o == CTRL_DMA_TRIGGER => (CTRL_DMA_STATUS, 1usize, 2usize, "DMA"),
+            o if o == CTRL_SYSDMA_TRIGGER => (CTRL_SYSDMA_STATUS, 4usize, 5usize, "SYSDMA"),
+            _ => continue,
+        };
+        if ctx.facts[i].value.as_const() != Some(1) {
+            continue;
+        }
+        let Some(dest) = ctx.facts[i].ctrl[dest_slot].as_const() else { continue };
+        let Some(bytes) = ctx.facts[i].ctrl[bytes_slot].as_const() else { continue };
+        if bytes == 0 {
+            continue;
+        }
+        // Walk forward from the trigger; a poll of the matching status
+        // register retires the hazard on that path.
+        let n = ctx.instrs.len();
+        let mut visited = vec![false; n];
+        let mut stack: Vec<usize> = ctx.cfg.succs[i].iter().copied().filter(|&s| s < n).collect();
+        let mut flagged: Vec<usize> = Vec::new();
+        while let Some(v) = stack.pop() {
+            if visited[v] {
+                continue;
+            }
+            visited[v] = true;
+            if load_width(&ctx.instrs[v]).is_some()
+                && ctx.facts[v].addr.as_const() == Some(CTRL_BASE + status_off)
+            {
+                continue; // status poll: this path is safe past here
+            }
+            if ctx.span_of[v].is_none() {
+                if let Some(la) = ctx.facts[v].addr.as_const() {
+                    if load_width(&ctx.instrs[v]).is_some()
+                        && la >= dest
+                        && la < dest.wrapping_add(bytes)
+                        && !flagged.contains(&v)
+                    {
+                        flagged.push(v);
+                    }
+                }
+            }
+            for &s in &ctx.cfg.succs[v] {
+                if s < n && !visited[s] {
+                    stack.push(s);
+                }
+            }
+        }
+        flagged.sort_unstable();
+        for v in flagged {
+            out.push((
+                Rule::DmaNoWait,
+                v,
+                format!(
+                    "reads the {which} destination buffer ({:#010x}, {bytes} bytes from \
+                     {dest:#010x}) on a path from the trigger at I{i:04} with no \
+                     {which}_STATUS poll in between; the transfer may not have landed",
+                    ctx.facts[v].addr.as_const().unwrap_or(dest),
+                ),
+            ));
+        }
+    }
+}
+
+fn rule_dma_config(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
+    for (i, ins) in ctx.instrs.iter().enumerate() {
+        if !matches!(ins, Instr::Store { .. } | Instr::StorePost { .. }) {
+            continue;
+        }
+        if !ctx.facts[i].reachable {
+            continue;
+        }
+        let Some(a) = ctx.facts[i].addr.as_const() else { continue };
+        let AddrClass::Ctrl(off) = classify(a, ctx.sync_addrs) else { continue };
+        let required: &[usize] = if off == CTRL_DMA_TRIGGER {
+            &[0, 1, 2]
+        } else if off == CTRL_SYSDMA_TRIGGER {
+            match ctx.facts[i].value.as_const() {
+                Some(2) | Some(3) => &[3, 4, 5, 6, 7],
+                _ => &[3, 4, 5],
+            }
+        } else {
+            continue;
+        };
+        for &slot in required {
+            if ctx.facts[i].ctrl[slot].undef {
+                out.push((
+                    Rule::DmaConfig,
+                    i,
+                    format!(
+                        "DMA triggered with descriptor register {} never written on \
+                         some path to the trigger",
+                        slot_name(slot)
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+pub fn kind_name(k: IntrinsicKind) -> &'static str {
+    match k {
+        IntrinsicKind::Barrier => "barrier",
+        IntrinsicKind::GlobalBarrier => "global_barrier",
+        IntrinsicKind::GrabChunk => "grab_chunk",
+        IntrinsicKind::DmaStart => "dma_start",
+        IntrinsicKind::DmaWait => "dma_wait",
+        IntrinsicKind::PollIdle => "poll_idle",
+        IntrinsicKind::SysDma => "sysdma_transfer",
+        IntrinsicKind::TraceMarker => "trace_marker",
+        IntrinsicKind::ClusterId => "cluster_id",
+    }
+}
+
+fn rule_intrinsic_clobber(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
+    for (i, f) in ctx.facts.iter().enumerate() {
+        if !f.reachable {
+            continue;
+        }
+        for &(reg, s) in &f.clobber_uses {
+            out.push((
+                Rule::IntrinsicClobber,
+                i,
+                format!(
+                    "reads {}, whose reaching definition is scratch clobbered by the \
+                     {} intrinsic; copy the value to a saved register before the \
+                     intrinsic",
+                    reg.name(),
+                    kind_name(ctx.spans[s].kind)
+                ),
+            ));
+        }
+    }
+}
+
+fn rule_undef_read(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
+    for (i, f) in ctx.facts.iter().enumerate() {
+        if !f.reachable {
+            continue;
+        }
+        for &reg in &f.undef_uses {
+            out.push((
+                Rule::UndefRead,
+                i,
+                format!("reads {} before any definition on some path", reg.name()),
+            ));
+        }
+    }
+}
+
+fn rule_wfi_no_wake(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
+    // Any store to a wake register, anywhere (intrinsics included),
+    // counts as a wake source for the whole program.
+    let has_wake = ctx.instrs.iter().enumerate().any(|(i, ins)| {
+        if !matches!(ins, Instr::Store { .. } | Instr::StorePost { .. }) {
+            return false;
+        }
+        if !ctx.facts[i].reachable {
+            return false;
+        }
+        match ctx.facts[i].addr.as_const().map(|a| classify(a, ctx.sync_addrs)) {
+            Some(AddrClass::Ctrl(off)) => (CTRL_WAKE_CORE..=CTRL_WAKE_GROUP).contains(&off),
+            _ => false,
+        }
+    });
+    if has_wake {
+        return;
+    }
+    for (i, ins) in ctx.instrs.iter().enumerate() {
+        if !matches!(ins, Instr::Wfi) {
+            continue;
+        }
+        if !ctx.facts[i].reachable || ctx.span_of[i].is_some() {
+            continue;
+        }
+        out.push((
+            Rule::WfiNoWake,
+            i,
+            "wfi with no store to any wake register (WAKE_CORE/ALL/TILE/GROUP) anywhere \
+             in the program; a core parked here sleeps forever"
+                .to_string(),
+        ));
+    }
+}

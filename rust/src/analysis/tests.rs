@@ -1,0 +1,432 @@
+//! Verifier tests: the registered-workload clean sweep, seeded-bug
+//! workloads pinning each rule's exact diagnostic, and minimal
+//! `lint_source` negatives for every rule in the catalog.
+
+use std::collections::HashMap;
+
+use crate::config::{ClusterConfig, SystemConfig};
+use crate::kernels::rt::RtLayout;
+use crate::mem::{
+    CTRL_BASE, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS, CTRL_DMA_TRIGGER,
+    CTRL_WAKE_ALL,
+};
+use crate::runtime::{
+    workload_by_name, workload_names, AsmBuilder, Machine, Target, TargetConfig, Workload,
+};
+
+use super::{lint_source, lint_workload, Finding, Rule};
+
+// ---------------------------------------------------------------------
+// Helpers.
+
+/// Lint a hand-built program with the harness symbols the builder
+/// intrinsics reference (geometry, wake/DMA registers, runtime words).
+fn lint_built(cores: usize, build: impl FnOnce(&mut AsmBuilder)) -> Vec<Finding> {
+    let mut b = AsmBuilder::new();
+    b.define("NUM_CORES", cores as u32);
+    b.define("CTRL_WAKE_ALL_ADDR", CTRL_BASE + CTRL_WAKE_ALL);
+    b.define("rt_barrier_count", 0x1000);
+    b.define("rt_barrier_epoch", 0x1004);
+    b.define("rt_work_counter", 0x1008);
+    b.define("DMA_L2_ADDR", CTRL_BASE + CTRL_DMA_L2);
+    b.define("DMA_SPM_ADDR", CTRL_BASE + CTRL_DMA_SPM);
+    b.define("DMA_BYTES_ADDR", CTRL_BASE + CTRL_DMA_BYTES);
+    b.define("DMA_TRIGGER_ADDR", CTRL_BASE + CTRL_DMA_TRIGGER);
+    b.define("DMA_STATUS_ADDR", CTRL_BASE + CTRL_DMA_STATUS);
+    build(&mut b);
+    let (src, sym, spans) = b.finish_with_spans();
+    lint_source(&src, &sym, &spans, cores, 1).expect("test program assembles")
+}
+
+fn ids(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule.id()).collect()
+}
+
+fn render(findings: &[Finding]) -> String {
+    findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+// ---------------------------------------------------------------------
+// Every registered workload lints clean, on both targets.
+
+#[test]
+fn registered_workloads_lint_clean() {
+    let cases = [
+        (Target::Cluster, TargetConfig::Cluster(ClusterConfig::with_cores(16))),
+        (Target::System, TargetConfig::System(SystemConfig::with_cores(2, 16))),
+    ];
+    for (target, tcfg) in cases {
+        for name in workload_names(target) {
+            let w = workload_by_name(name, target, 16).expect("registry name resolves");
+            let out = lint_workload(w.as_ref(), &tcfg);
+            assert!(
+                out.findings.is_empty(),
+                "{name} on {} target has lint findings:\n{}",
+                target.name(),
+                render(&out.findings)
+            );
+            assert!(
+                out.allowed.is_empty(),
+                "{name} on {} target leans on allowances; built-in kernels must be \
+                 findings-free without them",
+                target.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn rule_ids_round_trip() {
+    for r in Rule::ALL {
+        assert_eq!(Rule::from_id(r.id()), Some(r));
+    }
+    assert_eq!(Rule::from_id("no-such-rule"), None);
+}
+
+// ---------------------------------------------------------------------
+// Seeded-bug workloads: realistic kernels with one planted hazard each.
+
+/// axpy with the result pointer *not* derived from core_id: every core
+/// hammers the same element.
+struct RacyAxpy;
+
+impl Workload for RacyAxpy {
+    fn name(&self) -> &'static str {
+        "racy-axpy"
+    }
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let rt = RtLayout::new(cfg.cluster());
+        rt.add_symbols(b.symbols_mut());
+        b.define("vec", rt.data_base);
+        b.la("s0", "vec");
+        b.li("s1", 3);
+        b.lw("t0", 0, "s0");
+        b.mul("t0", "t0", "s1");
+        b.sw("t0", 0, "s0"); // bug: same address on every core
+        b.barrier(0);
+        b.halt();
+    }
+    fn setup(&self, _m: &mut Machine) {}
+    fn verify(&self, _m: &mut Machine) -> Result<(), String> {
+        Ok(())
+    }
+    fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
+        0
+    }
+}
+
+/// Same program, but with the hazard documented as a workload allowance.
+struct RacyAxpyAllowed;
+
+impl Workload for RacyAxpyAllowed {
+    fn name(&self) -> &'static str {
+        "racy-axpy-allowed"
+    }
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        RacyAxpy.build(cfg, b)
+    }
+    fn setup(&self, _m: &mut Machine) {}
+    fn verify(&self, _m: &mut Machine) -> Result<(), String> {
+        Ok(())
+    }
+    fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
+        0
+    }
+    fn lint_allows(&self) -> &'static [(&'static str, &'static str)] {
+        &[("race-store", "test fixture: idempotent same-value store, benign by construction")]
+    }
+}
+
+/// matmul-shaped program whose barrier sits inside a hart-0 guard: the
+/// other cores never arrive.
+struct UnbalancedMatmul;
+
+impl Workload for UnbalancedMatmul {
+    fn name(&self) -> &'static str {
+        "unbalanced-matmul"
+    }
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let rt = RtLayout::new(cfg.cluster());
+        rt.add_symbols(b.symbols_mut());
+        b.core_id("t0");
+        b.bnez("t0", "mm_done");
+        b.barrier(0); // bug: only hart 0 reaches the barrier
+        b.label("mm_done");
+        b.halt();
+    }
+    fn setup(&self, _m: &mut Machine) {}
+    fn verify(&self, _m: &mut Machine) -> Result<(), String> {
+        Ok(())
+    }
+    fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
+        0
+    }
+}
+
+/// Double-buffered pipeline that reads the staged buffer without ever
+/// polling DMA_STATUS.
+struct NoWaitDoublebuf;
+
+impl Workload for NoWaitDoublebuf {
+    fn name(&self) -> &'static str {
+        "nowait-doublebuf"
+    }
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let rt = RtLayout::new(cfg.cluster());
+        rt.add_symbols(b.symbols_mut());
+        b.define("staged", rt.data_base);
+        b.dma_start("0", "staged", "64", true);
+        b.la("s0", "staged");
+        b.lw("s1", 0, "s0"); // bug: consumes the buffer before dma_wait
+        b.dma_wait(0);
+        b.halt();
+    }
+    fn setup(&self, _m: &mut Machine) {}
+    fn verify(&self, _m: &mut Machine) -> Result<(), String> {
+        Ok(())
+    }
+    fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
+        0
+    }
+}
+
+fn cluster16() -> TargetConfig {
+    TargetConfig::Cluster(ClusterConfig::with_cores(16))
+}
+
+#[test]
+fn seeded_racy_axpy_reports_race_store() {
+    let out = lint_workload(&RacyAxpy, &cluster16());
+    assert_eq!(ids(&out.findings), ["race-store"], "got:\n{}", render(&out.findings));
+    let f = &out.findings[0];
+    assert!(
+        f.msg.contains("every core stores to the same address"),
+        "unexpected diagnostic: {f}"
+    );
+    assert!(f.msg.contains("derive the pointer from core_id"), "unexpected diagnostic: {f}");
+}
+
+#[test]
+fn seeded_race_is_suppressed_by_documented_allowance() {
+    let out = lint_workload(&RacyAxpyAllowed, &cluster16());
+    assert!(out.findings.is_empty(), "allowance did not suppress:\n{}", render(&out.findings));
+    assert_eq!(out.allowed.len(), 1);
+    let (f, why) = &out.allowed[0];
+    assert_eq!(f.rule, Rule::RaceStore);
+    assert!(why.contains("test fixture"));
+}
+
+#[test]
+fn seeded_unbalanced_matmul_reports_divergent_barrier() {
+    let out = lint_workload(&UnbalancedMatmul, &cluster16());
+    assert_eq!(ids(&out.findings), ["divergent-barrier"], "got:\n{}", render(&out.findings));
+    let f = &out.findings[0];
+    assert!(f.msg.contains("barrier is reached only by hart 0"), "unexpected diagnostic: {f}");
+}
+
+#[test]
+fn seeded_nowait_doublebuf_reports_dma_no_wait() {
+    let out = lint_workload(&NoWaitDoublebuf, &cluster16());
+    assert_eq!(ids(&out.findings), ["dma-no-wait"], "got:\n{}", render(&out.findings));
+    let f = &out.findings[0];
+    assert!(f.msg.contains("reads the DMA destination buffer"), "unexpected diagnostic: {f}");
+    assert!(f.msg.contains("no DMA_STATUS poll"), "unexpected diagnostic: {f}");
+}
+
+// ---------------------------------------------------------------------
+// Minimal lint_source negatives for the remaining rules.
+
+#[test]
+fn divergent_control_flow_barrier_is_flagged() {
+    // The guard is core-derived but not the raw hartid (srli degrades
+    // it), so this is divergence, not a hart-0 guard.
+    let f = lint_built(16, |b| {
+        b.csrr("t0", "mhartid");
+        b.srli("t0", "t0", 1);
+        b.bnez("t0", "skip");
+        b.barrier(0);
+        b.label("skip");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["divergent-barrier"], "got:\n{}", render(&f));
+    assert!(
+        f[0].msg.contains("under core_id-divergent control flow"),
+        "unexpected diagnostic: {}",
+        f[0]
+    );
+}
+
+#[test]
+fn uniform_pointer_store_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.li("t0", 0x2000);
+        b.li("t1", 7);
+        b.sw("t1", 0, "t0");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["race-store"], "got:\n{}", render(&f));
+    assert!(f[0].msg.contains("every core stores to the same address"), "got: {}", f[0]);
+}
+
+#[test]
+fn serial_write_read_without_barrier_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.core_id("t0");
+        b.bnez("t0", "after_init");
+        b.li("t1", 0x2000);
+        b.li("t2", 99);
+        b.sw("t2", 0, "t1");
+        b.label("after_init");
+        b.li("t3", 0x2000);
+        b.lw("t4", 0, "t3");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["race-load"], "got:\n{}", render(&f));
+    assert!(f[0].msg.contains("races with the hart-0 store"), "got: {}", f[0]);
+    assert!(f[0].msg.contains("insert a barrier"), "got: {}", f[0]);
+}
+
+#[test]
+fn barrier_between_serial_write_and_read_passes() {
+    let f = lint_built(16, |b| {
+        b.core_id("t0");
+        b.bnez("t0", "after_init");
+        b.li("t1", 0x2000);
+        b.li("t2", 99);
+        b.sw("t2", 0, "t1");
+        b.label("after_init");
+        b.barrier(0);
+        b.li("t3", 0x2000);
+        b.lw("t4", 0, "t3");
+        b.halt();
+    });
+    assert!(f.is_empty(), "barrier-separated phases misreported:\n{}", render(&f));
+}
+
+#[test]
+fn unconfigured_dma_trigger_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.li("t0", 1);
+        b.la("t1", "DMA_TRIGGER_ADDR");
+        b.sw("t0", 0, "t1");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["dma-config", "dma-config", "dma-config"], "got:\n{}", render(&f));
+    let msgs: Vec<&str> = f.iter().map(|x| x.msg.as_str()).collect();
+    for slot in ["DMA_L2", "DMA_SPM", "DMA_BYTES"] {
+        assert!(
+            msgs.iter().any(|m| m.contains(slot) && m.contains("never written")),
+            "missing {slot} diagnostic:\n{}",
+            render(&f)
+        );
+    }
+}
+
+#[test]
+fn reading_intrinsic_scratch_after_barrier_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.li("t3", 5);
+        b.barrier(0);
+        b.mv("a0", "t3"); // t3 is barrier scratch
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["intrinsic-clobber"], "got:\n{}", render(&f));
+    assert!(
+        f[0].msg.contains("scratch clobbered by the barrier intrinsic"),
+        "unexpected diagnostic: {}",
+        f[0]
+    );
+    assert!(f[0].msg.contains("t3"), "diagnostic names the register: {}", f[0]);
+}
+
+#[test]
+fn saved_register_survives_barrier_clean() {
+    let f = lint_built(16, |b| {
+        b.li("s0", 5);
+        b.barrier(0);
+        b.mv("a0", "s0");
+        b.halt();
+    });
+    assert!(f.is_empty(), "saved register misreported:\n{}", render(&f));
+}
+
+#[test]
+fn read_before_definition_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.add("a0", "a1", "a2");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["undef-read", "undef-read"], "got:\n{}", render(&f));
+    assert!(f[0].msg.contains("before any definition"), "got: {}", f[0]);
+    let named: String = f.iter().map(|x| x.msg.clone()).collect();
+    assert!(named.contains("a1") && named.contains("a2"), "got:\n{}", render(&f));
+}
+
+#[test]
+fn wfi_without_wake_source_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.raw("wfi");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["wfi-no-wake"], "got:\n{}", render(&f));
+    assert!(f[0].msg.contains("sleeps forever"), "got: {}", f[0]);
+}
+
+#[test]
+fn raw_gbarrier_store_from_all_cores_is_flagged() {
+    let f = lint_built(16, |b| {
+        b.define("GBARRIER_ADDR", CTRL_BASE + crate::mem::CTRL_GBARRIER);
+        b.la("t0", "GBARRIER_ADDR");
+        b.sw("zero", 0, "t0");
+        b.halt();
+    });
+    assert_eq!(ids(&f), ["divergent-barrier"], "got:\n{}", render(&f));
+    assert!(f[0].msg.contains("GBARRIER"), "got: {}", f[0]);
+    assert!(f[0].msg.contains("hart-0"), "got: {}", f[0]);
+}
+
+#[test]
+fn findings_carry_label_provenance() {
+    let f = lint_built(16, |b| {
+        b.label("kernel_body");
+        b.li("t0", 0x2000);
+        b.li("t1", 7);
+        b.sw("t1", 0, "t0");
+        b.halt();
+    });
+    assert_eq!(f.len(), 1, "got:\n{}", render(&f));
+    let label = f[0].label.as_deref().unwrap_or("<none>");
+    assert!(label.starts_with("kernel_body"), "label provenance missing: {}", f[0]);
+    assert!(f[0].to_string().contains("[race-store]"), "display lacks rule id: {}", f[0]);
+}
+
+// ---------------------------------------------------------------------
+// Purity: linting is static.
+
+#[test]
+fn lint_runs_zero_simulator_cycles() {
+    // lint_workload never constructs a Cluster/System; this test guards
+    // the contract structurally — a workload whose setup/verify panic
+    // lints fine because lint only calls build().
+    struct PanicsIfRun;
+    impl Workload for PanicsIfRun {
+        fn name(&self) -> &'static str {
+            "panics-if-run"
+        }
+        fn build(&self, _cfg: &TargetConfig, b: &mut AsmBuilder) {
+            b.halt();
+        }
+        fn setup(&self, _m: &mut Machine) {
+            panic!("lint must not set up a machine");
+        }
+        fn verify(&self, _m: &mut Machine) -> Result<(), String> {
+            panic!("lint must not verify");
+        }
+        fn total_ops(&self, _cfg: &TargetConfig) -> u64 {
+            panic!("lint must not cost-model");
+        }
+    }
+    let out = lint_workload(&PanicsIfRun, &cluster16());
+    assert!(out.findings.is_empty());
+    assert!(out.allowed.is_empty());
+}

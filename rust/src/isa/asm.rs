@@ -138,13 +138,37 @@ fn operands(rest: &str) -> Vec<&str> {
     rest.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect()
 }
 
+/// Source-level provenance produced alongside the instruction stream by
+/// [`assemble_debug`]: which source line each instruction expanded from,
+/// and where every label landed. Consumed by the static analyzer
+/// (`analysis` module) to map builder intrinsic spans and diagnostics
+/// back onto instruction indexes.
+#[derive(Debug, Clone)]
+pub struct AsmDebug {
+    /// 1-based source line of each instruction (parallel to the
+    /// instruction vector; pseudo-expansions share their line).
+    pub lines: Vec<u32>,
+    /// Label name → index of the instruction it points at.
+    pub labels: HashMap<String, u32>,
+}
+
 /// Assemble `src` into a flat instruction vector.
 ///
 /// `symbols` maps names to 32-bit values (typically data buffer addresses
 /// chosen by the harness); they can be used wherever an immediate is valid
 /// and with `la`/`li`.
 pub fn assemble(src: &str, symbols: &HashMap<String, u32>) -> Result<Vec<Instr>, AsmError> {
+    assemble_debug(src, symbols).map(|(instrs, _)| instrs)
+}
+
+/// [`assemble`], additionally returning per-instruction [`AsmDebug`]
+/// provenance. The instruction stream is identical to `assemble`'s.
+pub fn assemble_debug(
+    src: &str,
+    symbols: &HashMap<String, u32>,
+) -> Result<(Vec<Instr>, AsmDebug), AsmError> {
     let mut pre: Vec<Pre> = Vec::new();
+    let mut pre_lines: Vec<u32> = Vec::new();
     let mut labels: HashMap<String, u32> = HashMap::new();
 
     for (lineno, raw) in src.lines().enumerate() {
@@ -187,11 +211,13 @@ pub fn assemble(src: &str, symbols: &HashMap<String, u32>) -> Result<Vec<Instr>,
             while pre.len() % n != 0 {
                 pre.push(Pre::Ready(Instr::Nop));
             }
+            pre_lines.resize(pre.len(), lineno as u32 + 1);
             continue;
         }
         let ops = operands(rest);
         ctx.line = lineno + 1;
         parse_instr(&mut ctx, mnemonic, &ops, &mut pre)?;
+        pre_lines.resize(pre.len(), lineno as u32 + 1);
     }
 
     // Second pass: resolve labels.
@@ -211,7 +237,7 @@ pub fn assemble(src: &str, symbols: &HashMap<String, u32>) -> Result<Vec<Instr>,
             Pre::Jal { rd, label } => Instr::Jal { rd, target: resolve(&label)? },
         });
     }
-    Ok(out)
+    Ok((out, AsmDebug { lines: pre_lines, labels }))
 }
 
 fn parse_instr(

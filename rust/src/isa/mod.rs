@@ -11,7 +11,7 @@ mod asm;
 mod instr;
 mod program;
 
-pub use asm::{assemble, AsmError};
+pub use asm::{assemble, assemble_debug, AsmDebug, AsmError};
 pub use instr::{AmoOp, CondOp, Csr, Instr, OpKind, Reg, Width};
 pub use program::Program;
 

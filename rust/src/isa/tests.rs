@@ -245,6 +245,112 @@ fn disasm_asm_roundtrip() {
     });
 }
 
+/// Every `Instr` variant must report its defs and uses through
+/// `rd()`/`sources()` — the static verifier (`analysis::absint`) relies
+/// on these being complete. Pins the two deliberate asymmetries: x0 is
+/// never a def, and post-increment base writeback (`rs1`) is *not*
+/// reported by `rd()` (the scoreboard models it separately).
+#[test]
+fn every_variant_reports_defs_and_uses() {
+    use super::instr::Width;
+    check("instr defs/uses complete", |g| {
+        let rd = Reg(g.u32(1..32) as u8); // non-zero so rd() is Some
+        let rs1 = Reg(g.u32(0..32) as u8);
+        let rs2 = Reg(g.u32(0..32) as u8);
+        let op = *g.choose(&[OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Xor, OpKind::PMinu]);
+        let width = *g.choose(&[Width::Byte, Width::Half, Width::Word]);
+        let imm = g.i32(-2048..2048);
+        let s1 = Some(rs1);
+        let s2 = Some(rs2);
+        // (instr, expected rd, expected sources) — one row per variant.
+        let table: Vec<(Instr, Option<Reg>, [Option<Reg>; 3])> = vec![
+            (Instr::Op { op, rd, rs1, rs2 }, Some(rd), [s1, s2, None]),
+            (Instr::OpImm { op, rd, rs1, imm }, Some(rd), [s1, None, None]),
+            (Instr::Lui { rd, imm }, Some(rd), [None, None, None]),
+            (Instr::Auipc { rd, imm }, Some(rd), [None, None, None]),
+            (Instr::Load { rd, rs1, imm, width, signed: g.bool() }, Some(rd), [s1, None, None]),
+            (Instr::Store { rs2, rs1, imm, width }, None, [s1, s2, None]),
+            // Post-increment writes back rs1 too, but rd() deliberately
+            // reports only the load destination / nothing for stores.
+            (
+                Instr::LoadPost { rd, rs1, imm, width, signed: g.bool() },
+                Some(rd),
+                [s1, None, None],
+            ),
+            (Instr::StorePost { rs2, rs1, imm, width }, None, [s1, s2, None]),
+            (
+                Instr::LoadReg { rd, rs1, rs2, width, signed: g.bool() },
+                Some(rd),
+                [s1, s2, None],
+            ),
+            // MAC/MSU read their destination as the accumulator.
+            (Instr::Mac { rd, rs1, rs2 }, Some(rd), [s1, s2, Some(rd)]),
+            (Instr::Msu { rd, rs1, rs2 }, Some(rd), [s1, s2, Some(rd)]),
+            (
+                Instr::Branch { cond: *g.choose(&[CondOp::Eq, CondOp::Ltu]), rs1, rs2, target: 0 },
+                None,
+                [s1, s2, None],
+            ),
+            (Instr::Jal { rd, target: 0 }, Some(rd), [None, None, None]),
+            (Instr::Jalr { rd, rs1, imm }, Some(rd), [s1, None, None]),
+            (
+                Instr::Amo { op: *g.choose(&[AmoOp::Add, AmoOp::Swap, AmoOp::Maxu]), rd, rs1, rs2 },
+                Some(rd),
+                [s1, s2, None],
+            ),
+            (Instr::Lr { rd, rs1 }, Some(rd), [s1, None, None]),
+            (Instr::Sc { rd, rs1, rs2 }, Some(rd), [s1, s2, None]),
+            (
+                Instr::Csrr { rd, csr: *g.choose(&[Csr::Mhartid, Csr::Mcycle, Csr::NumCores]) },
+                Some(rd),
+                [None, None, None],
+            ),
+            (Instr::Wfi, None, [None, None, None]),
+            (Instr::Fence, None, [None, None, None]),
+            (Instr::Halt, None, [None, None, None]),
+            (Instr::Nop, None, [None, None, None]),
+        ];
+        for (instr, want_rd, want_src) in table {
+            assert_eq!(instr.rd(), want_rd, "rd() of {instr:?}");
+            assert_eq!(instr.sources(), want_src, "sources() of {instr:?}");
+            // x0 as destination must never be reported as a def.
+            if let Some(z) = zeroed_rd(instr) {
+                assert_eq!(z.rd(), None, "x0 def leaked from {z:?}");
+            }
+        }
+    });
+}
+
+/// The same instruction with its destination replaced by x0, for the
+/// variants that have one.
+fn zeroed_rd(i: Instr) -> Option<Instr> {
+    let z = Reg::ZERO;
+    Some(match i {
+        Instr::Op { op, rs1, rs2, .. } => Instr::Op { op, rd: z, rs1, rs2 },
+        Instr::OpImm { op, rs1, imm, .. } => Instr::OpImm { op, rd: z, rs1, imm },
+        Instr::Lui { imm, .. } => Instr::Lui { rd: z, imm },
+        Instr::Auipc { imm, .. } => Instr::Auipc { rd: z, imm },
+        Instr::Load { rs1, imm, width, signed, .. } => {
+            Instr::Load { rd: z, rs1, imm, width, signed }
+        }
+        Instr::LoadPost { rs1, imm, width, signed, .. } => {
+            Instr::LoadPost { rd: z, rs1, imm, width, signed }
+        }
+        Instr::LoadReg { rs1, rs2, width, signed, .. } => {
+            Instr::LoadReg { rd: z, rs1, rs2, width, signed }
+        }
+        Instr::Mac { rs1, rs2, .. } => Instr::Mac { rd: z, rs1, rs2 },
+        Instr::Msu { rs1, rs2, .. } => Instr::Msu { rd: z, rs1, rs2 },
+        Instr::Jal { target, .. } => Instr::Jal { rd: z, target },
+        Instr::Jalr { rs1, imm, .. } => Instr::Jalr { rd: z, rs1, imm },
+        Instr::Amo { op, rs1, rs2, .. } => Instr::Amo { op, rd: z, rs1, rs2 },
+        Instr::Lr { rs1, .. } => Instr::Lr { rd: z, rs1 },
+        Instr::Sc { rs1, rs2, .. } => Instr::Sc { rd: z, rs1, rs2 },
+        Instr::Csrr { csr, .. } => Instr::Csrr { rd: z, csr },
+        _ => return None,
+    })
+}
+
 /// li of any i32 value must reconstruct that exact value.
 #[test]
 fn li_reconstructs_any_value() {

@@ -17,6 +17,7 @@
 //! - **runtime**: loads those artifacts through PJRT (`xla` crate) and runs
 //!   them as golden models for the simulated kernels.
 
+pub mod analysis;
 pub mod axi;
 pub mod config;
 pub mod core;

@@ -29,6 +29,8 @@
 //! mempool report area|instr-energy|power|related-work
 //! mempool trace <workload> [--cores 16] [--clusters 1] [--instr]
 //!               [--backend serial|parallel] [--no-skip] [--out trace.json]
+//! mempool lint [<workload>] [--all] [--target cluster|system|all]
+//!              [--cores 16] [--clusters 2] [--deny rule1,rule2|all]
 //! mempool traffic [--topology Top1|Top4|TopH] [--lambda 0.2] [--plocal 0.25]
 //!                 [--cycles 4000]
 //! mempool golden-check
@@ -81,6 +83,7 @@ fn main() {
         Some("system") => cmd_system(&args),
         Some("report") => cmd_report(&args),
         Some("trace") => cmd_trace(&args),
+        Some("lint") => cmd_lint(&args),
         Some("traffic") => cmd_traffic(&args),
         Some("golden-check") => cmd_golden(),
         _ => {
@@ -651,7 +654,8 @@ fn cmd_report_campaign(args: &Args) {
             let warn = format!(
                 "DEGRADED GATE: pinned report {path} is a bootstrap placeholder — no cycle \
                  numbers pinned, gating on serial-vs-parallel agreement only; pin by committing \
-                 a trusted run's report artifact as {path}"
+                 a trusted run's report artifact as {path} (tracked as ISSUE 8, the `mempool \
+                 lint` PR: no trusted BENCH campaign artifact existed in CI at pinning time)"
             );
             eprintln!("WARNING: {warn}");
             // Surface the degradation as a first-class CI annotation, not
@@ -765,6 +769,109 @@ fn cmd_trace(args: &Args) {
     write_pretty(out, &doc).unwrap_or_else(|e| panic!("write {out}: {e}"));
     let events = doc.get("traceEvents").and_then(Json::as_array).map_or(0, |a| a.len());
     println!("\nchrome trace written to {out} ({events} events) — load it in ui.perfetto.dev");
+}
+
+/// `mempool lint`: the static SPMD race-and-hazard verifier. Builds the
+/// exact program each workload would run (zero simulator cycles) and
+/// reports rule-coded findings; exits 1 when any finding's rule is in
+/// the deny set (default: the whole catalog), 2 on usage errors.
+fn cmd_lint(args: &Args) {
+    use mempool::analysis::{lint_workload, Rule};
+    use mempool::runtime::TargetConfig;
+
+    let cores: usize = args.parse_or("cores", 16);
+    let clusters: usize = args.parse_or("clusters", 2);
+    let which = args.positional.get(1).map(String::as_str);
+    let all = args.has("all");
+    if which.is_none() && !all {
+        eprintln!(
+            "usage: mempool lint [<workload>] [--all] [--target cluster|system|all] \
+             [--cores 16] [--clusters 2] [--deny rule1,rule2|all]"
+        );
+        std::process::exit(2);
+    }
+    let rule_ids = || Rule::ALL.iter().map(|r| r.id()).collect::<Vec<_>>().join(", ");
+    let deny: Vec<Rule> = match args.get("deny") {
+        None | Some("all") => Rule::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                Rule::from_id(s.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown lint rule `{}` (known: {})", s.trim(), rule_ids());
+                    std::process::exit(2)
+                })
+            })
+            .collect(),
+    };
+    let targets: Vec<Target> = match args.get_or("target", "all") {
+        "cluster" => vec![Target::Cluster],
+        "system" => vec![Target::System],
+        "all" => vec![Target::Cluster, Target::System],
+        other => {
+            eprintln!("unknown --target `{other}` (cluster|system|all)");
+            std::process::exit(2)
+        }
+    };
+
+    section(&format!("Static analysis — {cores} cores/cluster, {clusters} clusters"));
+    let mut checked = 0usize;
+    let mut findings = 0usize;
+    let mut denied = 0usize;
+    for &target in &targets {
+        let names: Vec<&str> = if all {
+            workload_names(target)
+        } else {
+            let name = which.expect("checked above");
+            if workload_names(target).contains(&name) { vec![name] } else { Vec::new() }
+        };
+        for name in names {
+            let w = workload_by_name(name, target, cores).expect("name filtered by registry");
+            let tcfg = match target {
+                Target::Cluster => TargetConfig::Cluster(ClusterConfig::with_cores(cores)),
+                Target::System => {
+                    TargetConfig::System(SystemConfig::with_cores(clusters, cores))
+                }
+            };
+            let out = lint_workload(w.as_ref(), &tcfg);
+            checked += 1;
+            if out.findings.is_empty() && out.allowed.is_empty() {
+                println!("{name} [{}]: clean", target.name());
+            }
+            for (f, why) in &out.allowed {
+                println!("{name} [{}]: allowed {f}", target.name());
+                println!("    justification: {why}");
+            }
+            for f in &out.findings {
+                println!("{name} [{}]: {f}", target.name());
+                findings += 1;
+                if deny.contains(&f.rule) {
+                    denied += 1;
+                }
+            }
+        }
+    }
+    if checked == 0 {
+        eprintln!(
+            "workload `{}` is not available on the selected target(s); cluster: {:?}, \
+             system: {:?}",
+            which.unwrap_or("?"),
+            workload_names(Target::Cluster),
+            workload_names(Target::System)
+        );
+        std::process::exit(2);
+    }
+    println!(
+        "\n{checked} program(s) linted: {findings} finding(s), {denied} denied \
+         (deny set: {})",
+        if deny.len() == Rule::ALL.len() {
+            "all".to_string()
+        } else {
+            deny.iter().map(|r| r.id()).collect::<Vec<_>>().join(", ")
+        }
+    );
+    if denied > 0 {
+        std::process::exit(1);
+    }
 }
 
 /// `mempool traffic`: one operating point of the Poisson traffic-

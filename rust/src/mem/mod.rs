@@ -7,7 +7,7 @@ mod bank;
 mod ctrl;
 mod l2;
 
-pub use address::{AddressMap, Location, Region, CTRL_BASE, L2_BASE, L2_SIZE};
+pub use address::{AddressMap, Location, Region, CTRL_BASE, CTRL_SIZE, L2_BASE, L2_SIZE};
 pub use bank::{BankRequest, BankResponse, MemOp, SramBank};
 pub use ctrl::{
     CtrlEffect, CtrlRegs, CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM,

@@ -24,6 +24,61 @@ use std::fmt::Display;
 use crate::isa::Reg;
 use crate::kernels::rt::{barrier_asm, dma_start_asm, dma_wait_asm, grab_chunk_asm};
 
+/// What kind of first-class intrinsic a source region came from.
+///
+/// Recorded by the builder for the static analyzer (`analysis` module):
+/// instructions inside an intrinsic span are trusted runtime plumbing
+/// (exempt from the race/protocol rules that police kernel code), and a
+/// span's clobber set is the contract the clobber lint enforces on the
+/// code *after* it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntrinsicKind {
+    /// `barrier(id)` — full-cluster sense-reversal barrier.
+    Barrier,
+    /// `global_barrier(id)` — fabric-wide barrier (wraps two local
+    /// [`Barrier`](IntrinsicKind::Barrier) spans plus the hart-0 pulse).
+    GlobalBarrier,
+    /// `grab_chunk(dst, ..)` — the atomic work-counter fetch (`dst` is
+    /// the intended output, not a clobber).
+    GrabChunk,
+    /// `dma_start(..)` — cluster-DMA programming + trigger.
+    DmaStart,
+    /// `dma_wait(id)` — cluster-DMA status poll.
+    DmaWait,
+    /// `poll_idle(..)` — generic status-word poll loop.
+    PollIdle,
+    /// `sysdma_transfer(..)` — system-DMA programming + trigger + poll.
+    SysDma,
+    /// `trace_marker(id)` — one store to `CTRL_TRACE_MARKER`.
+    TraceMarker,
+    /// `cluster_id(rd, tmp)` — ctrl load of this cluster's id.
+    ClusterId,
+}
+
+/// One intrinsic's footprint in the emitted source: the 1-based source
+/// line range it occupies (inclusive) and the registers it clobbers.
+/// Mapped onto instruction indexes via `isa::assemble_debug`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntrinsicSpan {
+    pub kind: IntrinsicKind,
+    pub first_line: u32,
+    pub last_line: u32,
+    pub clobbers: Vec<Reg>,
+}
+
+impl IntrinsicSpan {
+    /// Whether `line` (1-based) falls inside this span.
+    pub fn contains_line(&self, line: u32) -> bool {
+        self.first_line <= line && line <= self.last_line
+    }
+
+    /// Whether `other` is fully nested inside this span (used to fold
+    /// the two local barriers of a `global_barrier` into one event).
+    pub fn encloses(&self, other: &IntrinsicSpan) -> bool {
+        self.first_line <= other.first_line && other.last_line <= self.last_line
+    }
+}
+
 /// Builds one SPMD program: assembly source plus its symbol table.
 ///
 /// All cores execute the same program; workloads branch on the
@@ -34,6 +89,11 @@ use crate::kernels::rt::{barrier_asm, dma_start_asm, dma_wait_asm, grab_chunk_as
 pub struct AsmBuilder {
     src: String,
     sym: HashMap<String, u32>,
+    /// Source lines emitted so far (every `src` append is line-counted).
+    lines: u32,
+    /// Intrinsic footprints, in emission order (nested spans — the
+    /// barriers inside `global_barrier` — appear before their encloser).
+    spans: Vec<IntrinsicSpan>,
 }
 
 /// Validate a register operand, panicking with the bad name.
@@ -50,6 +110,31 @@ impl AsmBuilder {
     /// Consume the builder: (assembly source, symbol table).
     pub fn finish(self) -> (String, HashMap<String, u32>) {
         (self.src, self.sym)
+    }
+
+    /// [`finish`](AsmBuilder::finish), additionally yielding the
+    /// intrinsic spans for the static analyzer. The source and symbol
+    /// table are byte-identical to `finish`'s — the spans are pure side
+    /// metadata.
+    pub fn finish_with_spans(self) -> (String, HashMap<String, u32>, Vec<IntrinsicSpan>) {
+        (self.src, self.sym, self.spans)
+    }
+
+    // ---- intrinsic span recording -----------------------------------
+
+    /// First line the *next* append will land on (1-based).
+    fn mark(&self) -> u32 {
+        self.lines + 1
+    }
+
+    /// Record the region emitted since `mark()` as an intrinsic span.
+    fn span(&mut self, mark: u32, kind: IntrinsicKind, clobbers: &[&str]) {
+        debug_assert!(self.lines >= mark, "intrinsic emitted no lines");
+        let clobbers = clobbers
+            .iter()
+            .map(|r| Reg::from_name(r).expect("clobber list names a register"))
+            .collect();
+        self.spans.push(IntrinsicSpan { kind, first_line: mark, last_line: self.lines, clobbers });
     }
 
     // ---- symbols ----------------------------------------------------
@@ -73,6 +158,7 @@ impl AsmBuilder {
     fn ins(&mut self, line: String) {
         self.src.push_str(&line);
         self.src.push('\n');
+        self.lines += 1;
     }
 
     /// Splice a preformatted, newline-terminated fragment. The escape
@@ -80,9 +166,14 @@ impl AsmBuilder {
     /// construction; register-checked methods are preferred for anything
     /// generated or parameterized.
     pub fn raw(&mut self, fragment: &str) {
+        if fragment.is_empty() {
+            return;
+        }
         self.src.push_str(fragment);
-        if !fragment.is_empty() && !fragment.ends_with('\n') {
+        self.lines += fragment.matches('\n').count() as u32;
+        if !fragment.ends_with('\n') {
             self.src.push('\n');
+            self.lines += 1;
         }
     }
 
@@ -251,8 +342,10 @@ impl AsmBuilder {
     /// This cluster's id within the system → `rd` (0 standalone).
     /// Clobbers `tmp`.
     pub fn cluster_id(&mut self, rd: &str, tmp: &str) {
+        let m = self.mark();
         self.la(tmp, "CLUSTER_ID_ADDR");
         self.lw(rd, 0, tmp);
+        self.span(m, IntrinsicKind::ClusterId, &[tmp]);
     }
 
     /// Tag the phase the issuing core is entering with trace region
@@ -264,15 +357,19 @@ impl AsmBuilder {
     /// Clobbers t0/t1. Needs the `TRACE_MARKER_ADDR` harness symbol
     /// (installed by `base_symbols`).
     pub fn trace_marker(&mut self, id: u32) {
+        let m = self.mark();
         self.la("t0", "TRACE_MARKER_ADDR");
         self.li("t1", id);
         self.sw("t1", 0, "t0");
+        self.span(m, IntrinsicKind::TraceMarker, &["t0", "t1"]);
     }
 
     /// A full-cluster sense-reversal barrier (paper §7.3.1). Clobbers
     /// t0–t6; `id` keeps the labels unique across several barriers.
     pub fn barrier(&mut self, id: usize) {
+        let m = self.mark();
         self.raw(&barrier_asm(id));
+        self.span(m, IntrinsicKind::Barrier, &["t0", "t1", "t2", "t3", "t4", "t5", "t6"]);
     }
 
     /// A system-wide barrier over the shared fabric (system target
@@ -285,6 +382,7 @@ impl AsmBuilder {
     /// `GBARRIER_ADDR` harness symbol (installed by `system_symbols`),
     /// so cluster-target programs fail loudly at assembly time.
     pub fn global_barrier(&mut self, id: usize) {
+        let m = self.mark();
         self.barrier(900 + 2 * id);
         self.csrr("t0", "mhartid");
         self.bnez("t0", format!("gbar_skip_{id}"));
@@ -295,34 +393,43 @@ impl AsmBuilder {
         self.bnez("t2", format!("gbar_poll_{id}"));
         self.label(format!("gbar_skip_{id}"));
         self.barrier(901 + 2 * id);
+        self.span(m, IntrinsicKind::GlobalBarrier, &["t0", "t1", "t2", "t3", "t4", "t5", "t6"]);
     }
 
     /// Dynamic work sharing: atomically grab the next chunk index from
     /// the shared runtime counter into `dst`; jump to `done_label` when
     /// `dst >= limit_reg`. Clobbers t0.
     pub fn grab_chunk(&mut self, dst: &str, limit_reg: &str, done_label: &str) {
+        let m = self.mark();
         self.raw(&grab_chunk_asm(chk(dst), chk(limit_reg), done_label));
+        self.span(m, IntrinsicKind::GrabChunk, &["t0"]);
     }
 
     /// Program the cluster DMA frontend for one transfer and trigger it.
     /// Operands are symbols/immediates; clobbers t0/t1. `to_spm`:
     /// true = L2→SPM.
     pub fn dma_start(&mut self, l2: &str, spm: &str, bytes: &str, to_spm: bool) {
+        let m = self.mark();
         self.raw(&dma_start_asm(l2, spm, bytes, to_spm));
+        self.span(m, IntrinsicKind::DmaStart, &["t0", "t1"]);
     }
 
     /// Spin until the cluster DMA frontend reports idle. Clobbers t0/t1.
     pub fn dma_wait(&mut self, id: usize) {
+        let m = self.mark();
         self.raw(&dma_wait_asm(id));
+        self.span(m, IntrinsicKind::DmaWait, &["t0", "t1"]);
     }
 
     /// Spin until a memory-mapped status word at `status_sym` reads zero
     /// (the DMA-idle polling idiom, shared by the cluster and system
     /// frontends). `label` names the loop head. Clobbers t0/t1.
     pub fn poll_idle(&mut self, status_sym: &str, label: impl Display) {
+        let m = self.mark();
         self.la("t0", status_sym);
         self.ins(format!("{label}: lw t1, 0(t0)"));
         self.bnez("t1", label);
+        self.span(m, IntrinsicKind::PollIdle, &["t0", "t1"]);
     }
 
     /// Program the system-DMA frontend for one shared-L2 ↔ local-L1
@@ -340,6 +447,7 @@ impl AsmBuilder {
         code: u32,
         poll: impl Display,
     ) {
+        let m = self.mark();
         self.la("t0", "SYSDMA_L2_ADDR");
         self.sw("a0", 0, "t0");
         self.la("t0", "SYSDMA_LOCAL_ADDR");
@@ -357,5 +465,6 @@ impl AsmBuilder {
         }
         self.fence();
         self.poll_idle("SYSDMA_STATUS_ADDR", poll);
+        self.span(m, IntrinsicKind::SysDma, &["t0", "t1"]);
     }
 }

@@ -36,12 +36,14 @@ mod builder;
 mod registry;
 mod workload;
 
-pub use builder::AsmBuilder;
+pub use builder::{AsmBuilder, IntrinsicKind, IntrinsicSpan};
 pub use registry::{
     all_workload_names, table1_workloads, workload_by_name, workload_names, WorkloadEntry,
     WORKLOADS,
 };
-pub use workload::{run_workload, Machine, RunConfig, RunResult, Target, TargetConfig, Workload};
+pub use workload::{
+    run_workload, workload_source, Machine, RunConfig, RunResult, Target, TargetConfig, Workload,
+};
 
 #[cfg(feature = "golden")]
 mod pjrt;

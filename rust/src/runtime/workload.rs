@@ -134,6 +134,15 @@ pub trait Workload {
 
     /// 32-bit operations the whole run performs (paper's OP metric).
     fn total_ops(&self, cfg: &TargetConfig) -> u64;
+
+    /// Static-analysis allowances: `(rule id, justification)` pairs for
+    /// findings `mempool lint` must suppress on this workload (see
+    /// `analysis::Rule` for the ids). The justification is surfaced in
+    /// the lint output, so an allowance is a documented, reviewable
+    /// exception — not a silent opt-out. Empty for every sound kernel.
+    fn lint_allows(&self) -> &'static [(&'static str, &'static str)] {
+        &[]
+    }
 }
 
 /// How to run a workload.
@@ -220,7 +229,7 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             let mut cfg = cluster_cfg.clone();
             w.prepare_config(&mut cfg);
             let tcfg = TargetConfig::Cluster(cfg.clone());
-            let program = assemble_workload(w, &tcfg, base_symbols(&cfg));
+            let program = assemble_workload(w, &tcfg);
             // The same bring-up recipe the raw-assembly harness uses.
             let mut low = crate::sim::RunConfig::with_backend(cfg, backend);
             low.max_cycles = run.max_cycles;
@@ -242,7 +251,7 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             let mut cfg = system_cfg.clone();
             w.prepare_config(&mut cfg.cluster);
             let tcfg = TargetConfig::System(cfg.clone());
-            let program = assemble_workload(w, &tcfg, system_symbols(&cfg));
+            let program = assemble_workload(w, &tcfg);
             // The same bring-up recipe the raw-assembly harness uses.
             let mut low = SystemRunConfig::with_backend(cfg, backend);
             low.max_cycles = run.max_cycles;
@@ -264,19 +273,35 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
     }
 }
 
-/// Build + assemble a workload's program, merging in the harness symbols
-/// (geometry, control-register addresses) the workload did not override.
-fn assemble_workload(
+/// Build a workload's program source for an already-`prepare_config`ed
+/// target: the assembly text, the full symbol table (workload symbols
+/// first, harness symbols — geometry, control-register addresses —
+/// filled in underneath), and the builder's intrinsic spans. This is the
+/// exact text/symbols [`run_workload`] assembles; the static analyzer
+/// (`analysis` module) consumes the same triple, so what `mempool lint`
+/// verifies is the program that runs.
+pub fn workload_source(
     w: &dyn Workload,
     tcfg: &TargetConfig,
-    harness_symbols: std::collections::HashMap<String, u32>,
-) -> Program {
+) -> (String, std::collections::HashMap<String, u32>, Vec<crate::runtime::builder::IntrinsicSpan>)
+{
     let mut b = AsmBuilder::new();
     w.build(tcfg, &mut b);
-    let (src, mut sym) = b.finish();
-    for (k, v) in harness_symbols {
+    let (src, mut sym, spans) = b.finish_with_spans();
+    let harness = match tcfg {
+        TargetConfig::Cluster(c) => base_symbols(c),
+        TargetConfig::System(s) => system_symbols(s),
+    };
+    for (k, v) in harness {
         sym.entry(k).or_insert(v);
     }
+    (src, sym, spans)
+}
+
+/// Build + assemble a workload's program, merging in the harness symbols
+/// (geometry, control-register addresses) the workload did not override.
+fn assemble_workload(w: &dyn Workload, tcfg: &TargetConfig) -> Program {
+    let (src, sym, _spans) = workload_source(w, tcfg);
     Program::assemble(&src, &sym)
         .unwrap_or_else(|e| panic!("workload {}: assembly failed: {e}", w.name()))
 }

@@ -21,8 +21,9 @@ use std::collections::VecDeque;
 
 use crate::isa::{Csr, Instr, OpKind, Reg};
 use crate::mem::{
-    CTRL_BASE, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_SIZE, CTRL_SYSDMA_BYTES,
-    CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
+    CTRL_BASE, CTRL_BURST_LOCAL, CTRL_BURST_REMOTE, CTRL_BURST_WORDS, CTRL_DMA_BYTES,
+    CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_SIZE, CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL,
+    CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
 };
 use crate::runtime::IntrinsicSpan;
 
@@ -196,11 +197,11 @@ pub fn binop(op: OpKind, a: Val, b: Val) -> Val {
     }
 }
 
-/// Tracked control-register descriptor slots: the DMA source /
-/// destination / length registers whose written values the DMA rules
-/// need (trigger, status, and wake registers are recognized by address
-/// alone and need no tracked value).
-pub const CTRL_SLOT_OFFSETS: [u32; 8] = [
+/// Tracked control-register descriptor slots: the DMA and TCDM-burst
+/// source / destination / length registers whose written values the
+/// DMA/burst rules need (trigger, status, and wake registers are
+/// recognized by address alone and need no tracked value).
+pub const CTRL_SLOT_OFFSETS: [u32; 11] = [
     CTRL_DMA_L2,
     CTRL_DMA_SPM,
     CTRL_DMA_BYTES,
@@ -209,6 +210,9 @@ pub const CTRL_SLOT_OFFSETS: [u32; 8] = [
     CTRL_SYSDMA_BYTES,
     CTRL_SYSDMA_RCLUSTER,
     CTRL_SYSDMA_RADDR,
+    CTRL_BURST_LOCAL,
+    CTRL_BURST_REMOTE,
+    CTRL_BURST_WORDS,
 ];
 
 pub const NUM_CTRL_SLOTS: usize = CTRL_SLOT_OFFSETS.len();
@@ -227,6 +231,9 @@ pub fn slot_name(slot: usize) -> &'static str {
         5 => "SYSDMA_BYTES",
         6 => "SYSDMA_RCLUSTER",
         7 => "SYSDMA_RADDR",
+        8 => "BURST_LOCAL",
+        9 => "BURST_REMOTE",
+        10 => "BURST_WORDS",
         _ => "?",
     }
 }

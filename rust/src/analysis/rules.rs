@@ -9,8 +9,8 @@
 
 use crate::isa::{CondOp, Instr, Width};
 use crate::mem::{
-    CTRL_BASE, CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_GBARRIER, CTRL_SYSDMA_STATUS,
-    CTRL_SYSDMA_TRIGGER, CTRL_WAKE_CORE, CTRL_WAKE_GROUP,
+    CTRL_BASE, CTRL_BURST_GO, CTRL_BURST_STATUS, CTRL_DMA_STATUS, CTRL_DMA_TRIGGER,
+    CTRL_GBARRIER, CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER, CTRL_WAKE_CORE, CTRL_WAKE_GROUP,
 };
 use crate::runtime::{IntrinsicKind, IntrinsicSpan};
 
@@ -405,16 +405,24 @@ fn rule_dma_no_wait(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
         // Only transfers whose *destination* is core-visible SPM are
         // checked: descriptor L2 fields are L2 offsets, not the
         // absolute addresses cores load from (see docs/ANALYSIS.md).
+        // For the TCDM burst frontend the hazard window is the staging
+        // window `[BURST_LOCAL, BURST_LOCAL + 4*BURST_WORDS)` of a
+        // load-direction GO (GO value 1); BURST_WORDS counts words, not
+        // bytes, so the length is scaled below.
         let (status_off, dest_slot, bytes_slot, which) = match off {
             o if o == CTRL_DMA_TRIGGER => (CTRL_DMA_STATUS, 1usize, 2usize, "DMA"),
             o if o == CTRL_SYSDMA_TRIGGER => (CTRL_SYSDMA_STATUS, 4usize, 5usize, "SYSDMA"),
+            o if o == CTRL_BURST_GO => (CTRL_BURST_STATUS, 8usize, 10usize, "BURST"),
             _ => continue,
         };
         if ctx.facts[i].value.as_const() != Some(1) {
             continue;
         }
         let Some(dest) = ctx.facts[i].ctrl[dest_slot].as_const() else { continue };
-        let Some(bytes) = ctx.facts[i].ctrl[bytes_slot].as_const() else { continue };
+        let Some(mut bytes) = ctx.facts[i].ctrl[bytes_slot].as_const() else { continue };
+        if off == CTRL_BURST_GO {
+            bytes = bytes.wrapping_mul(4);
+        }
         if bytes == 0 {
             continue;
         }
@@ -484,6 +492,8 @@ fn rule_dma_config(ctx: &RuleCtx, out: &mut Vec<RawFinding>) {
                 Some(2) | Some(3) => &[3, 4, 5, 6, 7],
                 _ => &[3, 4, 5],
             }
+        } else if off == CTRL_BURST_GO {
+            &[8, 9, 10]
         } else {
             continue;
         };
@@ -514,6 +524,8 @@ pub fn kind_name(k: IntrinsicKind) -> &'static str {
         IntrinsicKind::SysDma => "sysdma_transfer",
         IntrinsicKind::TraceMarker => "trace_marker",
         IntrinsicKind::ClusterId => "cluster_id",
+        IntrinsicKind::BurstStart => "burst_start",
+        IntrinsicKind::BurstWait => "burst_wait",
     }
 }
 

@@ -5,6 +5,75 @@
 
 use crate::icache::ICacheConfig;
 
+/// A named topology preset — the first-class scale axis. Every campaign
+/// scenario names one of these instead of threading raw `--cores`
+/// integers around; the preset is resolved to a [`ClusterConfig`] in
+/// exactly one place (here) and recorded per scenario in the v3 report
+/// schema.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyPreset {
+    /// The 16-core test configuration (1 group × 4 tiles × 4 cores) —
+    /// fast enough for tier-1 tests and the default CI campaign.
+    Minpool,
+    /// The paper's large configuration: 256 cores, 4 groups × 16 tiles ×
+    /// 4 cores, 1024 banks, TopH.
+    Mempool,
+    /// The >256-PE hierarchical stretch configuration (8 groups × 16
+    /// tiles × 4 cores = 512 cores) after the TeraPool direction: same
+    /// TopH fabric, one extra cycle of inter-group wire latency each way.
+    Terapool,
+}
+
+impl TopologyPreset {
+    pub const ALL: [TopologyPreset; 3] =
+        [TopologyPreset::Minpool, TopologyPreset::Mempool, TopologyPreset::Terapool];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TopologyPreset::Minpool => "minpool",
+            TopologyPreset::Mempool => "mempool",
+            TopologyPreset::Terapool => "terapool",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TopologyPreset> {
+        TopologyPreset::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// The preset's native core count (the scale its campaign runs at).
+    pub fn default_cores(self) -> usize {
+        match self {
+            TopologyPreset::Minpool => 16,
+            TopologyPreset::Mempool => 256,
+            TopologyPreset::Terapool => 512,
+        }
+    }
+
+    /// The configuration at the preset's native scale.
+    pub fn cluster_config(self) -> ClusterConfig {
+        match self {
+            TopologyPreset::Minpool => ClusterConfig::minpool(),
+            TopologyPreset::Mempool => ClusterConfig::mempool(),
+            TopologyPreset::Terapool => ClusterConfig::terapool(),
+        }
+    }
+
+    /// A scaled point within the preset's family (the Fig 13 weak-scaling
+    /// sweep): same per-family deltas, `n` cores.
+    pub fn config_with_cores(self, n: usize) -> ClusterConfig {
+        if n == self.default_cores() {
+            return self.cluster_config();
+        }
+        let mut cfg = ClusterConfig::with_cores(n);
+        match self {
+            TopologyPreset::Minpool => cfg.dma.backends_per_group = 2,
+            TopologyPreset::Mempool => {}
+            TopologyPreset::Terapool => cfg.remote_group_latency = 7,
+        }
+        cfg
+    }
+}
+
 /// L1 data interconnect topology (paper §3.1, Fig 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Topology {
@@ -244,9 +313,21 @@ impl ClusterConfig {
         }
     }
 
+    /// The TeraPool-style stretch configuration: 512 cores in 8 groups of
+    /// 16 tiles on the same TopH fabric, with one extra cycle of
+    /// inter-group wire latency each way (the longer die crossing).
+    pub fn terapool() -> Self {
+        let mut cfg = ClusterConfig::with_cores(512);
+        cfg.remote_group_latency = 7;
+        cfg
+    }
+
     /// Scaled configuration with `n` cores for the weak-scaling study
     /// (Fig 13). Keeps 4 cores/tile and the banking factor of 4; grows
-    /// tiles, then groups.
+    /// tiles within one group up to the 16×16 crossbar's port count, then
+    /// grows full 16-tile groups — every intermediate point is a group
+    /// shape the TopH crossbars were validated for (1 group of ≤ 16
+    /// tiles, or N groups of exactly 16).
     pub fn with_cores(n: usize) -> Self {
         assert!(n.is_power_of_two() && n >= 1, "core count must be a power of two");
         let mut cfg = ClusterConfig::mempool();
@@ -259,8 +340,8 @@ impl ClusterConfig {
             cfg.num_groups = 1;
             cfg.tiles_per_group = n / 4;
         } else {
-            cfg.num_groups = 4;
-            cfg.tiles_per_group = n / 16;
+            cfg.num_groups = n / 64;
+            cfg.tiles_per_group = 16;
         }
         cfg
     }
@@ -317,6 +398,20 @@ impl ClusterConfig {
         if self.scoreboard_depth == 0 {
             return Err("scoreboard depth must be at least 1".into());
         }
+        if self.topology == Topology::TopH {
+            if self.tiles_per_group > 16 {
+                return Err(format!(
+                    "TopH group of {} tiles exceeds the 16×16 crossbar",
+                    self.tiles_per_group
+                ));
+            }
+            if self.num_groups > 1 && self.tiles_per_group != 16 {
+                return Err(format!(
+                    "TopH multi-group shapes need full 16-tile groups, got {}",
+                    self.tiles_per_group
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -346,12 +441,52 @@ mod tests {
 
     #[test]
     fn with_cores_spans_range() {
-        for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        // The full Fig 13 sweep plus the TeraPool stretch point: every
+        // intermediate scale must be a validated TopH group shape (one
+        // group of ≤ 16 tiles, or N full 16-tile groups).
+        for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
             let c = ClusterConfig::with_cores(n);
             c.validate().unwrap();
             assert_eq!(c.num_cores(), n, "n={n}");
             assert_eq!(c.banking_factor(), 4, "n={n}");
+            assert!(c.tiles_per_group <= 16, "n={n}");
+            if c.num_groups > 1 {
+                assert_eq!(c.tiles_per_group, 16, "n={n}");
+            }
         }
+        // The former shapes for 128 cores (4 groups × 8 tiles) are
+        // exactly what validate() now rejects.
+        let mut bad = ClusterConfig::mempool();
+        bad.num_groups = 4;
+        bad.tiles_per_group = 8;
+        assert!(bad.validate().is_err());
+        let mut bad = ClusterConfig::mempool();
+        bad.num_groups = 1;
+        bad.tiles_per_group = 32;
+        bad.cores_per_tile = 2;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for p in TopologyPreset::ALL {
+            let c = p.cluster_config();
+            c.validate().unwrap();
+            assert_eq!(c.num_cores(), p.default_cores(), "{}", p.name());
+            assert_eq!(TopologyPreset::parse(p.name()), Some(p));
+            // Scaled points within the family validate across the sweep.
+            for n in [4usize, 16, 64, 256] {
+                p.config_with_cores(n).validate().unwrap();
+            }
+        }
+        assert_eq!(TopologyPreset::parse("nope"), None);
+        let tp = ClusterConfig::terapool();
+        assert_eq!(tp.num_cores(), 512);
+        assert_eq!(tp.remote_group_latency, 7);
+        assert_eq!(
+            TopologyPreset::Terapool.config_with_cores(512).remote_group_latency,
+            7
+        );
     }
 
     #[test]

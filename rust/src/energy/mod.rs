@@ -48,6 +48,14 @@ pub struct EnergyParams {
     pub group_xbar: f64,
     /// Inter-group crossbar traversal (one way; longer wires).
     pub global_xbar: f64,
+    /// Each extra beat a TCDM wide burst carries through a same-group
+    /// crossbar beyond the head flit (one way). Cheaper than a full
+    /// traversal: the route is already arbitrated, only the datapath
+    /// toggles — the burst paper's energy argument.
+    pub group_xbar_beat: f64,
+    /// Each extra wide-burst beat through an inter-group crossbar
+    /// (one way).
+    pub global_xbar_beat: f64,
 
     // --- Instruction cache, per event ---
     /// L0 access by storage kind.
@@ -100,6 +108,8 @@ impl Default for EnergyParams {
             tile_xbar: 0.8,
             group_xbar: 0.75,
             global_xbar: 1.12,
+            group_xbar_beat: 0.45,
+            global_xbar_beat: 0.67,
             l0_register: 0.30,
             l0_latch: 0.15,
             l1_tag_sram: 0.50,

@@ -20,6 +20,7 @@
 use std::collections::VecDeque;
 
 use super::flit::Flit;
+use super::xbar::extra_beat_cycles;
 use super::L1Network;
 
 const QUEUE_DEPTH: usize = 4;
@@ -44,7 +45,14 @@ struct Net {
     rr_dst: Vec<usize>,
     /// Per-destination pop credit.
     popped_at: Vec<u64>,
+    /// Cycle (absolute) until which each destination port is held by a
+    /// granted multi-beat flit (⌈beats/4⌉ cycles per grant; see
+    /// `Xbar16::busy`). Skip-safe: the network must be empty to skip,
+    /// and an empty network's ports are past their hold times.
+    dst_busy: Vec<u64>,
     conflicts: u64,
+    /// Cumulative destination-port occupancy in port·cycles.
+    occupancy: u64,
 }
 
 /// Split a node index into base-4 digits (LSB first).
@@ -69,7 +77,9 @@ impl Net {
             rr_src: 0,
             rr_dst: vec![0; tiles],
             popped_at: vec![u64::MAX; tiles],
+            dst_busy: vec![0; tiles],
             conflicts: 0,
+            occupancy: 0,
         }
     }
 
@@ -122,6 +132,19 @@ impl Net {
             } else {
                 0
             };
+            // A prior multi-beat grant still holds this destination
+            // port: ready candidates wait (counted as contention).
+            if self.dst_busy[dst] > now {
+                for i in 0..4.min(self.tiles) {
+                    let node = base + i % 4.min(self.tiles);
+                    if let Some((ready, f)) = self.mid_q[node].front() {
+                        if *ready <= now && f.dst_tile as usize == dst {
+                            self.conflicts += 1;
+                        }
+                    }
+                }
+                continue;
+            }
             let mut winner = None;
             for i in 0..4.min(self.tiles) {
                 let node = base + (start + i) % 4.min(self.tiles);
@@ -139,7 +162,10 @@ impl Net {
                 if self.dst_claim[dst] != now && self.arr_q[dst].len() < QUEUE_DEPTH {
                     self.dst_claim[dst] = now;
                     let (_, f) = self.mid_q[node].pop_front().unwrap();
-                    self.arr_q[dst].push_back((now + 1, f));
+                    let extra = extra_beat_cycles(f.beats);
+                    self.arr_q[dst].push_back((now + 1 + extra, f));
+                    self.dst_busy[dst] = now + 1 + extra;
+                    self.occupancy += 1 + extra;
                     self.rr_dst[dst] = (node % 4) + 1;
                 }
             }
@@ -272,6 +298,10 @@ impl L1Network for Butterfly {
         let n = self.net_of(flit.lane);
         let nets = if resp { &self.resp } else { &self.req };
         (((resp as u64) << 63) | n as u64, nets[n].free_space(flit.src_tile as usize))
+    }
+
+    fn req_path_cycles(&self) -> u64 {
+        self.req.iter().map(|n| n.occupancy).sum()
     }
 
     fn conflict_counts(&self, out: &mut Vec<(String, u64)>) {

@@ -27,6 +27,13 @@ pub struct Flit {
     pub issued_at: u64,
     /// Read data (responses only).
     pub rdata: u32,
+    /// Beat width in 32-bit words. `1` is the classic single-word
+    /// request; `>1` is a TCDM wide-burst flit covering `beats`
+    /// consecutive rows of one bank (arXiv 2501.14370). Networks widen
+    /// port occupancy proportionally; banks serve all words back to
+    /// back. Data for bursts moves functionally at the endpoints, so
+    /// `wdata`/`rdata` stay single-word.
+    pub beats: u8,
 }
 
 impl Flit {

@@ -89,6 +89,18 @@ pub trait L1Network: Send + Sync {
     /// counters are bumped in the serial arbitration phase). The default
     /// reports nothing, for topologies without contention counters.
     fn conflict_counts(&self, _out: &mut Vec<(String, u64)>) {}
+
+    /// Cumulative destination-port occupancy of the *request* networks,
+    /// in port·cycles: every granted flit counts `1 + (beats-1)/4`
+    /// cycles of output-port time. This is the L1 request-path cost the
+    /// TCDM-burst study compares — a burst of W words occupies the port
+    /// for ⌈W/4⌉ cycles where W single-word requests would occupy it
+    /// for W. Bumped only in the serial arbitration phase, so identical
+    /// on both stepping engines. Default 0 for topologies that don't
+    /// track it.
+    fn req_path_cycles(&self) -> u64 {
+        0
+    }
 }
 
 /// Instantiate the configured topology.

@@ -20,6 +20,7 @@ fn flit(src: u16, dst: u16, lane: u8, now: u64) -> Flit {
         row: 0,
         issued_at: now,
         rdata: 0,
+        beats: 1,
     }
 }
 

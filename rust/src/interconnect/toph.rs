@@ -192,6 +192,11 @@ impl L1Network for TopHNet {
         (((resp as u64) << 63) | dg as u64, xbar.free_space(src_idx))
     }
 
+    fn req_path_cycles(&self) -> u64 {
+        self.local_req.iter().map(|x| x.occupancy).sum::<u64>()
+            + self.pair_req.iter().flatten().map(|x| x.occupancy).sum::<u64>()
+    }
+
     fn conflict_counts(&self, out: &mut Vec<(String, u64)>) {
         for (g, x) in self.local_req.iter().enumerate() {
             out.push((format!("local_g{g}_req"), x.conflicts));

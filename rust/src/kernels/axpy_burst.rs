@@ -1,0 +1,223 @@
+//! axpy over *remote* TCDM windows, in two address-identical variants:
+//! the wide-burst variant moves each window through the core's TCDM
+//! burst unit (arXiv 2501.14370) — one wide flit per direction — while
+//! the word-granular twin walks the same remote words with plain
+//! `lw`/`sw` round trips. Equal inputs, equal verified results, so the
+//! pair isolates the request-path saving of wide bursts (the
+//! `l1_req_path_cycles` acceptance metric).
+//!
+//! Layout: core `(t, l)` works on windows held by tile `(t+1) mod T`,
+//! bank `l` — consecutive *rows* of one remote bank, i.e. consecutive
+//! interleaved-region addresses strided by one full bank rotation
+//! (`4·T·B` bytes), exactly the window shape the burst frontend
+//! requires. Staging sits at the bottom of the core's own
+//! sequential-region stack slice (the stack grows down from the top,
+//! and these kernels never push a frame).
+
+use super::rt::RtLayout;
+use crate::config::ClusterConfig;
+use crate::mem::AddressMap;
+use crate::runtime::{AsmBuilder, Machine, TargetConfig, Workload};
+
+/// Words per burst window (the frontend accepts 2..=16).
+pub const WINDOW: usize = 8;
+
+pub struct AxpyBurst {
+    /// Words each core processes (a multiple of [`WINDOW`]).
+    pub per_core: usize,
+    /// `true` = wide-burst variant, `false` = word-granular twin.
+    pub bursts: bool,
+    pub alpha: u32,
+    pub seed: u64,
+}
+
+impl AxpyBurst {
+    pub fn new(per_core: usize, bursts: bool) -> Self {
+        assert_eq!(per_core % WINDOW, 0, "per-core words must be whole burst windows");
+        AxpyBurst { per_core, bursts, alpha: 5, seed: 0xB57 }
+    }
+
+    /// Registry shape: a couple of windows per core keeps the 256-core
+    /// campaign scenario quick while still exercising multi-block loops.
+    pub fn weak_scaled(_cores: usize) -> Self {
+        AxpyBurst::new(16, true)
+    }
+
+    pub fn len(&self, cfg: &ClusterConfig) -> usize {
+        self.per_core * cfg.num_cores()
+    }
+
+    /// First remote row used: just past the sequential-region rows and
+    /// the runtime words (which occupy the first interleaved rows).
+    fn row0(&self, cfg: &ClusterConfig) -> u32 {
+        let map = AddressMap::from_config(cfg);
+        (1u32 << map.seq_bits) + 8
+    }
+
+    /// Byte stride between consecutive rows of one (tile, bank) in the
+    /// interleaved region: one full bank rotation.
+    fn row_stride(&self, cfg: &ClusterConfig) -> u32 {
+        (cfg.num_tiles() * cfg.banks_per_tile * 4) as u32
+    }
+
+    /// Remote address of word `k` of core `c`'s X window (`y` picks the
+    /// Y window, `per_core` rows above X at the same tile/bank).
+    fn remote_addr(&self, cfg: &ClusterConfig, c: usize, k: usize, y: bool) -> u32 {
+        let t = c / cfg.cores_per_tile;
+        let l = (c % cfg.cores_per_tile) as u32;
+        let tt = ((t + 1) % cfg.num_tiles()) as u32;
+        let stride = self.row_stride(cfg);
+        let row = self.row0(cfg) + if y { self.per_core as u32 } else { 0 } + k as u32;
+        row * stride + tt * (cfg.banks_per_tile * 4) as u32 + l * 4
+    }
+
+    fn inputs(&self, cfg: &ClusterConfig) -> (Vec<u32>, Vec<u32>) {
+        let n = self.len(cfg);
+        let mut rng = crate::util::Rng::seeded(self.seed);
+        let x: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+        let y: Vec<u32> = (0..n).map(|_| rng.below(1 << 20) as u32).collect();
+        (x, y)
+    }
+}
+
+impl Workload for AxpyBurst {
+    fn name(&self) -> &'static str {
+        if self.bursts {
+            "axpy_burst"
+        } else {
+            "axpy_word"
+        }
+    }
+
+    fn build(&self, cfg: &TargetConfig, b: &mut AsmBuilder) {
+        let cfg = cfg.cluster();
+        let row0 = self.row0(cfg);
+        assert!(
+            row0 as usize + 2 * self.per_core <= cfg.bank_words,
+            "X+Y windows ({} rows from row {row0}) exceed the bank ({} rows)",
+            2 * self.per_core,
+            cfg.bank_words
+        );
+        assert!(
+            2 * WINDOW * 4 <= cfg.stack_bytes_per_core(),
+            "staging windows do not fit the core's sequential-region slice"
+        );
+        let stride = self.row_stride(cfg);
+        let rt = RtLayout::new(cfg);
+        rt.add_symbols(b.symbols_mut());
+        b.define("AB_TILE_STRIDE", (cfg.banks_per_tile * 4) as u32);
+        // `row0 << (b+t+2)` is exactly `row0` bank rotations.
+        b.define("AB_X_BASE", row0 * stride);
+        b.define("AB_Y_OFF", self.per_core as u32 * stride);
+        b.define("AB_ROW_STRIDE", stride);
+        b.define("AB_BLOCK_ADV", WINDOW as u32 * stride);
+        b.define("AB_SEQ_TILE", cfg.seq_bytes_per_tile() as u32);
+        b.define("AB_STACK", cfg.stack_bytes_per_core() as u32);
+        b.define("ALPHA", self.alpha);
+        let cpt_log2 = cfg.cores_per_tile.trailing_zeros();
+        b.core_id("t0");
+        b.srli("t1", "t0", cpt_log2);
+        b.andi("t2", "t0", cfg.cores_per_tile as u32 - 1);
+        b.comment("partner tile (t+1) mod T, wrap by compare");
+        b.addi("t3", "t1", 1);
+        b.li("t4", "NUM_TILES");
+        b.bne("t3", "t4", "ab_nowrap");
+        b.li("t3", 0);
+        b.label("ab_nowrap");
+        b.comment("remote X/Y window bases at (partner tile, own lane's bank)");
+        b.li("t4", "AB_TILE_STRIDE");
+        b.mul("t4", "t3", "t4");
+        b.la("a0", "AB_X_BASE");
+        b.add("a0", "a0", "t4");
+        b.slli("t5", "t2", 2);
+        b.add("a0", "a0", "t5");
+        b.li("t4", "AB_Y_OFF");
+        b.add("a1", "a0", "t4");
+        b.comment("staging at the bottom of this core's own stack slice");
+        b.li("t4", "AB_SEQ_TILE");
+        b.mul("t4", "t1", "t4");
+        b.li("t5", "AB_STACK");
+        b.mul("t5", "t2", "t5");
+        b.add("a2", "t4", "t5");
+        b.addi("a3", "a2", (WINDOW * 4) as u32);
+        b.li("a4", "ALPHA");
+        b.trace_marker(crate::trace::REGION_COMPUTE);
+        if self.bursts {
+            b.li("a5", (self.per_core / WINDOW) as u32);
+            b.li("a6", WINDOW as u32);
+            b.li("a7", "AB_BLOCK_ADV");
+            b.align(8);
+            b.label("ab_blk");
+            b.burst_start("a2", "a0", "a6", true);
+            b.burst_wait(0);
+            b.burst_start("a3", "a1", "a6", true);
+            b.burst_wait(1);
+            for k in 0..WINDOW {
+                b.lw("t0", (4 * k) as u32, "a2");
+                b.lw("t1", (4 * k) as u32, "a3");
+                b.p_mac("t1", "a4", "t0");
+                b.sw("t1", (4 * k) as u32, "a3");
+            }
+            b.burst_start("a3", "a1", "a6", false);
+            b.burst_wait(2);
+            b.add("a0", "a0", "a7");
+            b.add("a1", "a1", "a7");
+            b.addi("a5", "a5", -1);
+            b.bnez("a5", "ab_blk");
+        } else {
+            b.li("a5", self.per_core as u32);
+            b.li("a7", "AB_ROW_STRIDE");
+            b.align(8);
+            b.label("ab_w");
+            b.lw("t0", 0, "a0");
+            b.lw("t1", 0, "a1");
+            b.p_mac("t1", "a4", "t0");
+            b.sw("t1", 0, "a1");
+            b.add("a0", "a0", "a7");
+            b.add("a1", "a1", "a7");
+            b.addi("a5", "a5", -1);
+            b.bnez("a5", "ab_w");
+        }
+        b.trace_marker(crate::trace::REGION_BARRIER);
+        b.barrier(0);
+        b.halt();
+    }
+
+    fn setup(&self, machine: &mut Machine) {
+        let cluster = machine.cluster();
+        let cfg = cluster.cfg.clone();
+        let rt = RtLayout::new(&cfg);
+        rt.init(cluster);
+        let (x, y) = self.inputs(&cfg);
+        let mut spm = cluster.spm();
+        for c in 0..cfg.num_cores() {
+            for k in 0..self.per_core {
+                let i = c * self.per_core + k;
+                spm.write_word(self.remote_addr(&cfg, c, k, false), x[i]);
+                spm.write_word(self.remote_addr(&cfg, c, k, true), y[i]);
+            }
+        }
+    }
+
+    fn verify(&self, machine: &mut Machine) -> Result<(), String> {
+        let cluster = machine.cluster();
+        let cfg = cluster.cfg.clone();
+        let (x, y) = self.inputs(&cfg);
+        let spm = cluster.spm();
+        for c in 0..cfg.num_cores() {
+            for k in 0..self.per_core {
+                let i = c * self.per_core + k;
+                let got = spm.read_word(self.remote_addr(&cfg, c, k, true));
+                let e = y[i].wrapping_add(self.alpha.wrapping_mul(x[i]));
+                if got != e {
+                    return Err(format!("y[core {c}, word {k}] = {got:#x}, expected {e:#x}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn total_ops(&self, cfg: &TargetConfig) -> u64 {
+        2 * self.len(cfg.cluster()) as u64
+    }
+}

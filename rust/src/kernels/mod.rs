@@ -15,6 +15,7 @@
 
 pub mod apps;
 mod axpy;
+mod axpy_burst;
 mod conv2d;
 pub mod dct;
 pub mod doublebuf;
@@ -23,6 +24,7 @@ mod matmul;
 pub mod rt;
 
 pub use axpy::Axpy;
+pub use axpy_burst::AxpyBurst;
 pub use conv2d::Conv2d;
 pub use dct::Dct;
 pub use doublebuf::{DbAxpy, DbMatmul};

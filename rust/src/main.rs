@@ -21,7 +21,8 @@
 //! mempool system [--clusters 4] [--cores 16] [--kernel matmul|axpy|reduce|all]
 //!                [--backend serial|parallel] [--per-cluster] [--no-skip]
 //!                [--check-determinism]
-//! mempool report [--campaign cluster|system|all] [--preset minpool|mempool]
+//! mempool report [--campaign cluster|system|all]
+//!                [--preset minpool|mempool|terapool] [--kernels axpy,...]
 //!                [--jobs N] [--out report.json] [--no-skip] [--regions]
 //!                [--check ci/expected_report.json]
 //!                [--host-tolerance 0.5] [--md-summary summary.md]
@@ -593,10 +594,14 @@ fn cmd_report_diff(args: &Args) {
 /// pinned diff is exact on simulated fields. Any failed gate exits 1 —
 /// after the artifact and summary are written, so CI keeps the evidence.
 fn cmd_report_campaign(args: &Args) {
-    let mut spec = ReportSpec::ci_default();
-    if let Some(p) = args.get("preset") {
-        spec.preset = p.to_string();
-    }
+    // The preset names the whole campaign (grid + shapes), not just a
+    // label: `minpool` is the CI default, `mempool` the 256-core paper
+    // campaign, `terapool` the >256-PE stretch.
+    let mut spec =
+        ReportSpec::for_preset(args.get_or("preset", "minpool")).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        });
     spec.jobs = args.parse_or("jobs", spec.jobs);
     spec.quiesce_skip = !args.has("no-skip");
     spec.trace_regions = args.has("regions");
@@ -605,6 +610,24 @@ fn cmd_report_campaign(args: &Args) {
             eprintln!("{e}");
             std::process::exit(2)
         });
+    }
+    // `--kernels a,b` restricts the declared campaign to the named
+    // kernels (the CI scale-smoke job runs a reduced mempool grid).
+    if let Some(keep) = args.list("kernels") {
+        for blocks in [&mut spec.cluster, &mut spec.system] {
+            for blk in blocks.iter_mut() {
+                blk.kernels.retain(|k| keep.iter().any(|s| s == k));
+            }
+            blocks.retain(|blk| !blk.kernels.is_empty());
+        }
+        if spec.scenarios().is_empty() {
+            eprintln!(
+                "--kernels {} leaves no scenario in the `{}` campaign",
+                keep.join(","),
+                spec.preset
+            );
+            std::process::exit(2);
+        }
     }
     let n = spec.scenarios().len();
     section(&format!(
@@ -654,8 +677,9 @@ fn cmd_report_campaign(args: &Args) {
             let warn = format!(
                 "DEGRADED GATE: pinned report {path} is a bootstrap placeholder — no cycle \
                  numbers pinned, gating on serial-vs-parallel agreement only; pin by committing \
-                 a trusted run's report artifact as {path} (tracked as ISSUE 8, the `mempool \
-                 lint` PR: no trusted BENCH campaign artifact existed in CI at pinning time)"
+                 a trusted run's report artifact as {path} (tracked as ISSUE 9, the topology-\
+                 preset/256-core PR: no trusted BENCH campaign artifact existed in CI at \
+                 pinning time)"
             );
             eprintln!("WARNING: {warn}");
             // Surface the degradation as a first-class CI annotation, not

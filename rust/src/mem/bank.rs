@@ -142,6 +142,27 @@ impl SramBank {
         }
     }
 
+    /// Serve one TCDM wide-burst beat: `words` consecutive rows starting
+    /// at `row`, one word per cycle against the single-ported array (the
+    /// caller holds the bank for `words` cycles). Data moves through the
+    /// zero-time `peek`/`poke` path at the burst endpoints; this charges
+    /// the array accesses and kills any reservations the written rows
+    /// covered, exactly as the equivalent word-granular stream would.
+    pub fn burst_access(&mut self, row: u32, words: u8, write: bool) {
+        debug_assert!(
+            (row as usize) + words as usize <= self.data.len(),
+            "burst [{row}, {row}+{words}) exceeds bank rows"
+        );
+        if write {
+            self.writes += words as u64;
+            for w in 0..words as u32 {
+                self.invalidate_reservation(row + w);
+            }
+        } else {
+            self.reads += words as u64;
+        }
+    }
+
     /// Any store to a reserved row kills the reservation ("valid until the
     /// memory location changes").
     fn invalidate_reservation(&mut self, row: u32) {

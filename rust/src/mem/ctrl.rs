@@ -49,6 +49,20 @@ pub const CTRL_GBARRIER: u32 = 0x5C;
 // the store costs exactly the same cycles, keeping traces
 // cycle-invisible.
 pub const CTRL_TRACE_MARKER: u32 = 0x60;
+// TCDM wide-burst frontend (arXiv 2501.14370): one unit *per core*,
+// keyed by (tile, lane) in the cluster — the offsets are shared but the
+// state is not, so concurrent cores never race on the descriptor.
+// A burst moves `WORDS` consecutive words between a staging window in
+// the issuing tile's sequential region (`LOCAL`) and `WORDS`
+// consecutive rows of one remote bank (`REMOTE`, an interleaved-region
+// byte address). `GO` launches (1 = remote→local gather load, 0 =
+// local→remote scatter store); `STATUS` reads 1 while the burst —
+// including its staging drain — is still in flight.
+pub const CTRL_BURST_LOCAL: u32 = 0x64;
+pub const CTRL_BURST_REMOTE: u32 = 0x68;
+pub const CTRL_BURST_WORDS: u32 = 0x6C;
+pub const CTRL_BURST_GO: u32 = 0x70;
+pub const CTRL_BURST_STATUS: u32 = 0x74;
 
 /// Side effect of a control-register store, interpreted by the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,6 +86,12 @@ pub enum CtrlEffect {
     /// Tag the issuing core with a trace region id (handled by the
     /// cluster; a no-op unless tracing is enabled).
     TraceMarker(u32),
+    /// Write to the issuing core's TCDM-burst descriptor (handled by
+    /// the cluster; per-core state, not stored here).
+    BurstReg(u32, u32),
+    /// Launch the issuing core's configured burst (true = load,
+    /// i.e. remote→local gather).
+    BurstGo(bool),
 }
 
 /// Control register file.
@@ -102,6 +122,10 @@ impl CtrlRegs {
             CTRL_SYSDMA_TRIGGER => CtrlEffect::SysDmaTrigger(value),
             CTRL_GBARRIER => CtrlEffect::GBarrierArrive,
             CTRL_TRACE_MARKER => CtrlEffect::TraceMarker(value),
+            CTRL_BURST_LOCAL | CTRL_BURST_REMOTE | CTRL_BURST_WORDS => {
+                CtrlEffect::BurstReg(offset, value)
+            }
+            CTRL_BURST_GO => CtrlEffect::BurstGo(value != 0),
             _ => CtrlEffect::None,
         }
     }

@@ -10,7 +10,8 @@ mod l2;
 pub use address::{AddressMap, Location, Region, CTRL_BASE, CTRL_SIZE, L2_BASE, L2_SIZE};
 pub use bank::{BankRequest, BankResponse, MemOp, SramBank};
 pub use ctrl::{
-    CtrlEffect, CtrlRegs, CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM,
+    CtrlEffect, CtrlRegs, CTRL_BURST_GO, CTRL_BURST_LOCAL, CTRL_BURST_REMOTE, CTRL_BURST_STATUS,
+    CTRL_BURST_WORDS, CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM,
     CTRL_DMA_STATUS, CTRL_DMA_TRIGGER, CTRL_GBARRIER, CTRL_NUM_CORES, CTRL_RO_FLUSH,
     CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER,
     CTRL_SYSDMA_STATUS, CTRL_SYSDMA_TRIGGER, CTRL_TRACE_MARKER, CTRL_WAKE_ALL, CTRL_WAKE_CORE,

@@ -53,6 +53,11 @@ pub enum IntrinsicKind {
     TraceMarker,
     /// `cluster_id(rd, tmp)` — ctrl load of this cluster's id.
     ClusterId,
+    /// `burst_start(..)` — TCDM wide-burst descriptor programming +
+    /// launch.
+    BurstStart,
+    /// `burst_wait(id)` — TCDM wide-burst status poll.
+    BurstWait,
 }
 
 /// One intrinsic's footprint in the emitted source: the 1-based source
@@ -430,6 +435,55 @@ impl AsmBuilder {
         self.ins(format!("{label}: lw t1, 0(t0)"));
         self.bnez("t1", label);
         self.span(m, IntrinsicKind::PollIdle, &["t0", "t1"]);
+    }
+
+    /// Program the issuing core's private TCDM wide-burst unit and
+    /// launch it (arXiv 2501.14370): move 2..=16 consecutive words
+    /// between the staging window at `local_reg` (a byte address in
+    /// this tile's own SPM — its sequential region in practice) and a
+    /// remote window of `words_reg` consecutive interleaved-region
+    /// words starting at `remote_reg` (which land on consecutive rows
+    /// of one remote bank) — one wide flit each way instead of `words`
+    /// word-granular network round trips. `to_local`: true =
+    /// remote→local gather load, false = local→remote scatter store.
+    /// Returns immediately; the staging window is coherent only after
+    /// [`burst_wait`](AsmBuilder::burst_wait) sees the unit idle.
+    /// Clobbers t0/t1. Needs the `BURST_*_ADDR` harness symbols
+    /// (installed by `base_symbols`).
+    pub fn burst_start(
+        &mut self,
+        local_reg: &str,
+        remote_reg: &str,
+        words_reg: &str,
+        to_local: bool,
+    ) {
+        let m = self.mark();
+        self.la("t0", "BURST_LOCAL_ADDR");
+        self.sw(local_reg, 0, "t0");
+        self.la("t0", "BURST_REMOTE_ADDR");
+        self.sw(remote_reg, 0, "t0");
+        self.la("t0", "BURST_WORDS_ADDR");
+        self.sw(words_reg, 0, "t0");
+        self.la("t0", "BURST_GO_ADDR");
+        if to_local {
+            self.li("t1", 1);
+            self.sw("t1", 0, "t0");
+        } else {
+            self.sw("zero", 0, "t0");
+        }
+        self.fence();
+        self.span(m, IntrinsicKind::BurstStart, &["t0", "t1"]);
+    }
+
+    /// Spin until the issuing core's burst unit reports idle — the
+    /// point after which the staging window may be read or rewritten.
+    /// `id` keeps the poll label unique. Clobbers t0/t1.
+    pub fn burst_wait(&mut self, id: usize) {
+        let m = self.mark();
+        self.la("t0", "BURST_STATUS_ADDR");
+        self.ins(format!("burst_poll_{id}: lw t1, 0(t0)"));
+        self.bnez("t1", format!("burst_poll_{id}"));
+        self.span(m, IntrinsicKind::BurstWait, &["t0", "t1"]);
     }
 
     /// Program the system-DMA frontend for one shared-L2 ↔ local-L1

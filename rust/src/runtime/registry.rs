@@ -7,7 +7,7 @@
 use crate::config::ClusterConfig;
 use crate::kernels::apps::{Bfs, HistEq, Raytrace};
 use crate::kernels::doublebuf::{DbAxpy, DbMatmul};
-use crate::kernels::{Axpy, Conv2d, Dct, Dotp, Matmul};
+use crate::kernels::{Axpy, AxpyBurst, Conv2d, Dct, Dotp, Matmul};
 use crate::runtime::{Target, Workload};
 use crate::system::{SysAxpy, SysMatmul, SysReduce};
 
@@ -62,6 +62,9 @@ fn s_axpy(cores: usize) -> Box<dyn Workload> {
 fn c_dotp(cores: usize) -> Box<dyn Workload> {
     Box::new(Dotp::weak_scaled(cores))
 }
+fn c_axpy_burst(cores: usize) -> Box<dyn Workload> {
+    Box::new(AxpyBurst::weak_scaled(cores))
+}
 fn s_reduce(cores: usize) -> Box<dyn Workload> {
     Box::new(SysReduce::weak_scaled(cores))
 }
@@ -88,6 +91,12 @@ pub static WORKLOADS: &[WorkloadEntry] = &[
     WorkloadEntry { name: "dct", table1: true, cluster: Some(c_dct), system: None },
     WorkloadEntry { name: "axpy", table1: true, cluster: Some(c_axpy), system: Some(s_axpy) },
     WorkloadEntry { name: "dotp", table1: true, cluster: Some(c_dotp), system: None },
+    WorkloadEntry {
+        name: "axpy_burst",
+        table1: false,
+        cluster: Some(c_axpy_burst),
+        system: None,
+    },
     WorkloadEntry { name: "reduce", table1: false, cluster: None, system: Some(s_reduce) },
     WorkloadEntry { name: "db_matmul", table1: false, cluster: Some(c_db_matmul), system: None },
     WorkloadEntry { name: "db_axpy", table1: false, cluster: Some(c_db_axpy), system: None },

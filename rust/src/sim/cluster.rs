@@ -36,9 +36,9 @@ use crate::interconnect::{build_network, Flit, L1Network};
 use crate::isa::{Csr, Program};
 use crate::mem::{
     AddressMap, BankRequest, CtrlEffect, CtrlRegs, L2Memory, MemOp, Region, SramBank,
-    CTRL_CLUSTER_ID, CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS, CTRL_GBARRIER,
-    CTRL_SYSDMA_BYTES, CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR,
-    CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS,
+    CTRL_BURST_LOCAL, CTRL_BURST_REMOTE, CTRL_BURST_STATUS, CTRL_BURST_WORDS, CTRL_CLUSTER_ID,
+    CTRL_DMA_BYTES, CTRL_DMA_L2, CTRL_DMA_SPM, CTRL_DMA_STATUS, CTRL_GBARRIER, CTRL_SYSDMA_BYTES,
+    CTRL_SYSDMA_L2, CTRL_SYSDMA_LOCAL, CTRL_SYSDMA_RADDR, CTRL_SYSDMA_RCLUSTER, CTRL_SYSDMA_STATUS,
 };
 use crate::sim::stats::ClusterStats;
 use crate::trace::{CoreTracer, HeatSnapshot, MarkerEvent, TileHeat, TraceBook, TraceConfig};
@@ -127,7 +127,51 @@ const IDLE_FLIT: Flit = Flit {
     row: 0,
     issued_at: 0,
     rdata: 0,
+    beats: 1,
 };
+
+/// State of one per-core TCDM wide-burst unit (the `CTRL_BURST_*`
+/// frontend; arXiv 2501.14370).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BurstState {
+    Idle,
+    /// The burst flit is traveling to, being served by, or returning
+    /// from the remote bank.
+    InFlight,
+    /// The burst came home; the staging window drains until `done_at`,
+    /// when `CTRL_BURST_STATUS` flips to 0. An absolute timestamp, so
+    /// the state is skip-safe by the same argument as `dma_done_at`.
+    Draining { done_at: u64 },
+}
+
+/// One core's TCDM wide-burst descriptor + state machine. The register
+/// offsets are shared (`mem::ctrl`) but every core owns a private unit,
+/// so concurrent cores never race on the descriptor.
+#[derive(Debug, Clone)]
+struct BurstUnit {
+    local: u32,
+    remote: u32,
+    words: u32,
+    /// Staging-window rows `(bank, row)` in the issuing tile, decoded
+    /// once at GO time.
+    staging: Vec<(u16, u32)>,
+    state: BurstState,
+}
+
+impl BurstUnit {
+    fn new() -> Self {
+        BurstUnit { local: 0, remote: 0, words: 0, staging: Vec::new(), state: BurstState::Idle }
+    }
+
+    /// What a `CTRL_BURST_STATUS` load observes at `now`.
+    fn busy(&self, now: u64) -> bool {
+        match self.state {
+            BurstState::Idle => false,
+            BurstState::InFlight => true,
+            BurstState::Draining { done_at } => now < done_at,
+        }
+    }
+}
 
 impl BankQueues {
     fn new(banks: usize) -> Self {
@@ -209,6 +253,17 @@ pub struct Tile {
     /// behind a system-DMA beat holding the bank port — the DMA-vs-core
     /// L1 contention the timed system-DMA data path makes visible.
     sysdma_conflicts: u64,
+    /// Per-core TCDM wide-burst units, indexed by lane.
+    burst: Vec<BurstUnit>,
+    /// Cycle (absolute) until which each bank's port is held by an
+    /// in-service multi-beat burst (one word per cycle against the
+    /// single-ported array). Skip-safe: a pending burst keeps the
+    /// cluster non-quiescent until its response leaves, and the hold
+    /// expires no later than that.
+    bank_busy: Vec<u64>,
+    /// Burst responses waiting for their bank service to finish:
+    /// `(ready, response flit)`.
+    burst_resp_due: Vec<(u64, Flit)>,
     /// Per-bank conflict-heatmap counters; `None` unless tracing is on
     /// (pure observation — see the `trace` module's invisibility
     /// contract).
@@ -224,6 +279,22 @@ impl Tile {
     /// are scheduled for local delivery or queued for the response
     /// network, exactly as before.
     fn serve_banks(&mut self, now: u64) {
+        // Due burst responses leave the banks first: a same-tile burst
+        // completes its unit directly, a remote one rides the response
+        // network home ahead of this cycle's word responses.
+        let mut i = 0;
+        while i < self.burst_resp_due.len() {
+            if self.burst_resp_due[i].0 <= now {
+                let (_, f) = self.burst_resp_due.remove(i);
+                if f.dst_tile == f.src_tile {
+                    self.burst_complete(&f, now);
+                } else {
+                    self.resp_out.push_back(f);
+                }
+            } else {
+                i += 1;
+            }
+        }
         for b in 0..self.banks.len() {
             if let Some(&(at, write)) = self.sysdma_beats[b].front() {
                 if at <= now {
@@ -244,7 +315,29 @@ impl Tile {
                     continue;
                 }
             }
+            // A multi-beat burst still holds this bank's port: queued
+            // requests wait (the serialization a wide TCDM port trades
+            // against fewer interconnect traversals).
+            if self.bank_busy[b] > now {
+                if let Some(h) = self.heat.as_deref_mut() {
+                    h.stalls[b] += self.bank_q.len(b) as u64;
+                }
+                continue;
+            }
             if let Some(f) = self.bank_q.pop(b) {
+                if f.beats > 1 {
+                    // Serve the whole burst: one word per cycle against
+                    // the single-ported array, the response released
+                    // when the last word clears.
+                    self.banks[b].burst_access(f.row, f.beats, f.op.is_write_like());
+                    self.bank_busy[b] = now + f.beats as u64;
+                    if let Some(h) = self.heat.as_deref_mut() {
+                        h.wins[b] += f.beats as u64;
+                        h.stalls[b] += self.bank_q.len(b) as u64;
+                    }
+                    self.burst_resp_due.push((now + f.beats as u64, f.into_response(0)));
+                    continue;
+                }
                 if let Some(h) = self.heat.as_deref_mut() {
                     h.wins[b] += 1;
                     h.stalls[b] += self.bank_q.len(b) as u64;
@@ -261,6 +354,37 @@ impl Tile {
                 }
             }
         }
+    }
+
+    /// A burst response reached its issuing tile: finish the transfer
+    /// and start the timed staging drain after which
+    /// `CTRL_BURST_STATUS` reads idle. Reached only from serial
+    /// contexts (phase 7 / the exchange phase / `serve_banks` for
+    /// same-tile windows), so both stepping engines agree. The drain
+    /// books the staging-array accesses but does not re-arbitrate the
+    /// staging bank ports — the unit's private port into its tile, per
+    /// the hybrid addressing scheme's contention-free sequential
+    /// region.
+    fn burst_complete(&mut self, f: &Flit, now: u64) {
+        let lane = f.lane as usize;
+        debug_assert!(
+            matches!(self.burst[lane].state, BurstState::InFlight),
+            "burst response for an idle unit"
+        );
+        let done_at = if f.op.is_write_like() {
+            // Scatter store: the remote bank already holds the data;
+            // the ack frees the unit next cycle.
+            now + 1
+        } else {
+            // Gather load: the returned words drain into the staging
+            // window, one word per cycle.
+            for k in 0..self.burst[lane].staging.len() {
+                let (bank, _row) = self.burst[lane].staging[k];
+                self.banks[bank as usize].writes += 1;
+            }
+            now + 1 + f.beats as u64
+        };
+        self.burst[lane].state = BurstState::Draining { done_at };
     }
 }
 
@@ -372,6 +496,14 @@ pub struct Cluster {
     pub local_accesses: u64,
     pub group_accesses: u64,
     pub global_accesses: u64,
+    /// Extra interconnect beats carried by wide bursts beyond the head
+    /// flit (already counted in the access counters above); split by
+    /// the same group/global classification for the energy model.
+    pub group_beats: u64,
+    pub global_beats: u64,
+    /// Burst request flits the interconnect pushed back on; retried in
+    /// issue order each cycle before new GO triggers fire.
+    burst_req_pending: Vec<Flit>,
     pub energy_params: EnergyParams,
     /// Stepping engine (see [`SimBackend`]); both are cycle-exact.
     pub backend: SimBackend,
@@ -415,6 +547,9 @@ impl Cluster {
                 deliveries: Vec::new(),
                 sysdma_beats: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
                 sysdma_conflicts: 0,
+                burst: (0..cfg.cores_per_tile).map(|_| BurstUnit::new()).collect(),
+                bank_busy: vec![0; cfg.banks_per_tile],
+                burst_resp_due: Vec::new(),
                 heat: None,
             })
             .collect();
@@ -457,6 +592,9 @@ impl Cluster {
             local_accesses: 0,
             group_accesses: 0,
             global_accesses: 0,
+            group_beats: 0,
+            global_beats: 0,
+            burst_req_pending: Vec::new(),
             energy_params: EnergyParams::default(),
             // The reference serial engine; every harness overrides this
             // from its run configuration, so backend selection (and the
@@ -573,6 +711,117 @@ impl Cluster {
         });
     }
 
+    /// A `CTRL_BURST_GO` store completed: validate the descriptor, move
+    /// the data functionally (like the DMA engines — timing is carried
+    /// by the in-flight flit and the bank hold), and launch the burst
+    /// flit. Reached only from `complete_due_sys`, which both stepping
+    /// engines run serially, so injection order is engine-identical.
+    fn burst_go(&mut self, tile: usize, lane: usize, load: bool, now: u64) {
+        let (local, remote, words) = {
+            let u = &self.tiles[tile].burst[lane];
+            assert!(!u.busy(now), "core ({tile},{lane}): burst GO while the unit is busy");
+            (u.local, u.remote, u.words)
+        };
+        assert!(
+            (2..=16).contains(&words),
+            "core ({tile},{lane}): burst WORDS={words} outside 2..=16"
+        );
+        // The remote window: `words` interleaved-region word addresses
+        // one full interleaving period apart, which land on consecutive
+        // rows of one bank. Decoding every word keeps the check honest
+        // against the address map instead of assuming its layout — a
+        // sequential-region REMOTE fails here by construction.
+        let r0 = match self.map.decode(remote) {
+            Region::Spm(loc) => loc,
+            other => {
+                panic!("core ({tile},{lane}): burst REMOTE {remote:#x} is not SPM ({other:?})")
+            }
+        };
+        let stride = 4 * (self.cfg.num_tiles() * self.cfg.banks_per_tile) as u32;
+        for k in 1..words {
+            match self.map.decode(remote + k * stride) {
+                Region::Spm(loc)
+                    if loc.tile == r0.tile && loc.bank == r0.bank && loc.row == r0.row + k => {}
+                other => panic!(
+                    "core ({tile},{lane}): burst REMOTE window {remote:#x} (+{k}×{stride:#x}) \
+                     leaves its bank's rows ({other:?})"
+                ),
+            }
+        }
+        // The staging window: `words` consecutive words of the issuing
+        // tile's own SPM (its sequential region in practice).
+        let mut staging = Vec::with_capacity(words as usize);
+        for k in 0..words {
+            match self.map.decode(local + 4 * k) {
+                Region::Spm(loc) if loc.tile as usize == tile => {
+                    staging.push((loc.bank as u16, loc.row));
+                }
+                other => panic!(
+                    "core ({tile},{lane}): burst LOCAL window {local:#x} (+{k}×4) must stay \
+                     in the issuing tile's SPM ({other:?})"
+                ),
+            }
+        }
+        // Move the data functionally now; the array-access energy lands
+        // where the timed model serves it (remote side in
+        // `SramBank::burst_access`, staging side at GO for stores and at
+        // completion for loads).
+        if load {
+            for (k, &(sb, sr)) in staging.iter().enumerate() {
+                let v = self.tiles[r0.tile as usize].banks[r0.bank as usize].peek(r0.row + k as u32);
+                self.tiles[tile].banks[sb as usize].poke(sr, v);
+            }
+        } else {
+            for (k, &(sb, sr)) in staging.iter().enumerate() {
+                let v = self.tiles[tile].banks[sb as usize].peek(sr);
+                self.tiles[tile].banks[sb as usize].reads += 1;
+                self.tiles[r0.tile as usize].banks[r0.bank as usize].poke(r0.row + k as u32, v);
+            }
+        }
+        let f = Flit {
+            src_tile: tile as u16,
+            dst_tile: r0.tile as u16,
+            lane: lane as u8,
+            tag: 0,
+            core: (tile * self.cfg.cores_per_tile + lane) as u32,
+            op: if load { MemOp::Read } else { MemOp::Write { strb: 0xF } },
+            wdata: 0,
+            bank: r0.bank as u16,
+            row: r0.row,
+            issued_at: now,
+            rdata: 0,
+            beats: words as u8,
+        };
+        let u = &mut self.tiles[tile].burst[lane];
+        u.staging = staging;
+        u.state = BurstState::InFlight;
+        self.inject_burst(f, now);
+    }
+
+    /// Hand a burst request flit to the interconnect — or, for a
+    /// same-tile window, straight to the bank arbiter — parking it in
+    /// `burst_req_pending` on backpressure. Serial contexts only.
+    fn inject_burst(&mut self, f: Flit, now: u64) {
+        if f.dst_tile == f.src_tile {
+            self.tiles[f.dst_tile as usize].bank_q.push(f.bank as usize, f);
+            self.local_accesses += 1;
+            return;
+        }
+        if self.net.try_send_req(f, now) {
+            let tpg = self.cfg.tiles_per_group;
+            let extra = (f.beats as u64).saturating_sub(1);
+            if f.dst_tile as usize / tpg == f.src_tile as usize / tpg {
+                self.group_accesses += 1;
+                self.group_beats += extra;
+            } else {
+                self.global_accesses += 1;
+                self.global_beats += extra;
+            }
+        } else {
+            self.burst_req_pending.push(f);
+        }
+    }
+
     /// Reserve this cluster's L1 bank port for one word of a timed
     /// system-DMA burst: the word at logical SPM address `addr` is
     /// accessed (`write` = inbound data) in the first free cycle at or
@@ -623,6 +872,14 @@ impl Cluster {
     /// for the parallel one so the per-core inbox order matches the
     /// serial schedule exactly).
     fn complete_due_sys(&mut self, now: u64) {
+        // Pushed-back burst requests retry in issue order before any new
+        // GO triggers fire this cycle.
+        if !self.burst_req_pending.is_empty() {
+            let pending = std::mem::take(&mut self.burst_req_pending);
+            for f in pending {
+                self.inject_burst(f, now);
+            }
+        }
         let mut due = std::mem::take(&mut self.sys_due_buf);
         debug_assert!(due.is_empty());
         let mut i = 0;
@@ -644,6 +901,9 @@ impl Cluster {
                     }
                     CTRL_GBARRIER => (now < self.gbarrier_release_at) as u32,
                     CTRL_CLUSTER_ID => self.cluster_id,
+                    CTRL_BURST_STATUS => {
+                        self.tiles[p.tile].burst[p.lane as usize].busy(now) as u32
+                    }
                     _ => self.ctrl.load(off),
                 },
                 SysKind::CtrlStore(off, value) => {
@@ -676,6 +936,18 @@ impl Cluster {
                         }
                         CtrlEffect::TraceMarker(id) => {
                             self.trace_marker_event(p.tile, p.lane as usize, id, now);
+                        }
+                        CtrlEffect::BurstReg(boff, v) => {
+                            let u = &mut self.tiles[p.tile].burst[p.lane as usize];
+                            match boff {
+                                CTRL_BURST_LOCAL => u.local = v,
+                                CTRL_BURST_REMOTE => u.remote = v,
+                                CTRL_BURST_WORDS => u.words = v,
+                                _ => unreachable!("BurstReg offset {boff:#x}"),
+                            }
+                        }
+                        CtrlEffect::BurstGo(load) => {
+                            self.burst_go(p.tile, p.lane as usize, load, now);
                         }
                         CtrlEffect::DmaReg(..) | CtrlEffect::SysDmaReg(..) | CtrlEffect::None => {}
                         wake => self.apply_wake(wake),
@@ -802,6 +1074,13 @@ impl Cluster {
         for t in 0..self.tiles.len() {
             while let Some(f) = self.net.pop_resp_arrival(t, now) {
                 debug_assert_eq!(f.dst_tile as usize, t);
+                if f.beats > 1 {
+                    // Wide-burst response: completes its per-core unit
+                    // (polled via `CTRL_BURST_STATUS`), never a core
+                    // scoreboard entry.
+                    self.tiles[t].burst_complete(&f, now);
+                    continue;
+                }
                 self.tiles[t].deliveries.push((
                     now + 1,
                     f.lane,
@@ -866,9 +1145,11 @@ impl Cluster {
     /// from per-core cycle accounting.
     pub(crate) fn quiescent(&self) -> bool {
         self.net.in_flight() == 0
+            && self.burst_req_pending.is_empty()
             && self.tiles.iter().all(|t| {
                 t.resp_out.is_empty()
                     && t.bank_q.total() == 0
+                    && t.burst_resp_due.is_empty()
                     && t.icache.quiet()
                     && t.cores.iter().all(|c| c.quiet())
             })
@@ -898,6 +1179,19 @@ impl Cluster {
                 // Sorted by cycle — the front is the earliest beat.
                 if let Some(&(at, _)) = q.front() {
                     upd(at);
+                }
+            }
+            for &(at, _) in &tile.burst_resp_due {
+                upd(at);
+            }
+            // Burst staging drains flip `CTRL_BURST_STATUS` observers
+            // when `now` reaches `done_at` — the same wake-one-early
+            // rule as the status timestamps below.
+            for u in &tile.burst {
+                if let BurstState::Draining { done_at } = u.state {
+                    if done_at > self.now {
+                        upd(done_at.saturating_sub(1));
+                    }
                 }
             }
         }
@@ -943,10 +1237,12 @@ impl Cluster {
     pub fn drained(&self) -> bool {
         self.pending_sys.is_empty()
             && self.net.in_flight() == 0
+            && self.burst_req_pending.is_empty()
             && self.tiles.iter().all(|t| {
                 t.resp_out.is_empty()
                     && t.deliveries.is_empty()
                     && t.bank_q.total() == 0
+                    && t.burst_resp_due.is_empty()
                     && t.cores.iter().all(|c| c.drained())
             })
     }
@@ -960,6 +1256,9 @@ impl Cluster {
             local_accesses: self.local_accesses,
             group_accesses: self.group_accesses,
             global_accesses: self.global_accesses,
+            group_beats: self.group_beats,
+            global_beats: self.global_beats,
+            l1_req_path_cycles: self.net.req_path_cycles(),
             sysdma_l1_conflict_cycles: self.tiles.iter().map(|t| t.sysdma_conflicts).sum(),
             ..Default::default()
         };
@@ -991,8 +1290,10 @@ impl Cluster {
         // Interconnect traversals (request + response).
         e.tile_xbar = p.tile_xbar
             * (self.local_accesses + self.group_accesses + self.global_accesses) as f64;
-        e.group_net = p.group_xbar * 2.0 * (self.group_accesses + self.global_accesses) as f64;
+        e.group_net = p.group_xbar * 2.0 * (self.group_accesses + self.global_accesses) as f64
+            + p.group_xbar_beat * 2.0 * self.group_beats as f64;
         e.global_net = p.global_xbar * 2.0 * self.global_accesses as f64
+            + p.global_xbar_beat * 2.0 * self.global_beats as f64
             + p.net_static_per_tile_cycle * (self.now * self.cfg.num_tiles() as u64) as f64;
         // AXI + DMA (per-beat transfer energies; see `EnergyParams`).
         let beats: u64 = self
@@ -1198,6 +1499,7 @@ impl CoreCtx for TileCtx<'_> {
                     row: loc.row,
                     issued_at: now,
                     rdata: 0,
+                    beats: 1,
                 };
                 if loc.tile as usize == self.tile {
                     // Tile-local: straight into the bank arbiter.

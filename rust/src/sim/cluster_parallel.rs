@@ -310,6 +310,13 @@ impl Cluster {
         for t in 0..n_tiles {
             while let Some(f) = self.net.pop_resp_arrival(t, now) {
                 debug_assert_eq!(f.dst_tile as usize, t);
+                if f.beats > 1 {
+                    // Wide-burst response: completes its per-core unit
+                    // (serial phase 7 does the same), never a core
+                    // scoreboard entry.
+                    self.tiles[t].burst_complete(&f, now);
+                    continue;
+                }
                 self.tiles[t].deliveries.push((
                     now + 1,
                     f.lane,
@@ -464,6 +471,7 @@ impl CoreCtx for ParTileCtx<'_> {
                     row: loc.row,
                     issued_at: now,
                     rdata: 0,
+                    beats: 1,
                 };
                 if loc.tile as usize == self.tile {
                     // Tile-local: straight into the bank arbiter.

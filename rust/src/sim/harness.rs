@@ -114,6 +114,11 @@ pub fn base_symbols(cfg: &ClusterConfig) -> HashMap<String, u32> {
     sym.insert("DMA_TRIGGER_ADDR".into(), CTRL_BASE + CTRL_DMA_TRIGGER);
     sym.insert("DMA_STATUS_ADDR".into(), CTRL_BASE + CTRL_DMA_STATUS);
     sym.insert("TRACE_MARKER_ADDR".into(), CTRL_BASE + crate::mem::CTRL_TRACE_MARKER);
+    sym.insert("BURST_LOCAL_ADDR".into(), CTRL_BASE + crate::mem::CTRL_BURST_LOCAL);
+    sym.insert("BURST_REMOTE_ADDR".into(), CTRL_BASE + crate::mem::CTRL_BURST_REMOTE);
+    sym.insert("BURST_WORDS_ADDR".into(), CTRL_BASE + crate::mem::CTRL_BURST_WORDS);
+    sym.insert("BURST_GO_ADDR".into(), CTRL_BASE + crate::mem::CTRL_BURST_GO);
+    sym.insert("BURST_STATUS_ADDR".into(), CTRL_BASE + crate::mem::CTRL_BURST_STATUS);
     sym.insert("L2_BASE".into(), crate::mem::L2_BASE);
     sym
 }

@@ -57,6 +57,16 @@ pub struct ClusterStats {
     pub local_accesses: u64,
     pub group_accesses: u64,
     pub global_accesses: u64,
+    /// Extra interconnect beats carried by TCDM wide bursts beyond
+    /// each burst's head flit, split like the access counters.
+    pub group_beats: u64,
+    pub global_beats: u64,
+    /// Cumulative request-network destination-port occupancy in
+    /// port·cycles: each granted flit holds its output port for
+    /// `1 + (beats−1)/4` cycles, so wide bursts spend strictly fewer
+    /// request-path cycles than the equivalent word-granular stream —
+    /// the quantity the burst acceptance test pins.
+    pub l1_req_path_cycles: u64,
     /// Request-wait cycles where a core's queued L1 bank request stalled
     /// behind a timed system-DMA beat holding the bank port (always 0
     /// outside a multi-cluster system — the DMA-vs-core L1 contention).
@@ -81,6 +91,9 @@ impl ClusterStats {
         self.local_accesses += o.local_accesses;
         self.group_accesses += o.group_accesses;
         self.global_accesses += o.global_accesses;
+        self.group_beats += o.group_beats;
+        self.global_beats += o.global_beats;
+        self.l1_req_path_cycles += o.l1_req_path_cycles;
         self.sysdma_l1_conflict_cycles += o.sysdma_l1_conflict_cycles;
         self.energy.accumulate(&o.energy);
     }
@@ -152,7 +165,10 @@ impl ClusterStats {
         tr.set("local", self.local_accesses.into());
         tr.set("group", self.group_accesses.into());
         tr.set("global", self.global_accesses.into());
+        tr.set("group_beats", self.group_beats.into());
+        tr.set("global_beats", self.global_beats.into());
         o.set("traffic", tr);
+        o.set("l1_req_path_cycles", self.l1_req_path_cycles.into());
         o.set("sysdma_l1_conflict_cycles", self.sysdma_l1_conflict_cycles.into());
         o.set("energy_pj", self.energy.total_pj().into());
         o

@@ -670,3 +670,90 @@ fn backends_agree_on_butterfly_topology() {
         halt";
     assert_backends_agree(cfg, src, &sym, |_| {});
 }
+
+// --- TCDM wide bursts and the 256-core campaign --------------------------
+
+#[test]
+fn wide_bursts_cut_request_path_cycles_vs_word_twin() {
+    // The acceptance contract of the burst frontend: against its
+    // word-granular twin (same inputs, same remote windows, same
+    // verified result), the burst variant must spend strictly fewer
+    // request-network port cycles — each W-word window rides one wide
+    // flit holding its port 1+(W-1)/4 cycles instead of W single-word
+    // grants. Both engines must agree on every count along the way.
+    use crate::kernels::AxpyBurst;
+    use crate::runtime::{run_workload, RunConfig, Workload};
+    let cfg = ClusterConfig::minpool();
+    let mut per_variant = Vec::new();
+    for bursts in [true, false] {
+        let k = AxpyBurst::new(16, bursts);
+        let a = run_workload(&k, &RunConfig::cluster(&cfg).with_backend(SimBackend::Serial));
+        let b = run_workload(&k, &RunConfig::cluster(&cfg).with_backend(SimBackend::Parallel));
+        assert!(a.cycles > 0);
+        assert_eq!(a.cycles, b.cycles, "{}: cycle counts diverge", k.name());
+        assert_eq!(a.stats, b.stats, "{}: statistics diverge", k.name());
+        let mut ma = a.machine;
+        k.verify(&mut ma).unwrap_or_else(|e| panic!("{} serial: {e}", k.name()));
+        let mut mb = b.machine;
+        k.verify(&mut mb).unwrap_or_else(|e| panic!("{} parallel: {e}", k.name()));
+        per_variant.push(a.stats.clone());
+    }
+    let (burst, word) = (&per_variant[0], &per_variant[1]);
+    assert!(burst.l1_req_path_cycles > 0, "burst variant exercises the request network");
+    assert!(
+        burst.l1_req_path_cycles < word.l1_req_path_cycles,
+        "bursts must cut request-path cycles: burst {} vs word {}",
+        burst.l1_req_path_cycles,
+        word.l1_req_path_cycles
+    );
+    assert!(
+        burst.group_beats + burst.global_beats > 0,
+        "wide flits must book their extra beats in the traffic split"
+    );
+    assert_eq!(
+        word.group_beats + word.global_beats,
+        0,
+        "the word-granular twin carries no extra beats"
+    );
+}
+
+#[test]
+fn mempool_preset_backends_and_toggles_agree() {
+    // The 256-core campaign smoke: at the paper's full cluster shape,
+    // both stepping engines, the quiescence fast path, and tracing all
+    // leave cycles and statistics bit-identical — on a plain kernel and
+    // on the burst-frontend kernel.
+    use crate::kernels::{Axpy, AxpyBurst};
+    use crate::runtime::{run_workload, RunConfig, Workload};
+    use crate::trace::TraceConfig;
+    let cfg = ClusterConfig::mempool();
+    assert_eq!(cfg.num_cores(), 256);
+    let kernels: Vec<Box<dyn Workload>> =
+        vec![Box::new(Axpy::new(16)), Box::new(AxpyBurst::new(16, true))];
+    for k in kernels {
+        let base =
+            run_workload(k.as_ref(), &RunConfig::cluster(&cfg).with_backend(SimBackend::Serial));
+        assert!(base.cycles > 0);
+        let mut m = base.machine;
+        k.verify(&mut m).unwrap_or_else(|e| panic!("{} @256c serial: {e}", k.name()));
+        let par =
+            run_workload(k.as_ref(), &RunConfig::cluster(&cfg).with_backend(SimBackend::Parallel));
+        assert_eq!(base.cycles, par.cycles, "{} @256c: cycle counts diverge", k.name());
+        assert_eq!(base.stats, par.stats, "{} @256c: statistics diverge", k.name());
+        let mut m = par.machine;
+        k.verify(&mut m).unwrap_or_else(|e| panic!("{} @256c parallel: {e}", k.name()));
+        let mut noskip = RunConfig::cluster(&cfg).with_backend(SimBackend::Serial);
+        noskip.quiesce_skip = false;
+        let ns = run_workload(k.as_ref(), &noskip);
+        assert_eq!(base.cycles, ns.cycles, "{} @256c: skip changes cycles", k.name());
+        assert_eq!(base.stats, ns.stats, "{} @256c: skip changes statistics", k.name());
+        let traced = run_workload(
+            k.as_ref(),
+            &RunConfig::cluster(&cfg)
+                .with_backend(SimBackend::Parallel)
+                .with_trace(TraceConfig { instr: false }),
+        );
+        assert_eq!(base.cycles, traced.cycles, "{} @256c: tracing changes cycles", k.name());
+        assert_eq!(base.stats, traced.stats, "{} @256c: tracing changes statistics", k.name());
+    }
+}

@@ -15,32 +15,34 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::config::{ClusterConfig, SystemConfig};
+use crate::config::{ClusterConfig, SystemConfig, TopologyPreset};
 use crate::runtime::{run_workload, workload_by_name, RunConfig, Target, Workload};
 use crate::sim::{ClusterStats, SimBackend};
 use crate::system::SystemStats;
 use crate::trace::{regions_json, TraceConfig};
 use crate::util::json::Json;
 
-/// Cluster shape for a preset at a given core count.
+/// Cluster shape for a preset at a given core count — one resolution
+/// point for every named topology family ([`TopologyPreset`]).
 pub fn config_for(preset: &str, cores: usize) -> Result<ClusterConfig, String> {
     if !cores.is_power_of_two() {
         return Err(format!("core count {cores} must be a power of two"));
     }
-    let mut cfg = ClusterConfig::with_cores(cores);
-    match preset {
-        // The paper's large configuration family.
-        "mempool" => {}
-        // The fast-test family: fewer DMA backends, like `minpool()`.
-        "minpool" => cfg.dma.backends_per_group = cfg.dma.backends_per_group.min(2),
-        other => return Err(format!("unknown config preset `{other}` (minpool|mempool)")),
-    }
+    let p = TopologyPreset::parse(preset).ok_or_else(|| {
+        format!("unknown config preset `{preset}` (minpool|mempool|terapool)")
+    })?;
+    let cfg = p.config_with_cores(cores);
+    cfg.validate()?;
     Ok(cfg)
 }
 
-/// One scenario request: which kernel, at which shape, on which engine.
+/// One scenario request: which kernel, at which shape (named topology
+/// preset + scale), on which engine.
 #[derive(Debug, Clone)]
 pub struct ScenarioReq {
+    /// Named topology family the scenario resolves its cluster shape
+    /// from ([`TopologyPreset::name`]).
+    pub preset: String,
     pub kernel: String,
     /// Clusters in the system (1 = standalone cluster).
     pub clusters: usize,
@@ -68,6 +70,9 @@ pub fn is_bootstrap_doc(doc: &Json) -> bool {
 /// report schema, CI diffs — reads from the same measurement.
 #[derive(Debug, Clone)]
 pub struct GridPoint {
+    /// Named topology preset the scenario's cluster shape resolved from
+    /// (recorded per scenario in the v3 report schema).
+    pub preset: String,
     pub kernel: String,
     /// Clusters in the system (1 = standalone cluster).
     pub clusters: usize,
@@ -140,6 +145,7 @@ impl GridPoint {
     /// exactly; `host` is masked or tolerance-checked).
     pub fn scenario_json(&self) -> Json {
         let mut o = Json::obj();
+        o.set("preset", self.preset.as_str().into());
         o.set("kernel", self.kernel.as_str().into());
         o.set("clusters", self.clusters.into());
         o.set("cores", self.cores.into());
@@ -174,6 +180,7 @@ impl GridPoint {
     #[cfg(test)]
     pub fn synthetic(kernel: &str, clusters: usize, cores: usize, cycles: u64) -> GridPoint {
         GridPoint {
+            preset: "minpool".to_string(),
             kernel: kernel.to_string(),
             clusters,
             cores,
@@ -233,6 +240,7 @@ pub fn run_point(
     };
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     Ok(GridPoint {
+        preset: preset.to_string(),
         kernel: kernel_name.to_string(),
         clusters: clusters.max(1),
         cores,
@@ -250,7 +258,6 @@ pub fn run_point(
 /// threads. Results come back in request order regardless of
 /// scheduling; the first scenario error aborts the whole batch.
 pub fn run_scenarios(
-    preset: &str,
     reqs: &[ScenarioReq],
     jobs: usize,
     quiesce_skip: bool,
@@ -272,7 +279,7 @@ pub fn run_scenarios(
                 }
                 let r = &reqs[i];
                 let point = run_point(
-                    preset,
+                    &r.preset,
                     &r.kernel,
                     r.clusters,
                     r.cores,

@@ -29,8 +29,11 @@ pub const REPORT_SCHEMA: &str = "mempool-report";
 /// The report document's `version`; bump on any incompatible change.
 /// v2 adds the optional per-scenario `regions` block (cycle-attributed
 /// kernel-region roll-ups from the tracing layer); v1 documents remain
-/// readable because the block is optional.
-pub const REPORT_SCHEMA_VERSION: u64 = 2;
+/// readable because the block is optional. v3 records the named
+/// topology preset *per scenario* (`scenario.preset`), so mixed-grid
+/// reports stay self-describing; v1/v2 documents (doc-level preset
+/// only) remain readable.
+pub const REPORT_SCHEMA_VERSION: u64 = 3;
 /// The oldest report schema version this build still reads.
 pub const REPORT_SCHEMA_MIN_VERSION: u64 = 1;
 
@@ -106,6 +109,64 @@ impl ReportSpec {
         }
     }
 
+    /// The campaign declared for a named topology preset. `minpool` is
+    /// the CI default above; `mempool` is the paper-scale campaign —
+    /// the Table 1 kernels at the 256-core shape, the Fig 13 scaling
+    /// points (16/64/256 cores), and the Fig 15 double-buffer plus
+    /// TCDM-burst studies at full scale, every point on both stepping
+    /// engines; `terapool` is the >256-PE stretch shape on the two
+    /// cheapest kernels.
+    pub fn for_preset(preset: &str) -> Result<ReportSpec, String> {
+        match preset {
+            "minpool" => Ok(ReportSpec::ci_default()),
+            "mempool" => Ok(ReportSpec {
+                preset: "mempool".to_string(),
+                cluster: vec![
+                    // Fig 13 scaling spine: the core Table 1 kernels at
+                    // scaled points up to the paper's 256-core cluster.
+                    GridBlock {
+                        clusters: vec![1],
+                        cores: vec![16, 64, 256],
+                        kernels: names(&["matmul", "axpy", "dotp"]),
+                    },
+                    // The remaining Table 1 kernels, the Fig 15
+                    // double-buffer studies, and the TCDM-burst
+                    // frontier, each at full paper scale.
+                    GridBlock {
+                        clusters: vec![1],
+                        cores: vec![256],
+                        kernels: names(&[
+                            "conv2d",
+                            "dct",
+                            "db_matmul",
+                            "db_axpy",
+                            "axpy_burst",
+                        ]),
+                    },
+                ],
+                system: vec![],
+                backends: vec![SimBackend::Serial, SimBackend::Parallel],
+                jobs: default_jobs(),
+                quiesce_skip: true,
+                trace_regions: false,
+            }),
+            "terapool" => Ok(ReportSpec {
+                preset: "terapool".to_string(),
+                cluster: vec![GridBlock {
+                    clusters: vec![1],
+                    cores: vec![512],
+                    kernels: names(&["axpy", "dotp"]),
+                }],
+                system: vec![],
+                backends: vec![SimBackend::Serial, SimBackend::Parallel],
+                jobs: default_jobs(),
+                quiesce_skip: true,
+                trace_regions: false,
+            }),
+            other => Err(format!("unknown report preset `{other}` (minpool|mempool|terapool)")),
+        }
+    }
+
     /// Restrict the campaign to one target (`cluster` | `system` | `all`).
     pub fn campaign(mut self, which: &str) -> Result<ReportSpec, String> {
         match which {
@@ -135,6 +196,7 @@ impl ReportSpec {
                                 out.push((
                                     campaign,
                                     ScenarioReq {
+                                        preset: self.preset.clone(),
                                         kernel: kernel.clone(),
                                         clusters,
                                         cores,
@@ -167,8 +229,7 @@ pub fn run_report(spec: &ReportSpec) -> Result<Report, String> {
     let scen = spec.scenarios();
     let reqs: Vec<ScenarioReq> = scen.iter().map(|(_, r)| r.clone()).collect();
     let t0 = Instant::now();
-    let points =
-        run_scenarios(&spec.preset, &reqs, spec.jobs, spec.quiesce_skip, spec.trace_regions)?;
+    let points = run_scenarios(&reqs, spec.jobs, spec.quiesce_skip, spec.trace_regions)?;
     let wall_seconds = t0.elapsed().as_secs_f64();
     Ok(Report {
         preset: spec.preset.clone(),
@@ -233,6 +294,10 @@ pub fn validate_report(doc: &Json) -> Result<(), String> {
     let scenarios = doc.req_array("scenarios")?;
     for (i, s) in scenarios.iter().enumerate() {
         identity_fields(s).map_err(|e| format!("scenario[{i}]: {e}"))?;
+        // v3 records the resolved topology preset on every scenario.
+        if version >= 3 {
+            s.req_str("preset").map_err(|e| format!("scenario[{i}]: {e}"))?;
+        }
         // The v2 `regions` block is optional, but when present it must
         // at least be an array of objects carrying a region id.
         if let Some(regions) = s.get("regions") {
@@ -561,6 +626,33 @@ mod tests {
     }
 
     #[test]
+    fn preset_campaigns_are_well_formed() {
+        // The paper-scale campaign: 256 cores present, every kernel
+        // resolvable at its declared scale, every scenario stamped with
+        // the preset it resolved from.
+        let spec = ReportSpec::for_preset("mempool").expect("mempool campaign");
+        let scen = spec.scenarios();
+        assert!(scen.iter().any(|(_, r)| r.cores == 256));
+        assert!(scen.iter().all(|(_, r)| r.preset == "mempool" && r.clusters == 1));
+        assert!(scen.iter().any(|(_, r)| r.kernel == "axpy_burst"));
+        for (_, r) in &scen {
+            crate::studies::grid::config_for(&r.preset, r.cores).expect("legal shape");
+            workload_by_name(&r.kernel, Target::Cluster, r.cores)
+                .unwrap_or_else(|e| panic!("campaign kernel must resolve: {e}"));
+        }
+        // Both engines run every point (the serial==parallel gate).
+        assert_eq!(spec.backends.len(), 2);
+        // minpool is the CI default; terapool stretches past 256 PEs.
+        assert_eq!(ReportSpec::for_preset("minpool").unwrap().preset, "minpool");
+        let tera = ReportSpec::for_preset("terapool").unwrap();
+        assert!(tera.scenarios().iter().all(|(_, r)| r.cores == 512));
+        for (_, r) in &tera.scenarios() {
+            crate::studies::grid::config_for(&r.preset, r.cores).expect("legal shape");
+        }
+        assert!(ReportSpec::for_preset("bogus").is_err());
+    }
+
+    #[test]
     fn report_runs_backends_agree_and_schema_roundtrips() {
         let report = run_report(&tiny_spec(vec![SimBackend::Serial, SimBackend::Parallel]))
             .expect("campaign");
@@ -705,6 +797,7 @@ mod tests {
     /// A minimal schema-valid single-scenario report for the diff tests.
     fn synthetic_report(kernel: &str, cycles: u64, throughput: f64) -> Json {
         let mut s = Json::obj();
+        s.set("preset", "minpool".into());
         s.set("kernel", kernel.into());
         s.set("clusters", 1u64.into());
         s.set("cores", 4u64.into());

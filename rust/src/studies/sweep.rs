@@ -76,6 +76,7 @@ impl SweepSpec {
         self.grid()
             .into_iter()
             .map(|(clusters, cores, kernel)| ScenarioReq {
+                preset: self.preset.clone(),
                 kernel,
                 clusters,
                 cores,
@@ -88,7 +89,7 @@ impl SweepSpec {
 /// Run the whole grid, fanned across `spec.jobs` worker threads. Results
 /// come back in grid order regardless of scheduling.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
-    run_scenarios(&spec.preset, &spec.scenario_reqs(), spec.jobs, spec.quiesce_skip, false)
+    run_scenarios(&spec.scenario_reqs(), spec.jobs, spec.quiesce_skip, false)
 }
 
 /// Full results document (what `mempool sweep --out` writes). Scenario

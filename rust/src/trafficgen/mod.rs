@@ -141,6 +141,7 @@ pub fn run_netsim(cfg: &NetSimConfig) -> NetSimResult {
                     row: 0,
                     issued_at: now,
                     rdata: 0,
+                    beats: 1,
                 };
                 if src[core].len() < SRC_DEPTH {
                     src[core].push_back(f);

@@ -1,0 +1,48 @@
+//! Perf bench — the busy-path host-speedup scoreboard for the
+//! pre-decoded issue path, the parked-core fast path, and the
+//! allocation-free exchange phase (see `docs/ARCHITECTURE.md`, Host
+//! performance model).
+//!
+//! Every scenario runs through `studies::grid::run_point` — the exact
+//! path the report campaign measures — so the `sim_cycles_per_sec`
+//! printed here is the same `host.sim_cycles_per_sec` field CI's
+//! `mempool report --host-tolerance` gates on. Scenarios cover the CI
+//! shape (minpool, 16 cores) and the paper shape (mempool, 256 cores)
+//! on a compute-bound and a memory/burst-bound kernel, on both stepping
+//! engines. Compare a before/after pair of runs of this bench to quote
+//! a host-speedup ratio.
+
+use mempool::runtime::ExecOptions;
+use mempool::sim::SimBackend;
+use mempool::util::bench::section;
+
+fn main() {
+    section("Host throughput — simulated cycles per host second");
+    let exec = ExecOptions::default();
+    let scenarios: &[(&str, &str, usize)] = &[
+        ("minpool", "matmul", 16),
+        ("mempool", "axpy", 256),
+        ("mempool", "matmul", 256),
+        ("mempool", "axpy_burst", 256),
+    ];
+    println!(
+        "{:>8} {:>12} {:>5} {:>9} | {:>12} {:>9} {:>14}",
+        "preset", "kernel", "cores", "backend", "cycles", "wall s", "M sim-cyc/s"
+    );
+    for &(preset, kernel, cores) in scenarios {
+        for backend in [SimBackend::Serial, SimBackend::Parallel] {
+            let p = mempool::studies::grid::run_point(preset, kernel, 1, cores, backend, &exec)
+                .unwrap_or_else(|e| panic!("{preset} {kernel} @ {cores}: {e}"));
+            println!(
+                "{:>8} {:>12} {:>5} {:>9} | {:>12} {:>9.3} {:>14.2}",
+                preset,
+                kernel,
+                cores,
+                backend.name(),
+                p.cycles,
+                p.wall_ms / 1e3,
+                p.sim_cycles_per_sec() / 1e6
+            );
+        }
+    }
+}

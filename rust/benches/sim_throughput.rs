@@ -3,30 +3,36 @@
 //! both stepping backends. The parallel backend's advantage grows with
 //! the tile count (per-cycle fork/join overhead amortizes over 64 tiles
 //! at 256 cores).
+//!
+//! Scenarios run on the named topology presets through the same
+//! `studies::grid::run_point` path the report campaign uses, so the
+//! numbers printed here are directly comparable with the
+//! `host.sim_cycles_per_sec` column of `mempool report` and with the
+//! `host_throughput` bench's busy-path scenarios.
 
 use mempool::config::ClusterConfig;
 use mempool::kernels::Matmul;
-use mempool::runtime::{run_workload, RunConfig};
+use mempool::runtime::{run_workload, ExecOptions, RunConfig};
 use mempool::sim::SimBackend;
+use mempool::studies::grid::run_point;
 use mempool::util::bench::{bench_config, section};
-use std::time::Instant;
 
 fn main() {
     section("Simulator throughput — serial vs parallel tile stepping");
+    let exec = ExecOptions::default();
     for backend in [SimBackend::Serial, SimBackend::Parallel] {
-        for cores in [16usize, 64, 256] {
-            let cfg = ClusterConfig::with_cores(cores);
-            let k = Matmul::weak_scaled(cores);
-            let t0 = Instant::now();
-            let r = run_workload(&k, &RunConfig::cluster(&cfg).with_backend(backend));
-            let dt = t0.elapsed().as_secs_f64();
-            let core_cycles = r.cycles * cores as u64;
+        for (preset, cores) in [("minpool", 16usize), ("mempool", 64), ("mempool", 256)] {
+            let p = run_point(preset, "matmul", 1, cores, backend, &exec)
+                .unwrap_or_else(|e| panic!("{preset} matmul @ {cores}: {e}"));
+            let core_cycles = p.cycles * cores as u64;
             println!(
-                "{:>8} {cores:>4} cores: {} cycles in {:.3}s = {:.1} M core-cycles/s",
+                "{:>8} {preset:>8} {cores:>4} cores: {} cycles in {:.3}s = {:.2} M sim-cycles/s \
+                 ({:.1} M core-cycles/s)",
                 backend.name(),
-                r.cycles,
-                dt,
-                core_cycles as f64 / dt / 1e6
+                p.cycles,
+                p.wall_ms / 1e3,
+                p.sim_cycles_per_sec() / 1e6,
+                core_cycles as f64 / (p.wall_ms / 1e3) / 1e6
             );
         }
     }

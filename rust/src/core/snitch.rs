@@ -17,7 +17,7 @@ use std::collections::VecDeque;
 
 use super::ipu::{Ipu, IpuOp};
 use crate::icache::FetchResult;
-use crate::isa::{Csr, Instr, OpKind, Program, Reg};
+use crate::isa::{decoded_flags, Csr, DecodedOp, Instr, OpKind, Program, Reg};
 use crate::mem::MemOp;
 use crate::trace::{Bucket, CoreTracer, InstrRecord};
 
@@ -162,6 +162,23 @@ pub struct Snitch {
     /// Completions delivered by the cluster, drained one per cycle (the
     /// LSU owns one register file write port).
     inbox: VecDeque<MemCompletion>,
+    /// Parked: the core proved [`Snitch::quiet`] at the end of a step and
+    /// the stepping engines may skip it entirely. Statistics accounting
+    /// for the skipped span is deferred ("debt") and settled when the
+    /// core is next stepped ([`Snitch::step`]), when stats are read
+    /// ([`Snitch::park_debt`]), or when a trace is taken
+    /// ([`Snitch::settle_debt`]). Cleared only by `step` and `reset`:
+    /// a wake-up or completion makes `quiet()` false, which alone
+    /// un-skips the core in both engines, so `wake`/`push_completion`
+    /// never touch the flag.
+    parked: bool,
+    /// Cycle the core parked at (the last cycle it accounted itself).
+    parked_at: u64,
+    /// Whether the parked span bills to `halted_cycles` (vs sleep).
+    /// Captured at park time: a wake-up can flip `status` before the
+    /// debt is settled, but the skipped cycles were spent in the state
+    /// the core parked in.
+    parked_halted: bool,
     pub ipu: Ipu,
     pub stats: CoreStats,
     /// Optional trace sink (see the `trace` module). `None` in normal
@@ -187,6 +204,9 @@ impl Snitch {
             occupied: 0,
             outstanding_mem: 0,
             inbox: VecDeque::new(),
+            parked: false,
+            parked_at: 0,
+            parked_halted: false,
             ipu: Ipu::new(),
             stats: CoreStats::default(),
             tracer: None,
@@ -206,6 +226,9 @@ impl Snitch {
         self.occupied = 0;
         self.outstanding_mem = 0;
         self.inbox.clear();
+        self.parked = false;
+        self.parked_at = 0;
+        self.parked_halted = false;
     }
 
     pub fn halted(&self) -> bool {
@@ -280,8 +303,16 @@ impl Snitch {
     /// plus the halted/sleep bucket), with no architectural change.
     pub fn age_quiet(&mut self, delta: u64) {
         debug_assert!(self.quiet(), "aging a non-quiet core");
-        self.stats.cycles += delta;
         let halted = self.status == Status::Halted;
+        self.book_quiet(delta, halted);
+    }
+
+    /// Book `delta` quiet cycles into the stats and the tracer (the
+    /// shared body of `age_quiet` and the parking-debt settlements; the
+    /// halted/sleep split is a caller decision because a parked core may
+    /// already have been woken when its debt comes due).
+    fn book_quiet(&mut self, delta: u64, halted: bool) {
+        self.stats.cycles += delta;
         if halted {
             self.stats.halted_cycles += delta;
         } else {
@@ -290,6 +321,43 @@ impl Snitch {
         if let Some(tr) = self.tracer.as_mut() {
             tr.age_quiet(delta, halted);
         }
+    }
+
+    /// True when the stepping engines may skip this core's step entirely
+    /// (provided it is still [`Snitch::quiet`] — a wake-up or a queued
+    /// completion ends the skip without touching the flag).
+    #[inline]
+    pub fn is_parked(&self) -> bool {
+        self.parked
+    }
+
+    /// Outstanding (unbooked) quiet cycles of a parked core as of
+    /// cluster time `now` (= cycles fully stepped so far), plus whether
+    /// they bill to `halted_cycles`. Zero for unparked cores. Pure —
+    /// used by the immutable stats read to debt-adjust a `CoreStats`
+    /// copy without settling.
+    pub fn park_debt(&self, now: u64) -> (u64, bool) {
+        if self.parked {
+            (now.saturating_sub(1).saturating_sub(self.parked_at), self.parked_halted)
+        } else {
+            (0, false)
+        }
+    }
+
+    /// Settle a parked core's deferred accounting through cycle
+    /// `now - 1` (the last fully stepped cluster cycle), leaving it
+    /// parked with zero remaining debt. Idempotent at a fixed `now`;
+    /// called before trace finalization so the tracer's cycle totals
+    /// match the stats exactly.
+    pub fn settle_debt(&mut self, now: u64) {
+        if !self.parked {
+            return;
+        }
+        let (debt, halted) = self.park_debt(now);
+        if debt > 0 {
+            self.book_quiet(debt, halted);
+        }
+        self.parked_at = now.saturating_sub(1);
     }
 
     /// Retire at most one memory completion (LSU write port) and at most
@@ -328,15 +396,35 @@ impl Snitch {
     /// also booked into the current region window (and, with the
     /// instruction stream on, issued instructions are recorded) —
     /// strictly after `step_inner` runs, so tracing cannot perturb it.
+    ///
+    /// A parked core settles its deferred quiet-cycle accounting first
+    /// (the engines skipped cycles `parked_at + 1 .. now`), then steps
+    /// cycle `now` normally; a quiet Sleeping/Halted outcome re-parks it
+    /// at the end, so in steady state a sleeping or finished core costs
+    /// the engines one flag test per cycle instead of a full step.
     pub fn step(&mut self, now: u64, program: &Program, ctx: &mut dyn CoreCtx) -> StepOutcome {
-        if self.tracer.is_none() {
-            return self.step_inner(now, program, ctx);
+        if self.parked {
+            let delta = now.saturating_sub(self.parked_at + 1);
+            if delta > 0 {
+                self.book_quiet(delta, self.parked_halted);
+            }
+            self.parked = false;
         }
-        let pc0 = self.pc;
-        let out = self.step_inner(now, program, ctx);
-        let mut tr = self.tracer.take().expect("tracer checked above");
-        self.record_step(&mut tr, now, pc0, out, program);
-        self.tracer = Some(tr);
+        let out = if self.tracer.is_none() {
+            self.step_inner(now, program, ctx)
+        } else {
+            let pc0 = self.pc;
+            let out = self.step_inner(now, program, ctx);
+            let mut tr = self.tracer.take().expect("tracer checked above");
+            self.record_step(&mut tr, now, pc0, out, program);
+            self.tracer = Some(tr);
+            out
+        };
+        if matches!(out, StepOutcome::Sleeping | StepOutcome::Halted) && self.quiet() {
+            self.parked = true;
+            self.parked_at = now;
+            self.parked_halted = matches!(out, StepOutcome::Halted);
+        }
         out
     }
 
@@ -405,9 +493,20 @@ impl Snitch {
         let instr = *program
             .get(self.pc)
             .unwrap_or_else(|| panic!("core {}: pc {} out of program", self.id, self.pc));
+        let d = program.decoded().op(self.pc);
 
-        // Scoreboard hazard checks.
-        if let Some(reason) = self.hazard(&instr) {
+        // Scoreboard hazard checks, from the pre-decoded masks (two AND
+        // tests instead of re-walking `sources()`/`rd()` per issue). In
+        // debug builds every decision is cross-checked against the seed
+        // decoder, so the tables can never drift from the reference.
+        let hazard = self.hazard_fast(d);
+        #[cfg(debug_assertions)]
+        assert_eq!(
+            hazard,
+            self.hazard_reference(&instr),
+            "decoded hazard masks disagree with the reference decoder for `{instr}`"
+        );
+        if let Some(reason) = hazard {
             match reason {
                 StallReason::Raw => self.stats.stall_raw += 1,
                 StallReason::Lsu => self.stats.stall_lsu += 1,
@@ -419,17 +518,18 @@ impl Snitch {
         // Issue.
         match self.execute(instr, now, ctx) {
             Ok(()) => {
-                if instr.is_compute() {
+                if d.flags & decoded_flags::COMPUTE != 0 {
                     self.stats.issued_compute += 1;
                 } else {
                     self.stats.issued_control += 1;
                 }
-                self.stats.ops += instr.op_count() as u64;
-                match instr {
-                    Instr::Mac { .. } | Instr::Msu { .. } => self.stats.mac_instrs += 1,
-                    Instr::Op { op, .. } if op.is_ipu() => self.stats.mul_instrs += 1,
-                    Instr::Op { .. } | Instr::OpImm { .. } => self.stats.alu_instrs += 1,
-                    _ => {}
+                self.stats.ops += d.op_count as u64;
+                if d.flags & decoded_flags::MAC != 0 {
+                    self.stats.mac_instrs += 1;
+                } else if d.flags & decoded_flags::MUL != 0 {
+                    self.stats.mul_instrs += 1;
+                } else if d.flags & decoded_flags::ALU != 0 {
+                    self.stats.alu_instrs += 1;
                 }
                 StepOutcome::Issued
             }
@@ -444,8 +544,26 @@ impl Snitch {
         }
     }
 
-    /// Pre-issue hazard detection: RAW/WAW on the scoreboard.
-    fn hazard(&self, instr: &Instr) -> Option<StallReason> {
+    /// Pre-issue hazard detection from the decoded-op masks — the hot
+    /// path. Semantics are pinned by `hazard_reference` below; debug
+    /// builds assert the two agree on every issue.
+    #[inline]
+    fn hazard_fast(&self, d: DecodedOp) -> Option<StallReason> {
+        let pending = self.pending_ipu_regs | self.pending_mem_regs;
+        if d.strict_mask & pending != 0 || d.mem_only_mask & self.pending_mem_regs != 0 {
+            return Some(StallReason::Raw);
+        }
+        if d.flags & decoded_flags::FENCE != 0 && self.outstanding_mem > 0 {
+            return Some(StallReason::Lsu);
+        }
+        None
+    }
+
+    /// Pre-issue hazard detection: RAW/WAW on the scoreboard. The seed
+    /// reference decoder, kept (debug builds only) as the oracle the
+    /// pre-decoded masks are checked against.
+    #[cfg(debug_assertions)]
+    fn hazard_reference(&self, instr: &Instr) -> Option<StallReason> {
         // MAC/MSU chains: the accumulator (3rd source = rd) may be pending
         // on the IPU — the IPU forwards it internally (matmul's inner loop
         // issues one MAC per cycle to the same accumulator register).

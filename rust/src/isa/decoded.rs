@@ -1,0 +1,201 @@
+//! Pre-decoded issue metadata — the host-simulator fast path.
+//!
+//! The Snitch issue stage needs, every cycle, a small set of facts about
+//! the fetched instruction: which scoreboard bits stall it (RAW/WAW),
+//! whether it is a `fence`, and how the issue is classified for the
+//! Fig 14 / Fig 16 statistics. Deriving those facts from the `Instr`
+//! enum means re-walking `sources()`/`rd()` and re-matching the enum on
+//! every fetch of every core of every cycle. [`DecodedProgram`] hoists
+//! that work to program-load time: one dense table, indexed by the
+//! instruction index the PC already is, holding two precomputed hazard
+//! masks and a flag byte per instruction.
+//!
+//! Hazard-mask encoding (must mirror `Snitch::hazard_reference` —
+//! cross-checked by a debug assertion on every issue in debug builds):
+//!
+//! - `strict_mask`: registers that stall issue when *either* scoreboard
+//!   (IPU or memory) has them pending. For ordinary instructions this is
+//!   every non-zero source register plus the destination (WAW).
+//! - `mem_only_mask`: registers that stall issue only when the *memory*
+//!   scoreboard has them pending. MAC/MSU accumulator chains land here:
+//!   the IPU forwards a pending accumulator internally (both as the
+//!   third source and as the WAW destination), so only an outstanding
+//!   *load* of the accumulator stalls the chain.
+//!
+//! The table depends only on the instruction encoding — never on
+//! runtime state — so it is computed once per [`Program`]
+//! (`Program::decoded`, behind a `OnceLock`) and shared by every core
+//! and both stepping engines. Cycle counts and statistics are identical
+//! to the seed decoder by construction.
+//!
+//! [`Program`]: crate::isa::Program
+
+use crate::isa::{Instr, Reg};
+
+/// Flag bits on [`DecodedOp::flags`].
+pub mod flags {
+    /// Counted as compute in the Fig 14 breakdown (`Instr::is_compute`).
+    pub const COMPUTE: u8 = 1 << 0;
+    /// `fence` — stalls (LSU) until the memory scoreboard drains.
+    pub const FENCE: u8 = 1 << 1;
+    /// MAC/MSU (feeds `mac_instrs` in the Fig 16 energy composition).
+    pub const MAC: u8 = 1 << 2;
+    /// IPU multiply/divide register op (feeds `mul_instrs`).
+    pub const MUL: u8 = 1 << 3;
+    /// Plain ALU register/immediate op (feeds `alu_instrs`).
+    pub const ALU: u8 = 1 << 4;
+}
+
+/// Per-instruction issue metadata (see the module docs for the mask
+/// semantics). 8 bytes, `Copy`, cache-dense: the whole decoded program
+/// for a 1 KiB kernel fits in four cache lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodedOp {
+    /// Stall (RAW) when `strict_mask & (pending_ipu | pending_mem) != 0`.
+    pub strict_mask: u32,
+    /// Stall (RAW) when `mem_only_mask & pending_mem != 0`.
+    pub mem_only_mask: u32,
+    pub flags: u8,
+    /// `Instr::op_count` (MAC = 2), pre-widened at issue.
+    pub op_count: u8,
+}
+
+fn reg_bit(r: Reg) -> u32 {
+    if r == Reg::ZERO {
+        0
+    } else {
+        1 << r.index()
+    }
+}
+
+impl DecodedOp {
+    /// Decode one instruction's issue metadata. Mirrors
+    /// `Snitch::hazard_reference` and the issue-statistics match arms.
+    pub fn decode(instr: &Instr) -> DecodedOp {
+        let mut strict_mask = 0u32;
+        let mut mem_only_mask = 0u32;
+        if matches!(instr, Instr::Mac { .. } | Instr::Msu { .. }) {
+            // Accumulator chain: rs1/rs2 are strict sources; the
+            // accumulator (3rd source = rd = WAW destination) is
+            // IPU-forwarded, so it stalls only on a pending load.
+            let [rs1, rs2, acc] = instr.sources();
+            strict_mask |= rs1.map_or(0, reg_bit) | rs2.map_or(0, reg_bit);
+            mem_only_mask |= acc.map_or(0, reg_bit);
+        } else {
+            for src in instr.sources().into_iter().flatten() {
+                strict_mask |= reg_bit(src);
+            }
+            // WAW: `rd()` already filters the zero register.
+            strict_mask |= instr.rd().map_or(0, reg_bit);
+        }
+        let mut f = 0u8;
+        if instr.is_compute() {
+            f |= flags::COMPUTE;
+        }
+        match instr {
+            Instr::Fence => f |= flags::FENCE,
+            Instr::Mac { .. } | Instr::Msu { .. } => f |= flags::MAC,
+            Instr::Op { op, .. } if op.is_ipu() => f |= flags::MUL,
+            Instr::Op { .. } | Instr::OpImm { .. } => f |= flags::ALU,
+            _ => {}
+        }
+        DecodedOp {
+            strict_mask,
+            mem_only_mask,
+            flags: f,
+            op_count: instr.op_count() as u8,
+        }
+    }
+}
+
+/// The dense decoded-op table for one program: `ops[i]` is the issue
+/// metadata of instruction index `i` (the PC is already an instruction
+/// index, so no translation is needed on the hot path).
+#[derive(Debug, Clone)]
+pub struct DecodedProgram {
+    ops: Vec<DecodedOp>,
+}
+
+impl DecodedProgram {
+    pub fn new(instrs: &[Instr]) -> DecodedProgram {
+        DecodedProgram { ops: instrs.iter().map(DecodedOp::decode).collect() }
+    }
+
+    /// Issue metadata for instruction index `pc`. Panics outside the
+    /// program, matching the fetch path's own bounds check.
+    #[inline]
+    pub fn op(&self, pc: u32) -> DecodedOp {
+        self.ops[pc as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{OpKind, Width};
+
+    #[test]
+    fn decode_masks_match_hazard_semantics() {
+        let r = |n: u8| Reg(n);
+        // Plain ALU op: both sources and the destination are strict.
+        let d = DecodedOp::decode(&Instr::Op { op: OpKind::Add, rd: r(5), rs1: r(6), rs2: r(7) });
+        assert_eq!(d.strict_mask, (1 << 5) | (1 << 6) | (1 << 7));
+        assert_eq!(d.mem_only_mask, 0);
+        assert_eq!(d.flags, flags::COMPUTE | flags::ALU);
+        assert_eq!(d.op_count, 1);
+        // MAC: rs1/rs2 strict, the accumulator only mem-pending-stalled.
+        let d = DecodedOp::decode(&Instr::Mac { rd: r(10), rs1: r(11), rs2: r(12) });
+        assert_eq!(d.strict_mask, (1 << 11) | (1 << 12));
+        assert_eq!(d.mem_only_mask, 1 << 10);
+        assert_eq!(d.flags, flags::COMPUTE | flags::MAC);
+        assert_eq!(d.op_count, 2);
+        // MAC with the accumulator doubling as a multiplicand: the
+        // strict source check must dominate.
+        let d = DecodedOp::decode(&Instr::Mac { rd: r(10), rs1: r(10), rs2: r(12) });
+        assert_ne!(d.strict_mask & (1 << 10), 0);
+        // x0 never participates in hazards.
+        let d = DecodedOp::decode(&Instr::Op {
+            op: OpKind::Add,
+            rd: Reg::ZERO,
+            rs1: Reg::ZERO,
+            rs2: Reg::ZERO,
+        });
+        assert_eq!((d.strict_mask, d.mem_only_mask), (0, 0));
+        // Fence carries the drain flag and no register hazards.
+        let d = DecodedOp::decode(&Instr::Fence);
+        assert_eq!((d.strict_mask, d.mem_only_mask), (0, 0));
+        assert_ne!(d.flags & flags::FENCE, 0);
+        // A load is control, not compute, and hazards on base + rd.
+        let d = DecodedOp::decode(&Instr::Load {
+            rd: r(8),
+            rs1: r(9),
+            imm: 0,
+            width: Width::Word,
+            signed: false,
+        });
+        assert_eq!(d.strict_mask, (1 << 8) | (1 << 9));
+        assert_eq!(d.flags & flags::COMPUTE, 0);
+        // IPU multiply feeds the MUL energy counter, not ALU.
+        let d = DecodedOp::decode(&Instr::Op { op: OpKind::Mul, rd: r(5), rs1: r(6), rs2: r(7) });
+        assert_eq!(d.flags, flags::COMPUTE | flags::MUL);
+    }
+
+    #[test]
+    fn decoded_program_is_indexed_by_instruction_index() {
+        let instrs =
+            vec![Instr::Nop, Instr::Halt, Instr::Op { op: OpKind::Add, rd: Reg(5), rs1: Reg(6), rs2: Reg(7) }];
+        let dp = DecodedProgram::new(&instrs);
+        assert_eq!(dp.len(), 3);
+        assert!(!dp.is_empty());
+        assert_eq!(dp.op(0), DecodedOp::decode(&Instr::Nop));
+        assert_eq!(dp.op(2).flags & flags::COMPUTE, flags::COMPUTE);
+    }
+}

@@ -8,10 +8,12 @@
 //! scheduled instruction-for-instruction like the paper's.
 
 mod asm;
+mod decoded;
 mod instr;
 mod program;
 
 pub use asm::{assemble, assemble_debug, AsmDebug, AsmError};
+pub use decoded::{flags as decoded_flags, DecodedOp, DecodedProgram};
 pub use instr::{AmoOp, CondOp, Csr, Instr, OpKind, Reg, Width};
 pub use program::Program;
 

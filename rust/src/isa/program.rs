@@ -1,8 +1,9 @@
 //! A fully assembled program placed at a fetch base address.
 
 use std::collections::HashMap;
+use std::sync::OnceLock;
 
-use super::{assemble, AsmError, Instr};
+use super::{assemble, AsmError, DecodedProgram, Instr};
 
 /// Default fetch base: programs live in the L2 region so the instruction
 /// cache hierarchy (L0 → L1 → RO cache → L2) is exercised realistically.
@@ -15,11 +16,16 @@ pub const DEFAULT_TEXT_BASE: u32 = 0x8000_0000;
 pub struct Program {
     pub instrs: Vec<Instr>,
     pub base: u32,
+    /// Lazily built decoded-op table (see `isa::decoded`). Private so
+    /// `instrs` cannot be swapped out from under a cached table: every
+    /// construction site goes through the functions below, and the
+    /// instruction vector is immutable once a table has been built.
+    decoded: OnceLock<DecodedProgram>,
 }
 
 impl Program {
     pub fn assemble(src: &str, symbols: &HashMap<String, u32>) -> Result<Program, AsmError> {
-        Ok(Program { instrs: assemble(src, symbols)?, base: DEFAULT_TEXT_BASE })
+        Ok(Program::from_instrs(assemble(src, symbols)?))
     }
 
     pub fn assemble_simple(src: &str) -> Result<Program, AsmError> {
@@ -27,7 +33,14 @@ impl Program {
     }
 
     pub fn from_instrs(instrs: Vec<Instr>) -> Program {
-        Program { instrs, base: DEFAULT_TEXT_BASE }
+        Program { instrs, base: DEFAULT_TEXT_BASE, decoded: OnceLock::new() }
+    }
+
+    /// The dense per-instruction issue metadata table, built on first
+    /// use and shared by every core of every tile (the issue stage's
+    /// whole per-fetch decode cost collapses to one indexed load).
+    pub fn decoded(&self) -> &DecodedProgram {
+        self.decoded.get_or_init(|| DecodedProgram::new(&self.instrs))
     }
 
     pub fn len(&self) -> usize {

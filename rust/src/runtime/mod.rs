@@ -14,10 +14,11 @@
 //!   all resolve names here.
 //!
 //! [`RunConfig`] carries the host-simulator knobs that must not change
-//! simulated results: the stepping backend and the quiescence fast path
-//! (`quiesce_skip`, the CLI's `--no-skip`). Both are cycle-invisible by
-//! contract (see `docs/ARCHITECTURE.md`), so the exact-cycle gates in
-//! CI hold across every combination.
+//! simulated results, bundled as one [`ExecOptions`] value: the stepping
+//! backend, the quiescence fast path (the CLI's `--no-skip`), tracing,
+//! and the initial icache state. All are cycle-invisible by contract
+//! (see `docs/ARCHITECTURE.md`), so the exact-cycle gates in CI hold
+//! across every combination.
 //!
 //! The golden-model runtime executes the AOT-compiled Pallas/JAX models
 //! (`artifacts/*.hlo.txt`) through PJRT so the cycle-accurate
@@ -42,7 +43,8 @@ pub use registry::{
     WORKLOADS,
 };
 pub use workload::{
-    run_workload, workload_source, Machine, RunConfig, RunResult, Target, TargetConfig, Workload,
+    run_workload, workload_source, ExecOptions, Machine, RunConfig, RunResult, Target,
+    TargetConfig, Workload,
 };
 
 #[cfg(feature = "golden")]

@@ -10,10 +10,12 @@
 //! through the [`Machine`] accessor enum, so a cluster-only workload
 //! reads exactly like the old `Kernel` implementations did.
 //!
-//! Backend selection happens exactly once, here: `RunConfig.backend` is
-//! `None` for "respect `MEMPOOL_BACKEND`", resolved a single time at the
-//! top of [`run_workload`] and passed down explicitly — no layer below
-//! reads the environment again.
+//! Backend selection happens exactly once, here: `RunConfig.exec.backend`
+//! is `None` for "respect `MEMPOOL_BACKEND`", resolved a single time at
+//! the top of [`run_workload`] and passed down explicitly — no layer
+//! below reads the environment again. [`ExecOptions`] is the one bundle
+//! of execution knobs (backend, quiescence skip, tracing, icache state)
+//! shared by every run entry point in the crate.
 
 use crate::config::{ClusterConfig, SystemConfig};
 use crate::isa::Program;
@@ -145,37 +147,54 @@ pub trait Workload {
     }
 }
 
+/// The execution knobs every run entry point shares — *how* a machine
+/// steps, not *what* it runs. One value of this struct travels from the
+/// CLI (`ExecOptions::from_args`, see `util::cli`) through
+/// [`RunConfig`], the raw-assembly harnesses (`sim::RunConfig`,
+/// `system::SystemRunConfig`), and the study runners
+/// (`studies::{SweepSpec, ReportSpec, grid::run_point}`), so a flag like
+/// `--no-skip` means exactly one thing everywhere.
+///
+/// Every knob is cycle-invisible by the exactness contract
+/// (`docs/ARCHITECTURE.md`): any combination produces identical cycle
+/// counts and statistics. Only host speed and observability differ.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOptions {
+    /// Stepping engine; `None` = read `MEMPOOL_BACKEND` once at the
+    /// entry point that resolves it (the reference serial engine when
+    /// unset). Grid runners that sweep the backend as an axis ignore
+    /// this field and pass the axis value explicitly.
+    pub backend: Option<SimBackend>,
+    /// Enable the quiescence fast path (`false` = `--no-skip`).
+    pub quiesce_skip: bool,
+    /// Record an execution trace (`None` = off). The region markers are
+    /// part of the program either way and the recording side is pure
+    /// observation.
+    pub trace: Option<TraceConfig>,
+    /// Invalidate every instruction cache before starting (cold start;
+    /// `false` = `--warm-icache`).
+    pub cold_icache: bool,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { backend: None, quiesce_skip: true, trace: None, cold_icache: true }
+    }
+}
+
 /// How to run a workload.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub target: TargetConfig,
     /// Cycle budget; runs panic beyond it.
     pub max_cycles: u64,
-    /// Invalidate every instruction cache before starting (cold start).
-    pub cold_icache: bool,
-    /// Stepping engine; `None` = read `MEMPOOL_BACKEND` once at the
-    /// [`run_workload`] entry (the reference serial engine when unset).
-    pub backend: Option<SimBackend>,
-    /// Enable the quiescence fast path (`false` = `--no-skip`). Both
-    /// settings produce identical cycle counts and statistics.
-    pub quiesce_skip: bool,
-    /// Record an execution trace (`None` = off). Cycle-invisible: a
-    /// traced run produces identical cycles and statistics, because the
-    /// region markers are part of the program either way and the
-    /// recording side is pure observation.
-    pub trace: Option<TraceConfig>,
+    /// Execution knobs (backend, skip, trace, icache state).
+    pub exec: ExecOptions,
 }
 
 impl RunConfig {
     fn on(target: TargetConfig) -> RunConfig {
-        RunConfig {
-            target,
-            max_cycles: 10_000_000,
-            cold_icache: true,
-            backend: None,
-            quiesce_skip: true,
-            trace: None,
-        }
+        RunConfig { target, max_cycles: 10_000_000, exec: ExecOptions::default() }
     }
 
     /// Run on a standalone cluster.
@@ -190,13 +209,13 @@ impl RunConfig {
 
     /// Pin the stepping engine (determinism tests, the sweep runner).
     pub fn with_backend(mut self, backend: SimBackend) -> RunConfig {
-        self.backend = Some(backend);
+        self.exec.backend = Some(backend);
         self
     }
 
     /// Record an execution trace during the run.
     pub fn with_trace(mut self, trace: TraceConfig) -> RunConfig {
-        self.trace = Some(trace);
+        self.exec.trace = Some(trace);
         self
     }
 }
@@ -223,7 +242,9 @@ pub struct RunResult {
 /// fails to assemble — both are authoring bugs, not input errors.
 pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
     // The only environment read on the whole path (see module docs).
-    let backend = run.backend.unwrap_or_else(SimBackend::from_env);
+    let backend = run.exec.backend.unwrap_or_else(SimBackend::from_env);
+    let mut exec = run.exec;
+    exec.backend = Some(backend);
     match &run.target {
         TargetConfig::Cluster(cluster_cfg) => {
             let mut cfg = cluster_cfg.clone();
@@ -231,11 +252,9 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             let tcfg = TargetConfig::Cluster(cfg.clone());
             let program = assemble_workload(w, &tcfg);
             // The same bring-up recipe the raw-assembly harness uses.
-            let mut low = crate::sim::RunConfig::with_backend(cfg, backend);
+            let mut low = crate::sim::RunConfig::new(cfg);
             low.max_cycles = run.max_cycles;
-            low.cold_icache = run.cold_icache;
-            low.quiesce_skip = run.quiesce_skip;
-            low.trace = run.trace;
+            low.exec = exec;
             let cluster = prepare_cluster(&low, program);
             let mut machine = Machine::Cluster(Box::new(cluster));
             w.setup(&mut machine);
@@ -253,11 +272,9 @@ pub fn run_workload(w: &dyn Workload, run: &RunConfig) -> RunResult {
             let tcfg = TargetConfig::System(cfg.clone());
             let program = assemble_workload(w, &tcfg);
             // The same bring-up recipe the raw-assembly harness uses.
-            let mut low = SystemRunConfig::with_backend(cfg, backend);
+            let mut low = SystemRunConfig::new(cfg);
             low.max_cycles = run.max_cycles;
-            low.cold_icache = run.cold_icache;
-            low.quiesce_skip = run.quiesce_skip;
-            low.trace = run.trace;
+            low.exec = exec;
             let system = prepare_system(&low, program);
             let mut machine = Machine::System(Box::new(system));
             w.setup(&mut machine);

@@ -253,6 +253,9 @@ pub struct Tile {
     /// behind a system-DMA beat holding the bank port — the DMA-vs-core
     /// L1 contention the timed system-DMA data path makes visible.
     sysdma_conflicts: u64,
+    /// Total beats queued across `sysdma_beats` — lets `serve_banks`
+    /// prove "nothing to do" without walking every bank's queue.
+    sysdma_pending: usize,
     /// Per-core TCDM wide-burst units, indexed by lane.
     burst: Vec<BurstUnit>,
     /// Cycle (absolute) until which each bank's port is held by an
@@ -279,6 +282,16 @@ impl Tile {
     /// are scheduled for local delivery or queued for the response
     /// network, exactly as before.
     fn serve_banks(&mut self, now: u64) {
+        // Busy-path fast exit: with no queued request, no pending DMA
+        // beat, and no in-flight burst response, every branch below is a
+        // no-op (the only other live state, `bank_busy` holds, would
+        // just book `+= 0` heat stalls against empty queues) — so skip
+        // the whole per-bank walk. At 256 cores this is the common case
+        // for most tiles on most cycles.
+        if self.burst_resp_due.is_empty() && self.sysdma_pending == 0 && self.bank_q.total() == 0
+        {
+            return;
+        }
         // Due burst responses leave the banks first: a same-tile burst
         // completes its unit directly, a remote one rides the response
         // network home ahead of this cycle's word responses.
@@ -299,6 +312,7 @@ impl Tile {
             if let Some(&(at, write)) = self.sysdma_beats[b].front() {
                 if at <= now {
                     self.sysdma_beats[b].pop_front();
+                    self.sysdma_pending -= 1;
                     // The beat touches the SRAM: count the access for the
                     // energy model (data moved functionally at service
                     // time, like the cluster DMA's data path).
@@ -547,6 +561,7 @@ impl Cluster {
                 deliveries: Vec::new(),
                 sysdma_beats: (0..cfg.banks_per_tile).map(|_| VecDeque::new()).collect(),
                 sysdma_conflicts: 0,
+                sysdma_pending: 0,
                 burst: (0..cfg.cores_per_tile).map(|_| BurstUnit::new()).collect(),
                 bank_busy: vec![0; cfg.banks_per_tile],
                 burst_resp_due: Vec::new(),
@@ -854,6 +869,7 @@ impl Cluster {
             }
         }
         q.insert(idx, (t, write));
+        self.tiles[loc.tile as usize].sysdma_pending += 1;
         t
     }
 
@@ -1024,6 +1040,15 @@ impl Cluster {
                     tiles_per_group: tpg,
                 };
                 for core in cores.iter_mut() {
+                    // Parked cores are pure bookkeeping until something
+                    // reaches them (wake pulse, completion, IPU result
+                    // — all of which break `quiet()`): skip the step and
+                    // let the core settle its cycle debt when next
+                    // stepped. Exact by construction — see
+                    // `Snitch::step`.
+                    if core.is_parked() && core.quiet() {
+                        continue;
+                    }
                     core.step(now, &self.program, &mut ctx);
                 }
                 self.local_accesses += ctx.local_accesses;
@@ -1217,6 +1242,13 @@ impl Cluster {
         debug_assert!(self.quiescent());
         for tile in &mut self.tiles {
             for core in &mut tile.cores {
+                // Parked cores carry their quiet span as deferred debt
+                // (distance from `parked_at` to the next settle) — aging
+                // them here as well would double-book the skipped
+                // cycles.
+                if core.is_parked() {
+                    continue;
+                }
                 core.age_quiet(delta);
             }
         }
@@ -1265,7 +1297,19 @@ impl Cluster {
         let mut e = EnergyBook::default();
         for tile in &self.tiles {
             for core in &tile.cores {
-                let cs = &core.stats;
+                // A parked core's skipped quiet cycles are deferred debt
+                // not yet in `core.stats`; fold them into a copy so the
+                // immutable read sees exactly what a non-parking run
+                // books (including `core_idle` energy on sleep cycles).
+                let (debt, halted) = core.park_debt(self.now);
+                let mut cs = core.stats;
+                cs.cycles += debt;
+                if halted {
+                    cs.halted_cycles += debt;
+                } else {
+                    cs.sleep_cycles += debt;
+                }
+                let cs = &cs;
                 s.accumulate_core(cs);
                 e.cores += p.core_issue * cs.issued() as f64
                     + p.alu * cs.alu_instrs as f64
@@ -1389,6 +1433,10 @@ impl Cluster {
         book.phase_boundary(self.now, region, snap);
         for tile in &mut self.tiles {
             for core in &mut tile.cores {
+                // A parked core has unbooked quiet cycles (and the tracer
+                // mirrors the stats counters); settle before finalizing so
+                // the trace is cycle-identical to an unparked run.
+                core.settle_debt(self.now);
                 if let Some(mut tr) = core.tracer.take() {
                     tr.finalize(self.now);
                     book.cores.push(*tr);

@@ -401,6 +401,12 @@ fn tile_local_phase(
             scr: &mut *scr,
         };
         for core in cores.iter_mut() {
+            // Parked fast path (mirrors the serial engine): a quiet
+            // sleeping/halted core books its idle cycles lazily on the
+            // next real step, so the hot loop skips it entirely.
+            if core.is_parked() && core.quiet() {
+                continue;
+            }
             core.step(now, program, &mut ctx);
         }
     }

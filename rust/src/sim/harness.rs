@@ -5,45 +5,31 @@ use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 use crate::isa::Program;
+use crate::runtime::ExecOptions;
 use crate::sim::{Cluster, ClusterStats, SimBackend};
-use crate::trace::TraceConfig;
 
 /// How to run a kernel.
 pub struct RunConfig {
     pub cluster: ClusterConfig,
     /// Cycle budget; runs abort (with `completed = false`) beyond it.
     pub max_cycles: u64,
-    /// Invalidate the instruction caches before starting (cold start).
-    pub cold_icache: bool,
-    /// Stepping engine; both are cycle-exact (defaults to
-    /// `MEMPOOL_BACKEND`, or the reference serial engine).
-    pub backend: SimBackend,
-    /// Enable the quiescence fast path (`false` = `--no-skip`). Both
-    /// settings produce identical cycle counts and statistics.
-    pub quiesce_skip: bool,
-    /// Record an execution trace (`None` = off). Cycle-invisible: a
-    /// traced run produces identical cycles and statistics.
-    pub trace: Option<TraceConfig>,
+    /// Execution knobs (backend, skip, trace, icache state). A `None`
+    /// backend means "read `MEMPOOL_BACKEND`", resolved exactly once in
+    /// [`prepare_cluster`] (kernel-level runs go through
+    /// `runtime::run_workload`, which resolves it itself and passes the
+    /// result down here).
+    pub exec: ExecOptions,
 }
 
 impl RunConfig {
-    /// Default backend from `MEMPOOL_BACKEND` — the environment is read
-    /// exactly once, here (kernel-level runs go through
-    /// `runtime::run_workload`, which resolves the backend itself and
-    /// uses [`RunConfig::with_backend`]).
     pub fn new(cluster: ClusterConfig) -> Self {
-        RunConfig::with_backend(cluster, SimBackend::from_env())
+        RunConfig { cluster, max_cycles: 10_000_000, exec: ExecOptions::default() }
     }
 
     pub fn with_backend(cluster: ClusterConfig, backend: SimBackend) -> Self {
-        RunConfig {
-            cluster,
-            max_cycles: 10_000_000,
-            cold_icache: true,
-            backend,
-            quiesce_skip: true,
-            trace: None,
-        }
+        let mut run = RunConfig::new(cluster);
+        run.exec.backend = Some(backend);
+        run
     }
 }
 
@@ -62,15 +48,15 @@ pub struct KernelResult {
 /// `runtime::run_workload` path.
 pub fn prepare_cluster(run: &RunConfig, program: Program) -> Cluster {
     let mut cluster = Cluster::new(run.cluster.clone(), program);
-    cluster.backend = run.backend;
-    cluster.skip_quiescent = run.quiesce_skip;
+    cluster.backend = run.exec.backend.unwrap_or_else(SimBackend::from_env);
+    cluster.skip_quiescent = run.exec.quiesce_skip;
     cluster.reset_cores(0);
-    if run.cold_icache {
+    if run.exec.cold_icache {
         for t in &mut cluster.tiles {
             t.icache.invalidate_all();
         }
     }
-    if let Some(tc) = run.trace {
+    if let Some(tc) = run.exec.trace {
         cluster.enable_trace(tc);
     }
     cluster

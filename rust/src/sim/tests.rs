@@ -339,9 +339,9 @@ fn assert_backends_agree(
     setup: impl Fn(&mut Cluster),
 ) -> KernelResult {
     let mut run = RunConfig::new(cfg);
-    run.backend = SimBackend::Serial;
+    run.exec.backend = Some(SimBackend::Serial);
     let a = run_kernel(&run, src, sym, &setup);
-    run.backend = SimBackend::Parallel;
+    run.exec.backend = Some(SimBackend::Parallel);
     let b = run_kernel(&run, src, sym, &setup);
     assert!(a.completed, "serial run did not complete");
     assert!(b.completed, "parallel run did not complete");
@@ -478,7 +478,7 @@ fn quiesce_skip_is_cycle_invisible_on_cluster_workloads() {
         for backend in [SimBackend::Serial, SimBackend::Parallel] {
             let fast_cfg = RunConfig::cluster(&cfg).with_backend(backend);
             let mut slow_cfg = fast_cfg.clone();
-            slow_cfg.quiesce_skip = false;
+            slow_cfg.exec.quiesce_skip = false;
             let fast = run_workload(k.as_ref(), &fast_cfg);
             let slow = run_workload(k.as_ref(), &slow_cfg);
             assert_eq!(
@@ -545,7 +545,7 @@ fn tracing_is_cycle_invisible_on_cluster_workloads() {
         for backend in [SimBackend::Serial, SimBackend::Parallel] {
             for quiesce_skip in [true, false] {
                 let mut plain_cfg = RunConfig::cluster(&cfg).with_backend(backend);
-                plain_cfg.quiesce_skip = quiesce_skip;
+                plain_cfg.exec.quiesce_skip = quiesce_skip;
                 let traced_cfg = plain_cfg.clone().with_trace(TraceConfig { instr: true });
                 let plain = run_workload(k.as_ref(), &plain_cfg);
                 let traced = run_workload(k.as_ref(), &traced_cfg);
@@ -743,7 +743,7 @@ fn mempool_preset_backends_and_toggles_agree() {
         let mut m = par.machine;
         k.verify(&mut m).unwrap_or_else(|e| panic!("{} @256c parallel: {e}", k.name()));
         let mut noskip = RunConfig::cluster(&cfg).with_backend(SimBackend::Serial);
-        noskip.quiesce_skip = false;
+        noskip.exec.quiesce_skip = false;
         let ns = run_workload(k.as_ref(), &noskip);
         assert_eq!(base.cycles, ns.cycles, "{} @256c: skip changes cycles", k.name());
         assert_eq!(base.stats, ns.stats, "{} @256c: skip changes statistics", k.name());
@@ -755,5 +755,127 @@ fn mempool_preset_backends_and_toggles_agree() {
         );
         assert_eq!(base.cycles, traced.cycles, "{} @256c: tracing changes cycles", k.name());
         assert_eq!(base.stats, traced.stats, "{} @256c: tracing changes statistics", k.name());
+    }
+}
+
+#[test]
+fn steady_state_cycles_are_allocation_free() {
+    // The allocation-free exchange rule, measured: once the run's data
+    // structures have grown to their peak occupancy (queues, rings,
+    // inboxes — all capacity-retaining), stepping the machine touches
+    // the heap zero times per cycle. The serial engine keeps the whole
+    // simulation on this thread, so the thread-local counting allocator
+    // (`util::alloc`) observes every allocation the step makes.
+    use crate::runtime::{workload_by_name, workload_source, Machine, Target, TargetConfig};
+    use crate::util::alloc::thread_allocations;
+    let base = ClusterConfig::minpool();
+    let w = workload_by_name("axpy", Target::Cluster, base.num_cores()).expect("axpy");
+    let mut cfg = base;
+    w.prepare_config(&mut cfg);
+    let tcfg = TargetConfig::Cluster(cfg.clone());
+    let (src, sym, _spans) = workload_source(w.as_ref(), &tcfg);
+    let program = Program::assemble(&src, &sym).expect("axpy assembles");
+    let mut run = RunConfig::new(cfg);
+    run.exec.backend = Some(SimBackend::Serial);
+    let mut machine = Machine::Cluster(Box::new(prepare_cluster(&run, program)));
+    w.setup(&mut machine);
+    // Step manually (the explicit no-skip slow path) and attribute every
+    // allocation to the cycle that made it.
+    let mut per_cycle: Vec<u64> = Vec::with_capacity(1 << 14);
+    loop {
+        let c = machine.cluster();
+        if c.all_halted() && c.drained() {
+            break;
+        }
+        assert!(c.now() < 1_000_000, "axpy must halt within the budget");
+        let before = thread_allocations();
+        c.step();
+        per_cycle.push(thread_allocations() - before);
+    }
+    w.verify(&mut machine).expect("axpy result verifies");
+    let t = per_cycle.len();
+    assert!(t > 100, "run long enough to have a steady state ({t} cycles)");
+    // Warm-up (cold caches, queues growing to peak traffic) may
+    // allocate; the steady-state tail must not — strictly zero.
+    let start = 7 * t / 10;
+    let tail: u64 = per_cycle[start..].iter().sum();
+    assert_eq!(
+        tail,
+        0,
+        "steady-state cycles must not allocate: {} allocation(s) across cycles {}..{}",
+        tail,
+        start,
+        t
+    );
+}
+
+#[test]
+fn decoded_issue_path_matches_on_instruction_traces() {
+    // The pre-decoded issue path (hazard masks + flag-based issue stats,
+    // `isa::decoded`) must be execution-invisible, not just cycle-count
+    // invisible: both engines replay the identical instruction stream —
+    // same issue cycle, same pc, same disassembly, same writeback — on a
+    // compute-bound kernel and on the burst-frontend kernel. Debug
+    // builds additionally cross-check every hazard decision against the
+    // retained reference decoder inside the issue stage itself.
+    use crate::kernels::AxpyBurst;
+    use crate::kernels::Matmul;
+    use crate::runtime::{run_workload, RunConfig, Workload};
+    use crate::trace::TraceConfig;
+    let cfg = ClusterConfig::minpool();
+    let kernels: Vec<Box<dyn Workload>> = vec![
+        Box::new(Matmul::weak_scaled(cfg.num_cores())),
+        Box::new(AxpyBurst::new(16, true)),
+    ];
+    for k in kernels {
+        let trace = |backend: SimBackend| {
+            let run = RunConfig::cluster(&cfg)
+                .with_backend(backend)
+                .with_trace(TraceConfig { instr: true });
+            let mut r = run_workload(k.as_ref(), &run);
+            k.verify(&mut r.machine)
+                .unwrap_or_else(|e| panic!("{} {}: {e}", k.name(), backend.name()));
+            r.trace.expect("traced run returns books").remove(0)
+        };
+        let a = trace(SimBackend::Serial);
+        let b = trace(SimBackend::Parallel);
+        assert_eq!(a.cores.len(), b.cores.len(), "{}: core tracer counts", k.name());
+        for (ca, cb) in a.cores.iter().zip(&b.cores) {
+            assert_eq!(ca.core, cb.core);
+            assert_eq!(
+                ca.instrs.len(),
+                cb.instrs.len(),
+                "{} core {}: instruction stream lengths diverge",
+                k.name(),
+                ca.core
+            );
+            assert!(
+                !ca.instrs.is_empty(),
+                "{} core {}: instruction records were captured",
+                k.name(),
+                ca.core
+            );
+            for (ia, ib) in ca.instrs.iter().zip(&cb.instrs) {
+                let same = ia.cycle == ib.cycle
+                    && ia.pc == ib.pc
+                    && ia.text == ib.text
+                    && ia.wb == ib.wb;
+                assert!(
+                    same,
+                    "{} core {}: streams diverge at cycle {} pc {} (`{}` wb {:?}) vs \
+                     cycle {} pc {} (`{}` wb {:?})",
+                    k.name(),
+                    ca.core,
+                    ia.cycle,
+                    ia.pc,
+                    ia.text,
+                    ia.wb,
+                    ib.cycle,
+                    ib.pc,
+                    ib.text,
+                    ib.wb
+                );
+            }
+        }
     }
 }

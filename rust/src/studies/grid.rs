@@ -16,10 +16,10 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::{ClusterConfig, SystemConfig, TopologyPreset};
-use crate::runtime::{run_workload, workload_by_name, RunConfig, Target, Workload};
+use crate::runtime::{run_workload, workload_by_name, ExecOptions, RunConfig, Target, Workload};
 use crate::sim::{ClusterStats, SimBackend};
 use crate::system::SystemStats;
-use crate::trace::{regions_json, TraceConfig};
+use crate::trace::regions_json;
 use crate::util::json::Json;
 
 /// Cluster shape for a preset at a given core count — one resolution
@@ -198,25 +198,27 @@ impl GridPoint {
 /// Run one scenario end-to-end (simulate + verify the architectural
 /// result against the host reference). `clusters > 1` runs the kernel's
 /// multi-cluster variant through the `system` harness.
+///
+/// The grid sweeps the backend as an explicit axis, so `exec.backend` is
+/// ignored here — the `backend` parameter always wins. The remaining
+/// `exec` knobs (skip, trace, icache) apply as-is; a `Some` trace means
+/// the per-region cycle roll-up is harvested into [`GridPoint::regions`].
 pub fn run_point(
     preset: &str,
     kernel_name: &str,
     clusters: usize,
     cores: usize,
     backend: SimBackend,
-    quiesce_skip: bool,
-    trace_regions: bool,
+    exec: &ExecOptions,
 ) -> Result<GridPoint, String> {
     let cfg = config_for(preset, cores)?;
     let clock_hz = cfg.clock_hz;
     let t0 = Instant::now();
     let (cycles, stats, system, regions) = if clusters <= 1 {
         let workload = workload_by_name(kernel_name, Target::Cluster, cores)?;
-        let mut run = RunConfig::cluster(&cfg).with_backend(backend);
-        run.quiesce_skip = quiesce_skip;
-        if trace_regions {
-            run = run.with_trace(TraceConfig::default());
-        }
+        let mut run = RunConfig::cluster(&cfg);
+        run.exec = *exec;
+        run.exec.backend = Some(backend);
         let mut result = run_workload(workload.as_ref(), &run);
         workload
             .verify(&mut result.machine)
@@ -226,11 +228,9 @@ pub fn run_point(
     } else {
         let workload = workload_by_name(kernel_name, Target::System, cores)?;
         let syscfg = SystemConfig::new(clusters, cfg);
-        let mut run = RunConfig::system(&syscfg).with_backend(backend);
-        run.quiesce_skip = quiesce_skip;
-        if trace_regions {
-            run = run.with_trace(TraceConfig::default());
-        }
+        let mut run = RunConfig::system(&syscfg);
+        run.exec = *exec;
+        run.exec.backend = Some(backend);
         let mut result = run_workload(workload.as_ref(), &run);
         workload.verify(&mut result.machine).map_err(|e| {
             format!("{kernel_name} @ {clusters}×{cores} cores: result mismatch: {e}")
@@ -260,8 +260,7 @@ pub fn run_point(
 pub fn run_scenarios(
     reqs: &[ScenarioReq],
     jobs: usize,
-    quiesce_skip: bool,
-    trace_regions: bool,
+    exec: &ExecOptions,
 ) -> Result<Vec<GridPoint>, String> {
     if reqs.is_empty() {
         return Err("empty scenario grid (no kernels or no core counts)".to_string());
@@ -278,15 +277,8 @@ pub fn run_scenarios(
                     break;
                 }
                 let r = &reqs[i];
-                let point = run_point(
-                    &r.preset,
-                    &r.kernel,
-                    r.clusters,
-                    r.cores,
-                    r.backend,
-                    quiesce_skip,
-                    trace_regions,
-                );
+                let point =
+                    run_point(&r.preset, &r.kernel, r.clusters, r.cores, r.backend, exec);
                 *slots[i].lock().unwrap() = Some(point);
             });
         }

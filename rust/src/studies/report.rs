@@ -19,6 +19,7 @@
 
 use std::time::Instant;
 
+use crate::runtime::ExecOptions;
 use crate::sim::SimBackend;
 use crate::studies::grid::{run_scenarios, scenario_label, GridPoint, ScenarioReq};
 use crate::util::json::{first_diff, Json};
@@ -59,16 +60,13 @@ pub struct ReportSpec {
     pub backends: Vec<SimBackend>,
     /// Scenario-level worker threads.
     pub jobs: usize,
-    /// Enable the quiescence fast path in every scenario (`false` =
-    /// `--no-skip`); simulated fields are identical either way, so the
-    /// exact-match diff holds across the flag — only host throughput
-    /// moves.
-    pub quiesce_skip: bool,
-    /// Run every scenario with region tracing on and attach the
-    /// per-region `regions` block to each scenario (schema v2).
-    /// Tracing is cycle-invisible, so every other field is identical
-    /// with the flag on or off.
-    pub trace_regions: bool,
+    /// Execution knobs shared by every scenario; all cycle-invisible,
+    /// so the exact-match diff holds across any setting — only host
+    /// throughput moves. `exec.backend` is ignored (the `backends` axis
+    /// above decides each scenario's engine); a `Some` trace runs every
+    /// scenario with region tracing on and attaches the per-region
+    /// `regions` block to each scenario (schema v2).
+    pub exec: ExecOptions,
 }
 
 fn names(ns: &[&str]) -> Vec<String> {
@@ -104,8 +102,7 @@ impl ReportSpec {
             }],
             backends: vec![SimBackend::Serial, SimBackend::Parallel],
             jobs: default_jobs(),
-            quiesce_skip: true,
-            trace_regions: false,
+            exec: ExecOptions::default(),
         }
     }
 
@@ -147,8 +144,7 @@ impl ReportSpec {
                 system: vec![],
                 backends: vec![SimBackend::Serial, SimBackend::Parallel],
                 jobs: default_jobs(),
-                quiesce_skip: true,
-                trace_regions: false,
+                exec: ExecOptions::default(),
             }),
             "terapool" => Ok(ReportSpec {
                 preset: "terapool".to_string(),
@@ -160,8 +156,7 @@ impl ReportSpec {
                 system: vec![],
                 backends: vec![SimBackend::Serial, SimBackend::Parallel],
                 jobs: default_jobs(),
-                quiesce_skip: true,
-                trace_regions: false,
+                exec: ExecOptions::default(),
             }),
             other => Err(format!("unknown report preset `{other}` (minpool|mempool|terapool)")),
         }
@@ -229,7 +224,7 @@ pub fn run_report(spec: &ReportSpec) -> Result<Report, String> {
     let scen = spec.scenarios();
     let reqs: Vec<ScenarioReq> = scen.iter().map(|(_, r)| r.clone()).collect();
     let t0 = Instant::now();
-    let points = run_scenarios(&reqs, spec.jobs, spec.quiesce_skip, spec.trace_regions)?;
+    let points = run_scenarios(&reqs, spec.jobs, &spec.exec)?;
     let wall_seconds = t0.elapsed().as_secs_f64();
     Ok(Report {
         preset: spec.preset.clone(),
@@ -594,8 +589,7 @@ mod tests {
             }],
             backends,
             jobs: 2,
-            quiesce_skip: true,
-            trace_regions: false,
+            exec: ExecOptions::default(),
         }
     }
 
@@ -678,7 +672,7 @@ mod tests {
         // backend-agreement gate still passes with the regions included
         // in the exact comparison.
         let mut spec = tiny_spec(vec![SimBackend::Serial, SimBackend::Parallel]);
-        spec.trace_regions = true;
+        spec.exec.trace = Some(crate::trace::TraceConfig::default());
         let doc = run_report(&spec).expect("traced campaign").to_json();
         validate_report(&doc).expect("schema-valid traced report");
         let scenarios = doc.req_array("scenarios").unwrap();

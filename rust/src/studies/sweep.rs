@@ -11,6 +11,7 @@
 //! through `mempool report --check`/`--diff`; `mempool sweep --check`
 //! remains the local, single-grid form of the same exact-cycles rule.
 
+use crate::runtime::ExecOptions;
 use crate::sim::SimBackend;
 use crate::studies::grid::{run_scenarios, scenario_label, ScenarioReq};
 use crate::util::json::Json;
@@ -34,12 +35,16 @@ pub struct SweepSpec {
     /// Cores per cluster.
     pub cores: Vec<usize>,
     pub kernels: Vec<String>,
+    /// The grid's stepping engine — a sweep axis value, not an execution
+    /// default, so it lives here rather than in `exec` (whose `backend`
+    /// field is ignored by the grid executor).
     pub backend: SimBackend,
     /// Scenario-level worker threads.
     pub jobs: usize,
-    /// Enable the quiescence fast path in every scenario (`false` =
-    /// `--no-skip`); cycle counts are identical either way.
-    pub quiesce_skip: bool,
+    /// Execution knobs shared by every scenario (skip, trace, icache
+    /// state); all cycle-invisible. `exec.backend` is ignored — see
+    /// `backend` above.
+    pub exec: ExecOptions,
 }
 
 impl SweepSpec {
@@ -53,7 +58,7 @@ impl SweepSpec {
             kernels: vec!["matmul".to_string(), "axpy".to_string(), "dotp".to_string()],
             backend: SimBackend::Parallel,
             jobs: default_jobs(),
-            quiesce_skip: true,
+            exec: ExecOptions::default(),
         }
     }
 
@@ -89,7 +94,7 @@ impl SweepSpec {
 /// Run the whole grid, fanned across `spec.jobs` worker threads. Results
 /// come back in grid order regardless of scheduling.
 pub fn run_sweep(spec: &SweepSpec) -> Result<Vec<SweepPoint>, String> {
-    run_scenarios(&spec.scenario_reqs(), spec.jobs, spec.quiesce_skip, false)
+    run_scenarios(&spec.scenario_reqs(), spec.jobs, &spec.exec)
 }
 
 /// Full results document (what `mempool sweep --out` writes). Scenario
@@ -233,7 +238,7 @@ mod tests {
             kernels: vec!["axpy".to_string(), "dotp".to_string()],
             backend: SimBackend::Parallel,
             jobs: 2,
-            quiesce_skip: true,
+            exec: ExecOptions::default(),
         };
         let points = run_sweep(&spec).expect("sweep");
         assert_eq!(points.len(), 2);
@@ -275,7 +280,7 @@ mod tests {
             kernels: vec!["axpy".to_string()],
             backend: SimBackend::Parallel,
             jobs: 2,
-            quiesce_skip: true,
+            exec: ExecOptions::default(),
         };
         let points = run_sweep(&spec).expect("sweep with cluster axis");
         assert_eq!(points.len(), 2);
@@ -288,7 +293,8 @@ mod tests {
         // Workloads without a system variant fail loudly on the cluster
         // axis, naming the ones that have one.
         let err =
-            run_point("minpool", "dotp", 2, 4, SimBackend::Serial, true, false).unwrap_err();
+            run_point("minpool", "dotp", 2, 4, SimBackend::Serial, &ExecOptions::default())
+                .unwrap_err();
         assert!(err.contains("no system-target variant"), "{err}");
     }
 

@@ -56,8 +56,9 @@ use std::collections::HashMap;
 use crate::config::SystemConfig;
 use crate::isa::Program;
 use crate::mem::L2Memory;
+use crate::runtime::ExecOptions;
 use crate::sim::{base_symbols, Cluster, ClusterStats, SimBackend, SysDmaOp, SysDmaRequest};
-use crate::trace::{TraceBook, TraceConfig};
+use crate::trace::TraceBook;
 use crate::util::par::par_for_each;
 
 /// Outstanding fabric bursts per system-DMA frontend (latency hiding).
@@ -87,6 +88,14 @@ pub struct System {
     /// (`false` = the `--no-skip` slow path; both are cycle-exact).
     pub skip_quiescent: bool,
     now: u64,
+    /// Reusable backing store for the per-cycle system-DMA outbox drain.
+    /// The exchange phase swaps this (empty, capacity retained) vector
+    /// with each cluster's outbox instead of `mem::take`-ing a fresh one,
+    /// so the steady-state cycle performs zero heap allocations (see
+    /// `docs/ARCHITECTURE.md`, Host performance model).
+    sysdma_scratch: Vec<SysDmaRequest>,
+    /// Same, for the global-barrier arrival pulses.
+    gbarrier_scratch: Vec<u64>,
 }
 
 impl System {
@@ -106,6 +115,8 @@ impl System {
             frontends: vec![SysDmaFrontend::default(); cfg.num_clusters],
             skip_quiescent: true,
             now: 0,
+            sysdma_scratch: Vec::new(),
+            gbarrier_scratch: Vec::new(),
             cfg,
         }
     }
@@ -163,17 +174,24 @@ impl System {
         let start = (now % n as u64) as usize;
         for i in 0..n {
             let c = (start + i) % n;
-            let reqs = std::mem::take(&mut self.clusters[c].sys_dma_outbox);
-            for req in reqs {
+            // Swap the outbox against the reusable scratch vector (empty,
+            // capacity retained) so `self.service(&mut self, ..)` can run
+            // while the requests are parked outside `self` — and so the
+            // steady-state exchange never touches the heap.
+            let mut reqs = std::mem::take(&mut self.sysdma_scratch);
+            std::mem::swap(&mut reqs, &mut self.clusters[c].sys_dma_outbox);
+            for req in reqs.drain(..) {
                 self.service(c, req);
             }
+            self.sysdma_scratch = reqs;
         }
         // Global-barrier arrival pulses (count-based: the drain order
         // within a cycle cannot change the release time).
         for i in 0..n {
             let c = (start + i) % n;
-            let arrivals = std::mem::take(&mut self.clusters[c].gbarrier_outbox);
-            for at in arrivals {
+            let mut arrivals = std::mem::take(&mut self.gbarrier_scratch);
+            std::mem::swap(&mut arrivals, &mut self.clusters[c].gbarrier_outbox);
+            for at in arrivals.drain(..) {
                 if let Some(release) = self.fabric.gbarrier_arrive(c, at) {
                     for cl in &mut self.clusters {
                         cl.gbarrier_release_at = release;
@@ -181,6 +199,7 @@ impl System {
                     }
                 }
             }
+            self.gbarrier_scratch = arrivals;
         }
         debug_assert!(self.clusters.iter().all(|c| c.now() == now + 1));
         self.now += 1;
@@ -449,37 +468,23 @@ pub struct SystemRunConfig {
     pub system: SystemConfig,
     /// Cycle budget; runs abort (with `completed = false`) beyond it.
     pub max_cycles: u64,
-    /// Invalidate every instruction cache before starting (cold start).
-    pub cold_icache: bool,
-    /// Stepping engine for every cluster; both are cycle-exact.
-    pub backend: SimBackend,
-    /// Enable the quiescence fast path (`false` = `--no-skip`). Both
-    /// settings produce identical cycle counts and statistics.
-    pub quiesce_skip: bool,
-    /// Record an execution trace on every cluster (`None` = off).
-    /// Cycle-invisible: a traced run produces identical cycles and
-    /// statistics.
-    pub trace: Option<TraceConfig>,
+    /// Execution knobs (backend, skip, trace, icache state). A `None`
+    /// backend means "read `MEMPOOL_BACKEND`", resolved exactly once in
+    /// [`prepare_system`] (kernel-level runs go through
+    /// `runtime::run_workload`, which resolves it itself and passes the
+    /// result down here).
+    pub exec: ExecOptions,
 }
 
 impl SystemRunConfig {
-    /// Default backend from `MEMPOOL_BACKEND` — the environment is read
-    /// exactly once, here (kernel-level runs go through
-    /// `runtime::run_workload`, which resolves the backend itself and
-    /// uses [`SystemRunConfig::with_backend`]).
     pub fn new(system: SystemConfig) -> Self {
-        SystemRunConfig::with_backend(system, SimBackend::from_env())
+        SystemRunConfig { system, max_cycles: 10_000_000, exec: ExecOptions::default() }
     }
 
     pub fn with_backend(system: SystemConfig, backend: SimBackend) -> Self {
-        SystemRunConfig {
-            system,
-            max_cycles: 10_000_000,
-            cold_icache: true,
-            backend,
-            quiesce_skip: true,
-            trace: None,
-        }
+        let mut run = SystemRunConfig::new(system);
+        run.exec.backend = Some(backend);
+        run
     }
 }
 
@@ -498,20 +503,20 @@ pub struct SystemKernelResult {
 /// `runtime::run_workload` path.
 pub fn prepare_system(run: &SystemRunConfig, program: Program) -> System {
     let mut system = System::new(run.system.clone(), program);
-    system.set_backend(run.backend);
-    system.skip_quiescent = run.quiesce_skip;
+    system.set_backend(run.exec.backend.unwrap_or_else(SimBackend::from_env));
+    system.skip_quiescent = run.exec.quiesce_skip;
     for c in &mut system.clusters {
-        c.skip_quiescent = run.quiesce_skip;
+        c.skip_quiescent = run.exec.quiesce_skip;
     }
     system.reset_cores(0);
-    if run.cold_icache {
+    if run.exec.cold_icache {
         for c in &mut system.clusters {
             for t in &mut c.tiles {
                 t.icache.invalidate_all();
             }
         }
     }
-    if let Some(tc) = run.trace {
+    if let Some(tc) = run.exec.trace {
         for c in &mut system.clusters {
             c.enable_trace(tc);
         }

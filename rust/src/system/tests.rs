@@ -477,7 +477,7 @@ fn quiesce_skip_is_cycle_invisible_on_system_workloads() {
         for backend in [SimBackend::Serial, SimBackend::Parallel] {
             let fast_cfg = RunConfig::system(&cfg).with_backend(backend);
             let mut slow_cfg = fast_cfg.clone();
-            slow_cfg.quiesce_skip = false;
+            slow_cfg.exec.quiesce_skip = false;
             let fast = run_workload(k.as_ref(), &fast_cfg);
             let slow = run_workload(k.as_ref(), &slow_cfg);
             assert_eq!(
@@ -519,7 +519,7 @@ fn tracing_is_cycle_invisible_on_system_workloads() {
         for backend in [SimBackend::Serial, SimBackend::Parallel] {
             for quiesce_skip in [true, false] {
                 let mut plain_cfg = RunConfig::system(&cfg).with_backend(backend);
-                plain_cfg.quiesce_skip = quiesce_skip;
+                plain_cfg.exec.quiesce_skip = quiesce_skip;
                 let traced_cfg = plain_cfg.clone().with_trace(TraceConfig { instr: true });
                 let plain = run_workload(k.as_ref(), &plain_cfg);
                 let traced = run_workload(k.as_ref(), &traced_cfg);

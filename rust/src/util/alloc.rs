@@ -1,0 +1,85 @@
+//! Test-only counting global allocator — the measurement behind the
+//! "zero heap allocations per steady-state cycle" rule on the exchange
+//! phase (see `docs/ARCHITECTURE.md`, Host performance model).
+//!
+//! The module is compiled only under `cfg(test)` (see `util/mod.rs`),
+//! so normal builds keep the system allocator untouched. The counter is
+//! thread-local: the test harness runs tests concurrently, and a
+//! process-global counter would attribute another test's allocations to
+//! the cycle window being measured. `try_with` (never `with`) guards
+//! against the TLS initialize/teardown windows in which the allocator
+//! itself runs — counting is best-effort there, exact everywhere else,
+//! which is all the steady-state assertion needs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocation events (alloc / alloc_zeroed / realloc) on the calling
+/// thread since it started. Frees are deliberately not counted: the
+/// steady-state rule is about *acquiring* heap memory per cycle.
+pub fn thread_allocations() -> u64 {
+    ALLOCS.try_with(Cell::get).unwrap_or(0)
+}
+
+/// The counting wrapper around the system allocator.
+pub struct CountingAlloc;
+
+fn bump() {
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+// SAFETY: defers every operation verbatim to `std::alloc::System`; the
+// counter update has no effect on the returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_observes_this_threads_allocations_only() {
+        let before = thread_allocations();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let after = thread_allocations();
+        assert!(after > before, "a fresh Vec allocation must be counted");
+        drop(v);
+        // Pure reads and drops do not advance the counter.
+        let a = thread_allocations();
+        let b = thread_allocations();
+        assert_eq!(a, b);
+        // Another thread's allocations never leak into this counter.
+        let here = thread_allocations();
+        std::thread::spawn(|| {
+            let _big: Vec<u8> = vec![0; 4096];
+        })
+        .join()
+        .unwrap();
+        assert_eq!(thread_allocations(), here);
+    }
+}

@@ -82,6 +82,33 @@ impl Args {
     }
 }
 
+/// The one CLI → execution-knob mapping: every `mempool` subcommand that
+/// runs a simulation parses the shared flags through here, so `--backend`,
+/// `--no-skip`, `--instr`/`--regions`, and `--warm-icache` mean exactly
+/// one thing everywhere. Subcommands with a different default (e.g. the
+/// grid runners defaulting the backend to `parallel`) adjust the returned
+/// value rather than re-reading the flags.
+impl crate::runtime::ExecOptions {
+    pub fn from_args(args: &Args) -> crate::runtime::ExecOptions {
+        use crate::sim::SimBackend;
+        use crate::trace::TraceConfig;
+        let mut exec = crate::runtime::ExecOptions::default();
+        if let Some(b) = args.get("backend") {
+            let parsed = SimBackend::parse(b)
+                .unwrap_or_else(|| panic!("--backend {b}: expected serial|parallel"));
+            exec.backend = Some(parsed);
+        }
+        exec.quiesce_skip = !args.has("no-skip");
+        if args.has("instr") {
+            exec.trace = Some(TraceConfig { instr: true });
+        } else if args.has("regions") {
+            exec.trace = Some(TraceConfig::default());
+        }
+        exec.cold_icache = !args.has("warm-icache");
+        exec
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +142,32 @@ mod tests {
         let a = parse("run");
         assert_eq!(a.parse_or::<usize>("cores", 256), 256);
         assert_eq!(a.get_or("kernel", "matmul"), "matmul");
+    }
+
+    #[test]
+    fn exec_options_map_the_shared_flags() {
+        use crate::runtime::ExecOptions;
+        use crate::sim::SimBackend;
+        // Bare subcommand: library defaults (env-resolved backend, skip
+        // on, no trace, cold icache).
+        let exec = ExecOptions::from_args(&parse("run"));
+        assert_eq!(exec.backend, None);
+        assert!(exec.quiesce_skip);
+        assert!(exec.trace.is_none());
+        assert!(exec.cold_icache);
+        // Every shared flag lands in its field.
+        let exec = ExecOptions::from_args(&parse(
+            "trace --backend parallel --no-skip --instr --warm-icache",
+        ));
+        assert_eq!(exec.backend, Some(SimBackend::Parallel));
+        assert!(!exec.quiesce_skip);
+        assert!(exec.trace.unwrap().instr);
+        assert!(!exec.cold_icache);
+        // `--regions` is the region-only trace; `--instr` wins when both
+        // are given (it is the superset).
+        let exec = ExecOptions::from_args(&parse("report --regions"));
+        assert!(!exec.trace.unwrap().instr);
+        let exec = ExecOptions::from_args(&parse("trace --regions --instr"));
+        assert!(exec.trace.unwrap().instr);
     }
 }

@@ -2,6 +2,8 @@
 //! available in the offline vendor set (`rand`, `proptest`, `criterion`,
 //! `clap`). Everything here is deterministic and dependency-free.
 
+#[cfg(test)]
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod json;
